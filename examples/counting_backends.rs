@@ -1,0 +1,77 @@
+//! Counting-backend demo: the same Apriori pass counted by (1) the paper's
+//! prefix-tree `subset()` walk and (2) the AOT-compiled XLA executable
+//! authored as a JAX/Pallas kernel (`python/compile/kernels/`), loaded here
+//! through the PJRT C API. Python is NOT running — only its compiled HLO.
+//!
+//! Run: `make artifacts && cargo run --release --example counting_backends`
+
+use mrapriori::apriori::gen::apriori_gen;
+use mrapriori::apriori::sequential::mine;
+use mrapriori::dataset::registry;
+use mrapriori::itemset::{Itemset, Trie};
+use mrapriori::runtime::counting::XlaCounter;
+use mrapriori::runtime::pjrt::{artifacts_dir, ArtifactSpec, PjrtRuntime};
+use std::time::Instant;
+
+fn main() {
+    let db = registry::load("chess");
+    let min_sup = 0.75;
+    let result = mine(&db, min_sup);
+    let l2: Vec<Itemset> = result.levels[1].iter().map(|(s, _)| s.clone()).collect();
+    let l2_trie = Trie::from_itemsets(2, l2.iter());
+    let (c3, _) = apriori_gen(&l2_trie);
+    println!(
+        "pass 3 on {}: {} candidate 3-itemsets x {} transactions",
+        db.name,
+        c3.len(),
+        db.len()
+    );
+
+    // Backend 1: trie walk.
+    let mut trie = c3.clone();
+    let t0 = Instant::now();
+    let mut visits = 0u64;
+    for t in &db.txns {
+        visits += trie.count_transaction(t).0;
+    }
+    let trie_time = t0.elapsed();
+    println!("trie backend: {visits} node visits in {trie_time:?}");
+
+    // Backend 2: XLA executable.
+    let runtime = match PjrtRuntime::load(&artifacts_dir(), ArtifactSpec::DEFAULT) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot load XLA artifact ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "XLA backend: platform {}, tile {:?}",
+        runtime.platform(),
+        runtime.spec
+    );
+    let counter = XlaCounter::new(runtime);
+    let t0 = Instant::now();
+    let counted = counter.count_trie(&c3, &db.txns).expect("xla counting");
+    let xla_time = t0.elapsed();
+    println!("XLA backend: {} supports in {xla_time:?}", counted.len());
+
+    // Agreement check.
+    let mut mismatches = 0;
+    for (set, count) in &counted {
+        if trie.count_of(set) != Some(*count) {
+            mismatches += 1;
+        }
+    }
+    println!(
+        "agreement: {}/{} supports identical ({} mismatches)",
+        counted.len() - mismatches,
+        counted.len(),
+        mismatches
+    );
+    assert_eq!(mismatches, 0);
+    println!(
+        "note: interpret-lowered Pallas on CPU PJRT is a correctness path; \
+         see DESIGN.md §Hardware-Adaptation for the TPU performance model."
+    );
+}

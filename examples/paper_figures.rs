@@ -1,0 +1,64 @@
+//! End-to-end validation driver: run the full system — HDFS splits,
+//! MapReduce engine, cluster simulator, all seven drivers — on all three
+//! paper workloads at their reference supports, verify every algorithm
+//! against the sequential oracle, and report the paper's headline metric
+//! (execution-time ranking and the Optimized-* savings).
+//!
+//! This is the run recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example paper_figures`
+
+use mrapriori::apriori::sequential::mine;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::dataset::registry;
+
+fn main() {
+    let cluster = ClusterConfig::paper_cluster();
+    println!(
+        "cluster: {} DataNodes, {} map slots, job_submit {:.0} s\n",
+        cluster.nodes.len(),
+        cluster.total_map_slots(),
+        cluster.overhead.job_submit
+    );
+
+    for name in registry::NAMES {
+        let db = registry::load(name);
+        let min_sup = registry::reference_min_sup(name).unwrap();
+        let opts = RunOptions {
+            split_lines: registry::split_lines(name),
+            dpc_alpha: if name == "chess" { 3.0 } else { 2.0 },
+            ..Default::default()
+        };
+        let oracle = mine(&db, min_sup);
+        println!(
+            "=== {name} @ min_sup {min_sup} — oracle: {} frequent, max length {} ===",
+            oracle.total_frequent(),
+            oracle.max_len()
+        );
+        println!(
+            "{:<18} {:>7} {:>10} {:>10} {:>10} {:>8}",
+            "algorithm", "phases", "total(s)", "actual(s)", "vs SPC", "oracle"
+        );
+        let mut spc_actual = 0.0;
+        for algo in Algorithm::ALL {
+            let out = run_with(algo, &db, min_sup, &cluster, &opts);
+            if algo == Algorithm::Spc {
+                spc_actual = out.actual_time;
+            }
+            let ok = out.all_frequent() == oracle.all_frequent();
+            println!(
+                "{:<18} {:>7} {:>10.0} {:>10.0} {:>9.2}x {:>8}",
+                algo.name(),
+                out.n_phases(),
+                out.total_time,
+                out.actual_time,
+                out.actual_time / spc_actual,
+                if ok { "match" } else { "FAIL" }
+            );
+            assert!(ok, "{algo} diverged from the oracle on {name}");
+        }
+        println!();
+    }
+    println!("all 21 runs matched the sequential oracle exactly.");
+}

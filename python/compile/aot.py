@@ -1,0 +1,81 @@
+"""AOT lowering: JAX/Pallas support-count model -> HLO text artifacts.
+
+Run once at build time (`make artifacts`); python never runs on the mining
+path. The rust runtime loads `artifacts/support_count_t{T}_i{I}_c{C}.hlo.txt`
+via `HloModuleProto::from_text_file`.
+
+Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the published `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True; the
+rust side unwraps with `to_tuple1()`. (See /opt/xla-example/README.md.)
+"""
+
+import argparse
+import os
+from functools import partial
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, support_count_model
+
+# Tile geometries to export. The first is ArtifactSpec::DEFAULT in rust;
+# the rest support the block-shape perf sweep (EXPERIMENTS.md §Perf).
+SPECS = [
+    (256, 256, 256),
+    (128, 256, 256),
+    (512, 256, 256),
+    (256, 256, 512),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(txn_tile: int, item_width: int, cand_tile: int) -> str:
+    fn = partial(
+        support_count_model,
+        txn_tile=txn_tile,
+        item_width=item_width,
+        cand_tile=cand_tile,
+    )
+    lowered = jax.jit(fn).lower(*example_args(txn_tile, item_width, cand_tile))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--specs",
+        default=None,
+        help="comma-separated T:I:C triples (default: built-in sweep)",
+    )
+    args = ap.parse_args()
+
+    specs = SPECS
+    if args.specs:
+        specs = []
+        for part in args.specs.split(","):
+            t, i, c = (int(x) for x in part.split(":"))
+            specs.append((t, i, c))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for t, i, c in specs:
+        text = lower_spec(t, i, c)
+        name = f"support_count_t{t}_i{i}_c{c}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the support-count kernel (no Pallas, no tiling).
+
+This is the correctness reference every kernel variant is tested against,
+and the baseline for the L2 fusion checks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def support_count_ref(txns: jax.Array, cands: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Reference supports.
+
+    Args:
+      txns: (T, I) f32 0/1.
+      cands: (C, I) f32 0/1.
+      lengths: (C,) f32; padding candidates carry an unreachable sentinel.
+
+    Returns:
+      (C,) f32 supports.
+    """
+    inter = cands @ txns.T                      # (C, T)
+    contained = inter == lengths[:, None]       # (C, T) bool
+    return contained.sum(axis=1).astype(jnp.float32)
+
+
+def support_count_numpy(txn_sets, cand_sets, n_txns=None):
+    """Set-based python oracle (for hypothesis tests, no arrays involved)."""
+    out = []
+    for c in cand_sets:
+        cs = set(c)
+        out.append(sum(1 for t in txn_sets if cs.issubset(set(t))))
+    return out

@@ -1,0 +1,133 @@
+"""L1: Pallas support-counting kernel.
+
+The hot-spot of every MapReduce-Apriori pass is `subset()` — counting, for
+each candidate itemset c and each transaction t, whether c ⊆ t. The paper
+does this with a per-transaction prefix-tree walk on CPU; re-thought for a
+matrix unit (DESIGN.md §Hardware-Adaptation), containment becomes a tiled
+0/1 matmul:
+
+    S[c, t] = Σ_i C[c, i] · T[t, i]          (MXU-shaped dot product)
+    c ⊆ t   ⇔  S[c, t] == |c|
+    support[c] = Σ_t [c ⊆ t]
+
+Tiles are sized for TPU VMEM: a (128 cand × 256 item) candidate block, a
+(256 txn × 256 item) transaction pane and the (128 × 256) product all fit
+comfortably in ~16 MiB VMEM (f32: 128·256·4 = 128 KiB per operand block).
+The grid walks candidate blocks; the transaction pane is re-used across
+grid steps (Pallas keeps it resident — the HBM→VMEM schedule the paper's
+threadblock analog would hand-manage).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain HLO
+(numerically identical; real-TPU performance is *estimated* in DESIGN.md,
+not measured here).
+
+Exactness: items-per-candidate and tile sums stay far below 2^24, so f32
+equality against |c| is exact.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile geometry (must match runtime::ArtifactSpec::DEFAULT).
+TXN_TILE = 256
+ITEM_WIDTH = 256
+CAND_TILE = 256
+# Candidate rows processed per grid step.
+CAND_BLOCK = 128
+
+
+def _kernel(t_ref, c_ref, len_ref, o_ref):
+    """One grid step: supports for a CAND_BLOCK slice of candidates."""
+    txns = t_ref[...]          # (TXN_TILE, ITEM_WIDTH) f32 0/1
+    cands = c_ref[...]         # (CAND_BLOCK, ITEM_WIDTH) f32 0/1
+    lens = len_ref[...]        # (CAND_BLOCK,) f32; padding rows = width+1
+
+    # (CAND_BLOCK, TXN_TILE) intersection sizes on the MXU.
+    inter = jnp.dot(cands, txns.T, preferred_element_type=jnp.float32)
+    contained = (inter == lens[:, None]).astype(jnp.float32)
+    # Padding *transactions* are all-zero rows: inter == 0 < |c| >= 1, so
+    # they can never count; no explicit mask needed.
+    o_ref[...] = contained.sum(axis=1)
+
+
+@partial(jax.jit, static_argnames=("txn_tile", "item_width", "cand_tile"))
+def support_count(
+    txns: jax.Array,
+    cands: jax.Array,
+    lengths: jax.Array,
+    *,
+    txn_tile: int = TXN_TILE,
+    item_width: int = ITEM_WIDTH,
+    cand_tile: int = CAND_TILE,
+) -> jax.Array:
+    """Pallas-tiled support counts.
+
+    Args:
+      txns: (txn_tile, item_width) f32 0/1 transaction bitmap.
+      cands: (cand_tile, item_width) f32 0/1 candidate bitmap.
+      lengths: (cand_tile,) f32 candidate sizes; padding rows must carry a
+        value that no dot product can reach (e.g. item_width + 1).
+
+    Returns:
+      (cand_tile,) f32 supports.
+    """
+    assert txns.shape == (txn_tile, item_width), txns.shape
+    assert cands.shape == (cand_tile, item_width), cands.shape
+    assert lengths.shape == (cand_tile,), lengths.shape
+    cand_block = min(CAND_BLOCK, cand_tile)
+    assert cand_tile % cand_block == 0
+
+    grid = (cand_tile // cand_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # Transactions: one pane shared by every grid step.
+            pl.BlockSpec((txn_tile, item_width), lambda i: (0, 0)),
+            # Candidates: walk blocks of rows.
+            pl.BlockSpec((cand_block, item_width), lambda i: (i, 0)),
+            pl.BlockSpec((cand_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((cand_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((cand_tile,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(txns, cands, lengths)
+
+
+def vmem_footprint_bytes(
+    txn_tile: int = TXN_TILE,
+    item_width: int = ITEM_WIDTH,
+    cand_block: int = CAND_BLOCK,
+) -> int:
+    """Estimated VMEM residency of one grid step (f32 operands + product).
+
+    Used by DESIGN.md's TPU performance estimate; interpret-mode wallclock
+    is *not* a TPU proxy, so we reason about structure instead.
+    """
+    txn_pane = txn_tile * item_width * 4
+    cand_block_bytes = cand_block * item_width * 4
+    product = cand_block * txn_tile * 4
+    vectors = 2 * cand_block * 4
+    return txn_pane + cand_block_bytes + product + vectors
+
+
+def mxu_utilization_estimate(
+    n_cands: int,
+    n_txns: int,
+    avg_cand_len: float,
+    item_width: int = ITEM_WIDTH,
+) -> float:
+    """Fraction of MXU MACs doing useful work for a real workload.
+
+    The dense matmul spends `item_width` MACs per (c, t) pair; a trie walk
+    would touch ~avg_cand_len items. Utilization of the *useful* compute is
+    therefore avg_cand_len / item_width — the price of regularity. The MXU's
+    raw throughput advantage (~100x on bf16) has to beat that ratio, which
+    it does for item_width <= 256 and |c| >= 3.
+    """
+    del n_cands, n_txns  # shape-independent
+    return float(avg_cand_len) / float(item_width)

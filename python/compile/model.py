@@ -1,0 +1,56 @@
+"""L2: the JAX compute graph around the L1 kernel.
+
+For this paper the "model" is the support-counting graph a map task
+executes: encode-free containment counting over one (transactions ×
+candidates) tile, calling the Pallas kernel, with the numerics guards the
+rust runtime relies on (f32 exactness, sentinel padding). One jitted
+function per tile geometry is AOT-lowered by aot.py; the rust coordinator
+loops tiles.
+
+Also provides `support_count_fused`, the pure-XLA (non-Pallas) variant used
+to verify that XLA fuses the compare+reduce into the matmul consumer — the
+L2 optimization check in EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.support_count import support_count as _pallas_support_count
+
+
+def support_count_model(txns, cands, lengths, *, txn_tile=256, item_width=256, cand_tile=256):
+    """The exported entry point: validates dtypes and calls the L1 kernel.
+
+    All inputs f32 (PJRT CPU client feeds f32 literals); output f32 counts,
+    exact for counts < 2^24.
+    """
+    txns = txns.astype(jnp.float32)
+    cands = cands.astype(jnp.float32)
+    lengths = lengths.astype(jnp.float32)
+    return (
+        _pallas_support_count(
+            txns,
+            cands,
+            lengths,
+            txn_tile=txn_tile,
+            item_width=item_width,
+            cand_tile=cand_tile,
+        ),
+    )
+
+
+@jax.jit
+def support_count_fused(txns, cands, lengths):
+    """Non-Pallas L2 graph (matmul + compare + reduce) for fusion checks."""
+    inter = jnp.dot(cands, txns.T, preferred_element_type=jnp.float32)
+    return ((inter == lengths[:, None]).astype(jnp.float32).sum(axis=1),)
+
+
+def example_args(txn_tile=256, item_width=256, cand_tile=256):
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((txn_tile, item_width), f32),
+        jax.ShapeDtypeStruct((cand_tile, item_width), f32),
+        jax.ShapeDtypeStruct((cand_tile,), f32),
+    )

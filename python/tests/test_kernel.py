@@ -1,0 +1,121 @@
+"""L1 kernel correctness: Pallas support_count vs the pure-jnp reference
+and a set-based python oracle, across shapes, densities and paddings."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import support_count_numpy, support_count_ref
+from compile.kernels.support_count import (
+    mxu_utilization_estimate,
+    support_count,
+    vmem_footprint_bytes,
+)
+
+
+def encode(sets, rows, width):
+    m = np.zeros((rows, width), dtype=np.float32)
+    for r, s in enumerate(sets):
+        for i in s:
+            m[r, i] = 1.0
+    return m
+
+
+def lengths_of(sets, rows, width):
+    lens = np.full((rows,), width + 1, dtype=np.float32)
+    for r, s in enumerate(sets):
+        lens[r] = len(s)
+    return lens
+
+
+def run_both(txn_sets, cand_sets, txn_tile=256, item_width=256, cand_tile=256):
+    t = encode(txn_sets, txn_tile, item_width)
+    c = encode(cand_sets, cand_tile, item_width)
+    lens = lengths_of(cand_sets, cand_tile, item_width)
+    pallas_out = np.asarray(
+        support_count(t, c, lens, txn_tile=txn_tile, item_width=item_width, cand_tile=cand_tile)
+    )
+    ref_out = np.asarray(support_count_ref(t, c, lens))
+    return pallas_out, ref_out
+
+
+def test_simple_counts():
+    txns = [[0, 1, 2], [1, 2], [0, 3]]
+    cands = [[0], [1, 2], [0, 3], [2, 3]]
+    p, r = run_both(txns, cands)
+    np.testing.assert_array_equal(p[:4], [2.0, 2.0, 1.0, 0.0])
+    np.testing.assert_array_equal(p, r)
+
+
+def test_padding_rows_never_count():
+    # All-zero padding txns and sentinel-length padding candidates.
+    p, r = run_both([[0]], [[0]])
+    assert p[0] == 1.0
+    assert (p[1:] == 0.0).all()
+    np.testing.assert_array_equal(p, r)
+
+
+def test_empty_everything():
+    p, r = run_both([], [])
+    assert (p == 0.0).all()
+    np.testing.assert_array_equal(p, r)
+
+
+@pytest.mark.parametrize("tile", [(128, 256, 256), (256, 256, 256), (256, 256, 512)])
+def test_alternate_tile_shapes(tile):
+    t_tile, i_w, c_tile = tile
+    txns = [[i, i + 1, 64 + i] for i in range(50)]
+    cands = [[i, i + 1] for i in range(40)] + [[64 + i] for i in range(30)]
+    p, r = run_both(txns, cands, txn_tile=t_tile, item_width=i_w, cand_tile=c_tile)
+    np.testing.assert_array_equal(p, r)
+    oracle = support_count_numpy(txns, cands)
+    np.testing.assert_array_equal(p[: len(cands)], oracle)
+
+
+sets_strategy = st.lists(
+    st.lists(st.integers(min_value=0, max_value=255), min_size=1, max_size=24).map(
+        lambda xs: sorted(set(xs))
+    ),
+    min_size=0,
+    max_size=64,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(txns=sets_strategy, cands=sets_strategy)
+def test_hypothesis_matches_python_oracle(txns, cands):
+    p, r = run_both(txns, cands)
+    np.testing.assert_array_equal(p, r)
+    oracle = support_count_numpy(txns, cands)
+    np.testing.assert_array_equal(p[: len(cands)], oracle)
+    # Sentinel rows must be exactly zero.
+    assert (p[len(cands):] == 0.0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    txns=sets_strategy,
+    cands=sets_strategy,
+    dtype=st.sampled_from([np.float32, np.float64, np.int32]),
+)
+def test_input_dtypes_normalized(txns, cands, dtype):
+    # The L2 model casts to f32; feeding other dtypes through the ref path
+    # must agree after casting.
+    t = encode(txns, 256, 256).astype(dtype)
+    c = encode(cands, 256, 256).astype(dtype)
+    lens = lengths_of(cands, 256, 256).astype(dtype)
+    from compile.model import support_count_model
+
+    (out,) = support_count_model(t, c, lens)
+    oracle = support_count_numpy(txns, cands)
+    np.testing.assert_array_equal(np.asarray(out)[: len(cands)], oracle)
+
+
+def test_vmem_footprint_fits():
+    # Default geometry must fit a 16 MiB VMEM with margin.
+    assert vmem_footprint_bytes() < 2 * 1024 * 1024
+
+
+def test_mxu_estimate_monotone():
+    assert mxu_utilization_estimate(1, 1, 8.0) == 8.0 / 256.0
+    assert mxu_utilization_estimate(1, 1, 16.0) > mxu_utilization_estimate(1, 1, 4.0)

@@ -1,0 +1,97 @@
+//! Ablations for the related-work extensions:
+//! 1. fused pass-1+2 (triangular matrix, ref [6]) vs the standard Job1 —
+//!    per-algorithm time saving on every dataset;
+//! 2. PARMA-style approximate mining (ref [14]) vs exact Optimized-VFPC —
+//!    speed/recall trade;
+//! 3. fault/straggler/speculation study on the heaviest phase's task mix.
+
+use mrapriori::apriori::sampling::{mine_approximate, ParmaParams};
+use mrapriori::apriori::sequential::mine;
+use mrapriori::bench_harness::timing::{bench, save_report};
+use mrapriori::cluster::{schedule_with_faults, ClusterConfig, FaultModel, SimTask};
+use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::dataset::registry;
+use std::fmt::Write as _;
+
+fn main() {
+    let cluster = ClusterConfig::paper_cluster();
+    let mut out = String::new();
+
+    // 1. Fused pass 1+2.
+    let _ = writeln!(out, "# Extension ablations\n\n## fused pass 1+2 (triangular matrix, ref [6])");
+    for name in registry::NAMES {
+        let db = registry::load(name);
+        let min_sup = registry::reference_min_sup(name).unwrap();
+        let base = RunOptions { split_lines: registry::split_lines(name), ..Default::default() };
+        let fused_opts = RunOptions { fuse_pass_2: true, ..base.clone() };
+        let plain = run_with(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &base);
+        let fused = run_with(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &fused_opts);
+        assert_eq!(plain.all_frequent(), fused.all_frequent(), "{name}: fused diverged");
+        let _ = writeln!(
+            out,
+            "{name:<10} Opt-VFPC: {:.0} s / {} phases -> fused {:.0} s / {} phases ({:+.1}%)",
+            plain.actual_time,
+            plain.n_phases(),
+            fused.actual_time,
+            fused.n_phases(),
+            100.0 * (fused.actual_time / plain.actual_time - 1.0)
+        );
+    }
+
+    // 2. PARMA vs exact.
+    let _ = writeln!(out, "\n## approximate mining (PARMA-style, ref [14]) vs exact");
+    for name in registry::NAMES {
+        let db = registry::load(name);
+        // Moderate support: approximation is meant for the easy regime.
+        let min_sup = registry::reference_min_sup(name).unwrap() + 0.10;
+        let exact = mine(&db, min_sup).all_frequent();
+        let params = ParmaParams::default();
+        let approx = mine_approximate(&db, min_sup, &params);
+        let t_exact = bench(0, 3, || {
+            std::hint::black_box(mine(&db, min_sup));
+        });
+        let t_approx = bench(0, 3, || {
+            std::hint::black_box(mine_approximate(&db, min_sup, &params));
+        });
+        let _ = writeln!(
+            out,
+            "{name:<10} @{min_sup:.2}: recall {:.3}, fpr {:.3}, sample {}x{}; host {:.0} ms exact vs {:.0} ms approx",
+            approx.recall(&exact),
+            approx.false_positive_rate(&exact),
+            approx.n_samples,
+            approx.sample_size,
+            t_exact.median_s * 1e3,
+            t_approx.median_s * 1e3,
+        );
+    }
+
+    // 3. Faults & speculation on a realistic task mix (mushroom pass-8
+    //    compute seconds from the cost model, 9 tasks on the paper cluster).
+    let _ = writeln!(out, "\n## fault injection & speculative execution");
+    let tasks: Vec<SimTask> =
+        (0..9).map(|i| SimTask { compute_secs: 20.0 + i as f64, preferred_nodes: vec![i % 4] }).collect();
+    let slots: Vec<(usize, f64)> = (0..4).flat_map(|n| std::iter::repeat((n, 1.0)).take(4)).collect();
+    let oh = cluster.overhead;
+    for (label, model) in [
+        ("clean", FaultModel::default()),
+        ("5% task failures", FaultModel { fail_prob: 0.05, seed: 3, ..Default::default() }),
+        (
+            "15% stragglers (6x)",
+            FaultModel { straggler_prob: 0.15, seed: 3, ..Default::default() },
+        ),
+        (
+            "15% stragglers + speculation",
+            FaultModel { straggler_prob: 0.15, speculation: true, seed: 3, ..Default::default() },
+        ),
+    ] {
+        let r = schedule_with_faults(&tasks, &slots, &oh, &model);
+        let _ = writeln!(
+            out,
+            "{label:<30} makespan {:>6.1} s  attempts {:>2}  failures {}  stragglers {}  spec launches/wins {}/{}",
+            r.makespan, r.attempts, r.failures, r.stragglers, r.speculative_launches, r.speculative_wins
+        );
+    }
+
+    println!("{out}");
+    save_report("ablation_extensions.txt", &out);
+}

@@ -1,0 +1,5 @@
+//! Regenerates the paper's Fig. 3 (a, b): execution time of the seven
+//! algorithms on chess for min_sup 0.85 .. 0.65 (DPC α = 3.0, §5.2).
+fn main() {
+    mrapriori::bench_harness::run_figure_bench("chess", 3);
+}

@@ -1,0 +1,5 @@
+//! Regenerates the paper's Fig. 4 (a, b): execution time of the seven
+//! algorithms on mushroom for min_sup 0.35 .. 0.15.
+fn main() {
+    mrapriori::bench_harness::run_figure_bench("mushroom", 4);
+}

@@ -1,0 +1,51 @@
+//! Regenerates the paper's Fig. 5(a): scalability — execution time of the
+//! four proposed algorithms on growing copies of c20d10k (min_sup 0.25,
+//! 10 mappers; the InputSplit scales with the data so the map-task count
+//! stays constant, §5.4).
+
+use mrapriori::bench_harness::report::{figure_csv, figure_table, Series};
+use mrapriori::bench_harness::timing::save_report;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::dataset::registry;
+
+fn main() {
+    let base = registry::c20d10k();
+    let cluster = ClusterConfig::paper_cluster();
+    let algos = [
+        Algorithm::Vfpc,
+        Algorithm::OptimizedVfpc,
+        Algorithm::Etdpc,
+        Algorithm::OptimizedEtdpc,
+    ];
+    let sizes = [10_000usize, 50_000, 100_000, 150_000, 200_000];
+    let mut series: Vec<Series> = algos.iter().map(|a| Series::new(a.name())).collect();
+    for &n in &sizes {
+        let db = base.scaled_to(n, format!("c20d{}k", n / 1000));
+        // Split scales so the run keeps 10 map tasks (paper setup).
+        let opts = RunOptions { split_lines: n / 10, ..Default::default() };
+        for (ai, &algo) in algos.iter().enumerate() {
+            let out = run_with(algo, &db, 0.25, &cluster, &opts);
+            series[ai].push(n as f64 / 1000.0, out.actual_time);
+            eprintln!("  {} x{}k: {:.0} s", algo.name(), n / 1000, out.actual_time);
+        }
+    }
+    let table = figure_table(
+        "Fig 5(a): execution time (s) on increasing size of dataset (c20d10k scaled, min_sup 0.25)",
+        "k txns",
+        &series,
+    );
+    println!("{table}");
+    // Linear-scaling check: time(200k)/time(10k) vs 20x data.
+    for s in &series {
+        let first = s.points.first().unwrap().1;
+        let last = s.points.last().unwrap().1;
+        println!(
+            "{:<18} 20x data -> {:.1}x time (sublinear because fixed per-phase overhead amortizes)",
+            s.name,
+            last / first
+        );
+    }
+    save_report("fig5a_scale.csv", &figure_csv("k_txns", &series));
+    save_report("fig5a_scale.txt", &table);
+}

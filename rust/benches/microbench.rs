@@ -1,0 +1,78 @@
+//! Microbenchmarks of the L3 hot paths: trie operations, candidate
+//! generation, the scheduler, and the full map-task inner loop — the
+//! profile targets of EXPERIMENTS.md §Perf.
+
+use mrapriori::apriori::gen::{apriori_gen, non_apriori_gen};
+use mrapriori::bench_harness::timing::{bench, save_report};
+use mrapriori::cluster::costmodel::OverheadParams;
+use mrapriori::cluster::scheduler::{schedule, SimTask};
+use mrapriori::dataset::registry;
+use mrapriori::itemset::{Itemset, Trie};
+use std::fmt::Write as _;
+
+fn main() {
+    let mut out = String::new();
+    let db = registry::mushroom();
+    let r = mrapriori::apriori::sequential::mine(&db, 0.15);
+
+    // Representative mid-mining trie: L7 (peak level).
+    let l7: Vec<Itemset> = r.levels[6].iter().map(|(s, _)| s.clone()).collect();
+    let l7_trie = Trie::from_itemsets(7, l7.iter());
+    let _ = writeln!(out, "# L3 microbenchmarks (mushroom @0.15, |L7| = {})\n", l7.len());
+
+    // 1. Trie build.
+    let s = bench(1, 7, || {
+        std::hint::black_box(Trie::from_itemsets(7, l7.iter()));
+    });
+    let _ = writeln!(out, "trie build (|L7| inserts)        {s}");
+
+    // 2. Membership probes (the prune hot path).
+    let probes: Vec<&Itemset> = l7.iter().collect();
+    let s = bench(1, 7, || {
+        for p in &probes {
+            std::hint::black_box(l7_trie.contains(p));
+        }
+    });
+    let _ = writeln!(out, "trie contains x{}            {s}", probes.len());
+
+    // 3. subset() counting over all transactions.
+    let (c8, _) = apriori_gen(&l7_trie);
+    let mut counting = c8.clone();
+    let s = bench(1, 5, || {
+        counting.clear_counts();
+        for t in &db.txns {
+            std::hint::black_box(counting.count_transaction(t));
+        }
+    });
+    let _ = writeln!(out, "subset count |C8|={} x{} txns   {s}", c8.len(), db.len());
+
+    // 4. apriori-gen vs non-apriori-gen (the §4.3 trade at generation time).
+    let s = bench(1, 7, || {
+        std::hint::black_box(apriori_gen(&l7_trie));
+    });
+    let _ = writeln!(out, "apriori-gen(L7)                  {s}");
+    let s = bench(1, 7, || {
+        std::hint::black_box(non_apriori_gen(&l7_trie));
+    });
+    let _ = writeln!(out, "non-apriori-gen(L7)              {s}");
+
+    // 5. Scheduler throughput.
+    let tasks: Vec<SimTask> = (0..500)
+        .map(|i| SimTask { compute_secs: (i % 37) as f64, preferred_nodes: vec![i % 4] })
+        .collect();
+    let slots: Vec<(usize, f64)> = (0..16).map(|i| (i % 4, 1.0)).collect();
+    let oh = OverheadParams::default();
+    let s = bench(2, 9, || {
+        std::hint::black_box(schedule(&tasks, &slots, &oh));
+    });
+    let _ = writeln!(out, "schedule 500 tasks / 16 slots    {s}");
+
+    // 6. End-to-end mining wall time (the real-work budget of one bench run).
+    let s = bench(0, 3, || {
+        std::hint::black_box(mrapriori::apriori::sequential::mine(&db, 0.15));
+    });
+    let _ = writeln!(out, "sequential mine mushroom @0.15   {s}");
+
+    println!("{out}");
+    save_report("microbench.txt", &out);
+}

@@ -1,0 +1,53 @@
+//! Regenerates the paper's Table 6: |L_k| per pass on the three datasets at
+//! the reference supports, via the sequential oracle, side by side with the
+//! paper's published counts.
+
+use mrapriori::apriori::sequential::mine;
+use mrapriori::bench_harness::timing::save_report;
+use mrapriori::dataset::registry;
+
+const PAPER: [(&str, &[usize]); 3] = [
+    ("c20d10k", &[38, 319, 1349, 3545, 6352, 8163, 7615, 5230, 2607, 918, 217, 31, 3]),
+    ("chess", &[29, 307, 1716, 5992, 13927, 22442, 25713, 21111, 12329, 5027, 1384, 240, 19]),
+    ("mushroom", &[48, 530, 2510, 6751, 12372, 17008, 18745, 16887, 12290, 7052, 3094, 1001, 224, 31, 2]),
+];
+
+fn main() {
+    let mut out = String::new();
+    out.push_str("# Table 6: number of frequent k-itemsets |L_k|\n");
+    for (name, paper) in PAPER {
+        let db = registry::load(name);
+        let min_sup = registry::reference_min_sup(name).unwrap();
+        let r = mine(&db, min_sup);
+        let ours = r.lk_profile();
+        out.push_str(&format!("\n{name} @ min_sup {min_sup}\n"));
+        out.push_str(&format!("{:<8}", "k"));
+        for k in 1..=ours.len().max(paper.len()) {
+            out.push_str(&format!(" {k:>7}"));
+        }
+        out.push_str(&format!("\n{:<8}", "ours"));
+        for k in 0..ours.len().max(paper.len()) {
+            match ours.get(k) {
+                Some(v) => out.push_str(&format!(" {v:>7}")),
+                None => out.push_str(&format!(" {:>7}", "-")),
+            }
+        }
+        out.push_str(&format!("\n{:<8}", "paper"));
+        for k in 0..ours.len().max(paper.len()) {
+            match paper.get(k) {
+                Some(v) => out.push_str(&format!(" {v:>7}")),
+                None => out.push_str(&format!(" {:>7}", "-")),
+            }
+        }
+        out.push('\n');
+        let (peak_k, peak) =
+            ours.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, &v)| (i + 1, v)).unwrap();
+        out.push_str(&format!(
+            "shape: max length {} (paper {}), peak |L_{peak_k}| = {peak}\n",
+            ours.len(),
+            paper.len(),
+        ));
+    }
+    println!("{out}");
+    save_report("table6_lk.txt", &out);
+}

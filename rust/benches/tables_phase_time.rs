@@ -1,0 +1,64 @@
+//! Regenerates the paper's Tables 3-5 (per-phase elapsed time of SPC, FPC,
+//! VFPC, DPC, ETDPC) and Tables 10-12 (VFPC vs Optimized-VFPC, ETDPC vs
+//! Optimized-ETDPC) at the reference supports (§5.3).
+
+use mrapriori::bench_harness::tables::phase_time_table;
+use mrapriori::bench_harness::timing::save_report;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::dataset::registry;
+
+fn main() {
+    let cluster = ClusterConfig::paper_cluster();
+    let mut all = String::new();
+    for (table_no, name) in [(3, "c20d10k"), (4, "chess"), (5, "mushroom")] {
+        let db = registry::load(name);
+        let min_sup = registry::reference_min_sup(name).unwrap();
+        let opts = RunOptions {
+            split_lines: registry::split_lines(name),
+            dpc_alpha: if name == "chess" { 3.0 } else { 2.0 },
+            ..Default::default()
+        };
+        let runs: Vec<_> = [
+            Algorithm::Spc,
+            Algorithm::Fpc,
+            Algorithm::Vfpc,
+            Algorithm::Dpc,
+            Algorithm::Etdpc,
+        ]
+        .iter()
+        .map(|&a| run_with(a, &db, min_sup, &cluster, &opts))
+        .collect();
+        let refs: Vec<_> = runs.iter().collect();
+        let t = phase_time_table(
+            &refs,
+            &format!("Table {table_no}: per-phase elapsed time (s), {name} @ min_sup {min_sup}"),
+        );
+        println!("{t}");
+        all.push_str(&t);
+        all.push('\n');
+
+        // Tables 10-12: optimized vs plain.
+        let opt_runs: Vec<_> = [
+            Algorithm::Vfpc,
+            Algorithm::OptimizedVfpc,
+            Algorithm::Etdpc,
+            Algorithm::OptimizedEtdpc,
+        ]
+        .iter()
+        .map(|&a| run_with(a, &db, min_sup, &cluster, &opts))
+        .collect();
+        let refs: Vec<_> = opt_runs.iter().collect();
+        let t = phase_time_table(
+            &refs,
+            &format!(
+                "Table {}: optimized vs plain per-phase elapsed time (s), {name} @ min_sup {min_sup}",
+                table_no + 7
+            ),
+        );
+        println!("{t}");
+        all.push_str(&t);
+        all.push('\n');
+    }
+    save_report("tables_phase_time.txt", &all);
+}

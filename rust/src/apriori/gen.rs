@@ -1,0 +1,186 @@
+//! Candidate generation: `apriori-gen` (join + prune) and the paper's
+//! `non-apriori-gen` (join only, §4.2), both over tries, both metered.
+//!
+//! Given a source trie at level `k` (frequent k-itemsets — or, inside a
+//! multi-pass phase, *candidate* k-itemsets), produce the candidate trie at
+//! level `k+1`:
+//!
+//! * **join**: sibling self-join on the trie — every pair of leaves sharing
+//!   a (k-1)-prefix yields one (k+1)-candidate;
+//! * **prune** (`apriori_gen` only): a candidate survives iff *all* its
+//!   k-subsets are present in the source. The two subsets formed by dropping
+//!   either of the two joined items are present by construction, so only
+//!   `k-1` membership probes are needed — exactly the `(k-2)·|trieL_{k-1}|`
+//!   factor of the paper's §4.3 cost analysis (their k = our k+1).
+
+use crate::itemset::{Item, Trie};
+
+/// Operation meters for one generation call; feeds the cluster cost model.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct GenStats {
+    /// Sibling pairs considered by the join step.
+    pub join_pairs: u64,
+    /// Subset membership probes performed by the prune step.
+    pub prune_checks: u64,
+    /// Candidates removed by pruning.
+    pub pruned: u64,
+    /// Candidates in the output trie.
+    pub kept: u64,
+}
+
+impl GenStats {
+    pub fn merge(&mut self, o: &GenStats) {
+        self.join_pairs += o.join_pairs;
+        self.prune_checks += o.prune_checks;
+        self.pruned += o.pruned;
+        self.kept += o.kept;
+    }
+}
+
+/// Join + prune. Source level `k` -> candidates at level `k+1`.
+pub fn apriori_gen(source: &Trie) -> (Trie, GenStats) {
+    generate(source, true)
+}
+
+/// Join only (skipped pruning). Source level `k` -> candidates at `k+1`.
+pub fn non_apriori_gen(source: &Trie) -> (Trie, GenStats) {
+    generate(source, false)
+}
+
+fn generate(source: &Trie, prune: bool) -> (Trie, GenStats) {
+    let k1 = source.level() + 1;
+    let mut out = Trie::new(k1);
+    let mut stats = GenStats::default();
+    let mut scratch: Vec<Item> = Vec::with_capacity(k1 - 1);
+    let join_pairs = source.self_join(|cand| {
+        if prune && !survives_prune(source, cand, &mut scratch, &mut stats) {
+            stats.pruned += 1;
+            return;
+        }
+        out.insert(cand);
+    });
+    stats.join_pairs = join_pairs;
+    stats.kept = out.len() as u64;
+    (out, stats)
+}
+
+/// Check the k-subsets of `cand` obtained by dropping each position except
+/// the last two (those are the joined leaves, present by construction).
+fn survives_prune(
+    source: &Trie,
+    cand: &[Item],
+    scratch: &mut Vec<Item>,
+    stats: &mut GenStats,
+) -> bool {
+    let k1 = cand.len();
+    for drop_idx in 0..k1.saturating_sub(2) {
+        scratch.clear();
+        scratch.extend(cand.iter().enumerate().filter(|(i, _)| *i != drop_idx).map(|(_, &x)| x));
+        stats.prune_checks += 1;
+        if !source.contains(scratch) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::itemset::Itemset;
+    use crate::util::check::{forall, ItemsetGen, VecGen};
+
+    fn trie_of(k: usize, sets: &[&[Item]]) -> Trie {
+        let owned: Vec<Itemset> = sets.iter().map(|s| s.to_vec()).collect();
+        Trie::from_itemsets(k, owned.iter())
+    }
+
+    #[test]
+    fn textbook_example() {
+        // L3 = {123, 124, 134, 234, 135}
+        // join -> {1234 (from 123+124), 1345 (from 134+135)}
+        // prune: 1234 survives (all 3-subsets frequent);
+        //        1345 dies (145 not in L3, neither is 345... 134,135 present, 145 missing)
+        let l3 = trie_of(3, &[&[1, 2, 3], &[1, 2, 4], &[1, 3, 4], &[2, 3, 4], &[1, 3, 5]]);
+        let (c4, stats) = apriori_gen(&l3);
+        assert_eq!(c4.itemsets(), vec![vec![1, 2, 3, 4]]);
+        assert_eq!(stats.join_pairs, 2);
+        assert_eq!(stats.pruned, 1);
+        assert_eq!(stats.kept, 1);
+
+        let (c4u, ustats) = non_apriori_gen(&l3);
+        assert_eq!(c4u.itemsets(), vec![vec![1, 2, 3, 4], vec![1, 3, 4, 5]]);
+        assert_eq!(ustats.prune_checks, 0);
+        assert_eq!(ustats.kept, 2);
+    }
+
+    #[test]
+    fn level1_join_has_no_prunable_subsets() {
+        // From L1, candidates are pairs; both 1-subsets are the joined items.
+        let l1 = trie_of(1, &[&[3], &[7], &[9]]);
+        let (c2, stats) = apriori_gen(&l1);
+        assert_eq!(c2.len(), 3);
+        assert_eq!(stats.prune_checks, 0);
+        assert_eq!(stats.pruned, 0);
+    }
+
+    #[test]
+    fn empty_source_empty_output() {
+        let l2 = Trie::new(2);
+        let (c3, stats) = apriori_gen(&l2);
+        assert!(c3.is_empty());
+        assert_eq!(stats.join_pairs, 0);
+    }
+
+    #[test]
+    fn prop_pruned_subset_of_unpruned() {
+        // apriori_gen ⊆ non_apriori_gen, and the paper's Fig.1 claim:
+        // counting either candidate set yields the same frequent sets.
+        let gen = VecGen { inner: ItemsetGen { universe: 12, max_len: 3 }, max_len: 30 };
+        forall(301, 80, &gen, |sets| {
+            let mut l3: Vec<Itemset> = sets.iter().filter(|s| s.len() == 3).cloned().collect();
+            l3.sort();
+            l3.dedup();
+            if l3.is_empty() {
+                return true;
+            }
+            let trie = Trie::from_itemsets(3, l3.iter());
+            let (pruned, _) = apriori_gen(&trie);
+            let (unpruned, _) = non_apriori_gen(&trie);
+            let ps = pruned.itemsets();
+            let us = unpruned.itemsets();
+            ps.iter().all(|s| unpruned.contains(s)) && ps.len() <= us.len()
+        });
+    }
+
+    #[test]
+    fn prop_pruned_candidates_have_frequent_subsets() {
+        let gen = VecGen { inner: ItemsetGen { universe: 10, max_len: 2 }, max_len: 40 };
+        forall(302, 80, &gen, |sets| {
+            let mut l2: Vec<Itemset> = sets.iter().filter(|s| s.len() == 2).cloned().collect();
+            l2.sort();
+            l2.dedup();
+            if l2.is_empty() {
+                return true;
+            }
+            let trie = Trie::from_itemsets(2, l2.iter());
+            let (c3, _) = apriori_gen(&trie);
+            // Every kept candidate has all 2-subsets in L2.
+            c3.itemsets().iter().all(|c| {
+                (0..3).all(|drop| {
+                    let sub: Itemset =
+                        c.iter().enumerate().filter(|(i, _)| *i != drop).map(|(_, &x)| x).collect();
+                    trie.contains(&sub)
+                })
+            })
+        });
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = GenStats { join_pairs: 1, prune_checks: 2, pruned: 3, kept: 4 };
+        let b = GenStats { join_pairs: 10, prune_checks: 20, pruned: 30, kept: 40 };
+        a.merge(&b);
+        assert_eq!(a, GenStats { join_pairs: 11, prune_checks: 22, pruned: 33, kept: 44 });
+    }
+}

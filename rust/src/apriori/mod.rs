@@ -1,0 +1,13 @@
+//! Apriori algorithm core: candidate generation (`apriori-gen` with join +
+//! prune, and the paper's `non-apriori-gen` join-only variant, §4.2),
+//! transaction subset counting, the sequential reference miner (correctness
+//! oracle for every MapReduce driver), and association-rule derivation.
+
+pub mod gen;
+pub mod rules;
+pub mod sampling;
+pub mod sequential;
+pub mod triangular;
+
+pub use gen::{apriori_gen, non_apriori_gen, GenStats};
+pub use sequential::{mine, MineResult};

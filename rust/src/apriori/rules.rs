@@ -1,0 +1,150 @@
+//! Association-rule derivation from mined frequent itemsets.
+//!
+//! Apriori is "the basic algorithm of Association Rule Mining" (§1); the
+//! second half of ARM — deriving `X ⇒ Y` rules above a confidence threshold
+//! from the frequent itemsets — completes the pipeline for the examples.
+
+use super::sequential::MineResult;
+use crate::itemset::Itemset;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub antecedent: Itemset,
+    pub consequent: Itemset,
+    pub support: f64,
+    pub confidence: f64,
+    pub lift: f64,
+}
+
+/// Derive all rules with confidence >= `min_conf` from a mining result.
+/// `n_txns` is needed to turn counts into supports.
+pub fn derive_rules(result: &MineResult, n_txns: usize, min_conf: f64) -> Vec<Rule> {
+    // Support lookup over every frequent itemset.
+    let mut support: HashMap<Itemset, u64> = HashMap::new();
+    for level in &result.levels {
+        for (set, count) in level {
+            support.insert(set.clone(), *count);
+        }
+    }
+    let n = n_txns as f64;
+    let mut rules = Vec::new();
+    for level in result.levels.iter().skip(1) {
+        for (set, set_count) in level {
+            // Enumerate proper non-empty antecedent subsets by bitmask.
+            let w = set.len();
+            for mask in 1u32..((1 << w) - 1) {
+                let antecedent: Itemset =
+                    (0..w).filter(|b| mask & (1 << b) != 0).map(|b| set[b]).collect();
+                let consequent: Itemset =
+                    (0..w).filter(|b| mask & (1 << b) == 0).map(|b| set[b]).collect();
+                let Some(&a_count) = support.get(&antecedent) else { continue };
+                let confidence = *set_count as f64 / a_count as f64;
+                if confidence + 1e-12 < min_conf {
+                    continue;
+                }
+                let Some(&c_count) = support.get(&consequent) else { continue };
+                let lift = confidence / (c_count as f64 / n);
+                rules.push(Rule {
+                    antecedent,
+                    consequent,
+                    support: *set_count as f64 / n,
+                    confidence,
+                    lift,
+                });
+            }
+        }
+    }
+    rules.sort_by(|a, b| {
+        b.confidence
+            .partial_cmp(&a.confidence)
+            .unwrap()
+            .then(b.support.partial_cmp(&a.support).unwrap())
+            .then(a.antecedent.cmp(&b.antecedent))
+    });
+    rules
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{{{}}} => {{{}}}  sup={:.3} conf={:.3} lift={:.2}",
+            crate::itemset::format_itemset(&self.antecedent),
+            crate::itemset::format_itemset(&self.consequent),
+            self.support,
+            self.confidence,
+            self.lift
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::sequential::mine;
+    use crate::dataset::TransactionDb;
+
+    fn market() -> TransactionDb {
+        TransactionDb::new(
+            "market",
+            5,
+            vec![
+                vec![0, 1],
+                vec![0, 2, 3, 4],
+                vec![1, 2, 3],
+                vec![0, 1, 2, 3],
+                vec![0, 1, 2],
+            ],
+        )
+    }
+
+    #[test]
+    fn rules_from_market() {
+        let r = mine(&market(), 0.6);
+        let rules = derive_rules(&r, 5, 0.9);
+        // {3} => {2}: sup({2,3})=3, sup({3})=3 -> conf 1.0
+        let rule = rules.iter().find(|r| r.antecedent == vec![3]).expect("rule {3}=>{2}");
+        assert_eq!(rule.consequent, vec![2]);
+        assert!((rule.confidence - 1.0).abs() < 1e-9);
+        assert!((rule.support - 0.6).abs() < 1e-9);
+        // lift = conf / sup({2}) = 1.0 / (4/5)
+        assert!((rule.lift - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn confidence_threshold_filters() {
+        let r = mine(&market(), 0.6);
+        let all = derive_rules(&r, 5, 0.0);
+        let strict = derive_rules(&r, 5, 0.95);
+        assert!(strict.len() < all.len());
+        assert!(strict.iter().all(|r| r.confidence >= 0.95));
+    }
+
+    #[test]
+    fn rules_sorted_by_confidence() {
+        let r = mine(&market(), 0.4);
+        let rules = derive_rules(&r, 5, 0.5);
+        assert!(rules.windows(2).all(|w| w[0].confidence >= w[1].confidence));
+    }
+
+    #[test]
+    fn no_rules_without_l2() {
+        let r = mine(&market(), 1.0);
+        assert!(derive_rules(&r, 5, 0.1).is_empty());
+    }
+
+    #[test]
+    fn display_format() {
+        let rule = Rule {
+            antecedent: vec![1],
+            consequent: vec![2, 3],
+            support: 0.5,
+            confidence: 0.75,
+            lift: 1.5,
+        };
+        let s = rule.to_string();
+        assert!(s.contains("{i1} => {i2 i3}"), "{s}");
+        assert!(s.contains("conf=0.750"), "{s}");
+    }
+}

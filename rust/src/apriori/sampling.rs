@@ -1,0 +1,181 @@
+//! PARMA-style parallel randomized approximate mining (the paper's ref
+//! [14], Riondato et al., CIKM'12): mine several independent random samples
+//! in parallel map tasks, then aggregate — itemsets reported by a majority
+//! of samples form the approximate result, with an (ε, δ) sample-size bound.
+//!
+//! This gives the repo the approximate-mining baseline the related-work
+//! section positions against the exact algorithms; the bench compares its
+//! simulated time and recall against Optimized-VFPC.
+
+use super::sequential::mine;
+use crate::dataset::TransactionDb;
+use crate::itemset::Itemset;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct ParmaParams {
+    /// Absolute-frequency error tolerance ε.
+    pub epsilon: f64,
+    /// Failure probability δ.
+    pub delta: f64,
+    /// Number of parallel samples (map tasks).
+    pub n_samples: usize,
+    /// Require an itemset in this fraction of samples (majority by default).
+    pub quorum: f64,
+    pub seed: u64,
+}
+
+impl Default for ParmaParams {
+    fn default() -> Self {
+        Self { epsilon: 0.05, delta: 0.05, n_samples: 8, quorum: 0.5, seed: 99 }
+    }
+}
+
+/// Riondato-style sample size: w = (4 + 4ε/3) / ε² · ln(4/δ) — the
+/// two-sided Chernoff bound on a single itemset's frequency estimate,
+/// with a union-bound slack folded into δ. Clamped to the database size.
+pub fn sample_size(epsilon: f64, delta: f64, db_size: usize) -> usize {
+    assert!(epsilon > 0.0 && delta > 0.0 && delta < 1.0);
+    let w = (4.0 + 4.0 * epsilon / 3.0) / (epsilon * epsilon) * (4.0 / delta).ln();
+    (w.ceil() as usize).min(db_size)
+}
+
+#[derive(Debug, Clone)]
+pub struct ParmaResult {
+    /// Approximate frequent itemsets with averaged estimated supports
+    /// (fraction of transactions).
+    pub itemsets: Vec<(Itemset, f64)>,
+    pub sample_size: usize,
+    pub n_samples: usize,
+}
+
+impl ParmaResult {
+    /// Recall against an exact result (fraction of exact itemsets found).
+    pub fn recall(&self, exact: &[(Itemset, u64)]) -> f64 {
+        if exact.is_empty() {
+            return 1.0;
+        }
+        let found: std::collections::HashSet<&Itemset> =
+            self.itemsets.iter().map(|(s, _)| s).collect();
+        exact.iter().filter(|(s, _)| found.contains(s)).count() as f64 / exact.len() as f64
+    }
+
+    /// False-positive rate against an exact result.
+    pub fn false_positive_rate(&self, exact: &[(Itemset, u64)]) -> f64 {
+        if self.itemsets.is_empty() {
+            return 0.0;
+        }
+        let truth: std::collections::HashSet<&Itemset> = exact.iter().map(|(s, _)| s).collect();
+        self.itemsets.iter().filter(|(s, _)| !truth.contains(s)).count() as f64
+            / self.itemsets.len() as f64
+    }
+}
+
+/// Mine approximately: each "map task" mines an independent with-replacement
+/// sample at a *lowered* threshold (min_sup − ε/2, per PARMA), and the
+/// aggregation keeps itemsets reported by ≥ quorum of the samples.
+pub fn mine_approximate(db: &TransactionDb, min_sup: f64, p: &ParmaParams) -> ParmaResult {
+    let w = sample_size(p.epsilon, p.delta, db.len());
+    let lowered = (min_sup - p.epsilon / 2.0).max(1.0 / w as f64);
+    let mut rng = Rng::new(p.seed);
+    let mut votes: HashMap<Itemset, (usize, f64)> = HashMap::new();
+    for _ in 0..p.n_samples {
+        let mut sample_rng = rng.fork(0xA11CE);
+        let txns: Vec<Itemset> = (0..w)
+            .map(|_| db.txns[sample_rng.below(db.len() as u64) as usize].clone())
+            .collect();
+        let sample = TransactionDb::new("sample", db.n_items, txns);
+        let local = mine(&sample, lowered);
+        for level in &local.levels {
+            for (set, count) in level {
+                let e = votes.entry(set.clone()).or_insert((0, 0.0));
+                e.0 += 1;
+                e.1 += *count as f64 / w as f64;
+            }
+        }
+    }
+    let need = ((p.n_samples as f64) * p.quorum).ceil() as usize;
+    let mut itemsets: Vec<(Itemset, f64)> = votes
+        .into_iter()
+        .filter(|(_, (n, _))| *n >= need)
+        .map(|(s, (n, sup))| (s, sup / n as f64))
+        .filter(|(_, sup)| *sup >= min_sup - p.epsilon)
+        .collect();
+    itemsets.sort_by(|a, b| a.0.cmp(&b.0));
+    ParmaResult { itemsets, sample_size: w, n_samples: p.n_samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ibm::{generate, IbmParams};
+
+    fn db() -> TransactionDb {
+        generate(&IbmParams {
+            n_txns: 4000,
+            n_items: 60,
+            avg_txn_len: 10.0,
+            avg_pattern_len: 4.0,
+            n_patterns: 12,
+            corruption_mean: 0.3,
+            seed: 31,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn sample_size_formula() {
+        let w = sample_size(0.05, 0.05, usize::MAX);
+        // (4 + 0.0667)/0.0025 * ln(80) ≈ 1627 * 4.38 ≈ 7127
+        assert!((7000..7400).contains(&w), "w = {w}");
+        // Clamps to db size.
+        assert_eq!(sample_size(0.05, 0.05, 100), 100);
+        // Tighter epsilon -> more samples.
+        assert!(sample_size(0.01, 0.05, usize::MAX) > w * 20);
+    }
+
+    #[test]
+    fn high_recall_on_clearly_frequent_sets() {
+        let db = db();
+        let exact = mine(&db, 0.20).all_frequent();
+        let approx = mine_approximate(&db, 0.20, &ParmaParams::default());
+        let recall = approx.recall(&exact);
+        assert!(recall > 0.9, "recall {recall}");
+        // False positives bounded: everything reported is within ε of
+        // frequent in truth (we check FPR is small, not zero).
+        let fpr = approx.false_positive_rate(&exact);
+        assert!(fpr < 0.35, "fpr {fpr}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let db = db();
+        let a = mine_approximate(&db, 0.25, &ParmaParams::default());
+        let b = mine_approximate(&db, 0.25, &ParmaParams::default());
+        assert_eq!(a.itemsets, b.itemsets);
+    }
+
+    #[test]
+    fn quorum_filters_noise() {
+        let db = db();
+        let lax = mine_approximate(
+            &db,
+            0.25,
+            &ParmaParams { quorum: 0.125, n_samples: 8, ..Default::default() },
+        );
+        let strict = mine_approximate(
+            &db,
+            0.25,
+            &ParmaParams { quorum: 1.0, n_samples: 8, ..Default::default() },
+        );
+        assert!(strict.itemsets.len() <= lax.itemsets.len());
+    }
+
+    #[test]
+    fn recall_edge_cases() {
+        let r = ParmaResult { itemsets: vec![], sample_size: 10, n_samples: 1 };
+        assert_eq!(r.recall(&[]), 1.0);
+        assert_eq!(r.false_positive_rate(&[]), 0.0);
+    }
+}

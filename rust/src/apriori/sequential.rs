@@ -1,0 +1,246 @@
+//! Sequential Apriori reference miner.
+//!
+//! This is the correctness oracle: every MapReduce driver must produce
+//! exactly the same frequent itemsets, level by level. It also regenerates
+//! the paper's Table 6 (|L_k| per pass) and is what the dataset-registry
+//! calibration uses to match L_k-curve shapes.
+
+use super::gen::{apriori_gen, GenStats};
+use crate::dataset::TransactionDb;
+use crate::itemset::{Itemset, Trie};
+
+/// Frequent itemsets of one level, with support counts, lexicographic order.
+pub type Level = Vec<(Itemset, u64)>;
+
+#[derive(Debug, Clone)]
+pub struct MineResult {
+    /// `levels[k-1]` = frequent k-itemsets. Trailing empty levels trimmed.
+    pub levels: Vec<Level>,
+    pub min_count: u64,
+    /// Per-pass candidate counts (|C_k| for k >= 2; index 0 is pass 2).
+    pub candidates_per_pass: Vec<u64>,
+    /// Accumulated generation meters across all passes.
+    pub gen_stats: GenStats,
+    /// Accumulated trie-node visits in subset counting.
+    pub subset_visits: u64,
+}
+
+impl MineResult {
+    /// Total number of frequent itemsets across levels.
+    pub fn total_frequent(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// Length of the longest frequent itemset (0 if none).
+    pub fn max_len(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// |L_k| profile, as in the paper's Table 6.
+    pub fn lk_profile(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.len()).collect()
+    }
+
+    /// Flatten to a sorted `(itemset, count)` list for equality checks.
+    pub fn all_frequent(&self) -> Vec<(Itemset, u64)> {
+        let mut out: Vec<(Itemset, u64)> =
+            self.levels.iter().flat_map(|l| l.iter().cloned()).collect();
+        out.sort();
+        out
+    }
+}
+
+/// Mine all frequent itemsets of `db` at fractional support `min_sup`.
+pub fn mine(db: &TransactionDb, min_sup: f64) -> MineResult {
+    let min_count = db.min_count(min_sup);
+    let mut levels: Vec<Level> = Vec::new();
+    let mut candidates_per_pass = Vec::new();
+    let mut gen_stats = GenStats::default();
+    let mut subset_visits = 0u64;
+
+    // Pass 1: direct item counting.
+    let mut item_counts = vec![0u64; db.n_items];
+    for t in &db.txns {
+        for &i in t {
+            item_counts[i as usize] += 1;
+        }
+    }
+    let l1: Level = item_counts
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c >= min_count)
+        .map(|(i, &c)| (vec![i as u32], c))
+        .collect();
+    if l1.is_empty() {
+        return MineResult { levels, min_count, candidates_per_pass, gen_stats, subset_visits };
+    }
+    let mut current = Trie::from_itemsets(1, l1.iter().map(|(s, _)| s));
+    levels.push(l1);
+
+    // Passes k >= 2: generate from L_{k-1}, count, filter.
+    loop {
+        let (mut ck, stats) = apriori_gen(&current);
+        gen_stats.merge(&stats);
+        if ck.is_empty() {
+            break;
+        }
+        candidates_per_pass.push(ck.len() as u64);
+        for t in &db.txns {
+            subset_visits += ck.count_transaction(t).0;
+        }
+        let lk: Level = ck.frequent(min_count);
+        if lk.is_empty() {
+            break;
+        }
+        current = Trie::from_itemsets(ck.level(), lk.iter().map(|(s, _)| s));
+        levels.push(lk);
+    }
+
+    MineResult { levels, min_count, candidates_per_pass, gen_stats, subset_visits }
+}
+
+/// Brute-force miner over all subsets of observed transactions — O(2^w per
+/// txn), only for tiny property-test databases, as an oracle for the oracle.
+pub fn mine_bruteforce(db: &TransactionDb, min_sup: f64) -> Vec<(Itemset, u64)> {
+    use std::collections::HashMap;
+    let min_count = db.min_count(min_sup);
+    let mut counts: HashMap<Itemset, u64> = HashMap::new();
+    for t in &db.txns {
+        let w = t.len();
+        assert!(w <= 20, "bruteforce oracle is for tiny transactions only");
+        for mask in 1u32..(1 << w) {
+            let subset: Itemset =
+                (0..w).filter(|b| mask & (1 << b) != 0).map(|b| t[b]).collect();
+            *counts.entry(subset).or_insert(0) += 1;
+        }
+    }
+    let mut out: Vec<(Itemset, u64)> =
+        counts.into_iter().filter(|(_, c)| *c >= min_count).collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::TransactionDb;
+    use crate::util::check::{forall, DbGen};
+
+    /// The worked example every FIM paper uses (Tan et al. ch.6 style).
+    fn market() -> TransactionDb {
+        TransactionDb::new(
+            "market",
+            5,
+            vec![
+                vec![0, 1],          // bread milk
+                vec![0, 2, 3, 4],    // bread diaper beer eggs
+                vec![1, 2, 3],       // milk diaper beer
+                vec![0, 1, 2, 3],    // bread milk diaper beer
+                vec![0, 1, 2],       // bread milk diaper
+            ],
+        )
+    }
+
+    #[test]
+    fn market_basket_known_answer() {
+        let r = mine(&market(), 0.6); // min_count = 3
+        assert_eq!(r.min_count, 3);
+        assert_eq!(r.lk_profile(), vec![4, 4]); // L1: 0,1,2,3; L2: {01},{02},{12},{23}
+        let all = r.all_frequent();
+        let sets: Vec<Itemset> = all.iter().map(|(s, _)| s.clone()).collect();
+        assert_eq!(
+            sets,
+            vec![
+                vec![0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1],
+                vec![1, 2],
+                vec![2],
+                vec![2, 3],
+                vec![3]
+            ]
+        );
+        // Support spot checks.
+        let sup = |s: &[u32]| all.iter().find(|(x, _)| x == s).map(|(_, c)| *c);
+        assert_eq!(sup(&[0]), Some(4));
+        assert_eq!(sup(&[2, 3]), Some(3));
+        assert_eq!(sup(&[0, 1]), Some(3));
+    }
+
+    #[test]
+    fn min_sup_one_keeps_only_universal_items() {
+        let r = mine(&market(), 1.0);
+        assert!(r.levels.is_empty()); // no item appears in all 5 txns
+    }
+
+    #[test]
+    fn low_support_finds_long_itemsets() {
+        let r = mine(&market(), 0.2); // min_count 1: everything observed
+        assert_eq!(r.max_len(), 4); // {0,2,3,4} and {0,1,2,3} appear once
+        assert_eq!(r.levels[3].len(), 2);
+    }
+
+    #[test]
+    fn prop_matches_bruteforce() {
+        let gen = DbGen { universe: 8, max_txns: 14, max_width: 5 };
+        forall(401, 40, &gen, |db| {
+            let tdb = TransactionDb::new("p", db.universe, db.txns.clone());
+            for min_sup in [0.2, 0.4, 0.7] {
+                let fast = mine(&tdb, min_sup).all_frequent();
+                let slow = mine_bruteforce(&tdb, min_sup);
+                if fast != slow {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_downward_closure() {
+        // Every (k-1)-subset of a frequent k-itemset is frequent.
+        let gen = DbGen { universe: 10, max_txns: 20, max_width: 6 };
+        forall(402, 40, &gen, |db| {
+            let tdb = TransactionDb::new("p", db.universe, db.txns.clone());
+            let r = mine(&tdb, 0.3);
+            for k in 1..r.levels.len() {
+                let prev = Trie::from_itemsets(k, r.levels[k - 1].iter().map(|(s, _)| s));
+                for (set, _) in &r.levels[k] {
+                    for drop in 0..set.len() {
+                        let sub: Itemset = set
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, _)| *i != drop)
+                            .map(|(_, &x)| x)
+                            .collect();
+                        if !prev.contains(&sub) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_supports_monotone_in_minsup() {
+        let gen = DbGen { universe: 9, max_txns: 16, max_width: 5 };
+        forall(403, 30, &gen, |db| {
+            let tdb = TransactionDb::new("p", db.universe, db.txns.clone());
+            let lo = mine(&tdb, 0.2).all_frequent();
+            let hi = mine(&tdb, 0.5).all_frequent();
+            // High-threshold result must be a subset of the low-threshold one.
+            hi.iter().all(|x| lo.contains(x))
+        });
+    }
+
+    #[test]
+    fn meters_accumulate() {
+        let r = mine(&market(), 0.4);
+        assert!(r.gen_stats.join_pairs > 0);
+        assert!(r.subset_visits > 0);
+        assert!(!r.candidates_per_pass.is_empty());
+    }
+}

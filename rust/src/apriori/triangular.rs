@@ -1,0 +1,193 @@
+//! Triangular-matrix pair counting (the paper's ref [6], Kovacs & Illes,
+//! ICCC'13): count ALL 1-itemsets and 2-itemsets in a single database scan
+//! using a dense upper-triangular count array — no candidate generation for
+//! pass 2 at all. Used as the optional fused first phase (`fuse_pass_2` in
+//! the run options): Job1 then emits both L1 and L2, and Job2 starts at
+//! k = 3, saving one entire MapReduce job.
+
+use crate::itemset::{Item, Itemset};
+
+/// Dense upper-triangular pair counter over `n` items, plus item counts.
+#[derive(Debug, Clone)]
+pub struct TriangularCounter {
+    n: usize,
+    item_counts: Vec<u64>,
+    /// Row-major packed upper triangle: pair (i, j), i < j, lives at
+    /// `offset(i) + (j - i - 1)`.
+    pair_counts: Vec<u64>,
+    row_offset: Vec<usize>,
+}
+
+impl TriangularCounter {
+    pub fn new(n_items: usize) -> Self {
+        let mut row_offset = Vec::with_capacity(n_items);
+        let mut acc = 0usize;
+        for i in 0..n_items {
+            row_offset.push(acc);
+            acc += n_items - i - 1;
+        }
+        Self {
+            n: n_items,
+            item_counts: vec![0; n_items],
+            pair_counts: vec![0; acc],
+            row_offset,
+        }
+    }
+
+    #[inline]
+    fn pair_index(&self, i: Item, j: Item) -> usize {
+        debug_assert!(i < j && (j as usize) < self.n);
+        self.row_offset[i as usize] + (j as usize - i as usize - 1)
+    }
+
+    /// Count one canonical transaction: every item and every item pair.
+    pub fn add_transaction(&mut self, txn: &[Item]) {
+        for (a, &i) in txn.iter().enumerate() {
+            self.item_counts[i as usize] += 1;
+            for &j in &txn[a + 1..] {
+                let idx = self.pair_index(i, j);
+                self.pair_counts[idx] += 1;
+            }
+        }
+    }
+
+    pub fn item_count(&self, i: Item) -> u64 {
+        self.item_counts[i as usize]
+    }
+
+    pub fn pair_count(&self, i: Item, j: Item) -> u64 {
+        if i == j {
+            return self.item_counts[i as usize];
+        }
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        self.pair_counts[self.pair_index(lo, hi)]
+    }
+
+    /// Merge another counter (the Reducer's job for this fused phase).
+    pub fn merge(&mut self, other: &TriangularCounter) {
+        assert_eq!(self.n, other.n);
+        for (a, b) in self.item_counts.iter_mut().zip(&other.item_counts) {
+            *a += b;
+        }
+        for (a, b) in self.pair_counts.iter_mut().zip(&other.pair_counts) {
+            *a += b;
+        }
+    }
+
+    /// Frequent 1-itemsets and *pruned* frequent 2-itemsets (both endpoints
+    /// frequent, pair count >= min_count), in lexicographic order.
+    pub fn frequent(&self, min_count: u64) -> (Vec<(Itemset, u64)>, Vec<(Itemset, u64)>) {
+        let l1: Vec<(Itemset, u64)> = (0..self.n)
+            .filter(|&i| self.item_counts[i] >= min_count)
+            .map(|i| (vec![i as Item], self.item_counts[i]))
+            .collect();
+        let frequent_item: Vec<bool> =
+            (0..self.n).map(|i| self.item_counts[i] >= min_count).collect();
+        let mut l2 = Vec::new();
+        for i in 0..self.n {
+            if !frequent_item[i] {
+                continue;
+            }
+            for j in (i + 1)..self.n {
+                if !frequent_item[j] {
+                    continue;
+                }
+                let c = self.pair_counts[self.row_offset[i] + (j - i - 1)];
+                if c >= min_count {
+                    l2.push((vec![i as Item, j as Item], c));
+                }
+            }
+        }
+        (l1, l2)
+    }
+
+    /// Memory of the dense triangle in bytes (the trade against tries).
+    pub fn bytes(&self) -> usize {
+        (self.pair_counts.len() + self.item_counts.len()) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::sequential::mine;
+    use crate::dataset::TransactionDb;
+    use crate::util::check::{forall, DbGen};
+
+    #[test]
+    fn counts_pairs_and_items() {
+        let mut tc = TriangularCounter::new(5);
+        tc.add_transaction(&[0, 2, 4]);
+        tc.add_transaction(&[0, 2]);
+        tc.add_transaction(&[1]);
+        assert_eq!(tc.item_count(0), 2);
+        assert_eq!(tc.item_count(1), 1);
+        assert_eq!(tc.pair_count(0, 2), 2);
+        assert_eq!(tc.pair_count(2, 0), 2); // symmetric access
+        assert_eq!(tc.pair_count(0, 4), 1);
+        assert_eq!(tc.pair_count(1, 4), 0);
+        assert_eq!(tc.pair_count(3, 3), 0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = TriangularCounter::new(4);
+        a.add_transaction(&[0, 1]);
+        let mut b = TriangularCounter::new(4);
+        b.add_transaction(&[0, 1, 2]);
+        a.merge(&b);
+        assert_eq!(a.pair_count(0, 1), 2);
+        assert_eq!(a.pair_count(1, 2), 1);
+        assert_eq!(a.item_count(0), 2);
+    }
+
+    #[test]
+    fn frequent_matches_oracle_l1_l2() {
+        let db = TransactionDb::new(
+            "t",
+            6,
+            vec![
+                vec![0, 1, 2],
+                vec![0, 1, 3],
+                vec![0, 2, 4],
+                vec![1, 2, 5],
+                vec![0, 1, 2],
+            ],
+        );
+        let mut tc = TriangularCounter::new(6);
+        for t in &db.txns {
+            tc.add_transaction(t);
+        }
+        let (l1, l2) = tc.frequent(db.min_count(0.4));
+        let oracle = mine(&db, 0.4);
+        assert_eq!(l1, oracle.levels[0]);
+        assert_eq!(l2, oracle.levels[1]);
+    }
+
+    #[test]
+    fn prop_matches_oracle() {
+        let gen = DbGen { universe: 12, max_txns: 30, max_width: 6 };
+        forall(903, 60, &gen, |sdb| {
+            let db = TransactionDb::new("p", sdb.universe, sdb.txns.clone());
+            let mut tc = TriangularCounter::new(db.n_items);
+            for t in &db.txns {
+                tc.add_transaction(t);
+            }
+            for min_sup in [0.2, 0.5] {
+                let (l1, l2) = tc.frequent(db.min_count(min_sup));
+                let oracle = mine(&db, min_sup);
+                let ol1 = oracle.levels.first().cloned().unwrap_or_default();
+                let ol2 = oracle.levels.get(1).cloned().unwrap_or_default();
+                if l1 != ol1 || l2 != ol2 {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn bytes_is_quadratic() {
+        assert!(TriangularCounter::new(200).bytes() > TriangularCounter::new(100).bytes() * 3);
+    }
+}

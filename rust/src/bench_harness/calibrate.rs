@@ -1,0 +1,121 @@
+//! Cost-model calibration against the paper's Table 3 (SPC on c20d10k at
+//! min_sup 0.15).
+//!
+//! One global scale factor is fitted over the compute weights (the fixed
+//! overheads are taken from the paper's pass-1 rows directly): weights are
+//! multiplied by `Σ paper_compute / Σ model_compute`, aligning total compute
+//! while leaving *relative* per-operation costs untouched — so no
+//! per-algorithm fitting can occur.
+
+use crate::cluster::ClusterConfig;
+use crate::coordinator::{run_with, Algorithm, RunOptions};
+use crate::dataset::registry;
+
+/// Paper Table 3, SPC row: per-phase elapsed seconds on c20d10k @ 0.15.
+pub const PAPER_TABLE3_SPC: [f64; 14] =
+    [16.0, 18.0, 24.0, 32.0, 48.0, 70.0, 91.0, 83.0, 51.0, 34.0, 22.0, 18.0, 16.0, 21.0];
+
+#[derive(Debug)]
+pub struct Calibration {
+    /// Simulated per-phase seconds with current weights.
+    pub model: Vec<f64>,
+    /// Fitted global scale for compute weights.
+    pub scale: f64,
+    /// Shape agreement after scaling: Pearson correlation model vs paper.
+    pub correlation: f64,
+}
+
+/// Run SPC on c20d10k and fit the global compute scale.
+pub fn calibrate(cluster: &ClusterConfig) -> Calibration {
+    let db = registry::c20d10k();
+    let opts = RunOptions { split_lines: registry::split_lines("c20d10k"), ..Default::default() };
+    let out = run_with(Algorithm::Spc, &db, 0.15, cluster, &opts);
+    let model: Vec<f64> = out.phases.iter().map(|p| p.elapsed).collect();
+
+    // Compare compute portions (subtract the fixed per-job floor).
+    let floor = cluster.overhead.job_submit;
+    let n = model.len().min(PAPER_TABLE3_SPC.len());
+    let paper_compute: f64 = PAPER_TABLE3_SPC[..n].iter().map(|t| (t - floor).max(0.0)).sum();
+    let model_compute: f64 = model[..n].iter().map(|t| (t - floor).max(0.0)).sum();
+    let scale = if model_compute > 0.0 { paper_compute / model_compute } else { 1.0 };
+
+    let correlation = pearson(&model[..n], &PAPER_TABLE3_SPC[..n]);
+    Calibration { model, scale, correlation }
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    if n < 2 {
+        return 1.0;
+    }
+    let ma = a[..n].iter().sum::<f64>() / n as f64;
+    let mb = b[..n].iter().sum::<f64>() / n as f64;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..n {
+        cov += (a[i] - ma) * (b[i] - mb);
+        va += (a[i] - ma).powi(2);
+        vb += (b[i] - mb).powi(2);
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Apply a calibration's scale to a weight set.
+pub fn apply_scale(cluster: &mut ClusterConfig, scale: f64) {
+    let w = &mut cluster.weights;
+    w.record *= scale;
+    w.map_tuple *= scale;
+    w.join_pair *= scale;
+    w.prune_check *= scale;
+    w.cand_built *= scale;
+    w.subset_visit *= scale;
+    w.combine_tuple *= scale;
+    w.shuffle_tuple *= scale;
+    w.reduce_tuple *= scale;
+}
+
+/// CLI entry: calibrate, report, optionally emit fitted TOML.
+pub fn run_calibration(emit: bool) -> String {
+    use std::fmt::Write as _;
+    let mut cluster = ClusterConfig::paper_cluster();
+    let cal = calibrate(&cluster);
+    let mut s = String::new();
+    let _ = writeln!(s, "SPC c20d10k @0.15 — model vs paper Table 3");
+    let _ = writeln!(s, "{:<8} {:>10} {:>10}", "phase", "model(s)", "paper(s)");
+    for (i, m) in cal.model.iter().enumerate() {
+        let p = PAPER_TABLE3_SPC.get(i).copied().unwrap_or(f64::NAN);
+        let _ = writeln!(s, "{:<8} {:>10.1} {:>10.1}", i + 1, m, p);
+    }
+    let _ = writeln!(s, "suggested compute-weight scale: {:.3}", cal.scale);
+    let _ = writeln!(s, "shape correlation (pearson): {:.3}", cal.correlation);
+    if emit {
+        apply_scale(&mut cluster, cal.scale);
+        let _ = writeln!(s, "\n# fitted cluster config:\n{}", crate::config::render_cluster(&cluster));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_basics() {
+        assert!((pearson(&[1.0, 2.0, 3.0], &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&[1.0, 2.0, 3.0], &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&[1.0, 1.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn apply_scale_scales_all() {
+        let mut c = ClusterConfig::paper_cluster();
+        let before = c.weights;
+        apply_scale(&mut c, 2.0);
+        assert_eq!(c.weights.record, before.record * 2.0);
+        assert_eq!(c.weights.reduce_tuple, before.reduce_tuple * 2.0);
+    }
+}

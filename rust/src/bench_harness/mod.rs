@@ -1,0 +1,41 @@
+//! Regenerates every table and figure of the paper's evaluation (§5).
+//! Each bench binary in `rust/benches/` is a thin wrapper over this module.
+
+pub mod calibrate;
+pub mod report;
+pub mod tables;
+pub mod timing;
+
+/// Shared figure-bench runner for Figs 2-4: paper sweep on one dataset,
+/// printing both sub-figures and saving CSVs.
+pub fn run_figure_bench(dataset: &str, figure_no: usize) {
+    use report::figure_csv;
+    use tables::{figure_a, figure_b, sweep, SweepSpec};
+
+    let db = crate::dataset::registry::load(dataset);
+    let spec = SweepSpec::paper(&db);
+    eprintln!(
+        "fig{figure_no}: sweeping {} over min_sup {:?} with {} algorithms...",
+        dataset, spec.min_sups, spec.algorithms.len()
+    );
+    let t0 = std::time::Instant::now();
+    let result = sweep(&spec);
+    let fa = figure_a(&result, dataset);
+    let fb = figure_b(&result, dataset);
+    println!("{fa}");
+    println!("{fb}");
+    // CSVs for plotting.
+    let mut all = Vec::new();
+    for (ai, &algo) in result.algorithms.iter().enumerate() {
+        let mut s = report::Series::new(algo.name());
+        for (si, &ms) in result.min_sups.iter().enumerate() {
+            s.push(ms, result.runs[ai][si].actual_time);
+        }
+        all.push(s);
+    }
+    timing::save_report(&format!("fig{figure_no}_{dataset}.csv"), &figure_csv("min_sup", &all));
+    timing::save_report(&format!("fig{figure_no}_{dataset}.txt"), &format!("{fa}\n{fb}"));
+    eprintln!("fig{figure_no} done in {:.1} s host time", t0.elapsed().as_secs_f64());
+}
+
+pub use report::{fmt_row, Series};

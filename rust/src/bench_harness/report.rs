@@ -1,0 +1,136 @@
+//! Report formatting for the bench harness: aligned tables and CSV dumps
+//! that mirror the rows/series the paper prints.
+
+use std::fmt::Write as _;
+
+/// One named series of (x, y) points — e.g. an algorithm's execution time
+/// across the min_sup sweep of Figs 2–4.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render a figure's series as an aligned text table (x column + one column
+/// per series), like the paper's figure data.
+pub fn figure_table(title: &str, x_label: &str, series: &[Series]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# {title}");
+    let _ = write!(s, "{x_label:>10}");
+    for ser in series {
+        let _ = write!(s, " {:>16}", ser.name);
+    }
+    let _ = writeln!(s);
+    let n = series.iter().map(|s| s.points.len()).max().unwrap_or(0);
+    for i in 0..n {
+        let x = series.iter().find_map(|s| s.points.get(i)).map(|p| p.0).unwrap_or(f64::NAN);
+        let _ = write!(s, "{x:>10.2}");
+        for ser in series {
+            match ser.points.get(i) {
+                Some(&(_, y)) => {
+                    let _ = write!(s, " {y:>16.1}");
+                }
+                None => {
+                    let _ = write!(s, " {:>16}", "-");
+                }
+            }
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// CSV dump of the same series (one row per x; `figure.csv` artifacts).
+pub fn figure_csv(x_label: &str, series: &[Series]) -> String {
+    let mut s = String::new();
+    let _ = write!(s, "{x_label}");
+    for ser in series {
+        let _ = write!(s, ",{}", ser.name);
+    }
+    let _ = writeln!(s);
+    let n = series.iter().map(|s| s.points.len()).max().unwrap_or(0);
+    for i in 0..n {
+        let x = series.iter().find_map(|s| s.points.get(i)).map(|p| p.0).unwrap_or(f64::NAN);
+        let _ = write!(s, "{x}");
+        for ser in series {
+            match ser.points.get(i) {
+                Some(&(_, y)) => {
+                    let _ = write!(s, ",{y}");
+                }
+                None => {
+                    let _ = write!(s, ",");
+                }
+            }
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// Format one aligned row of labelled cells (phase tables).
+pub fn fmt_row(label: &str, cells: &[String]) -> String {
+    let mut s = format!("{label:<22}");
+    for c in cells {
+        let _ = write!(s, " {c:>9}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Vec<Series> {
+        let mut a = Series::new("SPC");
+        a.push(0.3, 100.0);
+        a.push(0.2, 200.0);
+        let mut b = Series::new("VFPC");
+        b.push(0.3, 80.0);
+        b.push(0.2, 120.0);
+        vec![a, b]
+    }
+
+    #[test]
+    fn table_contains_all_points() {
+        let t = figure_table("Fig X", "min_sup", &demo());
+        assert!(t.contains("SPC"));
+        assert!(t.contains("VFPC"));
+        assert!(t.contains("200.0"));
+        assert!(t.contains("0.30"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let c = figure_csv("min_sup", &demo());
+        let lines: Vec<&str> = c.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "min_sup,SPC,VFPC");
+        assert!(lines[1].starts_with("0.3,100"));
+    }
+
+    #[test]
+    fn row_alignment() {
+        let r = fmt_row("VFPC (7)", &["17".into(), "39".into()]);
+        assert!(r.starts_with("VFPC (7)"));
+        assert!(r.contains("17"));
+    }
+
+    #[test]
+    fn ragged_series_handled() {
+        let mut a = Series::new("A");
+        a.push(1.0, 2.0);
+        let b = Series::new("B");
+        let t = figure_table("t", "x", &[a, b]);
+        assert!(t.contains('-'));
+    }
+}

@@ -1,0 +1,228 @@
+//! Shared runners for the paper's tables and figures: sweep helpers that
+//! run algorithm × min_sup grids and format phase-breakdown tables.
+
+use super::report::{figure_table, Series};
+use crate::cluster::ClusterConfig;
+use crate::coordinator::{run_with, Algorithm, MiningOutcome, RunOptions};
+use crate::dataset::{registry, TransactionDb};
+
+/// Options for a figure sweep on one dataset.
+pub struct SweepSpec<'a> {
+    pub db: &'a TransactionDb,
+    pub min_sups: Vec<f64>,
+    pub algorithms: Vec<Algorithm>,
+    pub cluster: ClusterConfig,
+    pub opts: RunOptions,
+}
+
+impl<'a> SweepSpec<'a> {
+    /// The paper's setup for `db`: its Figs 2-4 min_sup sweep, split size,
+    /// DPC α (3.0 on chess, 2.0 elsewhere — §5.2), paper cluster.
+    pub fn paper(db: &'a TransactionDb) -> Self {
+        let name = db.name.as_str();
+        let min_sups = registry::figure_min_sups(name)
+            .unwrap_or_else(|| vec![0.35, 0.30, 0.25, 0.20, 0.15]);
+        let opts = RunOptions {
+            split_lines: registry::split_lines(name),
+            dpc_alpha: if name == "chess" { 3.0 } else { 2.0 },
+            ..Default::default()
+        };
+        Self {
+            db,
+            min_sups,
+            algorithms: Algorithm::ALL.to_vec(),
+            cluster: ClusterConfig::paper_cluster(),
+            opts,
+        }
+    }
+}
+
+/// Result grid of a sweep: `runs[algo_idx][sup_idx]`.
+pub struct SweepResult {
+    pub algorithms: Vec<Algorithm>,
+    pub min_sups: Vec<f64>,
+    pub runs: Vec<Vec<MiningOutcome>>,
+}
+
+/// Run the full grid.
+pub fn sweep(spec: &SweepSpec<'_>) -> SweepResult {
+    let mut runs = Vec::with_capacity(spec.algorithms.len());
+    for &algo in &spec.algorithms {
+        let mut row = Vec::with_capacity(spec.min_sups.len());
+        for &ms in &spec.min_sups {
+            row.push(run_with(algo, spec.db, ms, &spec.cluster, &spec.opts));
+        }
+        runs.push(row);
+    }
+    SweepResult { algorithms: spec.algorithms.clone(), min_sups: spec.min_sups.clone(), runs }
+}
+
+/// Figure (a) of Figs 2-4: SPC/FPC/VFPC/DPC/ETDPC execution time vs min_sup.
+pub fn figure_a(result: &SweepResult, dataset: &str) -> String {
+    render_figure(result, dataset, "(a)", &[
+        Algorithm::Spc,
+        Algorithm::Fpc,
+        Algorithm::Vfpc,
+        Algorithm::Dpc,
+        Algorithm::Etdpc,
+    ])
+}
+
+/// Figure (b): VFPC/Optimized-VFPC/ETDPC/Optimized-ETDPC.
+pub fn figure_b(result: &SweepResult, dataset: &str) -> String {
+    render_figure(result, dataset, "(b)", &[
+        Algorithm::Vfpc,
+        Algorithm::OptimizedVfpc,
+        Algorithm::Etdpc,
+        Algorithm::OptimizedEtdpc,
+    ])
+}
+
+fn render_figure(result: &SweepResult, dataset: &str, sub: &str, algos: &[Algorithm]) -> String {
+    let mut series = Vec::new();
+    for &a in algos {
+        let Some(ai) = result.algorithms.iter().position(|&x| x == a) else { continue };
+        let mut s = Series::new(a.name());
+        for (si, &ms) in result.min_sups.iter().enumerate() {
+            s.push(ms, result.runs[ai][si].actual_time);
+        }
+        series.push(s);
+    }
+    figure_table(
+        &format!("{dataset} {sub}: execution time (simulated s) vs minimum support"),
+        "min_sup",
+        &series,
+    )
+}
+
+/// Phase-breakdown table (Tables 3-5 / 10-12 layout): per-phase elapsed
+/// time spread over the passes each phase combined, plus Total and Actual.
+pub fn phase_time_table(outcomes: &[&MiningOutcome], title: &str) -> String {
+    use std::fmt::Write as _;
+    let max_pass =
+        outcomes.iter().map(|o| o.phases.iter().map(|p| p.first_pass + p.n_passes.max(1) - 1).max().unwrap_or(1)).max().unwrap_or(1);
+    let mut s = String::new();
+    let _ = writeln!(s, "# {title}");
+    let _ = write!(s, "{:<22}", "Algorithm (phases)");
+    for p in 1..=max_pass {
+        let _ = write!(s, " {:>9}", format!("Pass {p}"));
+    }
+    let _ = writeln!(s, " {:>9} {:>9}", "Total", "Actual");
+    for o in outcomes {
+        let _ = write!(s, "{:<22}", format!("{} ({})", o.algorithm.name(), o.n_phases()));
+        let mut cells: Vec<String> = vec![String::new(); max_pass];
+        for ph in &o.phases {
+            // A combined phase spans several pass columns: put the elapsed
+            // time in the first column and a ditto marker in the rest,
+            // mirroring the paper's merged cells.
+            let first = ph.first_pass - 1;
+            cells[first] = format!("{:.0}", ph.elapsed);
+            for c in cells.iter_mut().take(ph.first_pass + ph.n_passes.max(1) - 1).skip(ph.first_pass) {
+                *c = "·".into();
+            }
+        }
+        for c in &cells {
+            let _ = write!(s, " {:>9}", if c.is_empty() { "-" } else { c });
+        }
+        let _ = writeln!(s, " {:>9.0} {:>9.0}", o.total_time, o.actual_time);
+    }
+    s
+}
+
+/// Candidates-per-phase table (Tables 7-9 layout).
+pub fn candidates_table(outcomes: &[&MiningOutcome], title: &str) -> String {
+    use std::fmt::Write as _;
+    let max_pass =
+        outcomes.iter().map(|o| o.phases.iter().map(|p| p.first_pass + p.n_passes.max(1) - 1).max().unwrap_or(1)).max().unwrap_or(1);
+    let mut s = String::new();
+    let _ = writeln!(s, "# {title}");
+    let _ = write!(s, "{:<22}", "Algorithm");
+    for p in 2..=max_pass {
+        let _ = write!(s, " {:>9}", format!("Pass {p}"));
+    }
+    let _ = writeln!(s);
+    for o in outcomes {
+        let _ = write!(s, "{:<22}", o.algorithm.name());
+        let mut cells: Vec<String> = vec![String::new(); max_pass + 1];
+        for ph in o.phases.iter().skip(1) {
+            let first = ph.first_pass;
+            cells[first] = format!("{}", ph.candidates);
+            for c in cells.iter_mut().take(ph.first_pass + ph.n_passes.max(1)).skip(ph.first_pass + 1) {
+                *c = "·".into();
+            }
+        }
+        for c in cells.iter().take(max_pass + 1).skip(2) {
+            let _ = write!(s, " {:>9}", if c.is_empty() { "-" } else { c });
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ibm::{generate, IbmParams};
+
+    fn tiny_db() -> TransactionDb {
+        generate(&IbmParams {
+            n_txns: 120,
+            n_items: 30,
+            avg_txn_len: 6.0,
+            avg_pattern_len: 3.0,
+            n_patterns: 8,
+            seed: 5,
+            ..Default::default()
+        })
+    }
+
+    fn tiny_spec(db: &TransactionDb) -> SweepSpec<'_> {
+        SweepSpec {
+            db,
+            min_sups: vec![0.4, 0.2],
+            algorithms: vec![Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedVfpc],
+            cluster: ClusterConfig::uniform(2, 2),
+            opts: RunOptions { split_lines: 30, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn sweep_grid_shape() {
+        let db = tiny_db();
+        let r = sweep(&tiny_spec(&db));
+        assert_eq!(r.runs.len(), 3);
+        assert_eq!(r.runs[0].len(), 2);
+    }
+
+    #[test]
+    fn figures_render() {
+        let db = tiny_db();
+        let r = sweep(&tiny_spec(&db));
+        let fa = figure_a(&r, "tiny");
+        assert!(fa.contains("SPC"));
+        assert!(fa.contains("VFPC"));
+        let fb = figure_b(&r, "tiny");
+        assert!(fb.contains("Optimized-VFPC"));
+    }
+
+    #[test]
+    fn phase_tables_render() {
+        let db = tiny_db();
+        let r = sweep(&tiny_spec(&db));
+        let outs: Vec<&MiningOutcome> = r.runs.iter().map(|row| &row[1]).collect();
+        let t = phase_time_table(&outs, "tiny 0.2");
+        assert!(t.contains("Total"));
+        assert!(t.contains("SPC"));
+        let c = candidates_table(&outs, "tiny 0.2 candidates");
+        assert!(c.contains("Pass 2"));
+    }
+
+    #[test]
+    fn paper_spec_uses_registry_settings() {
+        let db = crate::dataset::registry::load("chess");
+        let spec = SweepSpec::paper(&db);
+        assert_eq!(spec.opts.split_lines, 400);
+        assert_eq!(spec.opts.dpc_alpha, 3.0);
+        assert_eq!(spec.min_sups.len(), 5);
+    }
+}

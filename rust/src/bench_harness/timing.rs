@@ -1,0 +1,87 @@
+//! Wall-clock micro-benchmark helper (criterion is unavailable offline):
+//! warmup + N timed iterations, reporting min/median/mean.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl Stats {
+    pub fn per_sec(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median_s
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {:>10.3} ms   median {:>10.3} ms   mean {:>10.3} ms   ({} iters)",
+            self.min_s * 1e3,
+            self.median_s * 1e3,
+            self.mean_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. The closure should
+/// include a `std::hint::black_box` on its result to defeat DCE.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min_s = samples[0];
+    let median_s = samples[samples.len() / 2];
+    let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
+    Stats { iters: samples.len(), min_s, median_s, mean_s }
+}
+
+/// Write a report file under `target/paper_results/` (best effort — bench
+/// output is also printed to stdout).
+pub fn save_report(name: &str, contents: &str) {
+    let dir = std::path::Path::new("target/paper_results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(dir.join(name), contents);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let mut x = 0u64;
+        let s = bench(1, 9, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(s.iters, 9);
+        assert!(s.min_s <= s.median_s);
+        assert!(s.min_s > 0.0);
+        assert!(s.per_sec(1000.0) > 0.0);
+    }
+
+    #[test]
+    fn save_report_writes() {
+        save_report("test_report.txt", "hello");
+        let p = std::path::Path::new("target/paper_results/test_report.txt");
+        assert!(p.exists());
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,140 @@
+//! The linear cost model converting measured operation counters into
+//! simulated seconds, plus the fixed overhead parameters.
+//!
+//! Default weights are calibrated against the SPC column of the paper's
+//! Table 3 (c20d10k, min_sup 0.15) — one global weight set shared by every
+//! algorithm, so relative results are never fitted per-algorithm. Re-run the
+//! calibration with `mrapriori calibrate`. Weights can also be loaded from a
+//! TOML file (`config::load_cost_weights`).
+
+use crate::mapreduce::counters::{keys, Counters};
+
+/// Seconds-per-operation weights for map/reduce task compute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostWeights {
+    /// Per input record fed to map() (read + parse + dispatch).
+    pub record: f64,
+    /// Per raw map-output tuple (serialize + collect).
+    pub map_tuple: f64,
+    /// Per join pair considered in apriori-gen / non-apriori-gen.
+    pub join_pair: f64,
+    /// Per prune subset-membership probe.
+    pub prune_check: f64,
+    /// Per candidate-trie insertion.
+    pub cand_built: f64,
+    /// Per trie-node visit during subset() counting.
+    pub subset_visit: f64,
+    /// Per tuple leaving the combiner (sort/spill).
+    pub combine_tuple: f64,
+    /// Per tuple crossing the network in shuffle.
+    pub shuffle_tuple: f64,
+    /// Per tuple processed by a reducer.
+    pub reduce_tuple: f64,
+}
+
+impl Default for CostWeights {
+    fn default() -> Self {
+        // Calibrated: `mrapriori calibrate` against Table 3 (see DESIGN.md §6).
+        Self {
+            record: 1.0e-4,
+            map_tuple: 4.75e-6,
+            join_pair: 6.0e-7,
+            prune_check: 1.5e-6,
+            cand_built: 2.5e-7,
+            subset_visit: 4.75e-6,
+            combine_tuple: 1.0e-5,
+            shuffle_tuple: 5.0e-6,
+            reduce_tuple: 1.0e-5,
+        }
+    }
+}
+
+impl CostWeights {
+    /// Compute seconds for one map task from its counters.
+    pub fn map_compute_secs(&self, c: &Counters) -> f64 {
+        self.record * c.get(keys::MAP_INPUT_RECORDS) as f64
+            + self.map_tuple * c.get(keys::MAP_OUTPUT_TUPLES) as f64
+            + self.join_pair * c.get(keys::JOIN_PAIRS) as f64
+            + self.prune_check * c.get(keys::PRUNE_CHECKS) as f64
+            + self.cand_built * c.get(keys::CANDS_BUILT) as f64
+            + self.subset_visit * c.get(keys::SUBSET_VISITS) as f64
+            + self.combine_tuple * c.get(keys::COMBINE_OUTPUT_TUPLES) as f64
+    }
+
+    /// Compute seconds for one reduce task.
+    pub fn reduce_compute_secs(&self, c: &Counters) -> f64 {
+        self.reduce_tuple * c.get(keys::REDUCE_INPUT_TUPLES) as f64
+            + self.reduce_tuple * c.get(keys::REDUCE_OUTPUT_RECORDS) as f64
+    }
+}
+
+/// Fixed scheduling overheads (the quantities FPC/DPC/VFPC/ETDPC amortize).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverheadParams {
+    /// Per-job submission / scheduling / JVM-spinup cost (seconds). The
+    /// dominant fixed cost the paper's pass-combining attacks.
+    pub job_submit: f64,
+    /// Per-task startup cost (container launch).
+    pub task_start: f64,
+    /// Extra startup for a non-data-local map task.
+    pub nonlocal_penalty: f64,
+    /// Driver-side gap between consecutive jobs (the paper's "actual" minus
+    /// "total" time grows with the number of phases, §5.3).
+    pub driver_gap: f64,
+}
+
+impl Default for OverheadParams {
+    fn default() -> Self {
+        Self { job_submit: 15.0, task_start: 0.8, nonlocal_penalty: 0.4, driver_gap: 5.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_compute_linear_in_counters() {
+        let w = CostWeights::default();
+        let mut c = Counters::new();
+        c.add(keys::SUBSET_VISITS, 1_000_000);
+        let t1 = w.map_compute_secs(&c);
+        c.add(keys::SUBSET_VISITS, 1_000_000);
+        let t2 = w.map_compute_secs(&c);
+        assert!((t2 - 2.0 * t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_weights_contribute() {
+        let w = CostWeights::default();
+        for key in [
+            keys::MAP_INPUT_RECORDS,
+            keys::MAP_OUTPUT_TUPLES,
+            keys::JOIN_PAIRS,
+            keys::PRUNE_CHECKS,
+            keys::CANDS_BUILT,
+            keys::SUBSET_VISITS,
+            keys::COMBINE_OUTPUT_TUPLES,
+        ] {
+            let mut c = Counters::new();
+            c.add(key, 1_000_000);
+            assert!(w.map_compute_secs(&c) > 0.0, "weight for {key} is zero");
+        }
+    }
+
+    #[test]
+    fn reduce_compute() {
+        let w = CostWeights::default();
+        let mut c = Counters::new();
+        c.add(keys::REDUCE_INPUT_TUPLES, 10_000);
+        c.add(keys::REDUCE_OUTPUT_RECORDS, 100);
+        assert!((w.reduce_compute_secs(&c) - (10_100.0 * w.reduce_tuple)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_overheads_sane() {
+        let oh = OverheadParams::default();
+        assert!(oh.job_submit > oh.task_start);
+        assert!(oh.driver_gap > 0.0);
+    }
+}

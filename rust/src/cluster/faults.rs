@@ -1,0 +1,295 @@
+//! Fault and straggler model for the cluster simulator: Hadoop's task
+//! retry and speculative-execution semantics, in simulated time.
+//!
+//! The paper's cluster (§2.2) relies on MapReduce's "managing node failure"
+//! properties; this module makes that substrate real: each task attempt may
+//! fail (re-queued, up to `max_attempts`) or straggle (duration inflated);
+//! with speculation on, a backup attempt launches for any task running
+//! longer than `spec_threshold ×` the median finished duration, and the
+//! earlier finisher wins — exactly Hadoop's default policy shape.
+//!
+//! Everything is deterministic from the seed, so fault experiments are
+//! reproducible and results (which never depend on timing) are untouched.
+
+use super::costmodel::OverheadParams;
+use super::scheduler::SimTask;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    /// Probability an attempt fails (uniform per attempt).
+    pub fail_prob: f64,
+    /// Probability an attempt straggles.
+    pub straggler_prob: f64,
+    /// Straggler duration multiplier.
+    pub straggler_factor: f64,
+    /// Attempts per task before the job is declared failed.
+    pub max_attempts: usize,
+    /// Enable speculative backup attempts.
+    pub speculation: bool,
+    /// Launch a backup when an attempt exceeds this multiple of the median
+    /// finished-attempt duration.
+    pub spec_threshold: f64,
+    pub seed: u64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        Self {
+            fail_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 6.0,
+            max_attempts: 4,
+            speculation: false,
+            spec_threshold: 1.5,
+            seed: 7,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FaultOutcome {
+    pub makespan: f64,
+    pub attempts: usize,
+    pub failures: usize,
+    pub stragglers: usize,
+    pub speculative_launches: usize,
+    pub speculative_wins: usize,
+    /// True if some task exhausted its attempts.
+    pub job_failed: bool,
+}
+
+/// Event-driven schedule of `tasks` onto `slots` under the fault model.
+///
+/// Slots are `(node, speed)` pairs as in [`super::scheduler::schedule`];
+/// a failed attempt re-queues its task at the back (Hadoop re-schedules on
+/// the next free container); a straggler runs to completion unless a
+/// speculative backup finishes first.
+pub fn schedule_with_faults(
+    tasks: &[SimTask],
+    slots: &[(usize, f64)],
+    overhead: &OverheadParams,
+    model: &FaultModel,
+) -> FaultOutcome {
+    if tasks.is_empty() || slots.is_empty() {
+        return FaultOutcome::default();
+    }
+    let mut rng = Rng::new(model.seed);
+    let mut out = FaultOutcome::default();
+
+    // Remaining attempt budget and completion flags per task.
+    let mut attempts_left: Vec<usize> = vec![model.max_attempts; tasks.len()];
+    let mut done = vec![false; tasks.len()];
+    // Running attempts: (finish_time, task, is_speculative, will_fail).
+    let mut running: Vec<(f64, usize, bool, bool)> = Vec::new();
+    let mut queue: std::collections::VecDeque<usize> = (0..tasks.len()).collect();
+    let mut free_at = vec![0.0f64; slots.len()];
+    let mut finished_durations: Vec<f64> = Vec::new();
+    // Track which tasks already have a speculative backup.
+    let mut has_backup = vec![false; tasks.len()];
+
+    // Simple event loop: repeatedly start work on the earliest-free slot,
+    // then retire the earliest finisher.
+    loop {
+        // Launch queued tasks onto free slots (earliest-free first).
+        while !queue.is_empty() {
+            let (slot, _) = free_at
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, &t)| (i, t))
+                .unwrap();
+            // Only launch if the slot is actually free "now" relative to the
+            // earliest unfinished attempt; with a pure list model we can
+            // always launch (start time = slot free time).
+            let task = queue.pop_front().unwrap();
+            if done[task] {
+                continue;
+            }
+            if attempts_left[task] == 0 {
+                out.job_failed = true;
+                continue;
+            }
+            attempts_left[task] -= 1;
+            out.attempts += 1;
+            let (node, speed) = slots[slot];
+            let local = tasks[task].preferred_nodes.is_empty()
+                || tasks[task].preferred_nodes.contains(&node);
+            let mut dur = overhead.task_start + tasks[task].compute_secs / speed;
+            if !local {
+                dur += overhead.nonlocal_penalty;
+            }
+            let will_fail = rng.chance(model.fail_prob);
+            if !will_fail && rng.chance(model.straggler_prob) {
+                dur *= model.straggler_factor;
+                out.stragglers += 1;
+            }
+            let start = free_at[slot];
+            // Failed attempts die halfway through their duration.
+            let finish = if will_fail { start + dur * 0.5 } else { start + dur };
+            free_at[slot] = finish;
+            running.push((finish, task, false, will_fail));
+        }
+
+        if running.is_empty() {
+            break;
+        }
+
+        // Speculation: if enabled and we have history, launch backups for
+        // attempts projected to run long.
+        if model.speculation && finished_durations.len() >= 3 {
+            let mut sorted = finished_durations.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = sorted[sorted.len() / 2];
+            let threshold = median * model.spec_threshold;
+            let long_runners: Vec<usize> = running
+                .iter()
+                .filter(|&&(finish, task, spec, failed)| {
+                    !spec && !failed && !done[task] && !has_backup[task] && finish > threshold
+                })
+                .map(|&(_, task, _, _)| task)
+                .collect();
+            for task in long_runners {
+                // Backup goes to the earliest-free slot.
+                let (slot, _) = free_at
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, &t)| (i, t))
+                    .unwrap();
+                let (_, speed) = slots[slot];
+                let dur = overhead.task_start + tasks[task].compute_secs / speed;
+                let start = free_at[slot];
+                free_at[slot] = start + dur;
+                running.push((start + dur, task, true, false));
+                has_backup[task] = true;
+                out.speculative_launches += 1;
+            }
+        }
+
+        // Retire the earliest finisher.
+        running.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let (finish, task, speculative, failed) = running.pop().unwrap();
+        if failed {
+            out.failures += 1;
+            if !done[task] {
+                queue.push_back(task);
+            }
+            continue;
+        }
+        if !done[task] {
+            done[task] = true;
+            finished_durations.push(finish); // proxy: completion time
+            out.makespan = out.makespan.max(finish);
+            if speculative {
+                out.speculative_wins += 1;
+            }
+        }
+    }
+
+    if done.iter().any(|d| !d) {
+        out.job_failed = true;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oh() -> OverheadParams {
+        OverheadParams { job_submit: 0.0, task_start: 1.0, nonlocal_penalty: 0.0, driver_gap: 0.0 }
+    }
+
+    fn tasks(n: usize, secs: f64) -> Vec<SimTask> {
+        (0..n).map(|_| SimTask { compute_secs: secs, preferred_nodes: vec![] }).collect()
+    }
+
+    fn slots(n: usize) -> Vec<(usize, f64)> {
+        (0..n).map(|i| (i, 1.0)).collect()
+    }
+
+    #[test]
+    fn no_faults_matches_plain_makespan() {
+        let t = tasks(8, 10.0);
+        let s = slots(4);
+        let plain = crate::cluster::scheduler::schedule(&t, &s, &oh());
+        let faulty = schedule_with_faults(&t, &s, &oh(), &FaultModel::default());
+        assert!((plain.makespan - faulty.makespan).abs() < 1e-9);
+        assert_eq!(faulty.attempts, 8);
+        assert_eq!(faulty.failures, 0);
+        assert!(!faulty.job_failed);
+    }
+
+    #[test]
+    fn failures_extend_makespan_and_retry() {
+        let t = tasks(8, 10.0);
+        let s = slots(4);
+        let model = FaultModel { fail_prob: 0.3, seed: 11, ..Default::default() };
+        let faulty = schedule_with_faults(&t, &s, &oh(), &model);
+        let clean = schedule_with_faults(&t, &s, &oh(), &FaultModel::default());
+        assert!(faulty.failures > 0, "seed should produce failures");
+        assert!(faulty.attempts > 8);
+        assert!(faulty.makespan > clean.makespan);
+        assert!(!faulty.job_failed, "retries should recover");
+    }
+
+    #[test]
+    fn certain_failure_fails_job() {
+        let t = tasks(2, 5.0);
+        let s = slots(2);
+        let model = FaultModel { fail_prob: 1.0, max_attempts: 3, ..Default::default() };
+        let out = schedule_with_faults(&t, &s, &oh(), &model);
+        assert!(out.job_failed);
+        assert_eq!(out.attempts, 6); // 2 tasks x 3 attempts
+    }
+
+    #[test]
+    fn speculation_beats_stragglers() {
+        // Many short tasks + straggler chance: speculation should cut the
+        // makespan relative to no-speculation under the same seed.
+        let t = tasks(24, 5.0);
+        let s = slots(6);
+        let base = FaultModel {
+            straggler_prob: 0.15,
+            straggler_factor: 10.0,
+            seed: 21,
+            ..Default::default()
+        };
+        let without = schedule_with_faults(&t, &s, &oh(), &base);
+        let with = schedule_with_faults(
+            &t,
+            &s,
+            &oh(),
+            &FaultModel { speculation: true, ..base.clone() },
+        );
+        assert!(without.stragglers > 0);
+        assert!(with.speculative_launches > 0);
+        assert!(
+            with.makespan < without.makespan,
+            "speculation {:.1} !< plain {:.1}",
+            with.makespan,
+            without.makespan
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t = tasks(12, 7.0);
+        let s = slots(3);
+        let model = FaultModel { fail_prob: 0.2, straggler_prob: 0.2, seed: 5, ..Default::default() };
+        let a = schedule_with_faults(&t, &s, &oh(), &model);
+        let b = schedule_with_faults(&t, &s, &oh(), &model);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.attempts, b.attempts);
+        assert_eq!(a.failures, b.failures);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let out = schedule_with_faults(&[], &slots(2), &oh(), &FaultModel::default());
+        assert_eq!(out.makespan, 0.0);
+        let out = schedule_with_faults(&tasks(2, 1.0), &[], &oh(), &FaultModel::default());
+        assert_eq!(out.makespan, 0.0);
+    }
+}

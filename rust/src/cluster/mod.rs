@@ -1,0 +1,231 @@
+//! The simulated Hadoop cluster: node topology, deterministic cost model,
+//! slot-based list scheduler, and per-job timing.
+//!
+//! Why a simulator: the paper's result is about *scheduling-overhead
+//! amortization* (fewer MapReduce jobs -> fewer fixed job-submit costs) and
+//! *mapper workload balance* across a 5-node cluster (Table 1). Both are
+//! functions of (number of jobs, per-task work, slots) — not of the host
+//! machine this code happens to run on (a single-core CI box). The engine
+//! executes the real mining work and meters it with operation counters; this
+//! module converts those counters into simulated cluster seconds with a
+//! calibrated linear cost model and a faithful slot scheduler. See DESIGN.md
+//! §3 and §6.
+
+pub mod costmodel;
+pub mod faults;
+pub mod scheduler;
+
+pub use costmodel::{CostWeights, OverheadParams};
+pub use faults::{schedule_with_faults, FaultModel, FaultOutcome};
+pub use scheduler::{schedule, ScheduleOutcome, SimTask};
+
+use crate::mapreduce::engine::TaskMeter;
+
+/// One DataNode: relative speed and task slots (Table 1's heterogeneous
+/// cluster: two physical 2 GB nodes, two faster virtual 4 GB nodes).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    /// Relative compute speed (1.0 = baseline physical node).
+    pub speed: f64,
+    pub map_slots: usize,
+    pub reduce_slots: usize,
+}
+
+/// Full cluster + cost-model configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeSpec>,
+    pub weights: CostWeights,
+    pub overhead: OverheadParams,
+    /// Reduce tasks per job.
+    pub n_reducers: usize,
+    /// Host threads for the real execution (independent of simulated slots).
+    pub workers: usize,
+}
+
+impl ClusterConfig {
+    /// The paper's Table 1 cluster: 4 DataNodes, 4 cores each; DN1/DN2
+    /// physical (baseline), DN3/DN4 virtual on faster Xeons.
+    pub fn paper_cluster() -> Self {
+        let mut nodes = Vec::new();
+        for (name, speed) in
+            [("DN1", 1.0), ("DN2", 1.0), ("DN3", 1.12), ("DN4", 1.12)]
+        {
+            nodes.push(NodeSpec { name: name.into(), speed, map_slots: 4, reduce_slots: 2 });
+        }
+        Self {
+            nodes,
+            weights: CostWeights::default(),
+            overhead: OverheadParams::default(),
+            n_reducers: 4,
+            workers: 1,
+        }
+    }
+
+    /// Homogeneous cluster of `n` DataNodes (Fig 5(b) speedup sweeps).
+    pub fn uniform(n: usize, map_slots: usize) -> Self {
+        let nodes = (0..n)
+            .map(|i| NodeSpec {
+                name: format!("DN{}", i + 1),
+                speed: 1.0,
+                map_slots,
+                reduce_slots: 2,
+            })
+            .collect();
+        Self {
+            nodes,
+            weights: CostWeights::default(),
+            overhead: OverheadParams::default(),
+            n_reducers: 4,
+            workers: 1,
+        }
+    }
+
+    pub fn total_map_slots(&self) -> usize {
+        self.nodes.iter().map(|n| n.map_slots).sum()
+    }
+
+    pub fn total_reduce_slots(&self) -> usize {
+        self.nodes.iter().map(|n| n.reduce_slots).sum()
+    }
+}
+
+/// Simulated timing of one MapReduce job (one "phase" of the paper).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobTiming {
+    pub submit: f64,
+    pub map_makespan: f64,
+    pub shuffle: f64,
+    pub reduce_makespan: f64,
+}
+
+impl JobTiming {
+    /// The phase's elapsed simulated seconds (a Table 3-5 cell).
+    pub fn elapsed(&self) -> f64 {
+        self.submit + self.map_makespan + self.shuffle + self.reduce_makespan
+    }
+}
+
+/// Convert metered tasks into simulated job timing on `cluster`.
+pub fn simulate_job(
+    map_meters: &[TaskMeter],
+    reduce_meters: &[TaskMeter],
+    cluster: &ClusterConfig,
+) -> JobTiming {
+    let w = &cluster.weights;
+    let oh = &cluster.overhead;
+
+    let map_tasks: Vec<SimTask> = map_meters
+        .iter()
+        .map(|m| SimTask {
+            compute_secs: w.map_compute_secs(&m.counters),
+            preferred_nodes: m.preferred_nodes.clone(),
+        })
+        .collect();
+    let map_slots: Vec<(usize, f64)> = cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .flat_map(|(i, n)| std::iter::repeat((i, n.speed)).take(n.map_slots))
+        .collect();
+    let map_sched = schedule(&map_tasks, &map_slots, oh);
+
+    // Shuffle: all combine-output tuples cross the network (serialized model).
+    let shuffle_tuples: u64 = map_meters
+        .iter()
+        .map(|m| m.counters.get(crate::mapreduce::counters::keys::COMBINE_OUTPUT_TUPLES))
+        .sum();
+    let shuffle = shuffle_tuples as f64 * w.shuffle_tuple;
+
+    let reduce_tasks: Vec<SimTask> = reduce_meters
+        .iter()
+        .map(|m| SimTask {
+            compute_secs: w.reduce_compute_secs(&m.counters),
+            preferred_nodes: Vec::new(),
+        })
+        .collect();
+    let reduce_slots: Vec<(usize, f64)> = cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .flat_map(|(i, n)| std::iter::repeat((i, n.speed)).take(n.reduce_slots))
+        .collect();
+    let reduce_sched = schedule(&reduce_tasks, &reduce_slots, oh);
+
+    JobTiming {
+        submit: oh.job_submit,
+        map_makespan: map_sched.makespan,
+        shuffle,
+        reduce_makespan: reduce_sched.makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::counters::{keys, Counters};
+
+    fn meter(visits: u64, combine_out: u64, nodes: Vec<usize>) -> TaskMeter {
+        let mut counters = Counters::new();
+        counters.add(keys::SUBSET_VISITS, visits);
+        counters.add(keys::COMBINE_OUTPUT_TUPLES, combine_out);
+        TaskMeter { task_id: 0, counters, preferred_nodes: nodes, wall_secs: 0.0 }
+    }
+
+    fn reduce_meter(tuples: u64) -> TaskMeter {
+        let mut counters = Counters::new();
+        counters.add(keys::REDUCE_INPUT_TUPLES, tuples);
+        TaskMeter { task_id: 0, counters, preferred_nodes: vec![], wall_secs: 0.0 }
+    }
+
+    #[test]
+    fn paper_cluster_shape() {
+        let c = ClusterConfig::paper_cluster();
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.total_map_slots(), 16);
+        assert!(c.nodes[2].speed > c.nodes[0].speed);
+    }
+
+    #[test]
+    fn one_wave_vs_three_waves() {
+        // 10 equal tasks: on 4 nodes x 4 slots -> 1 wave; on 1 node -> 3 waves.
+        let tasks: Vec<TaskMeter> = (0..10).map(|_| meter(1_000_000, 10, vec![])).collect();
+        let reduce = vec![reduce_meter(10)];
+        let big = ClusterConfig::uniform(4, 4);
+        let small = ClusterConfig::uniform(1, 4);
+        let t_big = simulate_job(&tasks, &reduce, &big);
+        let t_small = simulate_job(&tasks, &reduce, &small);
+        assert!(t_small.map_makespan > 2.0 * t_big.map_makespan);
+        assert_eq!(t_big.submit, t_small.submit);
+    }
+
+    #[test]
+    fn elapsed_is_sum_of_stages() {
+        let tasks = vec![meter(100, 5, vec![0])];
+        let reduce = vec![reduce_meter(5)];
+        let c = ClusterConfig::paper_cluster();
+        let t = simulate_job(&tasks, &reduce, &c);
+        let total = t.elapsed();
+        assert!(
+            (total - (t.submit + t.map_makespan + t.shuffle + t.reduce_makespan)).abs() < 1e-12
+        );
+        assert!(total > c.overhead.job_submit);
+    }
+
+    #[test]
+    fn more_work_more_time() {
+        let c = ClusterConfig::paper_cluster();
+        let light = simulate_job(&[meter(1_000, 1, vec![])], &[reduce_meter(1)], &c);
+        let heavy = simulate_job(&[meter(100_000_000, 1, vec![])], &[reduce_meter(1)], &c);
+        assert!(heavy.map_makespan > 10.0 * light.map_makespan);
+    }
+
+    #[test]
+    fn shuffle_scales_with_tuples() {
+        let c = ClusterConfig::paper_cluster();
+        let a = simulate_job(&[meter(0, 1_000, vec![])], &[], &c);
+        let b = simulate_job(&[meter(0, 100_000, vec![])], &[], &c);
+        assert!(b.shuffle > 50.0 * a.shuffle);
+    }
+}

@@ -1,0 +1,199 @@
+//! Slot-based list scheduler: assigns simulated tasks to (node, slot) pairs
+//! the way the YARN capacity scheduler fills container requests, producing
+//! the phase makespan.
+//!
+//! Tasks are placed in submission order; each goes to the slot that can
+//! *finish* it earliest, accounting for node speed, task startup cost, and a
+//! data-locality penalty when the chosen node holds no replica of the
+//! task's split.
+
+use super::costmodel::OverheadParams;
+
+/// A simulated task: pure compute seconds (already cost-modeled) plus the
+/// nodes holding its input replicas.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    pub compute_secs: f64,
+    pub preferred_nodes: Vec<usize>,
+}
+
+/// Placement decision for one task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Assignment {
+    pub node: usize,
+    pub slot: usize,
+    pub start: f64,
+    pub finish: f64,
+    pub local: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleOutcome {
+    pub assignments: Vec<Assignment>,
+    pub makespan: f64,
+}
+
+/// Schedule `tasks` onto `slots` (pairs of `(node_id, node_speed)`, one entry
+/// per slot). Returns per-task placements and the makespan.
+pub fn schedule(
+    tasks: &[SimTask],
+    slots: &[(usize, f64)],
+    overhead: &OverheadParams,
+) -> ScheduleOutcome {
+    if tasks.is_empty() || slots.is_empty() {
+        return ScheduleOutcome::default();
+    }
+    // free_at[i] = when slot i next becomes available.
+    let mut free_at = vec![0.0f64; slots.len()];
+    let mut assignments = Vec::with_capacity(tasks.len());
+    let mut makespan = 0.0f64;
+
+    for task in tasks {
+        // Pick the slot minimizing finish time; ties -> prefer data-local.
+        let mut best: Option<(usize, f64, f64, bool)> = None; // (slot, start, finish, local)
+        for (i, &(node, speed)) in slots.iter().enumerate() {
+            let local =
+                task.preferred_nodes.is_empty() || task.preferred_nodes.contains(&node);
+            let start = free_at[i];
+            let mut dur = overhead.task_start + task.compute_secs / speed;
+            if !local {
+                dur += overhead.nonlocal_penalty;
+            }
+            let finish = start + dur;
+            let better = match best {
+                None => true,
+                Some((_, _, bf, bl)) => {
+                    finish < bf - 1e-12 || ((finish - bf).abs() <= 1e-12 && local && !bl)
+                }
+            };
+            if better {
+                best = Some((i, start, finish, local));
+            }
+        }
+        let (slot, start, finish, local) = best.unwrap();
+        free_at[slot] = finish;
+        makespan = makespan.max(finish);
+        assignments.push(Assignment { node: slots[slot].0, slot, start, finish, local });
+    }
+    ScheduleOutcome { assignments, makespan }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, UsizeGen, VecGen};
+
+    fn oh() -> OverheadParams {
+        OverheadParams { job_submit: 0.0, task_start: 1.0, nonlocal_penalty: 0.5, driver_gap: 0.0 }
+    }
+
+    fn task(secs: f64) -> SimTask {
+        SimTask { compute_secs: secs, preferred_nodes: vec![] }
+    }
+
+    #[test]
+    fn single_wave_makespan_is_slowest_task() {
+        let tasks = vec![task(10.0), task(5.0), task(7.0)];
+        let slots = vec![(0, 1.0), (1, 1.0), (2, 1.0), (3, 1.0)];
+        let out = schedule(&tasks, &slots, &oh());
+        assert!((out.makespan - 11.0).abs() < 1e-9); // 10 + 1 start
+    }
+
+    #[test]
+    fn serial_on_one_slot() {
+        let tasks = vec![task(2.0), task(3.0), task(4.0)];
+        let slots = vec![(0, 1.0)];
+        let out = schedule(&tasks, &slots, &oh());
+        assert!((out.makespan - (2.0 + 3.0 + 4.0 + 3.0)).abs() < 1e-9); // + 3 starts
+        // Tasks run back to back.
+        assert!((out.assignments[1].start - out.assignments[0].finish).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faster_node_attracts_work() {
+        let tasks = vec![task(10.0)];
+        let slots = vec![(0, 1.0), (1, 2.0)];
+        let out = schedule(&tasks, &slots, &oh());
+        assert_eq!(out.assignments[0].node, 1);
+        assert!((out.makespan - (1.0 + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn locality_breaks_ties() {
+        let tasks = vec![SimTask { compute_secs: 4.0, preferred_nodes: vec![1] }];
+        let slots = vec![(0, 1.0), (1, 1.0)];
+        let out = schedule(&tasks, &slots, &oh());
+        assert_eq!(out.assignments[0].node, 1);
+        assert!(out.assignments[0].local);
+    }
+
+    #[test]
+    fn nonlocal_penalty_applied() {
+        let tasks = vec![SimTask { compute_secs: 4.0, preferred_nodes: vec![9] }];
+        let slots = vec![(0, 1.0)];
+        let out = schedule(&tasks, &slots, &oh());
+        assert!((out.makespan - (1.0 + 4.0 + 0.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(schedule(&[], &[(0, 1.0)], &oh()).makespan, 0.0);
+        assert_eq!(schedule(&[task(1.0)], &[], &oh()).makespan, 0.0);
+    }
+
+    #[test]
+    fn prop_makespan_bounds() {
+        // Lower bound: max task duration and total-work/slots; upper bound:
+        // greedy list scheduling is within 2x of LPT-optimal-ish bound
+        // (we check the classic (total/m + max) bound).
+        let gen = VecGen { inner: UsizeGen { lo: 1, hi: 50 }, max_len: 40 };
+        forall(601, 120, &gen, |durs| {
+            if durs.is_empty() {
+                return true;
+            }
+            let tasks: Vec<SimTask> = durs.iter().map(|&d| task(d as f64)).collect();
+            let m = 4usize;
+            let slots: Vec<(usize, f64)> = (0..m).map(|i| (i, 1.0)).collect();
+            let out = schedule(
+                &tasks,
+                &slots,
+                &OverheadParams {
+                    job_submit: 0.0,
+                    task_start: 0.0,
+                    nonlocal_penalty: 0.0,
+                    driver_gap: 0.0,
+                },
+            );
+            let total: f64 = durs.iter().map(|&d| d as f64).sum();
+            let maxd = durs.iter().map(|&d| d as f64).fold(0.0, f64::max);
+            let lower = (total / m as f64).max(maxd);
+            out.makespan >= lower - 1e-9 && out.makespan <= total / m as f64 + maxd + 1e-9
+        });
+    }
+
+    #[test]
+    fn prop_no_slot_overlap() {
+        let gen = VecGen { inner: UsizeGen { lo: 1, hi: 20 }, max_len: 30 };
+        forall(602, 80, &gen, |durs| {
+            let tasks: Vec<SimTask> = durs.iter().map(|&d| task(d as f64)).collect();
+            let slots: Vec<(usize, f64)> = (0..3).map(|i| (i, 1.0)).collect();
+            let out = schedule(&tasks, &slots, &oh());
+            // Group assignments per slot and check intervals do not overlap.
+            for s in 0..3 {
+                let mut ivs: Vec<(f64, f64)> = out
+                    .assignments
+                    .iter()
+                    .filter(|a| a.slot == s)
+                    .map(|a| (a.start, a.finish))
+                    .collect();
+                ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for w in ivs.windows(2) {
+                    if w[0].1 > w[1].0 + 1e-9 {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! Typed configuration: experiment settings loadable from TOML-subset files
+//! (see `configs/*.toml`), covering the cluster topology, cost-model
+//! weights, overheads, and per-run mining parameters.
+
+use crate::cluster::{ClusterConfig, CostWeights, NodeSpec, OverheadParams};
+use crate::util::tomlmini::Doc;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error(transparent)]
+    Parse(#[from] crate::util::tomlmini::ParseError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+/// Load a full cluster configuration from a TOML file. Missing keys fall
+/// back to [`ClusterConfig::paper_cluster`] defaults.
+pub fn load_cluster(path: &Path) -> Result<ClusterConfig, ConfigError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ConfigError::Io { path: path.display().to_string(), source: e })?;
+    cluster_from_doc(&Doc::parse(&text)?)
+}
+
+pub fn cluster_from_doc(doc: &Doc) -> Result<ClusterConfig, ConfigError> {
+    let mut cfg = ClusterConfig::paper_cluster();
+
+    if let Some(n) = doc.int("cluster.data_nodes") {
+        let map_slots = doc.int("cluster.map_slots_per_node").unwrap_or(4) as usize;
+        cfg = ClusterConfig::uniform(n as usize, map_slots);
+    }
+    if let Some(speeds) = doc.get("cluster.node_speeds").and_then(|v| v.as_array()) {
+        if speeds.len() != cfg.nodes.len() {
+            return Err(ConfigError::Invalid(format!(
+                "node_speeds has {} entries for {} nodes",
+                speeds.len(),
+                cfg.nodes.len()
+            )));
+        }
+        for (node, s) in cfg.nodes.iter_mut().zip(speeds) {
+            node.speed = s
+                .as_float()
+                .ok_or_else(|| ConfigError::Invalid("node_speeds must be numeric".into()))?;
+            if node.speed <= 0.0 {
+                return Err(ConfigError::Invalid("node speed must be positive".into()));
+            }
+        }
+    }
+    if let Some(r) = doc.int("cluster.reducers") {
+        cfg.n_reducers = r.max(1) as usize;
+    }
+    if let Some(w) = doc.int("cluster.workers") {
+        cfg.workers = w.max(1) as usize;
+    }
+
+    // Overheads.
+    let oh = &mut cfg.overhead;
+    if let Some(v) = doc.float("overhead.job_submit") {
+        oh.job_submit = v;
+    }
+    if let Some(v) = doc.float("overhead.task_start") {
+        oh.task_start = v;
+    }
+    if let Some(v) = doc.float("overhead.nonlocal_penalty") {
+        oh.nonlocal_penalty = v;
+    }
+    if let Some(v) = doc.float("overhead.driver_gap") {
+        oh.driver_gap = v;
+    }
+
+    // Cost weights.
+    let set_weight = |key: &str, slot: &mut f64| -> Result<(), ConfigError> {
+        if let Some(v) = doc.float(key) {
+            if v < 0.0 {
+                return Err(ConfigError::Invalid(format!("{key} must be >= 0")));
+            }
+            *slot = v;
+        }
+        Ok(())
+    };
+    let w = &mut cfg.weights;
+    set_weight("weights.record", &mut w.record)?;
+    set_weight("weights.map_tuple", &mut w.map_tuple)?;
+    set_weight("weights.join_pair", &mut w.join_pair)?;
+    set_weight("weights.prune_check", &mut w.prune_check)?;
+    set_weight("weights.cand_built", &mut w.cand_built)?;
+    set_weight("weights.subset_visit", &mut w.subset_visit)?;
+    set_weight("weights.combine_tuple", &mut w.combine_tuple)?;
+    set_weight("weights.shuffle_tuple", &mut w.shuffle_tuple)?;
+    set_weight("weights.reduce_tuple", &mut w.reduce_tuple)?;
+    Ok(cfg)
+}
+
+/// Render a cluster configuration back to the TOML subset (round-trips
+/// through [`cluster_from_doc`]; used by `mrapriori calibrate --emit`).
+pub fn render_cluster(cfg: &ClusterConfig) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(s, "[cluster]");
+    let uniform = cfg.nodes.iter().all(|n| (n.speed - 1.0).abs() < 1e-12);
+    let _ = writeln!(s, "data_nodes = {}", cfg.nodes.len());
+    let _ = writeln!(s, "map_slots_per_node = {}", cfg.nodes.first().map(|n| n.map_slots).unwrap_or(4));
+    if !uniform {
+        let speeds: Vec<String> = cfg.nodes.iter().map(|n| format!("{}", n.speed)).collect();
+        let _ = writeln!(s, "node_speeds = [{}]", speeds.join(", "));
+    }
+    let _ = writeln!(s, "reducers = {}", cfg.n_reducers);
+    let _ = writeln!(s, "workers = {}", cfg.workers);
+    let oh = &cfg.overhead;
+    let _ = writeln!(s, "\n[overhead]");
+    let _ = writeln!(s, "job_submit = {}", oh.job_submit);
+    let _ = writeln!(s, "task_start = {}", oh.task_start);
+    let _ = writeln!(s, "nonlocal_penalty = {}", oh.nonlocal_penalty);
+    let _ = writeln!(s, "driver_gap = {}", oh.driver_gap);
+    let w = &cfg.weights;
+    let _ = writeln!(s, "\n[weights]");
+    let _ = writeln!(s, "record = {:e}", w.record);
+    let _ = writeln!(s, "map_tuple = {:e}", w.map_tuple);
+    let _ = writeln!(s, "join_pair = {:e}", w.join_pair);
+    let _ = writeln!(s, "prune_check = {:e}", w.prune_check);
+    let _ = writeln!(s, "cand_built = {:e}", w.cand_built);
+    let _ = writeln!(s, "subset_visit = {:e}", w.subset_visit);
+    let _ = writeln!(s, "combine_tuple = {:e}", w.combine_tuple);
+    let _ = writeln!(s, "shuffle_tuple = {:e}", w.shuffle_tuple);
+    let _ = writeln!(s, "reduce_tuple = {:e}", w.reduce_tuple);
+    s
+}
+
+/// Keep NodeSpec public-API discoverable from this module too.
+pub type Node = NodeSpec;
+pub type Weights = CostWeights;
+pub type Overheads = OverheadParams;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = cluster_from_doc(&Doc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.nodes.len(), 4);
+        assert_eq!(cfg.overhead.job_submit, 15.0);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let text = r#"
+[cluster]
+data_nodes = 2
+map_slots_per_node = 8
+reducers = 3
+workers = 2
+
+[overhead]
+job_submit = 7.5
+
+[weights]
+subset_visit = 1e-7
+"#;
+        let cfg = cluster_from_doc(&Doc::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.nodes.len(), 2);
+        assert_eq!(cfg.nodes[0].map_slots, 8);
+        assert_eq!(cfg.n_reducers, 3);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.overhead.job_submit, 7.5);
+        assert_eq!(cfg.weights.subset_visit, 1e-7);
+        // Untouched weight keeps its default.
+        assert_eq!(cfg.weights.join_pair, CostWeights::default().join_pair);
+    }
+
+    #[test]
+    fn node_speeds_validated() {
+        let bad = "[cluster]\ndata_nodes = 2\nnode_speeds = [1.0, 1.0, 1.0]";
+        assert!(cluster_from_doc(&Doc::parse(bad).unwrap()).is_err());
+        let bad = "[cluster]\ndata_nodes = 1\nnode_speeds = [-1.0]";
+        assert!(cluster_from_doc(&Doc::parse(bad).unwrap()).is_err());
+        let ok = "[cluster]\ndata_nodes = 2\nnode_speeds = [1.0, 1.5]";
+        let cfg = cluster_from_doc(&Doc::parse(ok).unwrap()).unwrap();
+        assert_eq!(cfg.nodes[1].speed, 1.5);
+    }
+
+    #[test]
+    fn negative_weight_rejected() {
+        let bad = "[weights]\nrecord = -1.0";
+        assert!(cluster_from_doc(&Doc::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let mut cfg = ClusterConfig::uniform(3, 2);
+        cfg.overhead.job_submit = 9.0;
+        cfg.weights.subset_visit = 3.3e-6;
+        let text = render_cluster(&cfg);
+        let back = cluster_from_doc(&Doc::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.nodes.len(), 3);
+        assert_eq!(back.overhead.job_submit, 9.0);
+        assert!((back.weights.subset_visit - 3.3e-6).abs() < 1e-18);
+    }
+}

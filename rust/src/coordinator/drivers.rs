@@ -1,0 +1,291 @@
+//! Driver-side phase control: the per-algorithm logic that decides how many
+//! Apriori passes the next MapReduce phase combines (Algorithms 2–4).
+//!
+//! Each controller sees only what the paper's drivers see — the candidate
+//! count and elapsed time of preceding phases plus |L_prev| — and returns a
+//! [`PassPolicy`] for the next Job2.
+
+use super::mappers::PassPolicy;
+
+/// Observation handed to a controller after each finished phase.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseObservation {
+    /// Candidates generated in the phase (`candidateCount`).
+    pub candidates: u64,
+    /// Passes the phase combined (`npass` — relevant for dynamic policies).
+    pub npass: usize,
+    /// Simulated elapsed seconds of the phase.
+    pub elapsed: f64,
+}
+
+/// Phase-control strategy of one algorithm family.
+pub trait PhaseController {
+    /// Policy for the next phase; `l_prev_len` = |L_{k-1}|, the number of
+    /// longest-sized frequent itemsets of the previous phase.
+    fn next_policy(&mut self, l_prev_len: u64) -> PassPolicy;
+    /// Feed back the finished phase.
+    fn observe(&mut self, obs: PhaseObservation);
+    /// Seed elapsed-time state from Job1 (Algorithm 4 line 3); most
+    /// controllers ignore it.
+    fn init_job1(&mut self, _elapsed: f64) {}
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+
+/// SPC: one pass per phase (Algorithm 2).
+pub struct SpcController;
+
+impl PhaseController for SpcController {
+    fn next_policy(&mut self, _l: u64) -> PassPolicy {
+        PassPolicy::Fixed(1)
+    }
+    fn observe(&mut self, _obs: PhaseObservation) {}
+    fn name(&self) -> &'static str {
+        "SPC"
+    }
+}
+
+/// FPC: a fixed number of passes per phase ("generally 3", Lin et al.).
+pub struct FpcController {
+    pub n: usize,
+}
+
+impl Default for FpcController {
+    fn default() -> Self {
+        Self { n: 3 }
+    }
+}
+
+impl PhaseController for FpcController {
+    fn next_policy(&mut self, _l: u64) -> PassPolicy {
+        PassPolicy::Fixed(self.n)
+    }
+    fn observe(&mut self, _obs: PhaseObservation) {}
+    fn name(&self) -> &'static str {
+        "FPC"
+    }
+}
+
+/// DPC (Lin et al.): candidate threshold `ct = α · |L_prev|`, with α raised
+/// above 1 only when the previous phase ran faster than the β threshold —
+/// the execution-time dependence the paper criticizes (§1, §4).
+pub struct DpcController {
+    /// α used when the previous phase was fast (paper: 1.2, 2 or 3).
+    pub alpha_fast: f64,
+    /// β, seconds (paper: 60).
+    pub beta: f64,
+    /// Elapsed time of the previous phase (initialized from Job1).
+    pub et_prev: f64,
+}
+
+impl DpcController {
+    pub fn new(alpha_fast: f64, beta: f64) -> Self {
+        Self { alpha_fast, beta, et_prev: 0.0 }
+    }
+}
+
+impl PhaseController for DpcController {
+    fn next_policy(&mut self, l_prev_len: u64) -> PassPolicy {
+        let alpha = if self.et_prev < self.beta { self.alpha_fast } else { 1.0 };
+        PassPolicy::Dynamic { ct: (alpha * l_prev_len as f64).floor() as u64 }
+    }
+    fn observe(&mut self, obs: PhaseObservation) {
+        self.et_prev = obs.elapsed;
+    }
+    fn init_job1(&mut self, elapsed: f64) {
+        self.et_prev = elapsed;
+    }
+    fn name(&self) -> &'static str {
+        "DPC"
+    }
+}
+
+/// VFPC (Algorithm 3): start with 2-pass phases; when the per-phase
+/// candidate count starts decreasing, combine 3 more passes per phase.
+pub struct VfpcController {
+    npass: usize,
+    num_cands_prev: u64,
+}
+
+impl Default for VfpcController {
+    fn default() -> Self {
+        Self { npass: 2, num_cands_prev: 0 }
+    }
+}
+
+impl PhaseController for VfpcController {
+    fn next_policy(&mut self, _l: u64) -> PassPolicy {
+        PassPolicy::Fixed(self.npass)
+    }
+    fn observe(&mut self, obs: PhaseObservation) {
+        if obs.candidates < self.num_cands_prev {
+            self.npass += 3;
+        } else {
+            self.npass = 2;
+        }
+        self.num_cands_prev = obs.candidates;
+    }
+    fn name(&self) -> &'static str {
+        "VFPC"
+    }
+}
+
+/// ETDPC (Algorithm 4): candidate threshold with α driven by the *relative*
+/// elapsed time of the two preceding phases (β₁ = 40 s, β₂ = 60 s).
+pub struct EtdpcController {
+    pub alpha: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    /// Elapsed time of the phase before the last (ETprev).
+    pub et_prev: f64,
+    /// Whether we have seen at least one Job2 phase.
+    started: bool,
+}
+
+impl EtdpcController {
+    pub fn new() -> Self {
+        Self { alpha: 1.0, beta1: 40.0, beta2: 60.0, et_prev: 0.0, started: false }
+    }
+
+    /// Initialize ETprev from Job1's elapsed time (Algorithm 4 line 3).
+    pub fn init_et_prev(&mut self, job1_elapsed: f64) {
+        self.et_prev = job1_elapsed;
+    }
+}
+
+impl Default for EtdpcController {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseController for EtdpcController {
+    fn next_policy(&mut self, l_prev_len: u64) -> PassPolicy {
+        PassPolicy::Dynamic { ct: (self.alpha * l_prev_len as f64).floor() as u64 }
+    }
+    fn observe(&mut self, obs: PhaseObservation) {
+        let et = obs.elapsed;
+        if self.et_prev < et {
+            // Workload rising: combine more only if phases are still cheap.
+            self.alpha = if et <= self.beta1 {
+                3.0
+            } else if et < self.beta2 {
+                2.0
+            } else {
+                1.0
+            };
+        } else {
+            // Workload falling: safe to combine aggressively.
+            self.alpha = if self.et_prev >= 1.5 * et { 3.0 } else { 2.0 };
+        }
+        self.et_prev = et;
+        self.started = true;
+    }
+    fn init_job1(&mut self, elapsed: f64) {
+        self.init_et_prev(elapsed);
+    }
+    fn name(&self) -> &'static str {
+        "ETDPC"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(candidates: u64, elapsed: f64) -> PhaseObservation {
+        PhaseObservation { candidates, npass: 1, elapsed }
+    }
+
+    #[test]
+    fn spc_always_one() {
+        let mut c = SpcController;
+        assert_eq!(c.next_policy(100), PassPolicy::Fixed(1));
+        c.observe(obs(5, 50.0));
+        assert_eq!(c.next_policy(1), PassPolicy::Fixed(1));
+    }
+
+    #[test]
+    fn fpc_fixed_n() {
+        let mut c = FpcController { n: 3 };
+        assert_eq!(c.next_policy(7), PassPolicy::Fixed(3));
+        c.observe(obs(1_000_000, 500.0)); // FPC never adapts — the flaw
+        assert_eq!(c.next_policy(7), PassPolicy::Fixed(3));
+    }
+
+    #[test]
+    fn vfpc_ramps_after_decrease() {
+        let mut c = VfpcController::default();
+        assert_eq!(c.next_policy(0), PassPolicy::Fixed(2));
+        c.observe(obs(100, 10.0)); // 100 >= 0 -> stay 2
+        assert_eq!(c.next_policy(0), PassPolicy::Fixed(2));
+        c.observe(obs(500, 10.0)); // rising -> stay 2
+        assert_eq!(c.next_policy(0), PassPolicy::Fixed(2));
+        c.observe(obs(300, 10.0)); // falling -> 2+3 = 5
+        assert_eq!(c.next_policy(0), PassPolicy::Fixed(5));
+        c.observe(obs(50, 10.0)); // still falling -> 5+3 = 8
+        assert_eq!(c.next_policy(0), PassPolicy::Fixed(8));
+        c.observe(obs(60, 10.0)); // rising again -> reset to 2
+        assert_eq!(c.next_policy(0), PassPolicy::Fixed(2));
+    }
+
+    #[test]
+    fn dpc_alpha_depends_on_absolute_time() {
+        let mut c = DpcController::new(2.0, 60.0);
+        c.et_prev = 20.0; // fast phase -> alpha 2
+        assert_eq!(c.next_policy(100), PassPolicy::Dynamic { ct: 200 });
+        c.observe(obs(0, 120.0)); // slow phase -> alpha 1
+        assert_eq!(c.next_policy(100), PassPolicy::Dynamic { ct: 100 });
+    }
+
+    #[test]
+    fn etdpc_alpha_table() {
+        let mut c = EtdpcController::new();
+        c.init_et_prev(16.0);
+        // Default alpha 1 before any Job2 feedback.
+        assert_eq!(c.next_policy(10), PassPolicy::Dynamic { ct: 10 });
+
+        // Rising, cheap (et <= 40): alpha 3.
+        c.observe(obs(0, 30.0)); // 16 < 30, 30 <= 40
+        assert_eq!(c.next_policy(10), PassPolicy::Dynamic { ct: 30 });
+
+        // Rising, moderate (40 < et < 60): alpha 2.
+        c.observe(obs(0, 50.0));
+        assert_eq!(c.next_policy(10), PassPolicy::Dynamic { ct: 20 });
+
+        // Rising, expensive (et >= 60): alpha 1.
+        c.observe(obs(0, 80.0));
+        assert_eq!(c.next_policy(10), PassPolicy::Dynamic { ct: 10 });
+
+        // Falling steeply (etprev >= 1.5 et): alpha 3.
+        c.observe(obs(0, 40.0)); // 80 >= 60
+        assert_eq!(c.next_policy(10), PassPolicy::Dynamic { ct: 30 });
+
+        // Falling gently: alpha 2.
+        c.observe(obs(0, 35.0)); // 40 < 1.5*35
+        assert_eq!(c.next_policy(10), PassPolicy::Dynamic { ct: 20 });
+    }
+
+    #[test]
+    fn etdpc_relative_vs_dpc_absolute() {
+        // Scale every elapsed time 10x (a slower cluster): DPC's policy
+        // changes (it compares to the absolute 60 s threshold on both ends);
+        // ETDPC's falling-phase policy is scale-free.
+        let mut d_fast = DpcController::new(2.0, 60.0);
+        let mut d_slow = DpcController::new(2.0, 60.0);
+        d_fast.observe(obs(0, 30.0));
+        d_slow.observe(obs(0, 300.0));
+        assert_ne!(d_fast.next_policy(10), d_slow.next_policy(10));
+
+        let mut e_fast = EtdpcController::new();
+        let mut e_slow = EtdpcController::new();
+        e_fast.init_et_prev(16.0);
+        e_slow.init_et_prev(160.0);
+        // Falling workload on both clusters, same 2x ratio.
+        e_fast.observe(obs(0, 8.0));
+        e_slow.observe(obs(0, 80.0));
+        assert_eq!(e_fast.next_policy(10), e_slow.next_policy(10));
+    }
+}

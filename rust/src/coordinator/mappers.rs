@@ -1,0 +1,399 @@
+//! The paper's Mapper implementations (Algorithms 1–5):
+//! `OneItemsetMapper` (Job1), and a parameterized `Job2Mapper` covering
+//! `SPCItemsetMapper`, `VFPCItemsetMapper`, `ETDPCItemsetMapper`, and their
+//! Optimized variants (skipped pruning after the first pass of a phase).
+//!
+//! ## Faithful cost metering
+//!
+//! In the paper's Hadoop implementation `apriori-gen()` runs inside `map()`
+//! and is therefore re-invoked *for every transaction* (§4.3 — the very
+//! observation that motivates `non-apriori-gen()`). Re-executing identical
+//! generation work per record would only heat the host CPU, so the mapper
+//! executes generation once per task and, in [`GenMode::PerRecord`], charges
+//! its metered cost multiplied by the record count — cost-identical to the
+//! faithful re-invocation, bit-identical in output. [`GenMode::PerTask`]
+//! charges it once (a hand-optimized implementation) and exists as an
+//! ablation (`cargo bench --bench ablation_pruning`).
+
+use crate::apriori::gen::{apriori_gen, non_apriori_gen, GenStats};
+use crate::itemset::{Itemset, Trie};
+use crate::mapreduce::api::{Context, Mapper};
+use crate::mapreduce::counters::keys;
+use std::sync::Arc;
+
+/// Algorithm 1: emits `(item, 1)` per item of each transaction.
+pub struct OneItemsetMapper;
+
+impl Mapper for OneItemsetMapper {
+    type K = Itemset;
+    type V = u64;
+
+    fn map(&mut self, _offset: usize, record: &Itemset, ctx: &mut Context<Itemset, u64>) {
+        for &item in record {
+            ctx.write(vec![item], 1);
+        }
+    }
+}
+
+/// Kovacs & Illes' fused first phase (paper ref [6]): count all 1-itemsets
+/// AND 2-itemsets in one scan with an in-mapper triangular matrix, saving
+/// an entire MapReduce job. Enabled by `RunOptions::fuse_pass_2`.
+pub struct FusedOneTwoMapper {
+    counter: crate::apriori::triangular::TriangularCounter,
+    raw_writes: u64,
+}
+
+impl FusedOneTwoMapper {
+    pub fn new(n_items: usize) -> Self {
+        Self { counter: crate::apriori::triangular::TriangularCounter::new(n_items), raw_writes: 0 }
+    }
+}
+
+impl Mapper for FusedOneTwoMapper {
+    type K = Itemset;
+    type V = u64;
+
+    fn map(&mut self, _offset: usize, record: &Itemset, ctx: &mut Context<Itemset, u64>) {
+        self.counter.add_transaction(record);
+        // Faithful raw write count: (item, 1) per item + (pair, 1) per pair.
+        let w = record.len() as u64;
+        let updates = w + w * (w - 1) / 2;
+        self.raw_writes += updates;
+        // Each triangle update is one O(1) counting op for the cost model.
+        ctx.counters.add(keys::SUBSET_VISITS, updates);
+    }
+
+    fn cleanup(&mut self, ctx: &mut Context<Itemset, u64>) {
+        // Faithful raw write volume, attributed once.
+        ctx.counters.add(keys::MAP_OUTPUT_TUPLES, self.raw_writes);
+        // Emit aggregated counts (in-mapper combining via the dense matrix).
+        let (l1, l2) = self.counter.frequent(1);
+        for (set, count) in l1.into_iter().chain(l2) {
+            ctx.write_combined(set, count, 0);
+        }
+    }
+}
+
+/// How many Apriori passes this phase combines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PassPolicy {
+    /// Combine exactly `n` passes (SPC: 1, FPC: 3, VFPC: driver-chosen).
+    Fixed(usize),
+    /// Combine passes until the cumulative candidate count exceeds `ct`
+    /// (DPC/ETDPC: `ct = α · |L_prev|`, do-while semantics).
+    Dynamic { ct: u64 },
+}
+
+/// Whether generation cost is charged per record (faithful to the paper's
+/// MapReduce implementation) or once per task (hand-optimized variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GenMode {
+    #[default]
+    PerRecord,
+    PerTask,
+}
+
+/// The phase's candidate-generation result, per Algorithms 2–5. Built once
+/// per *job* by [`PhasePlan::build`] and shared read-only by every map task
+/// of that job — the distributed-cache pattern: the paper's Hadoop mappers
+/// each rebuild this per map() call; the cluster cost model still charges
+/// that faithful cost (see [`GenMode`]), but the host only executes the
+/// generation once (§Perf log).
+pub struct PhasePlan {
+    /// One candidate trie per combined pass, levels k, k+1, ...
+    pub tries: Vec<Trie>,
+    /// Metered generation work for ONE invocation of the in-map generation.
+    pub gen_once: GenStats,
+    /// Total candidates generated in this phase (paper's `candidateCount`).
+    pub candidate_count: u64,
+    /// Passes actually combined (paper's `npass`).
+    pub npass: usize,
+}
+
+impl PhasePlan {
+    /// Execute the phase's candidate generation, per Algorithms 2–5.
+    pub fn build(l_prev: &Trie, policy: PassPolicy, optimized: bool) -> PhasePlan {
+        let mut tries: Vec<Trie> = Vec::new();
+        let mut gen_once = GenStats::default();
+        let mut candidate_count = 0u64;
+        let mut npass = 0usize;
+        loop {
+            // First pass generates from L_{k-1} with full apriori-gen;
+            // later passes generate from the previous pass's *candidates* —
+            // with pruning for the plain variants, join-only when optimized.
+            let source = if npass == 0 { l_prev } else { tries.last().unwrap() };
+            let (trie, stats) = if npass == 0 || !optimized {
+                apriori_gen(source)
+            } else {
+                non_apriori_gen(source)
+            };
+            gen_once.merge(&stats);
+            if trie.is_empty() {
+                // No candidates at this level: nothing larger can exist.
+                break;
+            }
+            candidate_count += trie.len() as u64;
+            npass += 1;
+            tries.push(trie);
+            match policy {
+                PassPolicy::Fixed(n) => {
+                    if npass >= n {
+                        break;
+                    }
+                }
+                PassPolicy::Dynamic { ct } => {
+                    // do-while(candidateCount <= ct): the pass that crosses
+                    // `ct` still runs (it was just counted); stop after it.
+                    if candidate_count > ct {
+                        break;
+                    }
+                }
+            }
+        }
+        PhasePlan { tries, gen_once, candidate_count, npass }
+    }
+}
+
+/// Job2 mapper for every algorithm variant.
+pub struct Job2Mapper {
+    plan: Arc<PhasePlan>,
+    gen_mode: GenMode,
+    /// Per-task support counters, one buffer per pass trie.
+    counts: Vec<Vec<u64>>,
+    scratch: Vec<(u32, usize, usize)>,
+    records: u64,
+}
+
+impl Job2Mapper {
+    pub fn new(plan: Arc<PhasePlan>, gen_mode: GenMode) -> Self {
+        let counts = plan.tries.iter().map(|t| vec![0u64; t.node_count()]).collect();
+        Self { plan, gen_mode, counts, scratch: Vec::new(), records: 0 }
+    }
+
+    /// Convenience used by tests: build the plan inline.
+    pub fn standalone(
+        l_prev: Arc<Trie>,
+        policy: PassPolicy,
+        optimized: bool,
+        gen_mode: GenMode,
+    ) -> Self {
+        Self::new(Arc::new(PhasePlan::build(&l_prev, policy, optimized)), gen_mode)
+    }
+}
+
+impl Mapper for Job2Mapper {
+    type K = Itemset;
+    type V = u64;
+
+    fn map(&mut self, _offset: usize, record: &Itemset, ctx: &mut Context<Itemset, u64>) {
+        self.records += 1;
+        let mut visits = 0u64;
+        for (trie, counts) in self.plan.tries.iter().zip(&mut self.counts) {
+            let (v, _hits) = trie.count_transaction_into(record, counts, &mut self.scratch);
+            visits += v;
+        }
+        ctx.counters.add(keys::SUBSET_VISITS, visits);
+    }
+
+    fn cleanup(&mut self, ctx: &mut Context<Itemset, u64>) {
+        // Charge generation cost: per record (faithful re-invocation of
+        // apriori-gen inside map(), §4.3) or once per task (hand-optimized
+        // implementation); an empty split still builds the trie once.
+        let times = match self.gen_mode {
+            GenMode::PerRecord => self.records.max(1),
+            GenMode::PerTask => 1,
+        };
+        ctx.counters.add(keys::JOIN_PAIRS, self.plan.gen_once.join_pairs * times);
+        ctx.counters.add(keys::PRUNE_CHECKS, self.plan.gen_once.prune_checks * times);
+        ctx.counters.add(keys::CANDS_BUILT, self.plan.gen_once.kept * times);
+
+        // Emit locally-aggregated candidate counts (in-mapper combining: the
+        // per-task counter buffers play the Combiner's role; `raw` restores
+        // the faithful write(c, 1)-per-hit tuple count for the cost model).
+        for (trie, counts) in self.plan.tries.iter().zip(&self.counts) {
+            for (set, count) in trie.iter_with_counts(counts) {
+                if count > 0 {
+                    ctx.write_combined(set, count, count);
+                }
+            }
+        }
+
+        // Driver side-channel, as in Algorithms 3–5.
+        ctx.set_aux(keys::CANDIDATES, self.plan.candidate_count);
+        ctx.set_aux(keys::NPASS, self.plan.npass as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l_of(k: usize, sets: &[&[u32]]) -> Arc<Trie> {
+        let owned: Vec<Itemset> = sets.iter().map(|s| s.to_vec()).collect();
+        Arc::new(Trie::from_itemsets(k, owned.iter()))
+    }
+
+    fn run_mapper(mapper: &mut Job2Mapper, txns: &[&[u32]]) -> Context<Itemset, u64> {
+        let mut ctx = Context::new();
+        for (i, t) in txns.iter().enumerate() {
+            mapper.map(i, &t.to_vec(), &mut ctx);
+        }
+        mapper.cleanup(&mut ctx);
+        ctx
+    }
+
+    #[test]
+    fn spc_single_pass_counts() {
+        // L1 = {1},{2},{3}; txns: [1,2,3], [1,2] -> C2 counts: 12:2, 13:1, 23:1
+        let mut m = Job2Mapper::standalone(
+            l_of(1, &[&[1], &[2], &[3]]),
+            PassPolicy::Fixed(1),
+            false,
+            GenMode::PerRecord,
+        );
+        let mut ctx = run_mapper(&mut m, &[&[1, 2, 3], &[1, 2]]);
+        let mut out = ctx.take_output();
+        out.sort();
+        assert_eq!(out, vec![(vec![1, 2], 2), (vec![1, 3], 1), (vec![2, 3], 1)]);
+        assert_eq!(ctx.aux[keys::NPASS], 1);
+        assert_eq!(ctx.aux[keys::CANDIDATES], 3);
+    }
+
+    #[test]
+    fn multipass_counts_multiple_levels() {
+        // Combine 2 passes: C2 from L1, C3 from C2.
+        let mut m = Job2Mapper::standalone(
+            l_of(1, &[&[1], &[2], &[3]]),
+            PassPolicy::Fixed(2),
+            false,
+            GenMode::PerRecord,
+        );
+        let mut ctx = run_mapper(&mut m, &[&[1, 2, 3]]);
+        let mut out = ctx.take_output();
+        out.sort();
+        assert_eq!(
+            out,
+            vec![
+                (vec![1, 2], 1),
+                (vec![1, 2, 3], 1),
+                (vec![1, 3], 1),
+                (vec![2, 3], 1)
+            ]
+        );
+        assert_eq!(ctx.aux[keys::CANDIDATES], 4); // 3 pairs + 1 triple
+        assert_eq!(ctx.aux[keys::NPASS], 2);
+    }
+
+    #[test]
+    fn fixed_policy_stops_on_empty_level() {
+        // L1 = {1},{2}: C2={12}, C3 from C2 empty -> npass stops at 2 even
+        // though Fixed(5) asked for more.
+        let mut m = Job2Mapper::standalone(
+            l_of(1, &[&[1], &[2]]),
+            PassPolicy::Fixed(5),
+            false,
+            GenMode::PerRecord,
+        );
+        let ctx = run_mapper(&mut m, &[&[1, 2]]);
+        assert_eq!(ctx.aux[keys::NPASS], 1);
+        assert_eq!(ctx.aux[keys::CANDIDATES], 1);
+    }
+
+    #[test]
+    fn dynamic_policy_do_while_semantics() {
+        // L1 = 4 items -> C2 has 6, C3 has 4, C4 has 1.
+        let l1 = l_of(1, &[&[1], &[2], &[3], &[4]]);
+        // ct = 5: first pass (6 cands) exceeds ct AFTER being counted -> stop: npass=1.
+        let mut m = Job2Mapper::standalone(
+            Arc::clone(&l1),
+            PassPolicy::Dynamic { ct: 5 },
+            false,
+            GenMode::PerRecord,
+        );
+        let ctx = run_mapper(&mut m, &[&[1, 2, 3, 4]]);
+        assert_eq!(ctx.aux[keys::NPASS], 1);
+        // ct = 6: 6 <= 6 -> second pass runs (6+4=10 > 6) -> npass=2.
+        let mut m = Job2Mapper::standalone(
+            Arc::clone(&l1),
+            PassPolicy::Dynamic { ct: 6 },
+            false,
+            GenMode::PerRecord,
+        );
+        let ctx = run_mapper(&mut m, &[&[1, 2, 3, 4]]);
+        assert_eq!(ctx.aux[keys::NPASS], 2);
+        assert_eq!(ctx.aux[keys::CANDIDATES], 10);
+        // Huge ct: runs to exhaustion (passes 2,3,4 -> 6+4+1 = 11).
+        let mut m =
+            Job2Mapper::standalone(l1, PassPolicy::Dynamic { ct: 1000 }, false, GenMode::PerRecord);
+        let ctx = run_mapper(&mut m, &[&[1, 2, 3, 4]]);
+        assert_eq!(ctx.aux[keys::NPASS], 3);
+        assert_eq!(ctx.aux[keys::CANDIDATES], 11);
+    }
+
+    #[test]
+    fn optimized_produces_superset_candidates_same_frequents() {
+        // From the paper's Fig. 1 argument: optimized phases generate
+        // un-pruned extras, but counting them changes nothing after the
+        // min-support filter. Here L2 over items {1..4} missing {2,4}:
+        let l2 = l_of(2, &[&[1, 2], &[1, 3], &[1, 4], &[2, 3], &[3, 4]]);
+        let txns: &[&[u32]] = &[&[1, 2, 3], &[1, 3, 4], &[1, 2, 3, 4]];
+
+        let mut plain =
+            Job2Mapper::standalone(Arc::clone(&l2), PassPolicy::Fixed(2), false, GenMode::PerRecord);
+        let mut ctx_p = run_mapper(&mut plain, txns);
+        let mut opt = Job2Mapper::standalone(l2, PassPolicy::Fixed(2), true, GenMode::PerRecord);
+        let mut ctx_o = run_mapper(&mut opt, txns);
+
+        assert!(ctx_o.aux[keys::CANDIDATES] >= ctx_p.aux[keys::CANDIDATES]);
+        // Same counted supports on the shared candidates.
+        let mut po = ctx_p.take_output();
+        let mut oo = ctx_o.take_output();
+        po.sort();
+        oo.sort();
+        for (set, count) in &po {
+            let in_opt = oo.iter().find(|(s, _)| s == set);
+            assert_eq!(in_opt.map(|(_, c)| *c), Some(*count), "set {set:?}");
+        }
+    }
+
+    #[test]
+    fn gen_mode_changes_charged_cost_not_output() {
+        let l1 = l_of(1, &[&[1], &[2], &[3]]);
+        let txns: &[&[u32]] = &[&[1, 2, 3], &[1, 2], &[2, 3]];
+        let mut per_rec =
+            Job2Mapper::standalone(Arc::clone(&l1), PassPolicy::Fixed(2), false, GenMode::PerRecord);
+        let mut per_task = Job2Mapper::standalone(l1, PassPolicy::Fixed(2), false, GenMode::PerTask);
+        let mut ctx_r = run_mapper(&mut per_rec, txns);
+        let mut ctx_t = run_mapper(&mut per_task, txns);
+        assert_eq!(
+            ctx_r.counters.get(keys::JOIN_PAIRS),
+            3 * ctx_t.counters.get(keys::JOIN_PAIRS)
+        );
+        let mut a = ctx_r.take_output();
+        let mut b = ctx_t.take_output();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn subset_visits_metered() {
+        let mut m = Job2Mapper::standalone(
+            l_of(1, &[&[1], &[2], &[3]]),
+            PassPolicy::Fixed(1),
+            false,
+            GenMode::PerRecord,
+        );
+        let ctx = run_mapper(&mut m, &[&[1, 2, 3]]);
+        assert!(ctx.counters.get(keys::SUBSET_VISITS) > 0);
+    }
+
+    #[test]
+    fn one_itemset_mapper_emits_per_item() {
+        let mut m = OneItemsetMapper;
+        let mut ctx = Context::new();
+        m.map(0, &vec![3, 5, 9], &mut ctx);
+        let out = ctx.take_output();
+        assert_eq!(out, vec![(vec![3], 1), (vec![5], 1), (vec![9], 1)]);
+    }
+}

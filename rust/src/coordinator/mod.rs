@@ -1,0 +1,557 @@
+//! The Layer-3 coordinator: drives the seven MapReduce Apriori algorithms
+//! (SPC, FPC, DPC, VFPC, ETDPC, Optimized-VFPC, Optimized-ETDPC) over the
+//! MapReduce engine and the simulated cluster, producing per-phase metrics
+//! that regenerate the paper's tables and figures.
+
+pub mod drivers;
+pub mod mappers;
+
+use crate::apriori::sequential::Level;
+use crate::cluster::{simulate_job, ClusterConfig, JobTiming};
+use crate::dataset::TransactionDb;
+use crate::hdfs;
+use crate::itemset::{Itemset, Trie};
+use crate::mapreduce::api::{HashPartitioner, MinSupportReducer, SumCombiner};
+use crate::mapreduce::counters::{keys, Counters};
+use crate::mapreduce::engine::{run_job, JobSpec};
+use drivers::{
+    DpcController, EtdpcController, FpcController, PhaseController, PhaseObservation,
+    SpcController, VfpcController,
+};
+use mappers::{GenMode, Job2Mapper, OneItemsetMapper};
+use std::sync::Arc;
+
+/// The seven algorithms of the paper's evaluation (§5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Spc,
+    Fpc,
+    Dpc,
+    Vfpc,
+    Etdpc,
+    OptimizedVfpc,
+    OptimizedEtdpc,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 7] = [
+        Algorithm::Spc,
+        Algorithm::Fpc,
+        Algorithm::Dpc,
+        Algorithm::Vfpc,
+        Algorithm::Etdpc,
+        Algorithm::OptimizedVfpc,
+        Algorithm::OptimizedEtdpc,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Spc => "SPC",
+            Algorithm::Fpc => "FPC",
+            Algorithm::Dpc => "DPC",
+            Algorithm::Vfpc => "VFPC",
+            Algorithm::Etdpc => "ETDPC",
+            Algorithm::OptimizedVfpc => "Optimized-VFPC",
+            Algorithm::OptimizedEtdpc => "Optimized-ETDPC",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        let norm = s.to_ascii_lowercase().replace(['-', '_'], "");
+        Some(match norm.as_str() {
+            "spc" => Algorithm::Spc,
+            "fpc" => Algorithm::Fpc,
+            "dpc" => Algorithm::Dpc,
+            "vfpc" => Algorithm::Vfpc,
+            "etdpc" => Algorithm::Etdpc,
+            "optimizedvfpc" | "optvfpc" => Algorithm::OptimizedVfpc,
+            "optimizedetdpc" | "optetdpc" => Algorithm::OptimizedEtdpc,
+            _ => return None,
+        })
+    }
+
+    /// Whether Job2 phases skip pruning after their first pass (§4.2).
+    pub fn optimized(&self) -> bool {
+        matches!(self, Algorithm::OptimizedVfpc | Algorithm::OptimizedEtdpc)
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Tunables shared by a mining run.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Lines per input split (the paper's `setNumLinesPerSplit`).
+    pub split_lines: usize,
+    /// Faithful per-record generation cost vs once-per-task (ablation).
+    pub gen_mode: GenMode,
+    /// FPC's fixed pass count (paper: "generally 3").
+    pub fpc_n: usize,
+    /// DPC's fast-phase α (paper: 2.0 for c20d10k/mushroom, 3.0 for chess).
+    pub dpc_alpha: f64,
+    /// DPC's β threshold in seconds (paper: 60).
+    pub dpc_beta: f64,
+    /// Fuse passes 1 and 2 into a single job with a triangular-matrix
+    /// counter (Kovacs & Illes, the paper's ref [6]); Job2 then starts at
+    /// k = 3, saving one MapReduce job.
+    pub fuse_pass_2: bool,
+    /// Placement seed for HDFS replicas.
+    pub seed: u64,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            split_lines: 1000,
+            gen_mode: GenMode::PerRecord,
+            fpc_n: 3,
+            dpc_alpha: 2.0,
+            dpc_beta: 60.0,
+            fuse_pass_2: false,
+            seed: 1,
+        }
+    }
+}
+
+/// Metrics of one MapReduce phase (one row slice of Tables 3-5 / 10-12).
+#[derive(Debug, Clone)]
+pub struct PhaseRecord {
+    /// 1-based phase index (phase 1 = Job1).
+    pub phase: usize,
+    /// Apriori pass number of the first pass in this phase (1 for Job1).
+    pub first_pass: usize,
+    /// Number of passes this phase combined.
+    pub n_passes: usize,
+    /// Candidates generated in this phase (Tables 7-9; 0 for Job1).
+    pub candidates: u64,
+    /// Simulated elapsed seconds (a Tables 3-5 / 10-12 cell).
+    pub elapsed: f64,
+    /// Simulated timing breakdown.
+    pub timing: JobTiming,
+    /// Real host wall-clock seconds spent executing the phase.
+    pub wall: f64,
+    /// Merged job counters.
+    pub counters: Counters,
+}
+
+/// Result of one full mining run.
+#[derive(Debug, Clone)]
+pub struct MiningOutcome {
+    pub algorithm: Algorithm,
+    pub dataset: String,
+    pub min_sup: f64,
+    pub min_count: u64,
+    /// `levels[k-1]` = frequent k-itemsets (identical to the oracle's).
+    pub levels: Vec<Level>,
+    pub phases: Vec<PhaseRecord>,
+    /// Sum of per-phase simulated elapsed times ("Total" in Tables 3-5).
+    pub total_time: f64,
+    /// Total plus per-phase driver gaps ("Actual" in Tables 3-5).
+    pub actual_time: f64,
+    /// Real host wall-clock for the whole run.
+    pub wall_time: f64,
+}
+
+impl MiningOutcome {
+    pub fn total_frequent(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn lk_profile(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.len()).collect()
+    }
+
+    pub fn n_phases(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// Flattened sorted `(itemset, count)` list (oracle-comparable).
+    pub fn all_frequent(&self) -> Vec<(Itemset, u64)> {
+        let mut out: Vec<(Itemset, u64)> =
+            self.levels.iter().flat_map(|l| l.iter().cloned()).collect();
+        out.sort();
+        out
+    }
+}
+
+fn controller_for(algo: Algorithm, opts: &RunOptions) -> Box<dyn PhaseController> {
+    match algo {
+        Algorithm::Spc => Box::new(SpcController),
+        Algorithm::Fpc => Box::new(FpcController { n: opts.fpc_n }),
+        Algorithm::Dpc => Box::new(DpcController::new(opts.dpc_alpha, opts.dpc_beta)),
+        Algorithm::Vfpc | Algorithm::OptimizedVfpc => Box::new(VfpcController::default()),
+        Algorithm::Etdpc | Algorithm::OptimizedEtdpc => Box::new(EtdpcController::new()),
+    }
+}
+
+/// Run `algo` on `db` with default options (paper's split size must be
+/// passed; see [`crate::dataset::registry::split_lines`]).
+pub fn run(
+    algo: Algorithm,
+    db: &TransactionDb,
+    min_sup: f64,
+    cluster: &ClusterConfig,
+    split_lines: usize,
+) -> MiningOutcome {
+    run_with(algo, db, min_sup, cluster, &RunOptions { split_lines, ..Default::default() })
+}
+
+/// Run `algo` on `db` with explicit options.
+pub fn run_with(
+    algo: Algorithm,
+    db: &TransactionDb,
+    min_sup: f64,
+    cluster: &ClusterConfig,
+    opts: &RunOptions,
+) -> MiningOutcome {
+    let run_start = std::time::Instant::now();
+    let min_count = db.min_count(min_sup);
+    let file = hdfs::put(db, opts.split_lines, cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, opts.seed);
+    let splits = hdfs::nline_splits(&file, opts.split_lines);
+
+    let mut levels: Vec<Level> = Vec::new();
+    let mut phases: Vec<PhaseRecord> = Vec::new();
+
+    // ---- Job1: frequent 1-itemsets (Algorithm 1), optionally fused with
+    // pass 2 via the triangular-matrix counter (ref [6]) ------------------
+    let job1_wall = std::time::Instant::now();
+    let n_items = db.n_items;
+    let out = if opts.fuse_pass_2 {
+        run_job(JobSpec {
+            name: "job1+2".into(),
+            splits: splits.clone(),
+            mapper_factory: Box::new(move |_| mappers::FusedOneTwoMapper::new(n_items)),
+            combiner: Some(Box::new(SumCombiner)),
+            reducer: MinSupportReducer { min_count },
+            partitioner: Box::new(HashPartitioner),
+            n_reducers: cluster.n_reducers,
+            workers: cluster.workers,
+        })
+    } else {
+        run_job(JobSpec {
+            name: "job1".into(),
+            splits: splits.clone(),
+            mapper_factory: Box::new(|_| OneItemsetMapper),
+            combiner: Some(Box::new(SumCombiner)),
+            reducer: MinSupportReducer { min_count },
+            partitioner: Box::new(HashPartitioner),
+            n_reducers: cluster.n_reducers,
+            workers: cluster.workers,
+        })
+    };
+    let timing = simulate_job(&out.map_meters, &out.reduce_meters, cluster);
+    let mut l1: Level = Vec::new();
+    let mut l2: Level = Vec::new();
+    for (set, count) in out.outputs {
+        match set.len() {
+            1 => l1.push((set, count)),
+            _ => l2.push((set, count)),
+        }
+    }
+    l1.sort();
+    l2.sort();
+    phases.push(PhaseRecord {
+        phase: 1,
+        first_pass: 1,
+        n_passes: if opts.fuse_pass_2 { 2 } else { 1 },
+        candidates: 0,
+        elapsed: timing.elapsed(),
+        timing,
+        wall: job1_wall.elapsed().as_secs_f64(),
+        counters: out.counters,
+    });
+
+    let mut controller = controller_for(algo, opts);
+    // DPC/ETDPC initialize their elapsed-time feedback from Job1
+    // (Algorithm 4 line 3) — without changing their initial α.
+    controller.init_job1(phases[0].elapsed);
+
+    if l1.is_empty() {
+        let wall_time = run_start.elapsed().as_secs_f64();
+        let total_time: f64 = phases.iter().map(|p| p.elapsed).sum();
+        let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
+        return MiningOutcome {
+            algorithm: algo,
+            dataset: db.name.clone(),
+            min_sup,
+            min_count,
+            levels,
+            phases,
+            total_time,
+            actual_time,
+            wall_time,
+        };
+    }
+    let mut l_prev = Arc::new(Trie::from_itemsets(1, l1.iter().map(|(s, _)| s)));
+    levels.push(l1);
+    let mut k = 2usize; // first pass of the upcoming phase
+    if opts.fuse_pass_2 {
+        if l2.is_empty() {
+            // Fused phase already proved nothing larger exists.
+            let total_time: f64 = phases.iter().map(|p| p.elapsed).sum();
+            let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
+            return MiningOutcome {
+                algorithm: algo,
+                dataset: db.name.clone(),
+                min_sup,
+                min_count,
+                levels,
+                phases,
+                total_time,
+                actual_time,
+                wall_time: run_start.elapsed().as_secs_f64(),
+            };
+        }
+        l_prev = Arc::new(Trie::from_itemsets(2, l2.iter().map(|(s, _)| s)));
+        levels.push(l2);
+        k = 3;
+    }
+
+    // ---- Job2 phases ------------------------------------------------------
+    let optimized = algo.optimized();
+    loop {
+        if l_prev.is_empty() || k > 64 {
+            break;
+        }
+        let policy = controller.next_policy(l_prev.len() as u64);
+        let phase_wall = std::time::Instant::now();
+        // Build the phase's candidate tries once per job and share them
+        // read-only across tasks (distributed-cache pattern); the faithful
+        // per-record generation *cost* is still charged by the mapper.
+        let plan = Arc::new(mappers::PhasePlan::build(&l_prev, policy, optimized));
+        let gen_mode = opts.gen_mode;
+        let plan_for_tasks = Arc::clone(&plan);
+        let out = run_job(JobSpec {
+            name: format!("job2-k{k}"),
+            splits: splits.clone(),
+            mapper_factory: Box::new(move |_| {
+                Job2Mapper::new(Arc::clone(&plan_for_tasks), gen_mode)
+            }),
+            combiner: Some(Box::new(SumCombiner)),
+            reducer: MinSupportReducer { min_count },
+            partitioner: Box::new(HashPartitioner),
+            n_reducers: cluster.n_reducers,
+            workers: cluster.workers,
+        });
+        let timing = simulate_job(&out.map_meters, &out.reduce_meters, cluster);
+        let candidates = out.aux.get(keys::CANDIDATES).copied().unwrap_or(0);
+        let npass = out.aux.get(keys::NPASS).copied().unwrap_or(0) as usize;
+
+        let elapsed = timing.elapsed();
+        phases.push(PhaseRecord {
+            phase: phases.len() + 1,
+            first_pass: k,
+            n_passes: npass,
+            candidates,
+            elapsed,
+            timing,
+            wall: phase_wall.elapsed().as_secs_f64(),
+            counters: out.counters,
+        });
+        controller.observe(PhaseObservation { candidates, npass, elapsed });
+
+        if npass == 0 {
+            break; // no candidates could be generated at all
+        }
+
+        // Group phase output by itemset size into levels k .. k+npass-1.
+        let mut by_size: std::collections::BTreeMap<usize, Level> = Default::default();
+        for (set, count) in out.outputs {
+            by_size.entry(set.len()).or_default().push((set, count));
+        }
+        for (size, mut level) in by_size {
+            level.sort();
+            debug_assert!(size >= 2, "Job2 must not emit 1-itemsets");
+            if levels.len() < size {
+                levels.resize(size, Vec::new());
+            }
+            levels[size - 1] = level;
+        }
+
+        // Seed for the next phase: the longest-sized frequent itemsets of
+        // this phase. If empty, downward closure says we are done.
+        let last_size = k + npass - 1;
+        let seed_level = levels.get(last_size - 1).filter(|l| !l.is_empty());
+        match seed_level {
+            Some(level) => {
+                l_prev = Arc::new(Trie::from_itemsets(last_size, level.iter().map(|(s, _)| s)));
+            }
+            None => break,
+        }
+        k = last_size + 1;
+    }
+
+    // Trim trailing empty levels (possible when a phase overshoots).
+    while levels.last().is_some_and(|l| l.is_empty()) {
+        levels.pop();
+    }
+
+    let total_time: f64 = phases.iter().map(|p| p.elapsed).sum();
+    let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
+    MiningOutcome {
+        algorithm: algo,
+        dataset: db.name.clone(),
+        min_sup,
+        min_count,
+        levels,
+        phases,
+        total_time,
+        actual_time,
+        wall_time: run_start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apriori::sequential::mine;
+    use crate::dataset::ibm::{generate, IbmParams};
+
+    fn small_db() -> TransactionDb {
+        generate(&IbmParams {
+            n_txns: 300,
+            n_items: 40,
+            avg_txn_len: 8.0,
+            avg_pattern_len: 4.0,
+            n_patterns: 10,
+            correlation: 0.5,
+            corruption_mean: 0.3,
+            corruption_sd: 0.1,
+            seed: 42,
+            ..Default::default()
+        })
+    }
+
+    fn opts() -> RunOptions {
+        RunOptions { split_lines: 50, ..Default::default() }
+    }
+
+    #[test]
+    fn every_algorithm_matches_oracle() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        for min_sup in [0.3, 0.15] {
+            let oracle = mine(&db, min_sup).all_frequent();
+            for algo in Algorithm::ALL {
+                let got = run_with(algo, &db, min_sup, &cluster, &opts());
+                assert_eq!(
+                    got.all_frequent(),
+                    oracle,
+                    "{algo} at min_sup {min_sup} diverges from oracle"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spc_has_one_pass_per_phase() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let out = run_with(Algorithm::Spc, &db, 0.2, &cluster, &opts());
+        assert!(out.phases.iter().all(|p| p.n_passes <= 1));
+        // SPC phases = 1 (Job1) + one per pass that generated candidates.
+        let oracle = mine(&db, 0.2);
+        assert!(out.n_phases() >= oracle.max_len());
+    }
+
+    #[test]
+    fn combined_algorithms_use_fewer_phases() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let spc = run_with(Algorithm::Spc, &db, 0.15, &cluster, &opts());
+        for algo in [Algorithm::Fpc, Algorithm::Vfpc, Algorithm::OptimizedVfpc] {
+            let out = run_with(algo, &db, 0.15, &cluster, &opts());
+            assert!(
+                out.n_phases() < spc.n_phases(),
+                "{algo}: {} phases vs SPC {}",
+                out.n_phases(),
+                spc.n_phases()
+            );
+        }
+    }
+
+    #[test]
+    fn actual_exceeds_total_by_driver_gaps() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let out = run_with(Algorithm::Vfpc, &db, 0.2, &cluster, &opts());
+        let expect = out.total_time + cluster.overhead.driver_gap * out.n_phases() as f64;
+        assert!((out.actual_time - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimized_generates_at_least_as_many_candidates() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let plain = run_with(Algorithm::Vfpc, &db, 0.15, &cluster, &opts());
+        let opt = run_with(Algorithm::OptimizedVfpc, &db, 0.15, &cluster, &opts());
+        let plain_c: u64 = plain.phases.iter().map(|p| p.candidates).sum();
+        let opt_c: u64 = opt.phases.iter().map(|p| p.candidates).sum();
+        assert!(opt_c >= plain_c, "optimized {opt_c} < plain {plain_c}");
+        // ... and the same frequent itemsets.
+        assert_eq!(plain.all_frequent(), opt.all_frequent());
+    }
+
+    #[test]
+    fn phase_records_are_consistent() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let out = run_with(Algorithm::Etdpc, &db, 0.2, &cluster, &opts());
+        // Phases numbered 1.., passes contiguous.
+        let mut next_pass = 2;
+        for (i, p) in out.phases.iter().enumerate() {
+            assert_eq!(p.phase, i + 1);
+            if i == 0 {
+                assert_eq!(p.first_pass, 1);
+            } else {
+                assert_eq!(p.first_pass, next_pass, "phase {} starts wrong", p.phase);
+                next_pass += p.n_passes;
+            }
+            assert!(p.elapsed > 0.0);
+        }
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for algo in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(algo.name()), Some(algo));
+        }
+        assert_eq!(Algorithm::parse("optimized_vfpc"), Some(Algorithm::OptimizedVfpc));
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn fused_pass2_matches_oracle_and_saves_a_phase() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        for algo in [Algorithm::Spc, Algorithm::OptimizedVfpc] {
+            let plain = run_with(algo, &db, 0.2, &cluster, &opts());
+            let fused = run_with(
+                algo,
+                &db,
+                0.2,
+                &cluster,
+                &RunOptions { fuse_pass_2: true, ..opts() },
+            );
+            assert_eq!(fused.all_frequent(), plain.all_frequent(), "{algo}");
+            assert!(fused.n_phases() < plain.n_phases(), "{algo} phases not saved");
+            assert!(fused.actual_time < plain.actual_time, "{algo} fused not faster");
+            // Fused phase 1 covers passes 1-2.
+            assert_eq!(fused.phases[0].n_passes, 2);
+            assert_eq!(fused.phases.get(1).map(|p| p.first_pass), Some(3));
+        }
+    }
+
+    #[test]
+    fn high_min_sup_trivial_run() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let out = run_with(Algorithm::OptimizedEtdpc, &db, 0.999, &cluster, &opts());
+        // Nothing (or almost nothing) frequent; must terminate cleanly.
+        assert!(out.levels.len() <= 1);
+    }
+}

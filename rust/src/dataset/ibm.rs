@@ -1,0 +1,210 @@
+//! IBM Quest-style synthetic transaction generator (Agrawal & Srikant,
+//! VLDB'94 §2.1.3) — the tool behind the paper's `c20d10k` dataset.
+//!
+//! The generative process:
+//! 1. Draw `n_patterns` maximal potentially-frequent itemsets. Pattern sizes
+//!    are Poisson with mean `avg_pattern_len`; a fraction of each pattern's
+//!    items is inherited from the previous pattern (correlation), the rest
+//!    are drawn randomly. Item popularity is exponentially skewed.
+//! 2. Each pattern gets an exponential weight (normalized to sum 1) and a
+//!    corruption level drawn from N(corruption_mean, corruption_sd).
+//! 3. Each transaction draws its size from Poisson(avg_txn_len), then packs
+//!    weighted patterns into it, dropping items from a pattern while a coin
+//!    flip stays below its corruption level. Oversize patterns go in anyway
+//!    half of the time (per the original), otherwise they are discarded.
+
+use super::TransactionDb;
+use crate::itemset::{Item, Itemset};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct IbmParams {
+    pub n_txns: usize,
+    pub n_items: usize,
+    /// `T`: mean transaction width.
+    pub avg_txn_len: f64,
+    /// `I`: mean size of the maximal potentially-frequent itemsets.
+    pub avg_pattern_len: f64,
+    /// `L`: number of maximal potentially-frequent itemsets.
+    pub n_patterns: usize,
+    /// Fraction of a pattern inherited from its predecessor.
+    pub correlation: f64,
+    pub corruption_mean: f64,
+    pub corruption_sd: f64,
+    /// Optional "anchor": force pattern 0 to have exactly this many items.
+    /// Long anchors model the heavy maximal itemsets that give dense Quest
+    /// datasets their deep L_k tails (c20d10k reaches k = 13 in Table 6).
+    pub anchor_len: Option<usize>,
+    /// Fraction of the total pattern weight given to the anchor.
+    pub anchor_weight: f64,
+    pub seed: u64,
+}
+
+impl Default for IbmParams {
+    fn default() -> Self {
+        Self {
+            n_txns: 10_000,
+            n_items: 1000,
+            avg_txn_len: 10.0,
+            avg_pattern_len: 4.0,
+            n_patterns: 2000,
+            correlation: 0.5,
+            corruption_mean: 0.5,
+            corruption_sd: 0.1,
+            anchor_len: None,
+            anchor_weight: 0.0,
+            seed: 20180348, // volume/page of the paper; any constant works
+        }
+    }
+}
+
+/// Generate a database according to `p`.
+pub fn generate(p: &IbmParams) -> TransactionDb {
+    assert!(p.n_items >= 2 && p.n_txns > 0 && p.n_patterns > 0);
+    let mut rng = Rng::new(p.seed);
+
+    // Exponentially-skewed item popularity (common items get low ids).
+    let mut item_cum = Vec::with_capacity(p.n_items);
+    let mut acc = 0.0;
+    for i in 0..p.n_items {
+        // weight ∝ exp(-i / (n/5)): a few hundred dominate, long tail.
+        acc += (-(i as f64) / (p.n_items as f64 / 5.0)).exp();
+        item_cum.push(acc);
+    }
+
+    // 1-2. Maximal potential patterns with weights and corruption levels.
+    let mut patterns: Vec<Itemset> = Vec::with_capacity(p.n_patterns);
+    let mut weights = Vec::with_capacity(p.n_patterns);
+    let mut corruption = Vec::with_capacity(p.n_patterns);
+    for pi in 0..p.n_patterns {
+        let len = p.avg_pattern_len.max(1.0);
+        let mut size = rng.poisson(len).max(1).min(p.n_items);
+        if pi == 0 {
+            if let Some(a) = p.anchor_len {
+                size = a.min(p.n_items);
+            }
+        }
+        let mut set: Itemset = Vec::with_capacity(size);
+        if pi > 0 && !patterns[pi - 1].is_empty() {
+            // Inherit ~correlation fraction from the previous pattern.
+            let prev = &patterns[pi - 1];
+            for &it in prev.iter() {
+                if set.len() < size && rng.chance(p.correlation) {
+                    set.push(it);
+                }
+            }
+        }
+        while set.len() < size {
+            set.push(rng.weighted(&item_cum) as Item);
+        }
+        crate::itemset::canonicalize(&mut set);
+        patterns.push(set);
+        weights.push(rng.exp());
+        corruption.push((p.corruption_mean + p.corruption_sd * rng.gaussian()).clamp(0.0, 0.95));
+    }
+    if p.anchor_len.is_some() && p.anchor_weight > 0.0 && p.n_patterns > 1 {
+        // Give the anchor `anchor_weight` of the total mass.
+        let others: f64 = weights[1..].iter().sum();
+        weights[0] = p.anchor_weight / (1.0 - p.anchor_weight) * others;
+    }
+    let mut weight_cum = Vec::with_capacity(p.n_patterns);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w;
+        weight_cum.push(acc);
+    }
+
+    // 3. Transactions.
+    let mut txns: Vec<Itemset> = Vec::with_capacity(p.n_txns);
+    for _ in 0..p.n_txns {
+        let size = rng.poisson(p.avg_txn_len).max(1);
+        let mut t: Itemset = Vec::with_capacity(size + 4);
+        let mut guard = 0;
+        while t.len() < size && guard < 64 {
+            guard += 1;
+            let pat = &patterns[rng.weighted(&weight_cum)];
+            let corr = corruption[guard % corruption.len()];
+            // Corrupt: drop items while the coin stays below the level.
+            let mut chosen: Vec<Item> = pat.clone();
+            while !chosen.is_empty() && rng.chance(corr) {
+                let idx = rng.below(chosen.len() as u64) as usize;
+                chosen.swap_remove(idx);
+            }
+            if chosen.is_empty() {
+                continue;
+            }
+            if t.len() + chosen.len() > size + 2 && !rng.chance(0.5) {
+                // Oversize pattern skipped half the time.
+                continue;
+            }
+            t.extend_from_slice(&chosen);
+        }
+        crate::itemset::canonicalize(&mut t);
+        if t.is_empty() {
+            t.push(rng.weighted(&item_cum) as Item);
+        }
+        txns.push(t);
+    }
+
+    let db = TransactionDb::new(
+        format!("ibm-t{}-d{}", p.avg_txn_len as usize, p.n_txns),
+        p.n_items,
+        txns,
+    );
+    debug_assert!(db.validate().is_ok());
+    db
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> IbmParams {
+        IbmParams {
+            n_txns: 500,
+            n_items: 100,
+            avg_txn_len: 8.0,
+            avg_pattern_len: 3.0,
+            n_patterns: 50,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generates_valid_db() {
+        let db = generate(&small());
+        assert_eq!(db.len(), 500);
+        assert!(db.validate().is_ok());
+        assert!(db.max_item().unwrap() < 100);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&small());
+        let b = generate(&small());
+        assert_eq!(a.txns, b.txns);
+        let c = generate(&IbmParams { seed: 999, ..small() });
+        assert_ne!(a.txns, c.txns);
+    }
+
+    #[test]
+    fn mean_width_tracks_parameter() {
+        let db = generate(&IbmParams { n_txns: 3000, avg_txn_len: 12.0, ..small() });
+        let w = db.avg_width();
+        assert!(w > 7.0 && w < 17.0, "avg width {w}");
+    }
+
+    #[test]
+    fn skew_makes_low_ids_frequent() {
+        let db = generate(&IbmParams { n_txns: 3000, ..small() });
+        let mut freq = vec![0usize; db.n_items];
+        for t in &db.txns {
+            for &i in t {
+                freq[i as usize] += 1;
+            }
+        }
+        let head: usize = freq[..20].iter().sum();
+        let tail: usize = freq[80..].iter().sum();
+        assert!(head > tail * 3, "head {head} tail {tail}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Text I/O for transaction databases in the FIMI / SPMF format the paper's
+//! datasets use: one transaction per line, space-separated integer items.
+
+use super::TransactionDb;
+use crate::itemset::Itemset;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum LoadError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {line}: cannot parse item {token:?}")]
+    BadItem { line: usize, token: String },
+    #[error("dataset is empty")]
+    Empty,
+}
+
+/// Parse the FIMI text format from any reader. Item ids are kept as-is
+/// (already dense in FIMI dumps); `n_items` = max item + 1.
+pub fn read_transactions<R: std::io::Read>(r: R, name: &str) -> Result<TransactionDb, LoadError> {
+    let reader = BufReader::new(r);
+    let mut txns: Vec<Itemset> = Vec::new();
+    let mut max_item = 0u32;
+    for (idx, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut t: Itemset = Vec::new();
+        for tok in line.split_whitespace() {
+            let item: u32 = tok
+                .parse()
+                .map_err(|_| LoadError::BadItem { line: idx + 1, token: tok.to_string() })?;
+            t.push(item);
+        }
+        crate::itemset::canonicalize(&mut t);
+        if let Some(&m) = t.last() {
+            max_item = max_item.max(m);
+        }
+        if !t.is_empty() {
+            txns.push(t);
+        }
+    }
+    if txns.is_empty() {
+        return Err(LoadError::Empty);
+    }
+    Ok(TransactionDb::new(name, max_item as usize + 1, txns))
+}
+
+pub fn load_file(path: &Path) -> Result<TransactionDb, LoadError> {
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset").to_string();
+    let f = std::fs::File::open(path)?;
+    read_transactions(f, &name)
+}
+
+/// Write in the same format (round-trips with [`read_transactions`]).
+pub fn write_file(db: &TransactionDb, path: &Path) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for t in &db.txns {
+        let mut first = true;
+        for &i in t {
+            if !first {
+                write!(w, " ")?;
+            }
+            write!(w, "{i}")?;
+            first = false;
+        }
+        writeln!(w)?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_simple_input() {
+        let text = "1 2 3\n\n# comment\n2 4\n";
+        let db = read_transactions(text.as_bytes(), "t").unwrap();
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.n_items, 5);
+        assert_eq!(db.txns[0], vec![1, 2, 3]);
+        assert_eq!(db.txns[1], vec![2, 4]);
+    }
+
+    #[test]
+    fn canonicalizes_lines() {
+        let db = read_transactions("3 1 2 1".as_bytes(), "t").unwrap();
+        assert_eq!(db.txns[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let err = read_transactions("1 x 3".as_bytes(), "t").unwrap_err();
+        assert!(matches!(err, LoadError::BadItem { line: 1, .. }));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(matches!(read_transactions("".as_bytes(), "t"), Err(LoadError::Empty)));
+        assert!(matches!(read_transactions("\n#c\n".as_bytes(), "t"), Err(LoadError::Empty)));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let db = TransactionDb::new("rt", 6, vec![vec![0, 3, 5], vec![1], vec![2, 4]]);
+        let dir = std::env::temp_dir().join("mrapriori_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.txt");
+        write_file(&db, &path).unwrap();
+        let back = load_file(&path).unwrap();
+        assert_eq!(back.txns, db.txns);
+        assert_eq!(back.n_items, db.n_items);
+        assert_eq!(back.name, "rt");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

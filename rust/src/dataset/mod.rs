@@ -1,0 +1,139 @@
+//! Transaction databases: in-memory representation, text I/O, synthetic
+//! generators (IBM Quest-style and attribute–value), the named-dataset
+//! registry matching the paper's Table 2, and summary statistics.
+
+pub mod attr;
+pub mod ibm;
+pub mod loader;
+pub mod registry;
+pub mod stats;
+
+use crate::itemset::{Item, Itemset};
+
+/// An in-memory transaction database with a dense item universe `0..n_items`.
+#[derive(Debug, Clone)]
+pub struct TransactionDb {
+    pub name: String,
+    pub n_items: usize,
+    pub txns: Vec<Itemset>,
+}
+
+impl TransactionDb {
+    pub fn new(name: impl Into<String>, n_items: usize, txns: Vec<Itemset>) -> Self {
+        Self { name: name.into(), n_items, txns }
+    }
+
+    pub fn len(&self) -> usize {
+        self.txns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.txns.is_empty()
+    }
+
+    /// Minimum support count for a fractional threshold (ceil, >= 1).
+    pub fn min_count(&self, min_sup: f64) -> u64 {
+        ((min_sup * self.txns.len() as f64).ceil() as u64).max(1)
+    }
+
+    /// Average transaction width (the paper's `w`).
+    pub fn avg_width(&self) -> f64 {
+        if self.txns.is_empty() {
+            return 0.0;
+        }
+        self.txns.iter().map(|t| t.len()).sum::<usize>() as f64 / self.txns.len() as f64
+    }
+
+    /// Fraction of the item-universe grid that is set (dataset density).
+    pub fn density(&self) -> f64 {
+        if self.txns.is_empty() || self.n_items == 0 {
+            return 0.0;
+        }
+        self.txns.iter().map(|t| t.len()).sum::<usize>() as f64
+            / (self.txns.len() * self.n_items) as f64
+    }
+
+    /// Largest item id actually used (for encoding width checks).
+    pub fn max_item(&self) -> Option<Item> {
+        self.txns.iter().filter_map(|t| t.last()).copied().max()
+    }
+
+    /// Validate structural invariants: canonical transactions in range.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.txns.iter().enumerate() {
+            if t.is_empty() {
+                return Err(format!("transaction {i} is empty"));
+            }
+            if !crate::itemset::is_canonical(t) {
+                return Err(format!("transaction {i} is not sorted/deduped"));
+            }
+            if let Some(&last) = t.last() {
+                if last as usize >= self.n_items {
+                    return Err(format!(
+                        "transaction {i} has item i{last} >= n_items {}",
+                        self.n_items
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Concatenate the database with itself until it holds `target` rows
+    /// (used by the Fig 5(a) scalability sweep: c20d10k scaled to c20d200k).
+    pub fn scaled_to(&self, target: usize, name: impl Into<String>) -> TransactionDb {
+        let mut txns = Vec::with_capacity(target);
+        while txns.len() < target {
+            let take = (target - txns.len()).min(self.txns.len());
+            txns.extend_from_slice(&self.txns[..take]);
+        }
+        TransactionDb { name: name.into(), n_items: self.n_items, txns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TransactionDb {
+        TransactionDb::new("tiny", 5, vec![vec![0, 1], vec![1, 2, 3], vec![4]])
+    }
+
+    #[test]
+    fn basic_stats() {
+        let db = tiny();
+        assert_eq!(db.len(), 3);
+        assert!((db.avg_width() - 2.0).abs() < 1e-9);
+        assert_eq!(db.max_item(), Some(4));
+        assert!((db.density() - 6.0 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_count_rounds_up() {
+        let db = tiny();
+        assert_eq!(db.min_count(0.5), 2); // ceil(1.5)
+        assert_eq!(db.min_count(0.34), 2); // ceil(1.02)
+        assert_eq!(db.min_count(0.0), 1); // floor of 1
+    }
+
+    #[test]
+    fn validate_catches_problems() {
+        let db = tiny();
+        assert!(db.validate().is_ok());
+        let bad = TransactionDb::new("b", 5, vec![vec![2, 1]]);
+        assert!(bad.validate().is_err());
+        let bad = TransactionDb::new("b", 2, vec![vec![0, 5]]);
+        assert!(bad.validate().is_err());
+        let bad = TransactionDb::new("b", 2, vec![vec![]]);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn scaling_repeats_rows() {
+        let db = tiny();
+        let big = db.scaled_to(8, "tiny8");
+        assert_eq!(big.len(), 8);
+        assert_eq!(big.txns[0], big.txns[3]); // wrapped around
+        assert_eq!(big.txns[1], big.txns[4]);
+    }
+}

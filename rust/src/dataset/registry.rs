@@ -1,0 +1,174 @@
+//! Named datasets matching the paper's Table 2.
+//!
+//! The paper evaluates on `c20d10k` (IBM Quest synthetic), `chess` and
+//! `mushroom` (UCI real datasets from the FIMI/SPMF repositories). The real
+//! datasets are not redistributable here, so the registry generates
+//! *synthetic analogs* matched to Table 2's attributes (N, |I|, w) and tuned
+//! so the |L_k| profile at the paper's reference min_sup has the same shape
+//! as Table 6: unimodal, peak near k=6..7, maximal frequent length ~13–15.
+//! See DESIGN.md §3 (substitution table).
+
+use super::attr::{self, AttrParams, AttrSpec};
+use super::ibm::{self, IbmParams};
+use super::TransactionDb;
+
+/// Dataset names accepted by the CLI and the bench harness.
+pub const NAMES: [&str; 3] = ["c20d10k", "chess", "mushroom"];
+
+/// The paper's reference minimum support for each dataset (§5.3).
+pub fn reference_min_sup(name: &str) -> Option<f64> {
+    match name {
+        "c20d10k" => Some(0.15),
+        "chess" => Some(0.65),
+        "mushroom" => Some(0.15),
+        _ => None,
+    }
+}
+
+/// The min_sup sweep used in the paper's Figs 2-4 (x-axes, high -> low).
+pub fn figure_min_sups(name: &str) -> Option<Vec<f64>> {
+    match name {
+        "c20d10k" => Some(vec![0.35, 0.30, 0.25, 0.20, 0.15]),
+        "chess" => Some(vec![0.85, 0.80, 0.75, 0.70, 0.65]),
+        "mushroom" => Some(vec![0.35, 0.30, 0.25, 0.20, 0.15]),
+        _ => None,
+    }
+}
+
+/// The paper's InputSplit (lines per split, §5.2) per dataset.
+pub fn split_lines(name: &str) -> usize {
+    match name {
+        "chess" => 400,
+        // c20d10k and mushroom: 1K lines -> 10 and 9 mappers.
+        _ => 1000,
+    }
+}
+
+/// Build a dataset by name. Panics on unknown names (CLI validates first).
+pub fn load(name: &str) -> TransactionDb {
+    try_load(name).unwrap_or_else(|| panic!("unknown dataset {name:?}; known: {NAMES:?}"))
+}
+
+pub fn try_load(name: &str) -> Option<TransactionDb> {
+    match name {
+        "c20d10k" => Some(c20d10k()),
+        "chess" => Some(chess()),
+        "mushroom" => Some(mushroom()),
+        _ => None,
+    }
+}
+
+/// IBM Quest synthetic: 10k transactions, 192 items, avg width 20.
+/// Tuned so min_sup=0.15 mining yields a Table-6-shaped profile
+/// (L1≈38, unimodal peak near k=6, maximal length ≈13).
+pub fn c20d10k() -> TransactionDb {
+    let mut db = ibm::generate(&IbmParams {
+        n_txns: 10_000,
+        n_items: 192,
+        avg_txn_len: 20.0,
+        avg_pattern_len: 7.0,
+        n_patterns: 22,
+        correlation: 0.30,
+        corruption_mean: 0.38,
+        corruption_sd: 0.10,
+        anchor_len: Some(13),
+        anchor_weight: 0.30,
+        seed: 0xC20D10,
+    });
+    db.name = "c20d10k".into();
+    db
+}
+
+/// Chess analog: 3196 transactions, 37 attributes, 75 items, width 37.
+/// kr-vs-kp is almost fully binary; dense with very long frequent sets at
+/// min_sup=0.65 (paper Table 6: max length 13, L1=29, peak |L_7|≈26k).
+pub fn chess() -> TransactionDb {
+    let mut attrs: Vec<AttrSpec> = Vec::with_capacity(37);
+    // 16 "core" binary attributes (correlated, near-constant): the long
+    // frequent itemsets. 13 mid-dominance binaries: frequent singletons and
+    // small mixed itemsets only. 6 low binaries + 1 ternary + 1 binary:
+    // noise. Items: 35*2 + 3 + 2 = 75.
+    attrs.extend(attr::ramp(16, 2, 0.98, 0.82));
+    attrs.extend(attr::ramp(13, 2, 0.76, 0.70));
+    attrs.extend(attr::ramp(6, 2, 0.52, 0.48));
+    attrs.push(AttrSpec { domain: 3, dominance: 0.45 });
+    attrs.push(AttrSpec { domain: 2, dominance: 0.5 });
+    attr::generate(&AttrParams {
+        name: "chess".into(),
+        n_txns: 3196,
+        attrs,
+        conform_prob: 0.62,
+        conform_hi: 0.99,
+        core_attrs: 16,
+        seed: 0xC4E55,
+    })
+}
+
+/// Mushroom analog: 8124 transactions, 23 attributes, 119 items, width 23.
+/// Moderately dense; at min_sup=0.15 the paper finds max length 15, L1=48.
+pub fn mushroom() -> TransactionDb {
+    let mut attrs: Vec<AttrSpec> = Vec::with_capacity(23);
+    // 23 attributes, mixed domains summing to 119 items:
+    // 10 attrs of domain 6 (60) + 8 of domain 5 (40) + 4 of domain 4 (16)
+    // + 1 of domain 3 (3) = 119.
+    attrs.extend(attr::ramp(10, 6, 0.82, 0.55));
+    attrs.extend(attr::ramp(8, 5, 0.60, 0.36));
+    attrs.extend(attr::ramp(4, 4, 0.38, 0.28));
+    attrs.push(AttrSpec { domain: 3, dominance: 0.40 });
+    attr::generate(&AttrParams {
+        name: "mushroom".into(),
+        n_txns: 8124,
+        attrs,
+        conform_prob: 0.24,
+        conform_hi: 0.975,
+        core_attrs: 15,
+        seed: 0x3445400,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_attributes_match() {
+        // Table 2 of the paper: (N, |I|, w).
+        let c = c20d10k();
+        assert_eq!(c.len(), 10_000);
+        assert_eq!(c.n_items, 192);
+        let w = c.avg_width();
+        assert!((15.0..25.0).contains(&w), "c20d10k width {w}");
+
+        let ch = chess();
+        assert_eq!(ch.len(), 3196);
+        assert_eq!(ch.n_items, 75);
+        assert!(ch.txns.iter().all(|t| t.len() == 37));
+
+        let m = mushroom();
+        assert_eq!(m.len(), 8124);
+        assert_eq!(m.n_items, 119);
+        assert!(m.txns.iter().all(|t| t.len() == 23));
+    }
+
+    #[test]
+    fn registry_lookup() {
+        for name in NAMES {
+            assert!(try_load(name).is_some());
+            assert!(reference_min_sup(name).is_some());
+            assert!(figure_min_sups(name).is_some());
+        }
+        assert!(try_load("nope").is_none());
+        assert_eq!(split_lines("chess"), 400);
+        assert_eq!(split_lines("c20d10k"), 1000);
+    }
+
+    #[test]
+    fn datasets_validate_and_are_deterministic() {
+        for name in NAMES {
+            let a = load(name);
+            assert!(a.validate().is_ok(), "{name}");
+            let b = load(name);
+            assert_eq!(a.txns, b.txns, "{name} not deterministic");
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Dataset summary statistics and report formatting (the `inspect` CLI verb
+//! and the Table-2/Table-6 bench output).
+
+use super::TransactionDb;
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub n_txns: usize,
+    pub n_items: usize,
+    pub avg_width: f64,
+    pub min_width: usize,
+    pub max_width: usize,
+    pub density: f64,
+    /// Top-10 item frequencies (fraction of transactions).
+    pub top_items: Vec<(u32, f64)>,
+}
+
+pub fn summarize(db: &TransactionDb) -> Summary {
+    let mut freq = vec![0usize; db.n_items];
+    let mut min_w = usize::MAX;
+    let mut max_w = 0usize;
+    for t in &db.txns {
+        min_w = min_w.min(t.len());
+        max_w = max_w.max(t.len());
+        for &i in t {
+            freq[i as usize] += 1;
+        }
+    }
+    if db.txns.is_empty() {
+        min_w = 0;
+    }
+    let mut by_freq: Vec<(u32, usize)> =
+        freq.iter().enumerate().map(|(i, &c)| (i as u32, c)).collect();
+    by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let n = db.txns.len().max(1) as f64;
+    Summary {
+        name: db.name.clone(),
+        n_txns: db.txns.len(),
+        n_items: db.n_items,
+        avg_width: db.avg_width(),
+        min_width: min_w,
+        max_width: max_w,
+        density: db.density(),
+        top_items: by_freq.into_iter().take(10).map(|(i, c)| (i, c as f64 / n)).collect(),
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "dataset {}", self.name)?;
+        writeln!(f, "  transactions : {}", self.n_txns)?;
+        writeln!(f, "  items        : {}", self.n_items)?;
+        writeln!(
+            f,
+            "  width        : avg {:.2}, min {}, max {}",
+            self.avg_width, self.min_width, self.max_width
+        )?;
+        writeln!(f, "  density      : {:.4}", self.density)?;
+        write!(f, "  top items    :")?;
+        for (i, p) in &self.top_items {
+            write!(f, " i{i}:{p:.2}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_fields() {
+        let db = TransactionDb::new("t", 4, vec![vec![0, 1, 2], vec![0], vec![0, 3]]);
+        let s = summarize(&db);
+        assert_eq!(s.n_txns, 3);
+        assert_eq!(s.min_width, 1);
+        assert_eq!(s.max_width, 3);
+        assert_eq!(s.top_items[0], (0, 1.0)); // item 0 in all three
+        let text = s.to_string();
+        assert!(text.contains("transactions : 3"));
+    }
+
+    #[test]
+    fn top_items_sorted() {
+        let db = TransactionDb::new("t", 3, vec![vec![2], vec![1, 2], vec![0, 1, 2]]);
+        let s = summarize(&db);
+        assert_eq!(s.top_items[0].0, 2);
+        assert_eq!(s.top_items[1].0, 1);
+        assert_eq!(s.top_items[2].0, 0);
+    }
+}

@@ -1,0 +1,181 @@
+//! HDFS-like storage substrate: files are sequences of transaction records,
+//! broken into fixed-size line blocks, replicated across DataNodes, and cut
+//! into NLineInputFormat-style input splits for the MapReduce engine.
+//!
+//! The paper configures `setNumLinesPerSplit` per dataset (§5.2: 1K lines
+//! for c20d10k/mushroom -> 10/9 mappers, 400 for chess -> 8 mappers); split
+//! construction here mirrors that. Replica placement feeds the scheduler's
+//! data-locality preference.
+
+use crate::dataset::TransactionDb;
+use crate::itemset::Itemset;
+use crate::util::rng::Rng;
+use std::ops::Range;
+use std::sync::Arc;
+
+pub type NodeId = usize;
+
+/// One HDFS block: a line range plus the nodes holding replicas.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub range: Range<usize>,
+    pub replicas: Vec<NodeId>,
+}
+
+/// A stored file: immutable records plus its block map.
+#[derive(Debug, Clone)]
+pub struct HdfsFile {
+    pub name: String,
+    pub records: Arc<Vec<Itemset>>,
+    pub n_items: usize,
+    pub block_lines: usize,
+    pub blocks: Vec<Block>,
+}
+
+/// One input split handed to a single map task.
+#[derive(Debug, Clone)]
+pub struct InputSplit {
+    pub records: Arc<Vec<Itemset>>,
+    pub range: Range<usize>,
+    /// Nodes that hold a replica of the split's first block (locality hint).
+    pub preferred_nodes: Vec<NodeId>,
+}
+
+impl InputSplit {
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+    /// Iterate `(byte-offset-like key, record)` pairs, as a RecordReader.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &Itemset)> {
+        self.records[self.range.clone()].iter().enumerate().map(move |(i, r)| (self.range.start + i, r))
+    }
+}
+
+/// Default HDFS replication factor.
+pub const DEFAULT_REPLICATION: usize = 3;
+
+/// Store a database as an HDFS file across `n_nodes` DataNodes.
+pub fn put(
+    db: &TransactionDb,
+    block_lines: usize,
+    n_nodes: usize,
+    replication: usize,
+    seed: u64,
+) -> HdfsFile {
+    assert!(block_lines > 0 && n_nodes > 0);
+    let replication = replication.min(n_nodes).max(1);
+    let mut rng = Rng::new(seed ^ 0x4DF5);
+    let records = Arc::new(db.txns.clone());
+    let mut blocks = Vec::new();
+    let mut start = 0;
+    while start < records.len() {
+        let end = (start + block_lines).min(records.len());
+        // Pipeline placement: first replica on a random node, the rest on
+        // successive distinct nodes (rack-unaware variant of HDFS default).
+        let first = rng.below(n_nodes as u64) as usize;
+        let replicas: Vec<NodeId> = (0..replication).map(|r| (first + r) % n_nodes).collect();
+        blocks.push(Block { range: start..end, replicas });
+        start = end;
+    }
+    HdfsFile { name: db.name.clone(), records, n_items: db.n_items, block_lines, blocks }
+}
+
+/// Cut a file into NLine splits of `lines_per_split` records each.
+pub fn nline_splits(file: &HdfsFile, lines_per_split: usize) -> Vec<InputSplit> {
+    assert!(lines_per_split > 0);
+    let n = file.records.len();
+    let mut out = Vec::with_capacity(n.div_ceil(lines_per_split));
+    let mut start = 0;
+    while start < n {
+        let end = (start + lines_per_split).min(n);
+        let preferred = file
+            .blocks
+            .iter()
+            .find(|b| b.range.contains(&start))
+            .map(|b| b.replicas.clone())
+            .unwrap_or_default();
+        out.push(InputSplit {
+            records: Arc::clone(&file.records),
+            range: start..end,
+            preferred_nodes: preferred,
+        });
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::TransactionDb;
+
+    fn db(n: usize) -> TransactionDb {
+        TransactionDb::new("d", 10, (0..n).map(|i| vec![(i % 10) as u32]).collect())
+    }
+
+    #[test]
+    fn blocks_cover_file_without_overlap() {
+        let f = put(&db(2500), 1000, 4, 3, 1);
+        assert_eq!(f.blocks.len(), 3);
+        assert_eq!(f.blocks[0].range, 0..1000);
+        assert_eq!(f.blocks[2].range, 2000..2500);
+        for b in &f.blocks {
+            assert_eq!(b.replicas.len(), 3);
+            let set: std::collections::HashSet<_> = b.replicas.iter().collect();
+            assert_eq!(set.len(), 3, "replicas must be distinct nodes");
+        }
+    }
+
+    #[test]
+    fn replication_capped_by_nodes() {
+        let f = put(&db(10), 5, 2, 3, 1);
+        assert!(f.blocks.iter().all(|b| b.replicas.len() == 2));
+    }
+
+    #[test]
+    fn splits_cover_all_records_once() {
+        let f = put(&db(2500), 1000, 4, 3, 1);
+        let splits = nline_splits(&f, 400);
+        assert_eq!(splits.len(), 7); // ceil(2500/400)
+        let mut seen = vec![false; 2500];
+        for s in &splits {
+            for (off, _) in s.iter() {
+                assert!(!seen[off], "record {off} in two splits");
+                seen[off] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn paper_mapper_counts() {
+        // §5.2: 10 map tasks for c20d10k (10k lines / 1k), 8 for chess
+        // (3196 / 400), 9 for mushroom (8124 / 1k).
+        let f = put(&db(10_000), 1000, 4, 3, 1);
+        assert_eq!(nline_splits(&f, 1000).len(), 10);
+        let f = put(&db(3196), 1000, 4, 3, 1);
+        assert_eq!(nline_splits(&f, 400).len(), 8);
+        let f = put(&db(8124), 1000, 4, 3, 1);
+        assert_eq!(nline_splits(&f, 1000).len(), 9);
+    }
+
+    #[test]
+    fn preferred_nodes_come_from_block_map() {
+        let f = put(&db(100), 10, 5, 2, 7);
+        let splits = nline_splits(&f, 10);
+        for (s, b) in splits.iter().zip(&f.blocks) {
+            assert_eq!(s.preferred_nodes, b.replicas);
+        }
+    }
+
+    #[test]
+    fn split_iter_yields_offsets() {
+        let f = put(&db(30), 10, 2, 1, 3);
+        let splits = nline_splits(&f, 25);
+        let (offs, _): (Vec<usize>, Vec<_>) = splits[1].iter().unzip();
+        assert_eq!(offs, (25..30).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,173 @@
+//! Bitmap (one-hot) encodings of itemsets and transactions for the XLA
+//! counting backend.
+//!
+//! The L1 Pallas kernel computes containment as a tiled matmul:
+//! `S = T · Cᵀ` over 0/1 f32 matrices; candidate `c` is contained in
+//! transaction `t` iff `S[t, c] == |c|`. This module produces the padded
+//! row-major f32 buffers the AOT-compiled executable expects.
+
+use super::Item;
+
+/// A fixed-shape tile of 0/1 rows, padded with zero rows/columns.
+#[derive(Debug, Clone)]
+pub struct BitmapTile {
+    /// Row-major `rows x width` f32 0/1 matrix.
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub width: usize,
+    /// Number of meaningful (non-padding) rows.
+    pub valid_rows: usize,
+}
+
+impl BitmapTile {
+    /// Encode up to `rows` itemsets (or transactions) over `width` items.
+    /// Items >= `width` would corrupt the encoding, so they are rejected.
+    pub fn encode(sets: &[&[Item]], rows: usize, width: usize) -> Result<Self, EncodeError> {
+        if sets.len() > rows {
+            return Err(EncodeError::TooManyRows { got: sets.len(), max: rows });
+        }
+        let mut data = vec![0f32; rows * width];
+        for (r, set) in sets.iter().enumerate() {
+            for &item in set.iter() {
+                let i = item as usize;
+                if i >= width {
+                    return Err(EncodeError::ItemOutOfRange { item, width });
+                }
+                data[r * width + i] = 1.0;
+            }
+        }
+        Ok(Self { data, rows, width, valid_rows: sets.len() })
+    }
+
+    /// Row lengths (|set| per row; 0 for padding rows). The kernel compares
+    /// dot products against these. Padding rows get a sentinel length that
+    /// can never be matched (width+1), so padded *candidates* never count.
+    pub fn lengths_with_sentinel(sets: &[&[Item]], rows: usize, width: usize) -> Vec<f32> {
+        let mut lens = vec![(width + 1) as f32; rows];
+        for (r, set) in sets.iter().enumerate() {
+            lens[r] = set.len() as f32;
+        }
+        lens
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum EncodeError {
+    #[error("too many rows for tile: {got} > {max}")]
+    TooManyRows { got: usize, max: usize },
+    #[error("item i{item} out of range for bitmap width {width}")]
+    ItemOutOfRange { item: Item, width: usize },
+}
+
+/// Dense u64-word bitset used by the *native* vectorized counting fallback
+/// (and by tests as an oracle for the f32 encoding).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitVec64 {
+    words: Vec<u64>,
+    width: usize,
+}
+
+impl BitVec64 {
+    pub fn from_set(set: &[Item], width: usize) -> Self {
+        let mut words = vec![0u64; width.div_ceil(64)];
+        for &i in set {
+            let i = i as usize;
+            debug_assert!(i < width);
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+        Self { words, width }
+    }
+
+    /// True iff self ⊆ other.
+    #[inline]
+    pub fn is_subset_of(&self, other: &BitVec64) -> bool {
+        debug_assert_eq!(self.width, other.width);
+        self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+
+    pub fn popcount(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Dot product as containment check helper: |self ∩ other|.
+    pub fn intersect_count(&self, other: &BitVec64) -> u32 {
+        self.words.iter().zip(&other.words).map(|(a, b)| (a & b).count_ones()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, Gen, ItemsetGen};
+
+    #[test]
+    fn encode_basic() {
+        let sets: Vec<&[Item]> = vec![&[0, 2], &[1]];
+        let t = BitmapTile::encode(&sets, 4, 4).unwrap();
+        assert_eq!(t.valid_rows, 2);
+        assert_eq!(&t.data[0..4], &[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(&t.data[4..8], &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&t.data[8..16], &[0.0; 8]); // padding rows all zero
+    }
+
+    #[test]
+    fn encode_rejects_overflow() {
+        let sets: Vec<&[Item]> = vec![&[5]];
+        assert_eq!(
+            BitmapTile::encode(&sets, 2, 4).unwrap_err(),
+            EncodeError::ItemOutOfRange { item: 5, width: 4 }
+        );
+        let many: Vec<&[Item]> = vec![&[0], &[1], &[2]];
+        assert!(matches!(
+            BitmapTile::encode(&many, 2, 4),
+            Err(EncodeError::TooManyRows { got: 3, max: 2 })
+        ));
+    }
+
+    #[test]
+    fn sentinel_lengths() {
+        let sets: Vec<&[Item]> = vec![&[0, 1, 2]];
+        let lens = BitmapTile::lengths_with_sentinel(&sets, 3, 8);
+        assert_eq!(lens, vec![3.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn bitvec_subset_and_counts() {
+        let a = BitVec64::from_set(&[1, 3], 128);
+        let b = BitVec64::from_set(&[1, 2, 3, 100], 128);
+        assert!(a.is_subset_of(&b));
+        assert!(!b.is_subset_of(&a));
+        assert_eq!(a.popcount(), 2);
+        assert_eq!(a.intersect_count(&b), 2);
+    }
+
+    #[test]
+    fn prop_bitvec_agrees_with_merge_subset() {
+        let gen = ItemsetGen { universe: 100, max_len: 20 };
+        forall(201, 200, &gen, |set| {
+            let other_gen = ItemsetGen { universe: 100, max_len: 20 };
+            let mut rng = crate::util::rng::Rng::new(set.iter().map(|&x| x as u64).sum::<u64>());
+            let other = other_gen.generate(&mut rng);
+            let a = BitVec64::from_set(set, 100);
+            let b = BitVec64::from_set(&other, 100);
+            a.is_subset_of(&b) == crate::itemset::is_subset(set, &other)
+                && (a.intersect_count(&b) == a.popcount()) == a.is_subset_of(&b)
+        });
+    }
+
+    #[test]
+    fn prop_dotproduct_containment_rule() {
+        // The rule the XLA kernel relies on: dot(t, c) == |c| iff c ⊆ t.
+        let gen = ItemsetGen { universe: 64, max_len: 16 };
+        forall(202, 200, &gen, |cand| {
+            let mut rng = crate::util::rng::Rng::new(7 + cand.len() as u64);
+            let txn = ItemsetGen { universe: 64, max_len: 32 }.generate(&mut rng);
+            let sets_c: Vec<&[Item]> = vec![cand];
+            let sets_t: Vec<&[Item]> = vec![&txn];
+            let c = BitmapTile::encode(&sets_c, 1, 64).unwrap();
+            let t = BitmapTile::encode(&sets_t, 1, 64).unwrap();
+            let dot: f32 = c.data.iter().zip(&t.data).map(|(a, b)| a * b).sum();
+            (dot == cand.len() as f32) == crate::itemset::is_subset(cand, &txn)
+        });
+    }
+}

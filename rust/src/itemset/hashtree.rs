@@ -1,0 +1,393 @@
+//! Classic Apriori hash tree (Agrawal & Srikant), one of the three
+//! candidate stores compared for MapReduce Apriori by Singh et al.'s
+//! data-structure study (the paper's ref [16]): interior nodes hash the
+//! next item into `fanout` buckets; leaves hold up to `leaf_cap` itemsets
+//! and split when they overflow (unless at maximum depth).
+//!
+//! Same interface shape as [`super::Trie`] so the counting benches can swap
+//! stores; `count_transaction` implements the classic hash-tree subset walk
+//! with (item-position) recursion.
+
+use super::{Item, Itemset};
+
+#[derive(Debug, Clone)]
+enum NodeKind {
+    Interior { children: Vec<Option<u32>> },
+    Leaf { sets: Vec<(Itemset, u64)> },
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    kind: NodeKind,
+}
+
+/// Hash tree over fixed-length itemsets.
+#[derive(Debug, Clone)]
+pub struct HashTree {
+    nodes: Vec<Node>,
+    k: usize,
+    len: usize,
+    fanout: usize,
+    leaf_cap: usize,
+}
+
+const ROOT: u32 = 0;
+
+impl HashTree {
+    pub fn new(k: usize) -> Self {
+        Self::with_params(k, 8, 16)
+    }
+
+    pub fn with_params(k: usize, fanout: usize, leaf_cap: usize) -> Self {
+        assert!(k >= 1 && fanout >= 2 && leaf_cap >= 1);
+        Self {
+            nodes: vec![Node { kind: NodeKind::Leaf { sets: Vec::new() } }],
+            k,
+            len: 0,
+            fanout,
+            leaf_cap,
+        }
+    }
+
+    pub fn from_itemsets<'a, I: IntoIterator<Item = &'a Itemset>>(k: usize, sets: I) -> Self {
+        let mut t = Self::new(k);
+        for s in sets {
+            t.insert(s);
+        }
+        t
+    }
+
+    pub fn level(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    fn bucket(&self, item: Item) -> usize {
+        item as usize % self.fanout
+    }
+
+    /// Insert a canonical itemset. Returns true if newly added.
+    pub fn insert(&mut self, set: &[Item]) -> bool {
+        debug_assert_eq!(set.len(), self.k);
+        debug_assert!(super::is_canonical(set));
+        let mut node = ROOT;
+        let mut depth = 0usize;
+        loop {
+            match &mut self.nodes[node as usize].kind {
+                NodeKind::Interior { children } => {
+                    let b = set[depth] as usize % self.fanout;
+                    match children[b] {
+                        Some(c) => {
+                            node = c;
+                            depth += 1;
+                        }
+                        None => {
+                            let id = self.nodes.len() as u32;
+                            // Re-borrow after push below; record intent first.
+                            self.nodes.push(Node { kind: NodeKind::Leaf { sets: Vec::new() } });
+                            if let NodeKind::Interior { children } =
+                                &mut self.nodes[node as usize].kind
+                            {
+                                children[b] = Some(id);
+                            }
+                            node = id;
+                            depth += 1;
+                        }
+                    }
+                }
+                NodeKind::Leaf { sets } => {
+                    if sets.iter().any(|(s, _)| s == set) {
+                        return false;
+                    }
+                    sets.push((set.to_vec(), 0));
+                    self.len += 1;
+                    // Split on overflow, but only while more items remain to
+                    // hash on (depth < k).
+                    if sets.len() > self.leaf_cap && depth < self.k {
+                        self.split_leaf(node, depth);
+                    }
+                    return true;
+                }
+            }
+        }
+    }
+
+    fn split_leaf(&mut self, node: u32, depth: usize) {
+        let sets = match std::mem::replace(
+            &mut self.nodes[node as usize].kind,
+            NodeKind::Interior { children: vec![None; self.fanout] },
+        ) {
+            NodeKind::Leaf { sets } => sets,
+            _ => unreachable!("split target must be a leaf"),
+        };
+        for (set, count) in sets {
+            let b = set[depth] as usize % self.fanout;
+            let child = {
+                let existing = match &self.nodes[node as usize].kind {
+                    NodeKind::Interior { children } => children[b],
+                    _ => unreachable!(),
+                };
+                match existing {
+                    Some(c) => c,
+                    None => {
+                        let id = self.nodes.len() as u32;
+                        self.nodes.push(Node { kind: NodeKind::Leaf { sets: Vec::new() } });
+                        if let NodeKind::Interior { children } = &mut self.nodes[node as usize].kind
+                        {
+                            children[b] = Some(id);
+                        }
+                        id
+                    }
+                }
+            };
+            if let NodeKind::Leaf { sets } = &mut self.nodes[child as usize].kind {
+                sets.push((set, count));
+            }
+            // Note: recursive overflow is resolved lazily on next insert.
+        }
+    }
+
+    pub fn contains(&self, set: &[Item]) -> bool {
+        self.find(set).is_some()
+    }
+
+    fn find(&self, set: &[Item]) -> Option<(u32, usize)> {
+        let mut node = ROOT;
+        let mut depth = 0usize;
+        loop {
+            match &self.nodes[node as usize].kind {
+                NodeKind::Interior { children } => {
+                    node = children[self.bucket(set[depth])]?;
+                    depth += 1;
+                }
+                NodeKind::Leaf { sets } => {
+                    return sets.iter().position(|(s, _)| s == set).map(|i| (node, i));
+                }
+            }
+        }
+    }
+
+    pub fn count_of(&self, set: &[Item]) -> Option<u64> {
+        let (node, i) = self.find(set)?;
+        match &self.nodes[node as usize].kind {
+            NodeKind::Leaf { sets } => Some(sets[i].1),
+            _ => None,
+        }
+    }
+
+    /// Classic hash-tree subset counting: at an interior node at depth `d`,
+    /// hash every remaining transaction item and recurse; at a leaf, count
+    /// each stored itemset whose first `d` items equal the hashed descent
+    /// path and whose remainder is a subset of the transaction suffix.
+    /// Transactions are canonical (strictly increasing), so the item path
+    /// uniquely identifies the descent — every set is counted exactly once.
+    /// Returns `(nodes visited, leaves hit)`.
+    pub fn count_transaction(&mut self, txn: &[Item]) -> (u64, u64) {
+        let mut visits = 0u64;
+        let mut hits = 0u64;
+        let mut path: Vec<Item> = Vec::with_capacity(self.k);
+        self.walk_count(ROOT, txn, 0, &mut path, &mut visits, &mut hits);
+        (visits, hits)
+    }
+
+    fn walk_count(
+        &mut self,
+        node: u32,
+        txn: &[Item],
+        start: usize,
+        path: &mut Vec<Item>,
+        visits: &mut u64,
+        hits: &mut u64,
+    ) {
+        *visits += 1;
+        // Snapshot interior children to release the borrow before recursing.
+        let children: Option<Vec<Option<u32>>> = match &self.nodes[node as usize].kind {
+            NodeKind::Interior { children } => Some(children.clone()),
+            NodeKind::Leaf { .. } => None,
+        };
+        match children {
+            Some(children) => {
+                for pos in start..txn.len() {
+                    let b = self.bucket(txn[pos]);
+                    if let Some(c) = children[b] {
+                        path.push(txn[pos]);
+                        self.walk_count(c, txn, pos + 1, path, visits, hits);
+                        path.pop();
+                    }
+                }
+            }
+            None => {
+                let d = path.len();
+                // Sets whose remainder must appear within txn[start..].
+                let suffix = &txn[start.min(txn.len())..];
+                if let NodeKind::Leaf { sets } = &mut self.nodes[node as usize].kind {
+                    for (set, count) in sets.iter_mut() {
+                        if set.len() >= d
+                            && set[..d] == path[..]
+                            && super::is_subset(&set[d..], suffix)
+                        {
+                            *count += 1;
+                            *hits += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn clear_counts(&mut self) {
+        for n in &mut self.nodes {
+            if let NodeKind::Leaf { sets } = &mut n.kind {
+                for (_, c) in sets {
+                    *c = 0;
+                }
+            }
+        }
+    }
+
+    /// All stored `(itemset, count)` pairs, sorted.
+    pub fn entries(&self) -> Vec<(Itemset, u64)> {
+        let mut out = Vec::with_capacity(self.len);
+        for n in &self.nodes {
+            if let NodeKind::Leaf { sets } = &n.kind {
+                out.extend(sets.iter().cloned());
+            }
+        }
+        out.sort();
+        out
+    }
+
+    pub fn frequent(&self, min_count: u64) -> Vec<(Itemset, u64)> {
+        self.entries().into_iter().filter(|(_, c)| *c >= min_count).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::itemset::Trie;
+    use crate::util::check::{forall, DbGen};
+
+    fn sets3() -> Vec<Itemset> {
+        vec![
+            vec![1, 2, 3],
+            vec![1, 2, 7],
+            vec![1, 5, 9],
+            vec![2, 3, 4],
+            vec![4, 5, 6],
+            vec![6, 7, 8],
+            vec![3, 6, 9],
+        ]
+    }
+
+    #[test]
+    fn insert_contains_len() {
+        let t = HashTree::from_itemsets(3, sets3().iter());
+        assert_eq!(t.len(), 7);
+        for s in sets3() {
+            assert!(t.contains(&s), "{s:?}");
+        }
+        assert!(!t.contains(&[1, 2, 4]));
+    }
+
+    #[test]
+    fn duplicate_insert_ignored() {
+        let mut t = HashTree::new(2);
+        assert!(t.insert(&[1, 2]));
+        assert!(!t.insert(&[1, 2]));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn splitting_under_small_caps() {
+        let mut t = HashTree::with_params(3, 2, 1);
+        for s in sets3() {
+            t.insert(&s);
+        }
+        assert_eq!(t.len(), 7);
+        assert!(t.node_count() > 3, "tree must have split");
+        for s in sets3() {
+            assert!(t.contains(&s), "{s:?} lost after splits");
+        }
+    }
+
+    #[test]
+    fn counting_matches_trie() {
+        let sets = sets3();
+        let txns: Vec<Itemset> = vec![
+            vec![1, 2, 3, 7],
+            vec![1, 2, 5, 7, 9],
+            vec![2, 3, 4, 6, 9],
+            vec![4, 5, 6, 7, 8],
+            (1..=9).collect(),
+        ];
+        let mut ht = HashTree::with_params(3, 4, 2);
+        for s in &sets {
+            ht.insert(s);
+        }
+        let mut trie = Trie::from_itemsets(3, sets.iter());
+        for t in &txns {
+            ht.count_transaction(t);
+            trie.count_transaction(t);
+        }
+        for s in &sets {
+            assert_eq!(ht.count_of(s), trie.count_of(s), "set {s:?}");
+        }
+    }
+
+    #[test]
+    fn prop_counts_match_trie() {
+        let gen = DbGen { universe: 12, max_txns: 25, max_width: 7 };
+        forall(901, 60, &gen, |db| {
+            // Store every 2-subset drawn from the first few transactions.
+            let mut sets: Vec<Itemset> = Vec::new();
+            for t in db.txns.iter().take(6) {
+                for i in 0..t.len() {
+                    for j in (i + 1)..t.len() {
+                        sets.push(vec![t[i], t[j]]);
+                    }
+                }
+            }
+            sets.sort();
+            sets.dedup();
+            if sets.is_empty() {
+                return true;
+            }
+            let mut ht = HashTree::with_params(2, 3, 2);
+            for s in &sets {
+                ht.insert(s);
+            }
+            let mut trie = Trie::from_itemsets(2, sets.iter());
+            for t in &db.txns {
+                ht.count_transaction(t);
+                trie.count_transaction(t);
+            }
+            sets.iter().all(|s| ht.count_of(s) == trie.count_of(s))
+        });
+    }
+
+    #[test]
+    fn entries_sorted_and_frequent_filter() {
+        let mut t = HashTree::new(2);
+        t.insert(&[3, 4]);
+        t.insert(&[1, 2]);
+        t.count_transaction(&[1, 2, 9]);
+        let e = t.entries();
+        assert_eq!(e[0].0, vec![1, 2]);
+        assert_eq!(t.frequent(1), vec![(vec![1, 2], 1)]);
+        t.clear_counts();
+        assert!(t.frequent(1).is_empty());
+    }
+}

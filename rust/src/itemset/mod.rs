@@ -1,0 +1,90 @@
+//! Itemset primitives: item ids, sorted itemsets, the Bodon-style prefix
+//! tree (trie) used by every miner for candidate storage/generation/counting,
+//! and bitmap encodings for the XLA counting backend.
+
+pub mod bitmap;
+pub mod hashtable_trie;
+pub mod hashtree;
+pub mod trie;
+
+pub use hashtable_trie::HashTableTrie;
+pub use hashtree::HashTree;
+pub use trie::Trie;
+
+/// An item identifier. Datasets remap raw item labels to dense u32 ids.
+pub type Item = u32;
+
+/// A sorted, duplicate-free list of items.
+pub type Itemset = Vec<Item>;
+
+/// Returns true iff `xs` is strictly increasing (valid canonical itemset).
+pub fn is_canonical(xs: &[Item]) -> bool {
+    xs.windows(2).all(|w| w[0] < w[1])
+}
+
+/// Canonicalize in place: sort + dedup.
+pub fn canonicalize(xs: &mut Itemset) {
+    xs.sort_unstable();
+    xs.dedup();
+}
+
+/// True iff sorted `needle` is a subset of sorted `haystack` (merge walk).
+pub fn is_subset(needle: &[Item], haystack: &[Item]) -> bool {
+    let mut hi = 0;
+    'outer: for &n in needle {
+        while hi < haystack.len() {
+            match haystack[hi].cmp(&n) {
+                std::cmp::Ordering::Less => hi += 1,
+                std::cmp::Ordering::Equal => {
+                    hi += 1;
+                    continue 'outer;
+                }
+                std::cmp::Ordering::Greater => return false,
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Render an itemset for reports: `i1 i3 i9`.
+pub fn format_itemset(xs: &[Item]) -> String {
+    xs.iter().map(|i| format!("i{i}")).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_checks() {
+        assert!(is_canonical(&[]));
+        assert!(is_canonical(&[3]));
+        assert!(is_canonical(&[1, 2, 9]));
+        assert!(!is_canonical(&[1, 1]));
+        assert!(!is_canonical(&[2, 1]));
+    }
+
+    #[test]
+    fn canonicalize_sorts_and_dedups() {
+        let mut v = vec![5, 1, 3, 1, 5];
+        canonicalize(&mut v);
+        assert_eq!(v, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn subset_merge_walk() {
+        assert!(is_subset(&[], &[1, 2]));
+        assert!(is_subset(&[2], &[1, 2, 3]));
+        assert!(is_subset(&[1, 3], &[1, 2, 3]));
+        assert!(!is_subset(&[4], &[1, 2, 3]));
+        assert!(!is_subset(&[1, 2], &[2, 3]));
+        assert!(!is_subset(&[1], &[]));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_itemset(&[1, 4]), "i1 i4");
+        assert_eq!(format_itemset(&[]), "");
+    }
+}

@@ -1,0 +1,566 @@
+//! Arena-backed prefix tree (trie) over itemsets, after Bodon & Rónyai —
+//! the data structure the paper uses for `trieL_k` / `trieC_k` (§4).
+//!
+//! All itemsets stored in one trie have the same length `k` (its *level*),
+//! which is what the Apriori passes need. The trie supports:
+//!
+//! * membership (`contains`) — used by the pruning step,
+//! * per-leaf support counters — used by `subset()` counting,
+//! * sibling self-join — the `join` step of `apriori-gen` (§4.2),
+//! * iteration in lexicographic order.
+//!
+//! Operation metering: the hot methods return/accumulate visit counts so the
+//! cluster cost model can convert *real executed work* into simulated time.
+
+use super::{Item, Itemset};
+
+const ROOT: u32 = 0;
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// `(item, child id)` pairs sorted by item. Edge items live inline in
+    /// the parent so the merge walks stay on one cache line instead of
+    /// chasing every child node just to read its item (§Perf log).
+    children: Vec<(Item, u32)>,
+}
+
+/// Prefix tree over fixed-length itemsets.
+#[derive(Debug, Clone)]
+pub struct Trie {
+    nodes: Vec<Node>,
+    /// Length of every stored itemset.
+    k: usize,
+    /// Number of stored itemsets (= number of leaves at depth k).
+    len: usize,
+    /// Support counters, indexed by node id. Separate from `nodes` so the
+    /// counting walk can borrow the topology immutably while updating
+    /// counters (disjoint-field borrow).
+    counts: Vec<u64>,
+    /// Reusable DFS stack for [`count_transaction`] (perf: avoids one heap
+    /// allocation per transaction on the mapper hot path — §Perf log).
+    scratch: Vec<(u32, usize, usize)>,
+}
+
+impl Trie {
+    /// Empty trie that will hold itemsets of length `k` (k >= 1).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "trie level must be >= 1");
+        Self {
+            nodes: vec![Node { children: Vec::new() }],
+            k,
+            len: 0,
+            counts: vec![0],
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Build from an iterator of canonical itemsets (all of length `k`).
+    pub fn from_itemsets<'a, I: IntoIterator<Item = &'a Itemset>>(k: usize, sets: I) -> Self {
+        let mut t = Trie::new(k);
+        for s in sets {
+            t.insert(s);
+        }
+        t
+    }
+
+    /// The level (stored itemset length).
+    pub fn level(&self) -> usize {
+        self.k
+    }
+
+    /// Number of stored itemsets.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total allocated trie nodes (root included) — the paper's
+    /// "size of prefix tree" (|trieC_k|) cost-model proxy.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn find_child(&self, node: u32, item: Item) -> Option<u32> {
+        let kids = &self.nodes[node as usize].children;
+        // Hybrid scan: child lists are tiny near the leaves (linear scan is
+        // branch-predictor friendly), wide at the root (binary search wins).
+        if kids.len() <= 12 {
+            kids.iter().find(|&&(i, _)| i == item).map(|&(_, c)| c)
+        } else {
+            kids.binary_search_by(|&(i, _)| i.cmp(&item)).ok().map(|i| kids[i].1)
+        }
+    }
+
+    /// Insert a canonical itemset of length `k`. Returns true if new.
+    pub fn insert(&mut self, set: &[Item]) -> bool {
+        debug_assert_eq!(set.len(), self.k, "itemset length must equal trie level");
+        debug_assert!(super::is_canonical(set));
+        let mut node = ROOT;
+        let mut created = false;
+        for &item in set {
+            match self.find_child(node, item) {
+                Some(c) => node = c,
+                None => {
+                    let id = self.nodes.len() as u32;
+                    self.nodes.push(Node { children: Vec::new() });
+                    self.counts.push(0);
+                    let kids = &mut self.nodes[node as usize].children;
+                    let pos = kids.binary_search_by(|&(i, _)| i.cmp(&item)).unwrap_err();
+                    kids.insert(pos, (item, id));
+                    node = id;
+                    created = true;
+                }
+            }
+        }
+        if created {
+            self.len += 1;
+        }
+        created
+    }
+
+    /// Membership test.
+    pub fn contains(&self, set: &[Item]) -> bool {
+        debug_assert_eq!(set.len(), self.k);
+        let mut node = ROOT;
+        for &item in set {
+            match self.find_child(node, item) {
+                Some(c) => node = c,
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Add `delta` to the support counter of `set` (must be present).
+    pub fn add_count(&mut self, set: &[Item], delta: u64) -> bool {
+        let mut node = ROOT;
+        for &item in set {
+            match self.find_child(node, item) {
+                Some(c) => node = c,
+                None => return false,
+            }
+        }
+        self.counts[node as usize] += delta;
+        true
+    }
+
+    /// Read a support counter.
+    pub fn count_of(&self, set: &[Item]) -> Option<u64> {
+        let mut node = ROOT;
+        for &item in set {
+            node = self.find_child(node, item)?;
+        }
+        Some(self.counts[node as usize])
+    }
+
+    /// Reset all support counters to zero.
+    pub fn clear_counts(&mut self) {
+        self.counts.fill(0);
+    }
+
+    /// Iterate stored itemsets in lexicographic order.
+    pub fn iter(&self) -> TrieIter<'_> {
+        self.iter_with_counts(&self.counts)
+    }
+
+    /// Iterate with an *external* counter buffer (see
+    /// [`count_transaction_into`]).
+    pub fn iter_with_counts<'a>(&'a self, counts: &'a [u64]) -> TrieIter<'a> {
+        debug_assert!(counts.len() >= self.nodes.len());
+        TrieIter { trie: self, counts, stack: vec![(ROOT, 0)], prefix: Vec::with_capacity(self.k) }
+    }
+
+    /// Collect all stored itemsets.
+    pub fn itemsets(&self) -> Vec<Itemset> {
+        self.iter().map(|(s, _)| s).collect()
+    }
+
+    /// Collect itemsets whose count is >= `min_count`.
+    pub fn frequent(&self, min_count: u64) -> Vec<(Itemset, u64)> {
+        self.iter().filter(|(_, c)| *c >= min_count).collect()
+    }
+
+    /// `subset(trieC_k, t)` of the paper: invoke `on_hit` for every stored
+    /// itemset that is a subset of the (sorted) transaction `txn`.
+    /// Returns the number of trie nodes visited (cost-model meter).
+    pub fn for_each_contained(
+        &self,
+        txn: &[Item],
+        mut on_hit: impl FnMut(&[Item]),
+    ) -> u64 {
+        let mut prefix = Vec::with_capacity(self.k);
+        let mut visits = 0u64;
+        self.walk_contained(ROOT, txn, 0, &mut prefix, &mut on_hit, &mut visits);
+        visits
+    }
+
+    fn walk_contained(
+        &self,
+        node: u32,
+        txn: &[Item],
+        start: usize,
+        prefix: &mut Vec<Item>,
+        on_hit: &mut impl FnMut(&[Item]),
+        visits: &mut u64,
+    ) {
+        if prefix.len() == self.k {
+            on_hit(prefix);
+            return;
+        }
+        let kids = &self.nodes[node as usize].children;
+        if kids.is_empty() {
+            return;
+        }
+        // Merge-walk transaction items against sorted children.
+        let mut ti = start;
+        let mut ki = 0;
+        while ti < txn.len() && ki < kids.len() {
+            let (citem, child) = kids[ki];
+            match txn[ti].cmp(&citem) {
+                std::cmp::Ordering::Less => ti += 1,
+                std::cmp::Ordering::Greater => ki += 1,
+                std::cmp::Ordering::Equal => {
+                    *visits += 1;
+                    prefix.push(citem);
+                    self.walk_contained(child, txn, ti + 1, prefix, on_hit, visits);
+                    prefix.pop();
+                    ti += 1;
+                    ki += 1;
+                }
+            }
+        }
+    }
+
+    /// Like [`for_each_contained`] but increments leaf counters directly —
+    /// the fused map+combine fast path. Returns `(nodes visited, leaves hit)`.
+    pub fn count_transaction(&mut self, txn: &[Item]) -> (u64, u64) {
+        let mut stack = std::mem::take(&mut self.scratch);
+        let nodes = &self.nodes;
+        let out = Self::count_into_inner(nodes, self.k, txn, &mut self.counts, &mut stack);
+        self.scratch = stack;
+        out
+    }
+
+    /// Count into an *external* counter buffer (len >= [`node_count`]),
+    /// leaving the trie itself untouched. This is what lets one shared
+    /// read-only candidate trie serve many map tasks concurrently (the
+    /// distributed-cache pattern; §Perf log).
+    pub fn count_transaction_into(
+        &self,
+        txn: &[Item],
+        counts: &mut [u64],
+        scratch: &mut Vec<(u32, usize, usize)>,
+    ) -> (u64, u64) {
+        debug_assert!(counts.len() >= self.nodes.len());
+        Self::count_into_inner(&self.nodes, self.k, txn, counts, scratch)
+    }
+
+    fn count_into_inner(
+        nodes: &[Node],
+        k: usize,
+        txn: &[Item],
+        counts: &mut [u64],
+        stack: &mut Vec<(u32, usize, usize)>,
+    ) -> (u64, u64) {
+        let mut visits = 0u64;
+        let mut hits = 0u64;
+        // Iterative DFS; stack entries: (node, txn position, depth). The
+        // stack buffer is caller-provided (allocation-free hot path).
+        stack.clear();
+        stack.push((ROOT, 0, 0));
+        while let Some((node, start, depth)) = stack.pop() {
+            if depth == k {
+                counts[node as usize] += 1;
+                hits += 1;
+                continue;
+            }
+            // Same merge walk as walk_contained, but pushing onto the stack.
+            let kids = &nodes[node as usize].children;
+            let mut ti = start;
+            let mut ki = 0;
+            while ti < txn.len() && ki < kids.len() {
+                let (citem, child) = kids[ki];
+                match txn[ti].cmp(&citem) {
+                    std::cmp::Ordering::Less => ti += 1,
+                    std::cmp::Ordering::Greater => ki += 1,
+                    std::cmp::Ordering::Equal => {
+                        visits += 1;
+                        stack.push((child, ti + 1, depth + 1));
+                        ti += 1;
+                        ki += 1;
+                    }
+                }
+            }
+        }
+        (visits, hits)
+    }
+
+    /// Sibling self-join (the `join` step of `apriori-gen`): for every node at
+    /// depth `k-1` and every ordered pair of its children `(a, b)` with
+    /// `a.item < b.item`, produce `prefix ∪ {a.item, b.item}` — a candidate
+    /// of length `k+1`. Invokes `on_candidate` per joined set and returns the
+    /// number of join pairs considered.
+    pub fn self_join(&self, mut on_candidate: impl FnMut(&[Item])) -> u64 {
+        let mut prefix = Vec::with_capacity(self.k + 1);
+        let mut joins = 0u64;
+        self.walk_join(ROOT, 0, &mut prefix, &mut on_candidate, &mut joins);
+        joins
+    }
+
+    fn walk_join(
+        &self,
+        node: u32,
+        depth: usize,
+        prefix: &mut Vec<Item>,
+        on_candidate: &mut impl FnMut(&[Item]),
+        joins: &mut u64,
+    ) {
+        if depth == self.k - 1 {
+            let kids = &self.nodes[node as usize].children;
+            for i in 0..kids.len() {
+                for j in (i + 1)..kids.len() {
+                    *joins += 1;
+                    prefix.push(kids[i].0);
+                    prefix.push(kids[j].0);
+                    on_candidate(prefix);
+                    prefix.pop();
+                    prefix.pop();
+                }
+            }
+            return;
+        }
+        for &(citem, c) in &self.nodes[node as usize].children {
+            prefix.push(citem);
+            self.walk_join(c, depth + 1, prefix, on_candidate, joins);
+            prefix.pop();
+        }
+    }
+
+    /// Rough heap footprint in bytes (for VMEM/memory reporting).
+    pub fn approx_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<Node>()
+            + self.nodes.iter().map(|n| n.children.capacity() * 8).sum::<usize>()
+            + self.counts.capacity() * 8
+    }
+}
+
+/// Lexicographic iterator yielding `(itemset, count)`.
+pub struct TrieIter<'a> {
+    trie: &'a Trie,
+    counts: &'a [u64],
+    /// (node, next-child-index); prefix holds items along the current path.
+    stack: Vec<(u32, usize)>,
+    prefix: Vec<Item>,
+}
+
+impl<'a> Iterator for TrieIter<'a> {
+    type Item = (Itemset, u64);
+
+    fn next(&mut self) -> Option<(Itemset, u64)> {
+        loop {
+            let &(node, child_idx) = self.stack.last()?;
+            let n = &self.trie.nodes[node as usize];
+            if self.prefix.len() == self.trie.k {
+                // At a leaf: yield, then pop.
+                let out = (self.prefix.clone(), self.counts[node as usize]);
+                self.stack.pop();
+                self.prefix.pop();
+                return Some(out);
+            }
+            if child_idx < n.children.len() {
+                self.stack.last_mut().unwrap().1 += 1;
+                let (citem, c) = n.children[child_idx];
+                self.prefix.push(citem);
+                self.stack.push((c, 0));
+            } else {
+                self.stack.pop();
+                self.prefix.pop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, DbGen, ItemsetGen, VecGen};
+
+    fn trie_of(k: usize, sets: &[&[Item]]) -> Trie {
+        let owned: Vec<Itemset> = sets.iter().map(|s| s.to_vec()).collect();
+        Trie::from_itemsets(k, owned.iter())
+    }
+
+    #[test]
+    fn insert_and_contains() {
+        let t = trie_of(2, &[&[1, 2], &[1, 3], &[2, 3]]);
+        assert_eq!(t.len(), 3);
+        assert!(t.contains(&[1, 2]));
+        assert!(t.contains(&[2, 3]));
+        assert!(!t.contains(&[1, 4]));
+        assert!(!t.contains(&[3, 4]));
+    }
+
+    #[test]
+    fn duplicate_insert_ignored() {
+        let mut t = Trie::new(2);
+        assert!(t.insert(&[1, 2]));
+        assert!(!t.insert(&[1, 2]));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn iteration_lexicographic() {
+        let t = trie_of(2, &[&[2, 3], &[1, 3], &[1, 2]]);
+        let sets: Vec<_> = t.iter().map(|(s, _)| s).collect();
+        assert_eq!(sets, vec![vec![1, 2], vec![1, 3], vec![2, 3]]);
+    }
+
+    #[test]
+    fn counting_via_transactions() {
+        let mut t = trie_of(2, &[&[1, 2], &[1, 3], &[2, 3]]);
+        t.count_transaction(&[1, 2, 3]); // hits all three
+        t.count_transaction(&[1, 2]); // hits {1,2}
+        t.count_transaction(&[3]); // hits none
+        assert_eq!(t.count_of(&[1, 2]), Some(2));
+        assert_eq!(t.count_of(&[1, 3]), Some(1));
+        assert_eq!(t.count_of(&[2, 3]), Some(1));
+    }
+
+    #[test]
+    fn for_each_contained_matches_count_transaction() {
+        let sets: &[&[Item]] = &[&[1, 2, 4], &[1, 3, 4], &[2, 3, 4], &[1, 2, 3]];
+        let mut t = trie_of(3, sets);
+        let txn = &[1, 2, 3, 4];
+        let mut hits = Vec::new();
+        t.for_each_contained(txn, |s| hits.push(s.to_vec()));
+        assert_eq!(hits.len(), 4);
+        t.count_transaction(txn);
+        for (s, c) in t.iter() {
+            assert_eq!(c, 1, "set {s:?}");
+        }
+    }
+
+    #[test]
+    fn self_join_level1() {
+        // L1 = {1},{2},{3} -> joins: {1,2},{1,3},{2,3}
+        let t = trie_of(1, &[&[1], &[2], &[3]]);
+        let mut out = Vec::new();
+        let joins = t.self_join(|s| out.push(s.to_vec()));
+        assert_eq!(joins, 3);
+        assert_eq!(out, vec![vec![1, 2], vec![1, 3], vec![2, 3]]);
+    }
+
+    #[test]
+    fn self_join_level2() {
+        // L2 = {1,2},{1,3},{2,3} -> join on shared prefix {1}: {1,2,3}; prefix {2}: none
+        let t = trie_of(2, &[&[1, 2], &[1, 3], &[2, 3]]);
+        let mut out = Vec::new();
+        t.self_join(|s| out.push(s.to_vec()));
+        assert_eq!(out, vec![vec![1, 2, 3]]);
+    }
+
+    #[test]
+    fn clear_counts_resets() {
+        let mut t = trie_of(1, &[&[1], &[2]]);
+        t.count_transaction(&[1, 2]);
+        assert_eq!(t.count_of(&[1]), Some(1));
+        t.clear_counts();
+        assert_eq!(t.count_of(&[1]), Some(0));
+    }
+
+    #[test]
+    fn frequent_filters_by_count() {
+        let mut t = trie_of(1, &[&[1], &[2], &[3]]);
+        t.count_transaction(&[1, 2]);
+        t.count_transaction(&[1]);
+        let f = t.frequent(2);
+        assert_eq!(f, vec![(vec![1], 2)]);
+    }
+
+    // --- property tests -------------------------------------------------
+
+    #[test]
+    fn prop_roundtrip_insert_iter() {
+        let gen = VecGen { inner: ItemsetGen { universe: 30, max_len: 4 }, max_len: 40 };
+        forall(101, 60, &gen, |sets| {
+            let fixed: Vec<Itemset> =
+                sets.iter().filter(|s| s.len() == 3).cloned().collect();
+            let mut expect: Vec<Itemset> = fixed.clone();
+            expect.sort();
+            expect.dedup();
+            let t = Trie::from_itemsets(3, fixed.iter());
+            t.itemsets() == expect && t.len() == expect.len()
+        });
+    }
+
+    #[test]
+    fn prop_contained_agrees_with_is_subset() {
+        let gen = DbGen { universe: 20, max_txns: 12, max_width: 8 };
+        forall(102, 60, &gen, |db| {
+            // Store all width-2 subsets of the first txn plus noise sets.
+            let mut sets: Vec<Itemset> = Vec::new();
+            for t in &db.txns {
+                if t.len() >= 2 {
+                    sets.push(vec![t[0], t[t.len() - 1]].to_vec());
+                }
+            }
+            sets.retain(|s| s[0] < s[1]);
+            sets.sort();
+            sets.dedup();
+            if sets.is_empty() {
+                return true;
+            }
+            let trie = Trie::from_itemsets(2, sets.iter());
+            db.txns.iter().all(|txn| {
+                let mut hits = Vec::new();
+                trie.for_each_contained(txn, |s| hits.push(s.to_vec()));
+                let expect: Vec<Itemset> = sets
+                    .iter()
+                    .filter(|s| crate::itemset::is_subset(s, txn))
+                    .cloned()
+                    .collect();
+                hits == expect
+            })
+        });
+    }
+
+    #[test]
+    fn prop_self_join_is_prefix_join() {
+        // Candidates from self_join must equal the classic definition:
+        // {a ∪ b : a,b ∈ L, |a ∩ b prefix| = k-1, last(a) < last(b)}.
+        let gen = VecGen { inner: ItemsetGen { universe: 15, max_len: 3 }, max_len: 25 };
+        forall(103, 60, &gen, |sets| {
+            let mut fixed: Vec<Itemset> =
+                sets.iter().filter(|s| s.len() == 2).cloned().collect();
+            fixed.sort();
+            fixed.dedup();
+            if fixed.is_empty() {
+                return true;
+            }
+            let trie = Trie::from_itemsets(2, fixed.iter());
+            let mut got = Vec::new();
+            trie.self_join(|s| got.push(s.to_vec()));
+            let mut expect = Vec::new();
+            for a in &fixed {
+                for b in &fixed {
+                    if a[..1] == b[..1] && a[1] < b[1] {
+                        expect.push(vec![a[0], a[1], b[1]]);
+                    }
+                }
+            }
+            expect.sort();
+            got.sort();
+            got == expect
+        });
+    }
+
+    #[test]
+    fn node_count_and_bytes_nonzero() {
+        let t = trie_of(2, &[&[1, 2], &[1, 3]]);
+        assert_eq!(t.node_count(), 4); // root + {1} + {1,2} + {1,3}
+        assert!(t.approx_bytes() > 0);
+    }
+}

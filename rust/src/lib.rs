@@ -1,0 +1,37 @@
+//! # mrapriori
+//!
+//! Reproduction of *"Performance Optimization of MapReduce-based Apriori
+//! Algorithm on Hadoop Cluster"* (Singh, Garg & Mishra, Computers &
+//! Electrical Engineering 67, 2018): the SPC/FPC/DPC baselines and the
+//! paper's VFPC, ETDPC, Optimized-VFPC and Optimized-ETDPC frequent-itemset
+//! miners, running on a from-scratch MapReduce framework over a simulated
+//! multi-node Hadoop-like cluster, with an AOT-compiled XLA (PJRT) support-
+//! counting backend authored in JAX/Pallas.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): drivers + MapReduce engine + cluster simulator.
+//! * L2/L1 (python/compile): JAX counting graph + Pallas kernel, AOT-lowered
+//!   to `artifacts/*.hlo.txt`, loaded at runtime by [`runtime`].
+//!
+//! Quick start:
+//! ```no_run
+//! use mrapriori::{cluster::ClusterConfig, coordinator::{self, Algorithm}, dataset::registry};
+//!
+//! let db = registry::load("mushroom");
+//! let cluster = ClusterConfig::paper_cluster();
+//! let outcome = coordinator::run(Algorithm::OptimizedVfpc, &db, 0.15, &cluster, 1000);
+//! println!("{} frequent itemsets in {:.0} simulated s",
+//!          outcome.total_frequent(), outcome.actual_time);
+//! ```
+
+pub mod apriori;
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod hdfs;
+pub mod itemset;
+pub mod mapreduce;
+pub mod runtime;
+pub mod util;

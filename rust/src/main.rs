@@ -1,0 +1,284 @@
+//! `mrapriori` CLI — launcher for mining runs, dataset generation,
+//! benchmark sweeps, and cost-model calibration.
+
+use anyhow::{bail, Result};
+use mrapriori::bench_harness::tables::{self, SweepSpec};
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{self, mappers::GenMode, Algorithm, RunOptions};
+use mrapriori::dataset::{loader, registry, stats};
+use mrapriori::util::flags::FlagSet;
+use mrapriori::util::logging::{self, Level};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd {
+        "mine" => cmd_mine(rest),
+        "inspect" => cmd_inspect(rest),
+        "generate" => cmd_generate(rest),
+        "sweep" => cmd_sweep(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "lk" => cmd_lk(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `mrapriori help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mrapriori — MapReduce-based Apriori on a simulated Hadoop cluster
+
+Commands:
+  mine       run one algorithm on a dataset, print phase breakdown
+  sweep      run the paper's Figs 2-4 sweep on a dataset
+  lk         print the |L_k| profile (paper Table 6) via the oracle
+  inspect    dataset summary statistics (paper Table 2)
+  generate   write a registry dataset to a FIMI text file
+  calibrate  fit cost-model weights against the paper's Table 3
+  help       this message
+
+Run `mrapriori <command> --help` for flags."
+    );
+}
+
+fn common_cluster(p: &mrapriori::util::flags::Parsed) -> Result<ClusterConfig> {
+    let mut cluster = match p.get("cluster-config") {
+        Some(path) => mrapriori::config::load_cluster(std::path::Path::new(path))?,
+        None => ClusterConfig::paper_cluster(),
+    };
+    if let Some(n) = p.usize("data-nodes")? {
+        let slots = cluster.nodes.first().map(|n| n.map_slots).unwrap_or(4);
+        cluster = ClusterConfig::uniform(n, slots);
+    }
+    if let Some(w) = p.usize("workers")? {
+        cluster.workers = w;
+    }
+    Ok(cluster)
+}
+
+fn load_db(p: &mrapriori::util::flags::Parsed) -> Result<mrapriori::dataset::TransactionDb> {
+    let name = p.required("dataset")?;
+    if let Some(db) = registry::try_load(name) {
+        return Ok(db);
+    }
+    let path = std::path::Path::new(name);
+    if path.exists() {
+        return Ok(loader::load_file(path)?);
+    }
+    bail!("dataset {name:?} is neither a registry name ({:?}) nor a file", registry::NAMES)
+}
+
+fn cmd_mine(args: &[String]) -> Result<()> {
+    let set = FlagSet::new("mine", "run one algorithm on a dataset")
+        .opt("dataset", "registry name (c20d10k|chess|mushroom) or FIMI file path")
+        .opt("algo", "algorithm: spc|fpc|dpc|vfpc|etdpc|opt-vfpc|opt-etdpc")
+        .opt("min-sup", "fractional minimum support (default: paper reference)")
+        .opt("split-lines", "lines per input split (default: paper setting)")
+        .opt("cluster-config", "TOML cluster config path")
+        .opt("data-nodes", "override: uniform cluster of N DataNodes")
+        .opt("workers", "host threads for real execution")
+        .opt_default("gen-mode", "per-record", "per-record|per-task generation cost")
+        .flag("fuse-12", "fuse passes 1+2 via triangular matrix (ref [6])")
+        .flag("verbose", "debug logging")
+        .flag("rules", "derive association rules (conf >= 0.9) at the end")
+        .flag("help", "show usage");
+    let p = set.parse(args)?;
+    if p.bool("help") {
+        println!("{}", set.usage());
+        return Ok(());
+    }
+    if p.bool("verbose") {
+        logging::set_level(Level::Debug);
+    }
+    let db = load_db(&p)?;
+    let algo = Algorithm::parse(p.get("algo").unwrap_or("opt-vfpc"))
+        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    let min_sup = p
+        .f64("min-sup")?
+        .or_else(|| registry::reference_min_sup(&db.name))
+        .unwrap_or(0.25);
+    let cluster = common_cluster(&p)?;
+    let opts = RunOptions {
+        split_lines: p.usize("split-lines")?.unwrap_or_else(|| registry::split_lines(&db.name)),
+        gen_mode: match p.get("gen-mode") {
+            Some("per-task") => GenMode::PerTask,
+            _ => GenMode::PerRecord,
+        },
+        dpc_alpha: if db.name == "chess" { 3.0 } else { 2.0 },
+        fuse_pass_2: p.bool("fuse-12"),
+        ..Default::default()
+    };
+
+    let out = coordinator::run_with(algo, &db, min_sup, &cluster, &opts);
+    println!(
+        "{} on {} @ min_sup {:.2} (min_count {})",
+        algo.name(),
+        db.name,
+        min_sup,
+        out.min_count
+    );
+    println!(
+        "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}",
+        "phase", "passes", "k-range", "candidates", "elapsed(s)", "wall(s)"
+    );
+    for ph in &out.phases {
+        let k_range = if ph.n_passes <= 1 {
+            format!("{}", ph.first_pass)
+        } else {
+            format!("{}-{}", ph.first_pass, ph.first_pass + ph.n_passes - 1)
+        };
+        println!(
+            "{:>5} {:>6} {:>7} {:>11} {:>12.1} {:>10.3}",
+            ph.phase, ph.n_passes, k_range, ph.candidates, ph.elapsed, ph.wall
+        );
+    }
+    println!(
+        "total {:.1} s simulated, actual {:.1} s, wall {:.3} s host",
+        out.total_time, out.actual_time, out.wall_time
+    );
+    println!("frequent itemsets: {} across {} levels", out.total_frequent(), out.levels.len());
+    println!("|L_k| profile: {:?}", out.lk_profile());
+    if p.bool("verbose") {
+        let mut total = mrapriori::mapreduce::Counters::new();
+        for ph in &out.phases {
+            total.merge(&ph.counters);
+        }
+        println!("aggregate counters: {total}");
+        let w = cluster.weights;
+        use mrapriori::mapreduce::keys as K;
+        println!(
+            "compute split (s): join={:.0} prune={:.0} cand={:.0} visit={:.0} tuples={:.0}",
+            w.join_pair * total.get(K::JOIN_PAIRS) as f64,
+            w.prune_check * total.get(K::PRUNE_CHECKS) as f64,
+            w.cand_built * total.get(K::CANDS_BUILT) as f64,
+            w.subset_visit * total.get(K::SUBSET_VISITS) as f64,
+            w.map_tuple * total.get(K::MAP_OUTPUT_TUPLES) as f64,
+        );
+    }
+
+    if p.bool("rules") {
+        let mined = mrapriori::apriori::sequential::MineResult {
+            levels: out.levels.clone(),
+            min_count: out.min_count,
+            candidates_per_pass: vec![],
+            gen_stats: Default::default(),
+            subset_visits: 0,
+        };
+        let rules = mrapriori::apriori::rules::derive_rules(&mined, db.len(), 0.9);
+        println!("\ntop association rules (conf >= 0.9):");
+        for r in rules.iter().take(15) {
+            println!("  {r}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let set = FlagSet::new("inspect", "dataset summary statistics")
+        .opt("dataset", "registry name or file path")
+        .flag("help", "show usage");
+    let p = set.parse(args)?;
+    if p.bool("help") {
+        println!("{}", set.usage());
+        return Ok(());
+    }
+    let db = load_db(&p)?;
+    println!("{}", stats::summarize(&db));
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let set = FlagSet::new("generate", "write a registry dataset to a FIMI file")
+        .opt("dataset", "registry name")
+        .opt("out", "output path")
+        .opt("scale", "repeat to N transactions (e.g. 200000 for c20d200k)")
+        .flag("help", "show usage");
+    let p = set.parse(args)?;
+    if p.bool("help") {
+        println!("{}", set.usage());
+        return Ok(());
+    }
+    let mut db = load_db(&p)?;
+    if let Some(target) = p.usize("scale")? {
+        let name = format!("{}-x{}", db.name, target);
+        db = db.scaled_to(target, name);
+    }
+    let out = p.required("out")?;
+    loader::write_file(&db, std::path::Path::new(out))?;
+    println!("wrote {} transactions to {}", db.len(), out);
+    Ok(())
+}
+
+fn cmd_lk(args: &[String]) -> Result<()> {
+    let set = FlagSet::new("lk", "|L_k| per pass via the sequential oracle (Table 6)")
+        .opt("dataset", "registry name or file path")
+        .opt("min-sup", "fractional minimum support")
+        .flag("help", "show usage");
+    let p = set.parse(args)?;
+    if p.bool("help") {
+        println!("{}", set.usage());
+        return Ok(());
+    }
+    let db = load_db(&p)?;
+    let min_sup = p
+        .f64("min-sup")?
+        .or_else(|| registry::reference_min_sup(&db.name))
+        .unwrap_or(0.25);
+    let r = mrapriori::apriori::sequential::mine(&db, min_sup);
+    println!("{} @ min_sup {:.2}: |L_k| = {:?}", db.name, min_sup, r.lk_profile());
+    println!("total {} frequent itemsets, max length {}", r.total_frequent(), r.max_len());
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let set = FlagSet::new("sweep", "run the paper's figure sweep on a dataset")
+        .opt("dataset", "registry name or file path")
+        .opt("min-sups", "comma-separated min_sup list (default: paper sweep)")
+        .opt("workers", "host threads")
+        .opt("cluster-config", "TOML cluster config path")
+        .opt("data-nodes", "uniform cluster of N DataNodes")
+        .flag("help", "show usage");
+    let p = set.parse(args)?;
+    if p.bool("help") {
+        println!("{}", set.usage());
+        return Ok(());
+    }
+    let db = load_db(&p)?;
+    let mut spec = SweepSpec::paper(&db);
+    spec.cluster = common_cluster(&p)?;
+    if let Some(sups) = p.f64_list("min-sups")? {
+        spec.min_sups = sups;
+    }
+    let result = tables::sweep(&spec);
+    println!("{}", tables::figure_a(&result, &db.name));
+    println!("{}", tables::figure_b(&result, &db.name));
+    Ok(())
+}
+
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    let set = FlagSet::new("calibrate", "fit cost weights against the paper's Table 3")
+        .flag("emit", "print the fitted config as TOML")
+        .flag("help", "show usage");
+    let p = set.parse(args)?;
+    if p.bool("help") {
+        println!("{}", set.usage());
+        return Ok(());
+    }
+    let report = mrapriori::bench_harness::calibrate::run_calibration(p.bool("emit"));
+    println!("{report}");
+    Ok(())
+}

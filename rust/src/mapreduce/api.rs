@@ -1,0 +1,184 @@
+//! The MapReduce programming interface: `Mapper`, `Combiner`, `Reducer`,
+//! `Partitioner` traits and the task `Context`, mirroring the Hadoop API the
+//! paper's pseudocode is written against (Algorithms 1–5).
+
+use super::counters::{keys, Counters};
+use crate::itemset::Itemset;
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+
+/// Per-task context handed to mappers: output collection + counters + the
+/// "job configuration context" side-channel the paper's mappers use to send
+/// `candidateCount` / `npass` back to the driver.
+pub struct Context<K, V> {
+    out: Vec<(K, V)>,
+    pub counters: Counters,
+    /// Driver side-channel (`set the value of X to context`, Algs 3–5).
+    pub aux: BTreeMap<&'static str, u64>,
+}
+
+impl<K, V> Context<K, V> {
+    pub fn new() -> Self {
+        Self { out: Vec::new(), counters: Counters::new(), aux: BTreeMap::new() }
+    }
+
+    /// `write(key, value)` of the Hadoop API.
+    #[inline]
+    pub fn write(&mut self, key: K, value: V) {
+        self.counters.add(keys::MAP_OUTPUT_TUPLES, 1);
+        self.out.push((key, value));
+    }
+
+    /// Record an output tuple that was already locally aggregated (in-mapper
+    /// combining): counts `raw` raw writes but emits a single tuple.
+    #[inline]
+    pub fn write_combined(&mut self, key: K, value: V, raw: u64) {
+        self.counters.add(keys::MAP_OUTPUT_TUPLES, raw);
+        self.out.push((key, value));
+    }
+
+    pub fn set_aux(&mut self, name: &'static str, value: u64) {
+        self.aux.insert(name, value);
+    }
+
+    pub fn take_output(&mut self) -> Vec<(K, V)> {
+        std::mem::take(&mut self.out)
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.out.len()
+    }
+}
+
+impl<K, V> Default for Context<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A map task body. One instance per task (per input split); `map` is called
+/// once per record; `cleanup` runs after the last record (Hadoop semantics).
+pub trait Mapper: Send {
+    type K: Send + Clone + Ord + Hash;
+    type V: Send + Clone;
+
+    fn map(&mut self, offset: usize, record: &Itemset, ctx: &mut Context<Self::K, Self::V>);
+
+    fn cleanup(&mut self, _ctx: &mut Context<Self::K, Self::V>) {}
+}
+
+/// Combiner: folds the values of one key locally on the map side.
+/// `ItemsetCombiner` of the paper = [`SumCombiner`].
+pub trait Combiner<K, V>: Send + Sync {
+    fn combine(&self, key: &K, values: &mut Vec<V>) -> V;
+}
+
+/// Reducer: folds the values of one key globally; `None` drops the key
+/// (how `ItemsetReducer` applies the min-support filter).
+pub trait Reducer<K, V>: Send + Sync {
+    type Out: Send;
+    fn reduce(&self, key: &K, values: &[V]) -> Option<Self::Out>;
+}
+
+/// Partitioner: key -> reducer index. Default is hash partitioning.
+pub trait Partitioner<K>: Send + Sync {
+    fn partition(&self, key: &K, n_reducers: usize) -> usize;
+}
+
+/// Hash partitioner over the key's `Hash` impl (stable within a build —
+/// `DefaultHasher::new()` uses fixed SipHash keys).
+pub struct HashPartitioner;
+
+impl<K: Hash> Partitioner<K> for HashPartitioner {
+    fn partition(&self, key: &K, n_reducers: usize) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % n_reducers as u64) as usize
+    }
+}
+
+/// The paper's `ItemsetCombiner`: sums local counts.
+pub struct SumCombiner;
+
+impl<K: Send + Sync> Combiner<K, u64> for SumCombiner {
+    fn combine(&self, _key: &K, values: &mut Vec<u64>) -> u64 {
+        values.drain(..).sum()
+    }
+}
+
+/// The paper's `ItemsetReducer`: sums counts, keeps keys meeting
+/// `min_count` (Algorithm 1).
+pub struct MinSupportReducer {
+    pub min_count: u64,
+}
+
+impl<K: Send + Sync + Clone> Reducer<K, u64> for MinSupportReducer {
+    type Out = (K, u64);
+    fn reduce(&self, key: &K, values: &[u64]) -> Option<(K, u64)> {
+        let sum: u64 = values.iter().sum();
+        (sum >= self.min_count).then(|| (key.clone(), sum))
+    }
+}
+
+/// Pass-through reducer that sums without filtering (for tests/aggregations).
+pub struct SumReducer;
+
+impl<K: Send + Sync + Clone> Reducer<K, u64> for SumReducer {
+    type Out = (K, u64);
+    fn reduce(&self, key: &K, values: &[u64]) -> Option<(K, u64)> {
+        Some((key.clone(), values.iter().sum()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_write_counts() {
+        let mut ctx: Context<u32, u64> = Context::new();
+        ctx.write(1, 1);
+        ctx.write(2, 1);
+        ctx.write_combined(3, 10, 10);
+        assert_eq!(ctx.counters.get(keys::MAP_OUTPUT_TUPLES), 12);
+        assert_eq!(ctx.output_len(), 3);
+        let out = ctx.take_output();
+        assert_eq!(out.len(), 3);
+        assert_eq!(ctx.output_len(), 0);
+    }
+
+    #[test]
+    fn sum_combiner_folds() {
+        let c = SumCombiner;
+        let mut vals = vec![1u64, 2, 3];
+        assert_eq!(Combiner::<u32, u64>::combine(&c, &0, &mut vals), 6);
+    }
+
+    #[test]
+    fn min_support_reducer_filters() {
+        let r = MinSupportReducer { min_count: 3 };
+        assert_eq!(r.reduce(&7u32, &[1, 1]), None);
+        assert_eq!(r.reduce(&7u32, &[1, 2]), Some((7, 3)));
+    }
+
+    #[test]
+    fn hash_partitioner_stable_and_in_range() {
+        let p = HashPartitioner;
+        for key in 0u32..100 {
+            let a = p.partition(&key, 7);
+            let b = p.partition(&key, 7);
+            assert_eq!(a, b);
+            assert!(a < 7);
+        }
+    }
+
+    #[test]
+    fn partitions_spread_keys() {
+        let p = HashPartitioner;
+        let mut seen = vec![false; 4];
+        for key in 0u32..64 {
+            seen[p.partition(&key, 4)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,116 @@
+//! Job/task counters, mirroring Hadoop's counter framework. The cluster
+//! cost model converts these *measured-work* counters into simulated time.
+
+use std::collections::BTreeMap;
+
+/// Well-known counter names used across the system.
+pub mod keys {
+    /// Records fed to map().
+    pub const MAP_INPUT_RECORDS: &str = "map_input_records";
+    /// Raw (key, value) writes from mappers (pre-combine).
+    pub const MAP_OUTPUT_TUPLES: &str = "map_output_tuples";
+    /// Tuples leaving the combine stage (what actually shuffles).
+    pub const COMBINE_OUTPUT_TUPLES: &str = "combine_output_tuples";
+    /// Tuples received by reducers.
+    pub const REDUCE_INPUT_TUPLES: &str = "reduce_input_tuples";
+    /// Records written by reducers.
+    pub const REDUCE_OUTPUT_RECORDS: &str = "reduce_output_records";
+    /// apriori-gen/non-apriori-gen join pairs considered (per map() call,
+    /// i.e. already multiplied by records for the faithful re-invocation).
+    pub const JOIN_PAIRS: &str = "join_pairs";
+    /// Prune subset-membership probes.
+    pub const PRUNE_CHECKS: &str = "prune_checks";
+    /// Candidate-trie insertions performed.
+    pub const CANDS_BUILT: &str = "cands_built";
+    /// Trie nodes visited during subset() counting.
+    pub const SUBSET_VISITS: &str = "subset_visits";
+    /// Number of candidate itemsets counted in this job (driver bookkeeping).
+    pub const CANDIDATES: &str = "candidates";
+    /// Number of passes combined by the mapper (driver bookkeeping).
+    pub const NPASS: &str = "npass";
+}
+
+/// A bag of named u64 counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters(BTreeMap<&'static str, u64>);
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, name: &'static str, delta: u64) {
+        *self.0.entry(name).or_insert(0) += delta;
+    }
+
+    pub fn set(&mut self, name: &'static str, value: u64) {
+        self.0.insert(name, value);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.0.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.0 {
+            *self.0.entry(k).or_insert(0) += v;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.0.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+impl std::fmt::Display for Counters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, (k, v)) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_get_set() {
+        let mut c = Counters::new();
+        c.add(keys::MAP_INPUT_RECORDS, 5);
+        c.add(keys::MAP_INPUT_RECORDS, 3);
+        assert_eq!(c.get(keys::MAP_INPUT_RECORDS), 8);
+        assert_eq!(c.get("missing"), 0);
+        c.set(keys::NPASS, 4);
+        assert_eq!(c.get(keys::NPASS), 4);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Counters::new();
+        a.add("x", 1);
+        let mut b = Counters::new();
+        b.add("x", 2);
+        b.add("y", 7);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3);
+        assert_eq!(a.get("y"), 7);
+    }
+
+    #[test]
+    fn display_lists_counters() {
+        let mut c = Counters::new();
+        c.add("a", 1);
+        c.add("b", 2);
+        assert_eq!(c.to_string(), "a=1, b=2");
+    }
+}

@@ -1,0 +1,345 @@
+//! The MapReduce execution engine: runs map tasks over input splits
+//! (optionally on real threads), applies the combiner, shuffles by
+//! partition, runs reduce tasks, and meters everything for the cluster
+//! simulator.
+//!
+//! The engine executes *real* work — mappers genuinely generate candidates
+//! and count supports — while the per-task [`TaskMeter`]s feed the
+//! deterministic cost model in [`crate::cluster`] that turns measured
+//! operation counts into simulated cluster seconds.
+
+use super::api::{Combiner, Context, Mapper, Partitioner, Reducer};
+use super::counters::{keys, Counters};
+use crate::hdfs::InputSplit;
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+/// Per-task measurement record consumed by the cluster scheduler.
+#[derive(Debug, Clone)]
+pub struct TaskMeter {
+    pub task_id: usize,
+    pub counters: Counters,
+    /// Locality hint from the task's input split (empty for reduce tasks).
+    pub preferred_nodes: Vec<usize>,
+    /// Real wall-clock seconds this task took on the host machine.
+    pub wall_secs: f64,
+}
+
+/// Everything a finished job reports back to its driver.
+#[derive(Debug)]
+pub struct JobOutput<O> {
+    pub outputs: Vec<O>,
+    pub counters: Counters,
+    pub map_meters: Vec<TaskMeter>,
+    pub reduce_meters: Vec<TaskMeter>,
+    /// Driver side-channel values (max across tasks — every map task of an
+    /// Apriori job computes the same `candidateCount`/`npass`).
+    pub aux: BTreeMap<&'static str, u64>,
+}
+
+/// A configured job, ready to run. Mirrors Hadoop's `Job` object.
+pub struct JobSpec<'a, M: Mapper, R> {
+    pub name: String,
+    pub splits: Vec<InputSplit>,
+    /// Builds the mapper instance for task `i` (Hadoop constructs one Mapper
+    /// per split); runs on the task's thread.
+    pub mapper_factory: Box<dyn Fn(usize) -> M + Send + Sync + 'a>,
+    pub combiner: Option<Box<dyn Combiner<M::K, M::V> + 'a>>,
+    pub reducer: R,
+    pub partitioner: Box<dyn Partitioner<M::K> + 'a>,
+    pub n_reducers: usize,
+    /// Host threads for real execution (not simulated slots!). On the
+    /// single-core CI box this is 1; the simulator models cluster
+    /// parallelism independently of host parallelism.
+    pub workers: usize,
+}
+
+struct MapTaskResult<K, V> {
+    meter: TaskMeter,
+    pairs: Vec<(K, V)>,
+    aux: BTreeMap<&'static str, u64>,
+}
+
+/// Run one job to completion.
+pub fn run_job<M, R, O>(spec: JobSpec<'_, M, R>) -> JobOutput<O>
+where
+    M: Mapper,
+    R: Reducer<M::K, M::V, Out = O>,
+    O: Send,
+{
+    let JobSpec { name: _, splits, mapper_factory, combiner, reducer, partitioner, n_reducers, workers } =
+        spec;
+    let n_reducers = n_reducers.max(1);
+
+    // ---- map (+ combine) phase -----------------------------------------
+    let factory = &mapper_factory;
+    let combiner_ref = combiner.as_deref();
+    let run_one = |task_id: usize, split: &InputSplit| -> MapTaskResult<M::K, M::V> {
+        let start = Instant::now();
+        let mut mapper = factory(task_id);
+        let mut ctx: Context<M::K, M::V> = Context::new();
+        ctx.counters.add(keys::MAP_INPUT_RECORDS, split.len() as u64);
+        for (offset, record) in split.iter() {
+            mapper.map(offset, record, &mut ctx);
+        }
+        mapper.cleanup(&mut ctx);
+        let mut pairs = ctx.take_output();
+        // Combine stage (map-side): fold values per key locally.
+        if let Some(c) = combiner_ref {
+            pairs = combine_pairs(c, pairs);
+        }
+        ctx.counters.add(keys::COMBINE_OUTPUT_TUPLES, pairs.len() as u64);
+        MapTaskResult {
+            meter: TaskMeter {
+                task_id,
+                counters: ctx.counters,
+                preferred_nodes: split.preferred_nodes.clone(),
+                wall_secs: start.elapsed().as_secs_f64(),
+            },
+            pairs,
+            aux: ctx.aux,
+        }
+    };
+
+    let map_results: Vec<MapTaskResult<M::K, M::V>> = if workers <= 1 || splits.len() <= 1 {
+        splits.iter().enumerate().map(|(i, s)| run_one(i, s)).collect()
+    } else {
+        // Scoped threads so the factory/combiner may borrow from the driver.
+        let mut slots: Vec<Option<MapTaskResult<M::K, M::V>>> =
+            (0..splits.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (chunk_idx, chunk) in splits.chunks(splits.len().div_ceil(workers)).enumerate() {
+                let base = chunk_idx * splits.len().div_ceil(workers);
+                let run_one = &run_one;
+                handles.push(scope.spawn(move || {
+                    chunk
+                        .iter()
+                        .enumerate()
+                        .map(|(j, s)| (base + j, run_one(base + j, s)))
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, r) in h.join().expect("map task panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|s| s.expect("missing map task result")).collect()
+    };
+
+    // ---- aggregate map side ---------------------------------------------
+    let mut counters = Counters::new();
+    let mut aux: BTreeMap<&'static str, u64> = BTreeMap::new();
+    let mut map_meters = Vec::with_capacity(map_results.len());
+    // Hash-grouped shuffle per partition. (A Hadoop-style sort-merge
+    // variant was tried and reverted: sorting flat pair vectors measured
+    // ~25% slower end-to-end than BTreeMap insertion here — §Perf log.)
+    let mut buckets: Vec<BTreeMap<M::K, Vec<M::V>>> =
+        (0..n_reducers).map(|_| BTreeMap::new()).collect();
+    for result in map_results {
+        counters.merge(&result.meter.counters);
+        for (k, v) in &result.aux {
+            let slot = aux.entry(k).or_insert(0);
+            *slot = (*slot).max(*v);
+        }
+        for (k, v) in result.pairs {
+            let p = partitioner.partition(&k, n_reducers);
+            buckets[p].entry(k).or_default().push(v);
+        }
+        map_meters.push(result.meter);
+    }
+
+    // ---- reduce phase -----------------------------------------------------
+    let mut outputs = Vec::new();
+    let mut reduce_meters = Vec::with_capacity(n_reducers);
+    for (rid, bucket) in buckets.into_iter().enumerate() {
+        let start = Instant::now();
+        let mut rc = Counters::new();
+        let in_tuples: u64 = bucket.values().map(|v| v.len() as u64).sum();
+        rc.add(keys::REDUCE_INPUT_TUPLES, in_tuples);
+        let mut out_records = 0u64;
+        for (k, vs) in &bucket {
+            if let Some(o) = reducer.reduce(k, vs) {
+                outputs.push(o);
+                out_records += 1;
+            }
+        }
+        rc.add(keys::REDUCE_OUTPUT_RECORDS, out_records);
+        counters.merge(&rc);
+        reduce_meters.push(TaskMeter {
+            task_id: rid,
+            counters: rc,
+            preferred_nodes: Vec::new(),
+            wall_secs: start.elapsed().as_secs_f64(),
+        });
+    }
+
+    JobOutput { outputs, counters, map_meters, reduce_meters, aux }
+}
+
+fn combine_pairs<K: Ord + Clone + std::hash::Hash, V, C: Combiner<K, V> + ?Sized>(
+    combiner: &C,
+    pairs: Vec<(K, V)>,
+) -> Vec<(K, V)> {
+    let mut grouped: HashMap<K, Vec<V>> = HashMap::with_capacity(pairs.len() / 2 + 1);
+    for (k, v) in pairs {
+        grouped.entry(k).or_default().push(v);
+    }
+    let mut out: Vec<(K, V)> = grouped
+        .into_iter()
+        .map(|(k, mut vs)| {
+            let v = combiner.combine(&k, &mut vs);
+            (k, v)
+        })
+        .collect();
+    // Deterministic downstream order regardless of hash iteration.
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::TransactionDb;
+    use crate::hdfs;
+    use crate::itemset::Itemset;
+    use crate::mapreduce::api::{HashPartitioner, MinSupportReducer, SumCombiner};
+
+    /// Word-count analog: emit (item, 1) per item — the paper's Job1 mapper.
+    struct ItemMapper;
+    impl Mapper for ItemMapper {
+        type K = u32;
+        type V = u64;
+        fn map(&mut self, _off: usize, record: &Itemset, ctx: &mut Context<u32, u64>) {
+            for &i in record {
+                ctx.write(i, 1);
+            }
+        }
+    }
+
+    fn splits_for(db: &TransactionDb, per_split: usize) -> Vec<InputSplit> {
+        let f = hdfs::put(db, per_split, 4, 3, 1);
+        hdfs::nline_splits(&f, per_split)
+    }
+
+    fn demo_db() -> TransactionDb {
+        TransactionDb::new(
+            "d",
+            4,
+            vec![vec![0, 1], vec![0, 2], vec![0, 1, 3], vec![1], vec![0]],
+        )
+    }
+
+    fn run_wordcount(workers: usize, n_reducers: usize, min_count: u64) -> JobOutput<(u32, u64)> {
+        let db = demo_db();
+        run_job(JobSpec {
+            name: "wc".into(),
+            splits: splits_for(&db, 2),
+            mapper_factory: Box::new(|_| ItemMapper),
+            combiner: Some(Box::new(SumCombiner)),
+            reducer: MinSupportReducer { min_count },
+            partitioner: Box::new(HashPartitioner),
+            n_reducers,
+            workers,
+        })
+    }
+
+    fn sorted(mut v: Vec<(u32, u64)>) -> Vec<(u32, u64)> {
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn wordcount_correct() {
+        let out = run_wordcount(1, 2, 1);
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn min_support_filter_applies() {
+        let out = run_wordcount(1, 2, 3);
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3)]);
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let seq = sorted(run_wordcount(1, 3, 1).outputs);
+        let par = sorted(run_wordcount(4, 3, 1).outputs);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn counters_account_for_combine() {
+        let out = run_wordcount(1, 1, 1);
+        assert_eq!(out.counters.get(keys::MAP_INPUT_RECORDS), 5);
+        assert_eq!(out.counters.get(keys::MAP_OUTPUT_TUPLES), 9); // raw item writes
+        // 3 splits: {01,02}->(0:2,1:1,2:1)=3, {013,1}->(0:1,1:2,3:1)=3, {0}->1
+        assert_eq!(out.counters.get(keys::COMBINE_OUTPUT_TUPLES), 7);
+        assert_eq!(out.counters.get(keys::REDUCE_INPUT_TUPLES), 7);
+        assert_eq!(out.counters.get(keys::REDUCE_OUTPUT_RECORDS), 4);
+    }
+
+    #[test]
+    fn task_meters_present() {
+        let out = run_wordcount(1, 2, 1);
+        assert_eq!(out.map_meters.len(), 3);
+        assert_eq!(out.reduce_meters.len(), 2);
+        assert!(out.map_meters.iter().all(|m| m.wall_secs >= 0.0));
+        assert!(!out.map_meters[0].preferred_nodes.is_empty());
+    }
+
+    #[test]
+    fn reducer_count_respected() {
+        let out = run_wordcount(1, 4, 1);
+        assert_eq!(out.reduce_meters.len(), 4);
+        let total: u64 =
+            out.reduce_meters.iter().map(|m| m.counters.get(keys::REDUCE_INPUT_TUPLES)).sum();
+        assert_eq!(total, 7);
+    }
+
+    /// Mapper that reports through the aux side-channel.
+    struct AuxMapper(u64);
+    impl Mapper for AuxMapper {
+        type K = u32;
+        type V = u64;
+        fn map(&mut self, _o: usize, _r: &Itemset, _c: &mut Context<u32, u64>) {}
+        fn cleanup(&mut self, ctx: &mut Context<u32, u64>) {
+            ctx.set_aux(keys::CANDIDATES, self.0);
+        }
+    }
+
+    #[test]
+    fn aux_takes_max_across_tasks() {
+        let db = demo_db();
+        let out = run_job(JobSpec {
+            name: "aux".into(),
+            splits: splits_for(&db, 2),
+            mapper_factory: Box::new(|task| AuxMapper(10 + task as u64)),
+            combiner: None,
+            reducer: MinSupportReducer { min_count: 1 },
+            partitioner: Box::new(HashPartitioner),
+            n_reducers: 1,
+            workers: 1,
+        });
+        assert_eq!(out.aux.get(keys::CANDIDATES), Some(&12)); // 3 tasks: 10,11,12
+    }
+
+    #[test]
+    fn no_combiner_shuffles_raw_tuples() {
+        let db = demo_db();
+        let out = run_job(JobSpec {
+            name: "raw".into(),
+            splits: splits_for(&db, 2),
+            mapper_factory: Box::new(|_| ItemMapper),
+            combiner: None,
+            reducer: MinSupportReducer { min_count: 1 },
+            partitioner: Box::new(HashPartitioner),
+            n_reducers: 2,
+            workers: 1,
+        });
+        assert_eq!(out.counters.get(keys::COMBINE_OUTPUT_TUPLES), 9); // = raw
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
+    }
+}

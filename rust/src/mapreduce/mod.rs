@@ -1,0 +1,18 @@
+//! A from-scratch MapReduce framework (the paper's substrate): the Hadoop-
+//! style programming API ([`api`]), the execution engine ([`engine`]), and
+//! the counter framework ([`counters`]).
+//!
+//! Input comes from [`crate::hdfs`] splits; timing comes from
+//! [`crate::cluster`], which converts the engine's per-task meters into
+//! simulated cluster seconds.
+
+pub mod api;
+pub mod counters;
+pub mod engine;
+
+pub use api::{
+    Combiner, Context, HashPartitioner, Mapper, MinSupportReducer, Partitioner, Reducer,
+    SumCombiner, SumReducer,
+};
+pub use counters::{keys, Counters};
+pub use engine::{run_job, JobOutput, JobSpec, TaskMeter};

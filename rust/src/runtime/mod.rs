@@ -1,0 +1,13 @@
+//! XLA/PJRT runtime: loads the AOT-compiled support-counting executable
+//! (authored in JAX/Pallas, lowered to HLO text by `python/compile/aot.py`)
+//! and exposes it as an alternative counting backend for the mappers.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod counting;
+pub mod pjrt;
+
+pub use counting::{CountingBackend, XlaCounter};
+pub use pjrt::{ArtifactSpec, PjrtRuntime};

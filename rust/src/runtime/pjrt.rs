@@ -1,0 +1,126 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: artifact discovery,
+//! compilation caching, and typed execution of the support-count module.
+
+use anyhow::{bail, Context as _, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape signature of a compiled support-count artifact. File naming
+/// convention (see python/compile/aot.py):
+/// `support_count_t{T}_i{I}_c{C}.hlo.txt`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArtifactSpec {
+    /// Transactions per tile.
+    pub txn_tile: usize,
+    /// Item (bitmap) width.
+    pub item_width: usize,
+    /// Candidates per tile.
+    pub cand_tile: usize,
+}
+
+impl ArtifactSpec {
+    /// The default tile compiled by `make artifacts`.
+    pub const DEFAULT: ArtifactSpec =
+        ArtifactSpec { txn_tile: 256, item_width: 256, cand_tile: 256 };
+
+    pub fn file_name(&self) -> String {
+        format!(
+            "support_count_t{}_i{}_c{}.hlo.txt",
+            self.txn_tile, self.item_width, self.cand_tile
+        )
+    }
+}
+
+/// A PJRT CPU client holding one compiled support-count executable.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+/// Locate the artifacts directory: `$MRAPRIORI_ARTIFACTS`, else
+/// `./artifacts`, else `artifacts/` next to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MRAPRIORI_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    // Fall back to the crate manifest dir (useful under `cargo test`).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+impl PjrtRuntime {
+    /// Load and compile the artifact for `spec` from `dir`.
+    pub fn load(dir: &Path, spec: ArtifactSpec) -> Result<Self> {
+        let path = dir.join(spec.file_name());
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO module")?;
+        Ok(Self { client, exe, spec })
+    }
+
+    /// Load the default artifact from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir(), ArtifactSpec::DEFAULT)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one tile: `txns` is a row-major (T × I) 0/1 matrix, `cands`
+    /// a (C × I) matrix, `lengths` a C-vector of candidate lengths (padding
+    /// rows carry an unmatchable sentinel). Returns per-candidate supports
+    /// over the valid transaction rows.
+    pub fn support_tile(&self, txns: &[f32], cands: &[f32], lengths: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        anyhow::ensure!(txns.len() == s.txn_tile * s.item_width, "txns buffer shape");
+        anyhow::ensure!(cands.len() == s.cand_tile * s.item_width, "cands buffer shape");
+        anyhow::ensure!(lengths.len() == s.cand_tile, "lengths buffer shape");
+        let t = xla::Literal::vec1(txns).reshape(&[s.txn_tile as i64, s.item_width as i64])?;
+        let c = xla::Literal::vec1(cands).reshape(&[s.cand_tile as i64, s.item_width as i64])?;
+        let l = xla::Literal::vec1(lengths);
+        let result = self.exe.execute::<xla::Literal>(&[t, c, l])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple of f32[C].
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_file_name() {
+        assert_eq!(
+            ArtifactSpec::DEFAULT.file_name(),
+            "support_count_t256_i256_c256.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let dir = std::env::temp_dir().join("mrapriori_no_artifacts");
+        let err = match PjrtRuntime::load(&dir, ArtifactSpec::DEFAULT) {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail without artifacts"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    // Execution tests live in rust/tests/runtime_xla.rs (they need the
+    // artifacts built by `make artifacts`).
+}

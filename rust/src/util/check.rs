@@ -1,0 +1,231 @@
+//! Mini property-based testing framework (proptest is not available offline).
+//!
+//! Provides generators over a seeded [`Rng`](crate::util::rng::Rng), a
+//! `forall` runner with iteration budget, and greedy shrinking for failing
+//! cases. Test modules use it for invariants on the trie, candidate
+//! generation, the schedulers, and the drivers.
+
+use crate::util::rng::Rng;
+
+/// A reproducible generator of test inputs with an optional shrinker.
+pub trait Gen {
+    type Item: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Item;
+    /// Candidate smaller versions of `item`, tried in order during shrinking.
+    fn shrink(&self, _item: &Self::Item) -> Vec<Self::Item> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `iters` generated inputs; on failure, shrink greedily
+/// and panic with the minimal reproducer and the seed.
+pub fn forall<G: Gen>(seed: u64, iters: usize, gen: &G, prop: impl Fn(&G::Item) -> bool) {
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let item = gen.generate(&mut rng);
+        if !prop(&item) {
+            let minimal = shrink_loop(gen, item, &prop);
+            panic!(
+                "property failed (seed={seed}, iteration={i});\n minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut item: G::Item, prop: &impl Fn(&G::Item) -> bool) -> G::Item {
+    // Greedy descent: repeatedly take the first shrink that still fails.
+    'outer: loop {
+        for cand in gen.shrink(&item) {
+            if !prop(&cand) {
+                item = cand;
+                continue 'outer;
+            }
+        }
+        return item;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// usize in [lo, hi], shrinking toward lo.
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Item = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi)
+    }
+    fn shrink(&self, item: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *item > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*item - self.lo) / 2);
+            out.push(*item - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of items with length in [0, max_len], shrinking by halving / popping.
+pub struct VecGen<G> {
+    pub inner: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Item = Vec<G::Item>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Item> {
+        let len = rng.range(0, self.max_len);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, item: &Vec<G::Item>) -> Vec<Vec<G::Item>> {
+        let mut out = Vec::new();
+        if item.is_empty() {
+            return out;
+        }
+        out.push(item[..item.len() / 2].to_vec()); // front half
+        out.push(item[item.len() / 2..].to_vec()); // back half
+        let mut popped = item.clone();
+        popped.pop();
+        out.push(popped);
+        // Element-wise shrinks on the first element (cheap but effective).
+        for smaller in self.inner.shrink(&item[0]) {
+            let mut v = item.clone();
+            v[0] = smaller;
+            out.push(v);
+        }
+        out
+    }
+}
+
+/// A sorted set of distinct item-ids in [0, universe): a random itemset.
+pub struct ItemsetGen {
+    pub universe: usize,
+    pub max_len: usize,
+}
+
+impl Gen for ItemsetGen {
+    type Item = Vec<u32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<u32> {
+        let len = rng.range(0, self.max_len.min(self.universe));
+        let mut ids: Vec<u32> =
+            rng.sample_indices(self.universe, len).into_iter().map(|i| i as u32).collect();
+        ids.sort_unstable();
+        ids
+    }
+    fn shrink(&self, item: &Vec<u32>) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        if item.is_empty() {
+            return out;
+        }
+        out.push(item[..item.len() / 2].to_vec());
+        out.push(item[1..].to_vec());
+        let mut popped = item.clone();
+        popped.pop();
+        out.push(popped);
+        out
+    }
+}
+
+/// A small transaction database: Vec<sorted itemset>, plus the universe size.
+pub struct DbGen {
+    pub universe: usize,
+    pub max_txns: usize,
+    pub max_width: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SmallDb {
+    pub universe: usize,
+    pub txns: Vec<Vec<u32>>,
+}
+
+impl Gen for DbGen {
+    type Item = SmallDb;
+    fn generate(&self, rng: &mut Rng) -> SmallDb {
+        let n = rng.range(1, self.max_txns);
+        let item_gen = ItemsetGen { universe: self.universe, max_len: self.max_width };
+        let txns = (0..n)
+            .map(|_| {
+                let mut t = item_gen.generate(rng);
+                if t.is_empty() {
+                    t.push(rng.below(self.universe as u64) as u32);
+                }
+                t
+            })
+            .collect();
+        SmallDb { universe: self.universe, txns }
+    }
+    fn shrink(&self, item: &SmallDb) -> Vec<SmallDb> {
+        let mut out = Vec::new();
+        if item.txns.len() > 1 {
+            out.push(SmallDb { universe: item.universe, txns: item.txns[..item.txns.len() / 2].to_vec() });
+            out.push(SmallDb { universe: item.universe, txns: item.txns[item.txns.len() / 2..].to_vec() });
+            let mut popped = item.txns.clone();
+            popped.pop();
+            out.push(SmallDb { universe: item.universe, txns: popped });
+        }
+        // Narrow the first transaction.
+        if let Some(first) = item.txns.first() {
+            if first.len() > 1 {
+                let mut txns = item.txns.clone();
+                txns[0] = first[..first.len() / 2].to_vec();
+                out.push(SmallDb { universe: item.universe, txns });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 200, &UsizeGen { lo: 0, hi: 100 }, |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn forall_reports_failure() {
+        forall(2, 500, &UsizeGen { lo: 0, hi: 100 }, |&x| x < 90);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Capture the panic message to check the counterexample is minimal-ish.
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 500, &VecGen { inner: UsizeGen { lo: 0, hi: 9 }, max_len: 30 }, |v| {
+                v.len() < 5 // fails for any vec of len >= 5
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrinking should land on exactly length 5.
+        let needle = "minimal counterexample: [";
+        let idx = msg.find(needle).unwrap();
+        let tail = &msg[idx + needle.len()..];
+        let count = tail.split(']').next().unwrap().split(',').count();
+        assert_eq!(count, 5, "msg: {msg}");
+    }
+
+    #[test]
+    fn itemset_gen_sorted_distinct() {
+        let gen = ItemsetGen { universe: 50, max_len: 20 };
+        forall(4, 300, &gen, |set| {
+            set.windows(2).all(|w| w[0] < w[1]) && set.iter().all(|&i| (i as usize) < 50)
+        });
+    }
+
+    #[test]
+    fn db_gen_nonempty_txns() {
+        let gen = DbGen { universe: 30, max_txns: 20, max_width: 10 };
+        forall(5, 100, &gen, |db| !db.txns.is_empty() && db.txns.iter().all(|t| !t.is_empty()));
+    }
+}

@@ -1,0 +1,275 @@
+//! A small command-line flag parser (clap is not available offline).
+//!
+//! Supports `--name value`, `--name=value`, boolean `--flag`, repeated flags,
+//! positional arguments, subcommands (first bare word), and `--help` text
+//! generation. Typed accessors parse on demand and produce readable errors.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Declarative flag set for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct FlagSet {
+    pub command: &'static str,
+    pub about: &'static str,
+    specs: Vec<FlagSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FlagError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("flag --{name}: cannot parse {value:?} as {ty}")]
+    BadValue {
+        name: String,
+        value: String,
+        ty: &'static str,
+    },
+    #[error("missing required flag --{0}")]
+    MissingRequired(String),
+}
+
+impl FlagSet {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Self { command, about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.specs.push(FlagSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.command, self.about);
+        let _ = writeln!(s, "\nFlags:");
+        for spec in &self.specs {
+            let arg = if spec.takes_value { format!("--{} <v>", spec.name) } else { format!("--{}", spec.name) };
+            let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  {arg:<26} {}{def}", spec.help);
+        }
+        s
+    }
+
+    /// Parse a raw argv slice into a [`Parsed`] bag.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, FlagError> {
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| FlagError::Unknown(name.clone()))?;
+                let value = if spec.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or_else(|| FlagError::MissingValue(name.clone()))?
+                        }
+                    }
+                } else {
+                    inline.unwrap_or_else(|| "true".to_string())
+                };
+                values.entry(name).or_default().push(value);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                values.entry(spec.name.to_string()).or_insert_with(|| vec![d.to_string()]);
+            }
+        }
+        Ok(Parsed { values, positional })
+    }
+}
+
+/// Result of parsing; typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str, FlagError> {
+        self.get(name).ok_or_else(|| FlagError::MissingRequired(name.to_string()))
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str, ty: &'static str) -> Result<Option<T>, FlagError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|_| FlagError::BadValue {
+                name: name.to_string(),
+                value: raw.to_string(),
+                ty,
+            }),
+        }
+    }
+
+    pub fn usize(&self, name: &str) -> Result<Option<usize>, FlagError> {
+        self.parse_as::<usize>(name, "usize")
+    }
+
+    pub fn u64(&self, name: &str) -> Result<Option<u64>, FlagError> {
+        self.parse_as::<u64>(name, "u64")
+    }
+
+    pub fn f64(&self, name: &str) -> Result<Option<f64>, FlagError> {
+        self.parse_as::<f64>(name, "f64")
+    }
+
+    /// Comma-separated list of f64 (e.g. `--min-sups 0.35,0.30,0.25`).
+    pub fn f64_list(&self, name: &str) -> Result<Option<Vec<f64>>, FlagError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<f64>().map_err(|_| FlagError::BadValue {
+                        name: name.to_string(),
+                        value: raw.to_string(),
+                        ty: "list of f64",
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo_set() -> FlagSet {
+        FlagSet::new("mine", "run a miner")
+            .opt("dataset", "dataset name")
+            .opt_default("min-sup", "0.25", "minimum support")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let p = demo_set().parse(&argv(&["--dataset", "chess", "--min-sup=0.5"])).unwrap();
+        assert_eq!(p.get("dataset"), Some("chess"));
+        assert_eq!(p.f64("min-sup").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = demo_set().parse(&argv(&[])).unwrap();
+        assert_eq!(p.f64("min-sup").unwrap(), Some(0.25));
+        assert_eq!(p.get("dataset"), None);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let p = demo_set().parse(&argv(&["--verbose"])).unwrap();
+        assert!(p.bool("verbose"));
+        let p = demo_set().parse(&argv(&[])).unwrap();
+        assert!(!p.bool("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let err = demo_set().parse(&argv(&["--nope"])).unwrap_err();
+        assert!(matches!(err, FlagError::Unknown(_)));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let err = demo_set().parse(&argv(&["--dataset"])).unwrap_err();
+        assert!(matches!(err, FlagError::MissingValue(_)));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = demo_set().parse(&argv(&["chess", "--verbose", "extra"])).unwrap();
+        assert_eq!(p.positional, vec!["chess".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let p = demo_set().parse(&argv(&["--min-sup", "abc"])).unwrap();
+        assert!(p.f64("min-sup").is_err());
+    }
+
+    #[test]
+    fn f64_list_parses() {
+        let set = FlagSet::new("x", "y").opt("sups", "list");
+        let p = set.parse(&argv(&["--sups", "0.3, 0.25,0.2"])).unwrap();
+        assert_eq!(p.f64_list("sups").unwrap(), Some(vec![0.3, 0.25, 0.2]));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let set = FlagSet::new("x", "y").opt("algo", "algorithm");
+        let p = set.parse(&argv(&["--algo", "spc", "--algo", "fpc"])).unwrap();
+        assert_eq!(p.get_all("algo"), vec!["spc", "fpc"]);
+        assert_eq!(p.get("algo"), Some("fpc")); // last wins for scalar view
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = demo_set().usage();
+        assert!(u.contains("--dataset"));
+        assert!(u.contains("default: 0.25"));
+    }
+}

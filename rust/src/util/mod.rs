@@ -1,0 +1,13 @@
+//! Self-contained utility substrates: PRNG, CLI flags, TOML-subset config
+//! parser, scoped thread pool, property-test mini-framework, and logging.
+//!
+//! These stand in for `rand`, `clap`, `toml`, `rayon`, `proptest`, and
+//! `env_logger`, none of which are available in the offline build
+//! environment. Each is deliberately small and fully tested.
+
+pub mod check;
+pub mod flags;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod tomlmini;

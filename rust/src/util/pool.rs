@@ -1,0 +1,191 @@
+//! A small scoped thread pool (rayon is not available offline).
+//!
+//! The MapReduce engine uses this to run map/reduce tasks on real OS threads
+//! when `workers > 1`. On the single-core CI box the simulator usually runs
+//! with `workers = 1` (sequential, zero-overhead path); the pool still gets
+//! exercised by tests so the engine is correct on multi-core machines.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cond: Condvar,
+    active: AtomicUsize,
+}
+
+struct QueueState {
+    jobs: std::collections::VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Fixed-size worker pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: Default::default(), shutdown: false }),
+            cond: Condvar::new(),
+            active: AtomicUsize::new(0),
+        });
+        let handles = (0..size)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        Self { shared, handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(Box::new(f));
+        drop(q);
+        self.shared.cond.notify_one();
+    }
+
+    /// Run a batch of closures to completion, returning outputs in order.
+    ///
+    /// This is the map-phase primitive: the closures borrow nothing from the
+    /// caller (inputs must be moved in), results come back through a channel.
+    pub fn run_batch<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, T)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.spawn(move || {
+                let out = job();
+                // Receiver can only hang up if the caller panicked.
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rx.recv().expect("worker thread panicked");
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cond.wait(q).unwrap();
+            }
+        };
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        job();
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run jobs either sequentially (`workers <= 1`) or on a transient pool.
+/// The engine's entry point: keeps the fast path allocation-free of threads.
+pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    if workers <= 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let pool = ThreadPool::new(workers.min(jobs.len()));
+    pool.run_batch(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn batch_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..32).map(|i| move || i * 10).collect();
+        let out = pool.run_batch(jobs);
+        assert_eq!(out, (0..32).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run_batch(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let out = run_parallel(1, (0..5).map(|i| move || i + 1).collect::<Vec<_>>());
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_path() {
+        let out = run_parallel(4, (0..16).map(|i| move || i * i).collect::<Vec<_>>());
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..10 {
+            pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        }
+        drop(pool); // must not hang or leak
+    }
+
+    #[test]
+    fn empty_batch() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.run_batch(Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
+    }
+}

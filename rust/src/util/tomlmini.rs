@@ -1,0 +1,284 @@
+//! A minimal TOML-subset parser for configuration files.
+//!
+//! Supports exactly what our config files need: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / flat-array values, comments (`#`), and blank lines. Values are
+//! exposed through a dotted-path lookup (`"cluster.data_nodes"`).
+//!
+//! This is intentionally not a full TOML implementation (no inline tables,
+//! no multi-line strings, no dates); the config loader rejects anything
+//! outside the subset with a line-numbered error.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`60` is a valid f64 setting).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parsed document: dotted-path -> value.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ParseError { line: lineno, msg: "empty section name".into() });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: lineno, msg: "empty key".into() });
+            }
+            let value = parse_value(value.trim(), lineno)?;
+            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if entries.insert(path.clone(), value).is_some() {
+                return Err(ParseError { line: lineno, msg: format!("duplicate key {path:?}") });
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+    pub fn int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+    pub fn float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// All keys under a section prefix (e.g. `weights.`), with prefix stripped.
+    pub fn section(&self, prefix: &str) -> Vec<(String, &Value)> {
+        let want = format!("{prefix}.");
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.starts_with(&want))
+            .map(|(k, v)| (k[want.len()..].to_string(), v))
+            .collect()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, lineno: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line: lineno, msg };
+    if raw.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quotes are not supported".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err("unterminated array".into()))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim(), lineno))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    // Numbers: int if it parses as i64 and has no '.', 'e'; else float.
+    let has_float_syntax = raw.contains('.') || raw.contains('e') || raw.contains('E');
+    if !has_float_syntax {
+        if let Ok(i) = raw.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value {raw:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+name = "demo"        # trailing comment
+count = 42
+ratio = 0.75
+big = 1_000_000
+on = true
+
+[cluster]
+data_nodes = 4
+slots = [2, 2, 4]
+
+[cluster.overhead]
+job = 15.0
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str("name"), Some("demo"));
+        assert_eq!(d.int("count"), Some(42));
+        assert_eq!(d.float("ratio"), Some(0.75));
+        assert_eq!(d.int("big"), Some(1_000_000));
+        assert_eq!(d.bool("on"), Some(true));
+        assert_eq!(d.int("cluster.data_nodes"), Some(4));
+        assert_eq!(d.float("cluster.overhead.job"), Some(15.0));
+    }
+
+    #[test]
+    fn int_readable_as_float() {
+        let d = Doc::parse("x = 60").unwrap();
+        assert_eq!(d.float("x"), Some(60.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let d = Doc::parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []").unwrap();
+        let xs = d.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_int(), Some(3));
+        let ys = d.get("ys").unwrap().as_array().unwrap();
+        assert_eq!(ys[1].as_str(), Some("b"));
+        assert_eq!(d.get("empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn section_listing() {
+        let d = Doc::parse("[w]\na = 1.0\nb = 2.0").unwrap();
+        let mut got = d.section("w");
+        got.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, "a");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let d = Doc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(d.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Doc::parse("x = ").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = Doc::parse("[sec\nx = 1").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let d = Doc::parse("a = -5\nb = 1e-3\nc = -0.5").unwrap();
+        assert_eq!(d.int("a"), Some(-5));
+        assert_eq!(d.float("b"), Some(1e-3));
+        assert_eq!(d.float("c"), Some(-0.5));
+    }
+}

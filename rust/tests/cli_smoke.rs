@@ -1,0 +1,113 @@
+//! CLI smoke tests: drive the `mrapriori` binary end to end through its
+//! public commands (the launcher a downstream user actually touches).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // cargo puts integration-test binaries in target/<profile>/deps; the
+    // CLI binary lives one level up.
+    let mut p = std::env::current_exe().unwrap();
+    p.pop();
+    if p.ends_with("deps") {
+        p.pop();
+    }
+    p.join("mrapriori")
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin()).args(args).output().expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["mine", "sweep", "lk", "inspect", "generate", "calibrate"] {
+        assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn no_args_prints_help() {
+    let (stdout, _, ok) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("Commands:"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn inspect_registry_dataset() {
+    let (stdout, _, ok) = run(&["inspect", "--dataset", "chess"]);
+    assert!(ok);
+    assert!(stdout.contains("transactions : 3196"));
+    assert!(stdout.contains("items        : 75"));
+}
+
+#[test]
+fn mine_small_run_end_to_end() {
+    let (stdout, stderr, ok) =
+        run(&["mine", "--dataset", "chess", "--algo", "opt-vfpc", "--min-sup", "0.9"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("frequent itemsets:"), "{stdout}");
+    assert!(stdout.contains("Optimized-VFPC"), "{stdout}");
+}
+
+#[test]
+fn mine_unknown_dataset_fails_cleanly() {
+    let (_, stderr, ok) = run(&["mine", "--dataset", "nope", "--algo", "spc"]);
+    assert!(!ok);
+    assert!(stderr.contains("dataset"), "{stderr}");
+}
+
+#[test]
+fn mine_bad_flag_fails_cleanly() {
+    let (_, stderr, ok) = run(&["mine", "--dataset", "chess", "--no-such-flag"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag"), "{stderr}");
+}
+
+#[test]
+fn generate_roundtrip() {
+    let dir = std::env::temp_dir().join("mrapriori_cli_gen");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("chess.txt");
+    let path_s = path.to_str().unwrap();
+    let (stdout, stderr, ok) =
+        run(&["generate", "--dataset", "chess", "--out", path_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("3196"));
+    // Mine the generated file by path.
+    let (stdout, stderr, ok) =
+        run(&["mine", "--dataset", path_s, "--algo", "spc", "--min-sup", "0.95"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("frequent itemsets:"));
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn lk_profile_output() {
+    let (stdout, _, ok) = run(&["lk", "--dataset", "mushroom", "--min-sup", "0.5"]);
+    assert!(ok);
+    assert!(stdout.contains("|L_k| ="), "{stdout}");
+}
+
+#[test]
+fn subcommand_help_flags() {
+    for cmd in ["mine", "sweep", "generate", "lk", "inspect", "calibrate"] {
+        let (stdout, _, ok) = run(&[cmd, "--help"]);
+        assert!(ok, "{cmd} --help failed");
+        assert!(stdout.contains("Flags:"), "{cmd} help missing flags: {stdout}");
+    }
+}

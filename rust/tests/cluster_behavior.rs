@@ -1,0 +1,167 @@
+//! Cluster-simulation behavior: the paper's qualitative claims about
+//! phases, overhead amortization, and the FPC/DPC failure modes, checked as
+//! invariants on the real system.
+
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::dataset::registry;
+
+fn opts(name: &str) -> RunOptions {
+    RunOptions {
+        split_lines: registry::split_lines(name),
+        dpc_alpha: if name == "chess" { 3.0 } else { 2.0 },
+        ..Default::default()
+    }
+}
+
+/// §5.2: "execution time of SPC must be an upper bound" for the adaptive
+/// algorithms (not FPC, which may cross it).
+#[test]
+fn spc_upper_bounds_adaptive_algorithms() {
+    let cluster = ClusterConfig::paper_cluster();
+    for (name, min_sup) in [("c20d10k", 0.15), ("chess", 0.65), ("mushroom", 0.15)] {
+        let db = registry::load(name);
+        let spc = run_with(Algorithm::Spc, &db, min_sup, &cluster, &opts(name));
+        for algo in [
+            Algorithm::Vfpc,
+            Algorithm::Etdpc,
+            Algorithm::Dpc,
+            Algorithm::OptimizedVfpc,
+            Algorithm::OptimizedEtdpc,
+        ] {
+            let out = run_with(algo, &db, min_sup, &cluster, &opts(name));
+            assert!(
+                out.actual_time <= spc.actual_time * 1.02,
+                "{algo} on {name}: {:.0} > SPC {:.0}",
+                out.actual_time,
+                spc.actual_time
+            );
+        }
+    }
+}
+
+/// §5.2/Figs 3-4(a): FPC converges to / crosses SPC at the lowest support
+/// on the dense datasets (overloaded multi-pass phases).
+#[test]
+fn fpc_crosses_spc_on_dense_datasets_at_low_support() {
+    let cluster = ClusterConfig::paper_cluster();
+    for (name, min_sup) in [("chess", 0.65), ("mushroom", 0.15)] {
+        let db = registry::load(name);
+        let spc = run_with(Algorithm::Spc, &db, min_sup, &cluster, &opts(name));
+        let fpc = run_with(Algorithm::Fpc, &db, min_sup, &cluster, &opts(name));
+        // Paper Tables 4-5: FPC's actual time reaches ~99-103% of SPC's at
+        // the lowest support; allow the same near-convergence band here.
+        assert!(
+            fpc.actual_time >= spc.actual_time * 0.90,
+            "{name}: FPC {:.0} should converge to SPC {:.0}",
+            fpc.actual_time,
+            spc.actual_time
+        );
+    }
+}
+
+/// ... while at HIGH support FPC beats SPC (amortization with no overload).
+#[test]
+fn fpc_beats_spc_at_high_support() {
+    let cluster = ClusterConfig::paper_cluster();
+    let db = registry::c20d10k();
+    let spc = run_with(Algorithm::Spc, &db, 0.35, &cluster, &opts("c20d10k"));
+    let fpc = run_with(Algorithm::Fpc, &db, 0.35, &cluster, &opts("c20d10k"));
+    assert!(
+        fpc.actual_time < spc.actual_time,
+        "FPC {:.0} should beat SPC {:.0} at high support",
+        fpc.actual_time,
+        spc.actual_time
+    );
+}
+
+/// §5.3 Tables 3-5: combined algorithms finish in far fewer phases.
+#[test]
+fn phase_counts_match_paper_structure() {
+    let cluster = ClusterConfig::paper_cluster();
+    let db = registry::mushroom();
+    let o = opts("mushroom");
+    let spc = run_with(Algorithm::Spc, &db, 0.15, &cluster, &o);
+    let fpc = run_with(Algorithm::Fpc, &db, 0.15, &cluster, &o);
+    let vfpc = run_with(Algorithm::Vfpc, &db, 0.15, &cluster, &o);
+    // Paper: SPC 16 phases, FPC 7, VFPC 7 (mushroom @0.15).
+    assert!(spc.n_phases() >= 14, "SPC phases {}", spc.n_phases());
+    assert!(fpc.n_phases() <= 8, "FPC phases {}", fpc.n_phases());
+    assert!(vfpc.n_phases() <= 9, "VFPC phases {}", vfpc.n_phases());
+    // All found the same number of frequent itemsets.
+    assert_eq!(spc.total_frequent(), vfpc.total_frequent());
+}
+
+/// The total-vs-actual gap grows with the number of phases (§5.3).
+#[test]
+fn actual_total_gap_tracks_phase_count() {
+    let cluster = ClusterConfig::paper_cluster();
+    let db = registry::mushroom();
+    let o = opts("mushroom");
+    let spc = run_with(Algorithm::Spc, &db, 0.15, &cluster, &o);
+    let vfpc = run_with(Algorithm::Vfpc, &db, 0.15, &cluster, &o);
+    let gap_spc = spc.actual_time - spc.total_time;
+    let gap_vfpc = vfpc.actual_time - vfpc.total_time;
+    assert!(gap_spc > gap_vfpc, "gap {gap_spc:.0} !> {gap_vfpc:.0}");
+}
+
+/// Optimized variants generate MORE candidates but take LESS time at low
+/// support (the skipped-pruning trade, Tables 7-12).
+#[test]
+fn skipped_pruning_trade_holds() {
+    let cluster = ClusterConfig::paper_cluster();
+    for (name, min_sup) in [("c20d10k", 0.15), ("mushroom", 0.15)] {
+        let db = registry::load(name);
+        let o = opts(name);
+        let plain = run_with(Algorithm::Vfpc, &db, min_sup, &cluster, &o);
+        let optim = run_with(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &o);
+        let plain_cands: u64 = plain.phases.iter().map(|p| p.candidates).sum();
+        let optim_cands: u64 = optim.phases.iter().map(|p| p.candidates).sum();
+        assert!(optim_cands >= plain_cands, "{name}: candidates must not shrink");
+        assert!(
+            optim.actual_time < plain.actual_time,
+            "{name}: Optimized-VFPC {:.0} !< VFPC {:.0}",
+            optim.actual_time,
+            plain.actual_time
+        );
+    }
+}
+
+/// At HIGH support everything fits in <= 3 phases and the optimized and
+/// plain versions coincide (§5.2: "execution times of all four are the
+/// same" at large min_sup).
+#[test]
+fn optimized_equals_plain_at_high_support() {
+    let cluster = ClusterConfig::paper_cluster();
+    let db = registry::c20d10k();
+    let o = opts("c20d10k");
+    let plain = run_with(Algorithm::Vfpc, &db, 0.6, &cluster, &o);
+    let optim = run_with(Algorithm::OptimizedVfpc, &db, 0.6, &cluster, &o);
+    let rel = (optim.actual_time - plain.actual_time).abs() / plain.actual_time;
+    assert!(rel < 0.05, "high-support gap {rel:.3} should vanish");
+}
+
+/// DPC's α policy is sensitive to cluster speed; ETDPC's relative policy
+/// reacts less (the robustness argument of §4.1) — measured as the change
+/// in chosen npass structure across a 3x slower cluster.
+#[test]
+fn etdpc_more_stable_than_dpc_across_cluster_speeds() {
+    let db = registry::mushroom();
+    let o = opts("mushroom");
+    let fast = ClusterConfig::paper_cluster();
+    let mut slow = ClusterConfig::paper_cluster();
+    for n in &mut slow.nodes {
+        n.speed /= 3.0;
+    }
+    let phases = |algo, cluster: &ClusterConfig| -> Vec<usize> {
+        run_with(algo, &db, 0.15, cluster, &o).phases.iter().map(|p| p.n_passes).collect()
+    };
+    let dpc_change = phases(Algorithm::Dpc, &fast) != phases(Algorithm::Dpc, &slow);
+    let etdpc_same = phases(Algorithm::Etdpc, &fast) == phases(Algorithm::Etdpc, &slow);
+    // At least one of the robustness signals must hold; both holding is the
+    // expected outcome on this workload.
+    assert!(
+        dpc_change || etdpc_same,
+        "neither DPC sensitivity nor ETDPC stability observed"
+    );
+}

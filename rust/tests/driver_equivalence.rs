@@ -1,0 +1,142 @@
+//! Cross-algorithm equivalence: every MapReduce driver must produce exactly
+//! the frequent itemsets (sets AND counts) of the sequential oracle, on
+//! every registry dataset, at several supports — the paper's Fig. 1
+//! integrity argument, machine-checked.
+
+use mrapriori::apriori::sequential::mine;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::dataset::ibm::{generate, IbmParams};
+use mrapriori::dataset::registry;
+
+fn opts(split: usize) -> RunOptions {
+    RunOptions { split_lines: split, ..Default::default() }
+}
+
+#[test]
+fn registry_datasets_all_algorithms_match_oracle() {
+    let cluster = ClusterConfig::paper_cluster();
+    // One moderate support per dataset keeps this test minutes-fast while
+    // exercising multi-pass phases on all three.
+    for (name, min_sup) in [("c20d10k", 0.30), ("chess", 0.80), ("mushroom", 0.30)] {
+        let db = registry::load(name);
+        let oracle = mine(&db, min_sup).all_frequent();
+        for algo in Algorithm::ALL {
+            let got =
+                run_with(algo, &db, min_sup, &cluster, &opts(registry::split_lines(name)));
+            assert_eq!(
+                got.all_frequent(),
+                oracle,
+                "{algo} on {name} @ {min_sup} diverges from the oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn deep_mining_equivalence_low_support() {
+    // Low support on the smallest dataset: long itemsets, many multi-pass
+    // phases, optimized pruning heavily exercised.
+    let cluster = ClusterConfig::paper_cluster();
+    let db = registry::chess();
+    let oracle = mine(&db, 0.65).all_frequent();
+    for algo in [Algorithm::Vfpc, Algorithm::OptimizedVfpc, Algorithm::OptimizedEtdpc] {
+        let got = run_with(algo, &db, 0.65, &cluster, &opts(400));
+        assert_eq!(got.all_frequent(), oracle, "{algo} diverges at 0.65");
+    }
+}
+
+#[test]
+fn split_size_does_not_change_results() {
+    let cluster = ClusterConfig::paper_cluster();
+    let db = generate(&IbmParams {
+        n_txns: 700,
+        n_items: 60,
+        avg_txn_len: 10.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 15,
+        seed: 77,
+        ..Default::default()
+    });
+    let oracle = mine(&db, 0.2).all_frequent();
+    for split in [50, 100, 333, 700, 1000] {
+        let got = run_with(Algorithm::OptimizedVfpc, &db, 0.2, &cluster, &opts(split));
+        assert_eq!(got.all_frequent(), oracle, "split {split} changes results");
+    }
+}
+
+#[test]
+fn cluster_size_does_not_change_results() {
+    let db = generate(&IbmParams {
+        n_txns: 500,
+        n_items: 50,
+        avg_txn_len: 9.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 12,
+        seed: 88,
+        ..Default::default()
+    });
+    let oracle = mine(&db, 0.25).all_frequent();
+    for nodes in [1, 2, 4, 8] {
+        let cluster = ClusterConfig::uniform(nodes, 4);
+        let got = run_with(Algorithm::Etdpc, &db, 0.25, &cluster, &opts(100));
+        assert_eq!(got.all_frequent(), oracle, "{nodes} nodes changes results");
+    }
+    // ... but MORE nodes means LESS simulated time (speedup sanity).
+    let t1 = run_with(Algorithm::Etdpc, &db, 0.25, &ClusterConfig::uniform(1, 4), &opts(50))
+        .total_time;
+    let t4 = run_with(Algorithm::Etdpc, &db, 0.25, &ClusterConfig::uniform(4, 4), &opts(50))
+        .total_time;
+    assert!(t4 < t1, "speedup missing: {t4} !< {t1}");
+}
+
+#[test]
+fn host_workers_do_not_change_results() {
+    // Real thread parallelism must be invisible in outputs.
+    let db = generate(&IbmParams {
+        n_txns: 600,
+        n_items: 40,
+        avg_txn_len: 8.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 10,
+        seed: 99,
+        ..Default::default()
+    });
+    let mut c1 = ClusterConfig::paper_cluster();
+    c1.workers = 1;
+    let mut c4 = ClusterConfig::paper_cluster();
+    c4.workers = 4;
+    let a = run_with(Algorithm::OptimizedEtdpc, &db, 0.2, &c1, &opts(100));
+    let b = run_with(Algorithm::OptimizedEtdpc, &db, 0.2, &c4, &opts(100));
+    assert_eq!(a.all_frequent(), b.all_frequent());
+    // Simulated time is deterministic regardless of host threading.
+    assert!((a.total_time - b.total_time).abs() < 1e-9);
+}
+
+#[test]
+fn gen_mode_ablation_same_results_different_cost() {
+    use mrapriori::coordinator::mappers::GenMode;
+    let cluster = ClusterConfig::paper_cluster();
+    let db = registry::mushroom();
+    let faithful = run_with(
+        Algorithm::Vfpc,
+        &db,
+        0.25,
+        &cluster,
+        &RunOptions { split_lines: 1000, gen_mode: GenMode::PerRecord, ..Default::default() },
+    );
+    let cached = run_with(
+        Algorithm::Vfpc,
+        &db,
+        0.25,
+        &cluster,
+        &RunOptions { split_lines: 1000, gen_mode: GenMode::PerTask, ..Default::default() },
+    );
+    assert_eq!(faithful.all_frequent(), cached.all_frequent());
+    assert!(
+        faithful.total_time > cached.total_time * 1.5,
+        "per-record generation must dominate: {} vs {}",
+        faithful.total_time,
+        cached.total_time
+    );
+}

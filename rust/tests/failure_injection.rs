@@ -1,0 +1,125 @@
+//! Failure injection and edge cases: malformed inputs, degenerate datasets,
+//! hostile configurations — the system must fail loudly or degrade
+//! gracefully, never silently mis-mine.
+
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::dataset::{loader, TransactionDb};
+
+fn opts() -> RunOptions {
+    RunOptions { split_lines: 10, ..Default::default() }
+}
+
+#[test]
+fn single_transaction_database() {
+    let db = TransactionDb::new("one", 5, vec![vec![0, 1, 2, 3, 4]]);
+    let cluster = ClusterConfig::paper_cluster();
+    for algo in Algorithm::ALL {
+        let out = run_with(algo, &db, 1.0, &cluster, &opts());
+        // Every subset of the single transaction is frequent.
+        assert_eq!(out.total_frequent(), 31, "{algo}");
+        assert_eq!(out.levels.len(), 5, "{algo}");
+    }
+}
+
+#[test]
+fn single_item_transactions() {
+    let db = TransactionDb::new("singles", 3, vec![vec![0], vec![1], vec![0], vec![2]]);
+    let cluster = ClusterConfig::paper_cluster();
+    let out = run_with(Algorithm::OptimizedVfpc, &db, 0.5, &cluster, &opts());
+    assert_eq!(out.lk_profile(), vec![1]); // only item 0 (2/4)
+}
+
+#[test]
+fn nothing_frequent() {
+    let db = TransactionDb::new("sparse", 10, (0..10u32).map(|i| vec![i]).collect());
+    let cluster = ClusterConfig::paper_cluster();
+    for algo in Algorithm::ALL {
+        let out = run_with(algo, &db, 0.5, &cluster, &opts());
+        assert_eq!(out.total_frequent(), 0, "{algo}");
+        assert_eq!(out.n_phases(), 1, "{algo} must stop after Job1");
+    }
+}
+
+#[test]
+fn identical_transactions_everything_frequent() {
+    let db = TransactionDb::new("dup", 6, vec![vec![0, 2, 4]; 50]);
+    let cluster = ClusterConfig::paper_cluster();
+    let out = run_with(Algorithm::OptimizedEtdpc, &db, 1.0, &cluster, &opts());
+    assert_eq!(out.lk_profile(), vec![3, 3, 1]);
+}
+
+#[test]
+fn min_sup_extremes() {
+    let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![1, 2], vec![2, 3]]);
+    let cluster = ClusterConfig::paper_cluster();
+    // min_sup = 0 still requires count >= 1 (observed itemsets only).
+    let lo = run_with(Algorithm::Spc, &db, 0.0, &cluster, &opts());
+    assert!(lo.total_frequent() > 0);
+    assert!(lo.levels.iter().flatten().all(|(_, c)| *c >= 1));
+    // min_sup > 1 can never be satisfied.
+    let hi = run_with(Algorithm::Spc, &db, 1.5, &cluster, &opts());
+    assert_eq!(hi.total_frequent(), 0);
+}
+
+#[test]
+fn loader_rejects_malformed_lines() {
+    assert!(loader::read_transactions("1 2\nbad token\n".as_bytes(), "x").is_err());
+    assert!(loader::read_transactions("".as_bytes(), "x").is_err());
+    assert!(loader::read_transactions("4294967296".as_bytes(), "x").is_err()); // > u32
+}
+
+#[test]
+fn loader_accepts_messy_but_valid_input() {
+    let db = loader::read_transactions("  3 1 2  \n\n# c\n5 5 5\n".as_bytes(), "x").unwrap();
+    assert_eq!(db.txns, vec![vec![1, 2, 3], vec![5]]);
+}
+
+#[test]
+fn config_rejects_hostile_values() {
+    use mrapriori::config::cluster_from_doc;
+    use mrapriori::util::tomlmini::Doc;
+    for bad in [
+        "[weights]\nsubset_visit = -2.0",
+        "[cluster]\ndata_nodes = 2\nnode_speeds = [0.0, 1.0]",
+        "[cluster]\ndata_nodes = 1\nnode_speeds = [1.0, 1.0]",
+    ] {
+        assert!(cluster_from_doc(&Doc::parse(bad).unwrap()).is_err(), "{bad}");
+    }
+}
+
+#[test]
+fn zero_sized_cluster_is_impossible_but_one_node_works() {
+    let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![0, 1], vec![1, 2]]);
+    let cluster = ClusterConfig::uniform(1, 1); // minimal cluster: 1 node, 1 slot
+    let out = run_with(Algorithm::Vfpc, &db, 0.5, &cluster, &opts());
+    assert_eq!(out.lk_profile(), vec![2, 1]); // {0},{1},{0,1}
+    assert!(out.total_time > 0.0);
+}
+
+#[test]
+fn split_larger_than_dataset() {
+    let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![0, 1]]);
+    let cluster = ClusterConfig::paper_cluster();
+    let out = run_with(
+        Algorithm::Spc,
+        &db,
+        0.5,
+        &cluster,
+        &RunOptions { split_lines: 1_000_000, ..Default::default() },
+    );
+    assert_eq!(out.lk_profile(), vec![2, 1]);
+}
+
+#[test]
+fn wide_transaction_deep_mining_terminates() {
+    // 18-item transactions at min_count 1: 2^18-ish itemsets would explode;
+    // with min_sup 1.0 over two identical txns it must stay linear and the
+    // k>64 guard must never be needed.
+    let t: Vec<u32> = (0..18).collect();
+    let db = TransactionDb::new("wide", 18, vec![t.clone(), t]);
+    let cluster = ClusterConfig::paper_cluster();
+    let out = run_with(Algorithm::Fpc, &db, 1.0, &cluster, &opts());
+    assert_eq!(out.levels.len(), 18);
+    assert_eq!(out.levels[17].len(), 1);
+}
