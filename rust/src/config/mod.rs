@@ -6,18 +6,39 @@ use crate::cluster::{ClusterConfig, CostWeights, NodeSpec, OverheadParams};
 use crate::util::tomlmini::Doc;
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io error reading {path}: {source}")]
     Io {
         path: String,
-        #[source]
         source: std::io::Error,
     },
-    #[error(transparent)]
-    Parse(#[from] crate::util::tomlmini::ParseError),
-    #[error("invalid config: {0}")]
+    Parse(crate::util::tomlmini::ParseError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io { path, source } => write!(f, "io error reading {path}: {source}"),
+            ConfigError::Parse(e) => std::fmt::Display::fmt(e, f),
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::tomlmini::ParseError> for ConfigError {
+    fn from(e: crate::util::tomlmini::ParseError) -> Self {
+        ConfigError::Parse(e)
+    }
 }
 
 /// Load a full cluster configuration from a TOML file. Missing keys fall

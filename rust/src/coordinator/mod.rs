@@ -122,6 +122,10 @@ impl Default for RunOptions {
 pub struct PhaseRecord {
     /// 1-based phase index (phase 1 = Job1).
     pub phase: usize,
+    /// Name of the MapReduce job that ran this phase (e.g. `job1`,
+    /// `job2-k3`), propagated from [`crate::mapreduce::JobSpec::name`]
+    /// through the engine's task meters.
+    pub job: String,
     /// Apriori pass number of the first pass in this phase (1 for Job1).
     pub first_pass: usize,
     /// Number of passes this phase combined.
@@ -176,6 +180,20 @@ impl MiningOutcome {
         out.sort();
         out
     }
+}
+
+/// Every map task of an Apriori job computes its aux values (`npass`,
+/// `candidateCount`) from the same shared [`mappers::PhasePlan`], so the
+/// engine's max-merge is exact. The engine now *detects* divergence instead
+/// of silently masking it; here — where the agreement invariant actually
+/// holds — divergence is a driver bug, so debug builds fail fast.
+fn debug_assert_aux_agreement<O>(out: &crate::mapreduce::JobOutput<O>) {
+    debug_assert!(
+        out.aux_divergence.is_empty(),
+        "Apriori map tasks must agree on aux values; diverged on {:?} in job {}",
+        out.aux_divergence,
+        out.name
+    );
 }
 
 fn controller_for(algo: Algorithm, opts: &RunOptions) -> Box<dyn PhaseController> {
@@ -243,6 +261,7 @@ pub fn run_with(
             workers: cluster.workers,
         })
     };
+    debug_assert_aux_agreement(&out);
     let timing = simulate_job(&out.map_meters, &out.reduce_meters, cluster);
     let mut l1: Level = Vec::new();
     let mut l2: Level = Vec::new();
@@ -256,6 +275,7 @@ pub fn run_with(
     l2.sort();
     phases.push(PhaseRecord {
         phase: 1,
+        job: out.name,
         first_pass: 1,
         n_passes: if opts.fuse_pass_2 { 2 } else { 1 },
         candidates: 0,
@@ -337,6 +357,7 @@ pub fn run_with(
             n_reducers: cluster.n_reducers,
             workers: cluster.workers,
         });
+        debug_assert_aux_agreement(&out);
         let timing = simulate_job(&out.map_meters, &out.reduce_meters, cluster);
         let candidates = out.aux.get(keys::CANDIDATES).copied().unwrap_or(0);
         let npass = out.aux.get(keys::NPASS).copied().unwrap_or(0) as usize;
@@ -344,6 +365,7 @@ pub fn run_with(
         let elapsed = timing.elapsed();
         phases.push(PhaseRecord {
             phase: phases.len() + 1,
+            job: out.name,
             first_pass: k,
             n_passes: npass,
             candidates,

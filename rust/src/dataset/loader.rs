@@ -6,14 +6,38 @@ use crate::itemset::Itemset;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LoadError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {line}: cannot parse item {token:?}")]
+    Io(std::io::Error),
     BadItem { line: usize, token: String },
-    #[error("dataset is empty")]
     Empty,
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Io(e) => write!(f, "io error: {e}"),
+            LoadError::BadItem { line, token } => {
+                write!(f, "line {line}: cannot parse item {token:?}")
+            }
+            LoadError::Empty => write!(f, "dataset is empty"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LoadError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LoadError {
+    fn from(e: std::io::Error) -> Self {
+        LoadError::Io(e)
+    }
 }
 
 /// Parse the FIMI text format from any reader. Item ids are kept as-is

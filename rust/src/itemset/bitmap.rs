@@ -51,13 +51,26 @@ impl BitmapTile {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum EncodeError {
-    #[error("too many rows for tile: {got} > {max}")]
     TooManyRows { got: usize, max: usize },
-    #[error("item i{item} out of range for bitmap width {width}")]
     ItemOutOfRange { item: Item, width: usize },
 }
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::TooManyRows { got, max } => {
+                write!(f, "too many rows for tile: {got} > {max}")
+            }
+            EncodeError::ItemOutOfRange { item, width } => {
+                write!(f, "item i{item} out of range for bitmap width {width}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
 
 /// Dense u64-word bitset used by the *native* vectorized counting fallback
 /// (and by tests as an oracle for the f32 encoding).

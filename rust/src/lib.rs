@@ -8,10 +8,14 @@
 //! multi-node Hadoop-like cluster, with an AOT-compiled XLA (PJRT) support-
 //! counting backend authored in JAX/Pallas.
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see DESIGN.md at the repository root):
 //! * L3 (this crate): drivers + MapReduce engine + cluster simulator.
 //! * L2/L1 (python/compile): JAX counting graph + Pallas kernel, AOT-lowered
 //!   to `artifacts/*.hlo.txt`, loaded at runtime by [`runtime`].
+//!
+//! The engine runs map AND reduce tasks on `workers` host threads with a
+//! map-side partitioned shuffle; outputs are deterministic regardless of
+//! the worker count (DESIGN.md §4).
 //!
 //! Quick start:
 //! ```no_run

@@ -70,6 +70,9 @@ fn common_cluster(p: &mrapriori::util::flags::Parsed) -> Result<ClusterConfig> {
     Ok(cluster)
 }
 
+/// Resolve `--dataset` through [`registry::try_load`] (never the panicking
+/// [`registry::load`]): unknown names come back as a clean error listing
+/// the known registry datasets, and the process exits 1 without a backtrace.
 fn load_db(p: &mrapriori::util::flags::Parsed) -> Result<mrapriori::dataset::TransactionDb> {
     let name = p.required("dataset")?;
     if let Some(db) = registry::try_load(name) {
@@ -79,7 +82,10 @@ fn load_db(p: &mrapriori::util::flags::Parsed) -> Result<mrapriori::dataset::Tra
     if path.exists() {
         return Ok(loader::load_file(path)?);
     }
-    bail!("dataset {name:?} is neither a registry name ({:?}) nor a file", registry::NAMES)
+    bail!(
+        "unknown dataset {name:?}: not a registry dataset (known: {}) and not a readable file",
+        registry::NAMES.join(", ")
+    )
 }
 
 fn cmd_mine(args: &[String]) -> Result<()> {
@@ -132,8 +138,8 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         out.min_count
     );
     println!(
-        "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}",
-        "phase", "passes", "k-range", "candidates", "elapsed(s)", "wall(s)"
+        "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}  {}",
+        "phase", "passes", "k-range", "candidates", "elapsed(s)", "wall(s)", "job"
     );
     for ph in &out.phases {
         let k_range = if ph.n_passes <= 1 {
@@ -142,8 +148,8 @@ fn cmd_mine(args: &[String]) -> Result<()> {
             format!("{}-{}", ph.first_pass, ph.first_pass + ph.n_passes - 1)
         };
         println!(
-            "{:>5} {:>6} {:>7} {:>11} {:>12.1} {:>10.3}",
-            ph.phase, ph.n_passes, k_range, ph.candidates, ph.elapsed, ph.wall
+            "{:>5} {:>6} {:>7} {:>11} {:>12.1} {:>10.3}  {}",
+            ph.phase, ph.n_passes, k_range, ph.candidates, ph.elapsed, ph.wall, ph.job
         );
     }
     println!(

@@ -181,4 +181,19 @@ mod tests {
         }
         assert!(seen.iter().all(|&s| s));
     }
+
+    #[test]
+    fn prop_hash_partitioner_stable_and_in_range() {
+        // Property: over arbitrary itemset keys (what the Apriori jobs
+        // actually shuffle), the partition is in-range and repeat calls
+        // agree — the map-side spill routing depends on both.
+        use crate::util::check::{forall, ItemsetGen};
+        let gen = ItemsetGen { universe: 500, max_len: 12 };
+        forall(91, 300, &gen, |key| {
+            let p = HashPartitioner;
+            [1usize, 2, 3, 7, 16]
+                .iter()
+                .all(|&n| p.partition(key, n) < n && p.partition(key, n) == p.partition(key, n))
+        });
+    }
 }

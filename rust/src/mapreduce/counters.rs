@@ -11,6 +11,9 @@ pub mod keys {
     pub const MAP_OUTPUT_TUPLES: &str = "map_output_tuples";
     /// Tuples leaving the combine stage (what actually shuffles).
     pub const COMBINE_OUTPUT_TUPLES: &str = "combine_output_tuples";
+    /// Non-empty per-reducer spill buckets written by map tasks (the number
+    /// of map-side partition files a real Hadoop shuffle would fetch).
+    pub const SHUFFLE_SPILL_PARTITIONS: &str = "shuffle_spill_partitions";
     /// Tuples received by reducers.
     pub const REDUCE_INPUT_TUPLES: &str = "reduce_input_tuples";
     /// Records written by reducers.

@@ -1,23 +1,35 @@
-//! The MapReduce execution engine: runs map tasks over input splits
-//! (optionally on real threads), applies the combiner, shuffles by
-//! partition, runs reduce tasks, and meters everything for the cluster
-//! simulator.
+//! The MapReduce execution engine: runs map tasks over input splits,
+//! applies the combiner and partitioner *inside each map task* (map-side
+//! partitioned spills, as Hadoop's sort/spill stage does), hands each
+//! reduce task its column of spill buckets to merge and reduce on real
+//! threads, and meters everything for the cluster simulator. The driver's
+//! only serial work between the phases is a bucket transpose.
 //!
 //! The engine executes *real* work — mappers genuinely generate candidates
 //! and count supports — while the per-task [`TaskMeter`]s feed the
 //! deterministic cost model in [`crate::cluster`] that turns measured
 //! operation counts into simulated cluster seconds.
+//!
+//! `JobSpec::workers` is the host-thread budget for the WHOLE job: both map
+//! and reduce tasks execute on the scoped batch runner in
+//! [`crate::util::pool`], and outputs are deterministic regardless of the
+//! worker count (spills are pre-sorted, reduce outputs are concatenated in
+//! task order). See DESIGN.md §4.
 
 use super::api::{Combiner, Context, Mapper, Partitioner, Reducer};
 use super::counters::{keys, Counters};
 use crate::hdfs::InputSplit;
+use crate::util::pool;
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Per-task measurement record consumed by the cluster scheduler.
 #[derive(Debug, Clone)]
 pub struct TaskMeter {
     pub task_id: usize,
+    /// Name of the job this task belongs to (phase attribution in reports).
+    pub job: Arc<str>,
     pub counters: Counters,
     /// Locality hint from the task's input split (empty for reduce tasks).
     pub preferred_nodes: Vec<usize>,
@@ -28,6 +40,8 @@ pub struct TaskMeter {
 /// Everything a finished job reports back to its driver.
 #[derive(Debug)]
 pub struct JobOutput<O> {
+    /// The `JobSpec::name` this output belongs to.
+    pub name: String,
     pub outputs: Vec<O>,
     pub counters: Counters,
     pub map_meters: Vec<TaskMeter>,
@@ -35,6 +49,12 @@ pub struct JobOutput<O> {
     /// Driver side-channel values (max across tasks — every map task of an
     /// Apriori job computes the same `candidateCount`/`npass`).
     pub aux: BTreeMap<&'static str, u64>,
+    /// Aux keys whose values DIVERGED across map tasks (the max still
+    /// wins, for backward compatibility). An Apriori driver treats any
+    /// entry here as a bug — see the `debug_assert!` in
+    /// [`crate::coordinator::run_with`] — but generic jobs may legally
+    /// report per-task values.
+    pub aux_divergence: Vec<&'static str>,
 }
 
 /// A configured job, ready to run. Mirrors Hadoop's `Job` object.
@@ -48,15 +68,17 @@ pub struct JobSpec<'a, M: Mapper, R> {
     pub reducer: R,
     pub partitioner: Box<dyn Partitioner<M::K> + 'a>,
     pub n_reducers: usize,
-    /// Host threads for real execution (not simulated slots!). On the
-    /// single-core CI box this is 1; the simulator models cluster
-    /// parallelism independently of host parallelism.
+    /// Host threads for real execution (not simulated slots!) of both the
+    /// map AND reduce phases. On the single-core CI box this is 1; the
+    /// simulator models cluster parallelism independently of host
+    /// parallelism.
     pub workers: usize,
 }
 
 struct MapTaskResult<K, V> {
     meter: TaskMeter,
-    pairs: Vec<(K, V)>,
+    /// One pre-combined, pre-sorted spill bucket per reducer.
+    buckets: Vec<Vec<(K, V)>>,
     aux: BTreeMap<&'static str, u64>,
 }
 
@@ -67,14 +89,18 @@ where
     R: Reducer<M::K, M::V, Out = O>,
     O: Send,
 {
-    let JobSpec { name: _, splits, mapper_factory, combiner, reducer, partitioner, n_reducers, workers } =
+    let JobSpec { name, splits, mapper_factory, combiner, reducer, partitioner, n_reducers, workers } =
         spec;
     let n_reducers = n_reducers.max(1);
+    let job: Arc<str> = Arc::from(name.as_str());
+    let job_start = Instant::now();
 
-    // ---- map (+ combine) phase -----------------------------------------
+    // ---- map (+ combine + partition) phase ------------------------------
     let factory = &mapper_factory;
     let combiner_ref = combiner.as_deref();
-    let run_one = |task_id: usize, split: &InputSplit| -> MapTaskResult<M::K, M::V> {
+    let partitioner_ref = &*partitioner;
+    let job_name = &job;
+    let run_map_task = |task_id: usize, split: &InputSplit| -> MapTaskResult<M::K, M::V> {
         let start = Instant::now();
         let mut mapper = factory(task_id);
         let mut ctx: Context<M::K, M::V> = Context::new();
@@ -83,100 +109,151 @@ where
             mapper.map(offset, record, &mut ctx);
         }
         mapper.cleanup(&mut ctx);
-        let mut pairs = ctx.take_output();
-        // Combine stage (map-side): fold values per key locally.
-        if let Some(c) = combiner_ref {
-            pairs = combine_pairs(c, pairs);
+        // Map-side partitioned spill: route every pair to its reducer's
+        // bucket HERE, on the task's own thread, then combine each bucket
+        // locally. The driver never re-partitions a flat pair stream — it
+        // only concatenates per-reducer buckets, like a real shuffle
+        // fetching per-partition spill files. (A key always lands in one
+        // partition, so partition-then-combine aggregates exactly like the
+        // old combine-then-partition order did.)
+        let mut buckets: Vec<Vec<(M::K, M::V)>> = (0..n_reducers).map(|_| Vec::new()).collect();
+        for (k, v) in ctx.take_output() {
+            let p = partitioner_ref.partition(&k, n_reducers);
+            buckets[p].push((k, v));
         }
-        ctx.counters.add(keys::COMBINE_OUTPUT_TUPLES, pairs.len() as u64);
+        let mut spilled = 0u64;
+        for bucket in &mut buckets {
+            if let Some(c) = combiner_ref {
+                // Combine stage (map-side): fold values per key locally.
+                // Sorts the bucket as a side effect (deterministic spills).
+                *bucket = combine_pairs(c, std::mem::take(bucket));
+            }
+            // Without a combiner the raw emission order is kept — generic
+            // reducers may be order-sensitive.
+            spilled += bucket.len() as u64;
+        }
+        ctx.counters.add(keys::COMBINE_OUTPUT_TUPLES, spilled);
+        ctx.counters.add(
+            keys::SHUFFLE_SPILL_PARTITIONS,
+            buckets.iter().filter(|b| !b.is_empty()).count() as u64,
+        );
         MapTaskResult {
             meter: TaskMeter {
                 task_id,
+                job: Arc::clone(job_name),
                 counters: ctx.counters,
                 preferred_nodes: split.preferred_nodes.clone(),
                 wall_secs: start.elapsed().as_secs_f64(),
             },
-            pairs,
+            buckets,
             aux: ctx.aux,
         }
     };
 
-    let map_results: Vec<MapTaskResult<M::K, M::V>> = if workers <= 1 || splits.len() <= 1 {
-        splits.iter().enumerate().map(|(i, s)| run_one(i, s)).collect()
-    } else {
-        // Scoped threads so the factory/combiner may borrow from the driver.
-        let mut slots: Vec<Option<MapTaskResult<M::K, M::V>>> =
-            (0..splits.len()).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (chunk_idx, chunk) in splits.chunks(splits.len().div_ceil(workers)).enumerate() {
-                let base = chunk_idx * splits.len().div_ceil(workers);
-                let run_one = &run_one;
-                handles.push(scope.spawn(move || {
-                    chunk
-                        .iter()
-                        .enumerate()
-                        .map(|(j, s)| (base + j, run_one(base + j, s)))
-                        .collect::<Vec<_>>()
-                }));
-            }
-            for h in handles {
-                for (i, r) in h.join().expect("map task panicked") {
-                    slots[i] = Some(r);
-                }
-            }
-        });
-        slots.into_iter().map(|s| s.expect("missing map task result")).collect()
+    let map_results: Vec<MapTaskResult<M::K, M::V>> = {
+        let run_map_task = &run_map_task;
+        let map_jobs: Vec<_> =
+            splits.iter().enumerate().map(|(i, s)| move || run_map_task(i, s)).collect();
+        pool::run_batch_scoped(workers, map_jobs)
     };
 
     // ---- aggregate map side ---------------------------------------------
+    let n_map_tasks = map_results.len();
     let mut counters = Counters::new();
     let mut aux: BTreeMap<&'static str, u64> = BTreeMap::new();
-    let mut map_meters = Vec::with_capacity(map_results.len());
-    // Hash-grouped shuffle per partition. (A Hadoop-style sort-merge
-    // variant was tried and reverted: sorting flat pair vectors measured
-    // ~25% slower end-to-end than BTreeMap insertion here — §Perf log.)
-    let mut buckets: Vec<BTreeMap<M::K, Vec<M::V>>> =
-        (0..n_reducers).map(|_| BTreeMap::new()).collect();
+    let mut aux_divergence: Vec<&'static str> = Vec::new();
+    let mut map_meters = Vec::with_capacity(n_map_tasks);
+    // Transpose the task-major spills into reducer-major columns. This is
+    // the ONLY serial work between the two threaded phases — a Vec move per
+    // (task, reducer) pair; the per-key grouping happens inside each
+    // (threaded) reduce task below.
+    let mut columns: Vec<Vec<Vec<(M::K, M::V)>>> =
+        (0..n_reducers).map(|_| Vec::with_capacity(n_map_tasks)).collect();
     for result in map_results {
-        counters.merge(&result.meter.counters);
-        for (k, v) in &result.aux {
+        let MapTaskResult { meter, buckets, aux: task_aux } = result;
+        counters.merge(&meter.counters);
+        for (k, v) in task_aux {
+            if let Some(prev) = aux.get(k) {
+                if *prev != v && !aux_divergence.contains(&k) {
+                    aux_divergence.push(k);
+                }
+            }
             let slot = aux.entry(k).or_insert(0);
-            *slot = (*slot).max(*v);
+            *slot = (*slot).max(v);
         }
-        for (k, v) in result.pairs {
-            let p = partitioner.partition(&k, n_reducers);
-            buckets[p].entry(k).or_default().push(v);
+        for (column, bucket) in columns.iter_mut().zip(buckets) {
+            column.push(bucket);
         }
-        map_meters.push(result.meter);
+        map_meters.push(meter);
     }
 
-    // ---- reduce phase -----------------------------------------------------
+    // ---- reduce phase ---------------------------------------------------
+    // Each reduce task merges its own spill buckets and runs as its own
+    // threaded job on the same worker budget; outputs come back in task
+    // order, so the concatenation below is byte-identical to the old
+    // sequential driver loop.
+    let reduce_results: Vec<(Vec<O>, TaskMeter)> = {
+        let reducer = &reducer;
+        let reduce_jobs: Vec<_> = columns
+            .into_iter()
+            .enumerate()
+            .map(|(rid, column)| {
+                let job = Arc::clone(&job);
+                move || {
+                    let start = Instant::now();
+                    // Hash-grouped merge, in map-task order so per-key value
+                    // order is deterministic. (A Hadoop-style sort-merge
+                    // variant was tried and reverted: sorting flat pair
+                    // vectors measured ~25% slower end-to-end than BTreeMap
+                    // insertion here — §Perf log.)
+                    let mut group: BTreeMap<M::K, Vec<M::V>> = BTreeMap::new();
+                    let mut in_tuples = 0u64;
+                    for bucket in column {
+                        in_tuples += bucket.len() as u64;
+                        for (k, v) in bucket {
+                            group.entry(k).or_default().push(v);
+                        }
+                    }
+                    let mut rc = Counters::new();
+                    rc.add(keys::REDUCE_INPUT_TUPLES, in_tuples);
+                    let mut outputs = Vec::new();
+                    for (k, vs) in &group {
+                        if let Some(o) = reducer.reduce(k, vs) {
+                            outputs.push(o);
+                        }
+                    }
+                    rc.add(keys::REDUCE_OUTPUT_RECORDS, outputs.len() as u64);
+                    let meter = TaskMeter {
+                        task_id: rid,
+                        job,
+                        counters: rc,
+                        preferred_nodes: Vec::new(),
+                        wall_secs: start.elapsed().as_secs_f64(),
+                    };
+                    (outputs, meter)
+                }
+            })
+            .collect();
+        pool::run_batch_scoped(workers, reduce_jobs)
+    };
+
     let mut outputs = Vec::new();
     let mut reduce_meters = Vec::with_capacity(n_reducers);
-    for (rid, bucket) in buckets.into_iter().enumerate() {
-        let start = Instant::now();
-        let mut rc = Counters::new();
-        let in_tuples: u64 = bucket.values().map(|v| v.len() as u64).sum();
-        rc.add(keys::REDUCE_INPUT_TUPLES, in_tuples);
-        let mut out_records = 0u64;
-        for (k, vs) in &bucket {
-            if let Some(o) = reducer.reduce(k, vs) {
-                outputs.push(o);
-                out_records += 1;
-            }
-        }
-        rc.add(keys::REDUCE_OUTPUT_RECORDS, out_records);
-        counters.merge(&rc);
-        reduce_meters.push(TaskMeter {
-            task_id: rid,
-            counters: rc,
-            preferred_nodes: Vec::new(),
-            wall_secs: start.elapsed().as_secs_f64(),
-        });
+    for (task_outputs, meter) in reduce_results {
+        counters.merge(&meter.counters);
+        outputs.extend(task_outputs);
+        reduce_meters.push(meter);
     }
 
-    JobOutput { outputs, counters, map_meters, reduce_meters, aux }
+    crate::debug!(
+        "job {job}: {} map + {} reduce tasks on {workers} workers, {} shuffled tuples, {:.3}s host",
+        map_meters.len(),
+        reduce_meters.len(),
+        counters.get(keys::COMBINE_OUTPUT_TUPLES),
+        job_start.elapsed().as_secs_f64(),
+    );
+
+    JobOutput { name, outputs, counters, map_meters, reduce_meters, aux, aux_divergence }
 }
 
 fn combine_pairs<K: Ord + Clone + std::hash::Hash, V, C: Combiner<K, V> + ?Sized>(
@@ -265,9 +342,31 @@ mod tests {
 
     #[test]
     fn parallel_equals_sequential() {
-        let seq = sorted(run_wordcount(1, 3, 1).outputs);
-        let par = sorted(run_wordcount(4, 3, 1).outputs);
-        assert_eq!(seq, par);
+        // Threaded mappers AND threaded reducers must be invisible in the
+        // output, across the workers × n_reducers grid.
+        let baseline = sorted(run_wordcount(1, 1, 1).outputs);
+        for workers in [1, 4] {
+            for n_reducers in [1, 3] {
+                let out = run_wordcount(workers, n_reducers, 1);
+                assert_eq!(out.reduce_meters.len(), n_reducers);
+                assert_eq!(
+                    sorted(out.outputs),
+                    baseline,
+                    "workers={workers} n_reducers={n_reducers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_execution_is_deterministic() {
+        // Not just the same multiset: byte-identical output ORDER, because
+        // spills are pre-sorted and reduce outputs concatenate in task
+        // order regardless of which worker thread ran them.
+        let seq = run_wordcount(1, 3, 1).outputs;
+        for _ in 0..5 {
+            assert_eq!(run_wordcount(4, 3, 1).outputs, seq);
+        }
     }
 
     #[test]
@@ -282,12 +381,32 @@ mod tests {
     }
 
     #[test]
+    fn spill_partitions_metered() {
+        // 3 map tasks spilling into 2 partitions each: at most 6 non-empty
+        // buckets, at least one per non-empty task.
+        let out = run_wordcount(1, 2, 1);
+        let spills = out.counters.get(keys::SHUFFLE_SPILL_PARTITIONS);
+        assert!((3..=6).contains(&spills), "spills {spills}");
+        // Single reducer: exactly one bucket per task.
+        let out = run_wordcount(1, 1, 1);
+        assert_eq!(out.counters.get(keys::SHUFFLE_SPILL_PARTITIONS), 3);
+    }
+
+    #[test]
     fn task_meters_present() {
         let out = run_wordcount(1, 2, 1);
         assert_eq!(out.map_meters.len(), 3);
         assert_eq!(out.reduce_meters.len(), 2);
         assert!(out.map_meters.iter().all(|m| m.wall_secs >= 0.0));
         assert!(!out.map_meters[0].preferred_nodes.is_empty());
+    }
+
+    #[test]
+    fn job_name_reaches_meters() {
+        let out = run_wordcount(1, 2, 1);
+        assert_eq!(out.name, "wc");
+        assert!(out.map_meters.iter().all(|m| &*m.job == "wc"));
+        assert!(out.reduce_meters.iter().all(|m| &*m.job == "wc"));
     }
 
     #[test]
@@ -310,6 +429,20 @@ mod tests {
         }
     }
 
+    fn run_aux_job(factory: impl Fn(usize) -> AuxMapper + Send + Sync) -> JobOutput<(u32, u64)> {
+        let db = demo_db();
+        run_job(JobSpec {
+            name: "aux".into(),
+            splits: splits_for(&db, 2),
+            mapper_factory: Box::new(factory),
+            combiner: None,
+            reducer: MinSupportReducer { min_count: 1 },
+            partitioner: Box::new(HashPartitioner),
+            n_reducers: 1,
+            workers: 1,
+        })
+    }
+
     #[test]
     fn aux_takes_max_across_tasks() {
         let db = demo_db();
@@ -324,6 +457,21 @@ mod tests {
             workers: 1,
         });
         assert_eq!(out.aux.get(keys::CANDIDATES), Some(&12)); // 3 tasks: 10,11,12
+    }
+
+    #[test]
+    fn divergent_aux_values_are_detected() {
+        // Per-task values 10,11,12: legal for a generic job, but flagged so
+        // an Apriori driver (where all tasks must agree) can assert.
+        let out = run_aux_job(|task| AuxMapper(10 + task as u64));
+        assert_eq!(out.aux_divergence, vec![keys::CANDIDATES]);
+    }
+
+    #[test]
+    fn agreeing_aux_values_are_not_flagged() {
+        let out = run_aux_job(|_| AuxMapper(7));
+        assert_eq!(out.aux.get(keys::CANDIDATES), Some(&7));
+        assert!(out.aux_divergence.is_empty());
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! Interchange is HLO **text**: jax >= 0.5 emits HloModuleProto with 64-bit
 //! instruction ids which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real PJRT client sits behind the `xla-pjrt` cargo feature (the `xla`
+//! crate is unavailable offline); the default build executes the artifact's
+//! tile semantics through a numerically identical native interpreter — see
+//! [`pjrt`] and DESIGN.md §5.
 
 pub mod counting;
 pub mod pjrt;

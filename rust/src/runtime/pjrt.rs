@@ -1,5 +1,17 @@
-//! Thin wrapper over the `xla` crate's PJRT CPU client: artifact discovery,
-//! compilation caching, and typed execution of the support-count module.
+//! Loader/executor for the AOT-compiled support-count artifact: artifact
+//! discovery plus a typed `support_tile` entry point.
+//!
+//! Two interchangeable backends sit behind the same `PjrtRuntime` API:
+//!
+//! * `--features xla-pjrt`: the real PJRT CPU client through the `xla`
+//!   crate (compilation caching, HLO-text parsing). The crate is not
+//!   available in the offline build environment, so enabling the feature
+//!   requires adding the dependency by hand.
+//! * default: a native interpreter executing the artifact's tile semantics
+//!   (`S = T · Cᵀ` over 0/1 f32 matrices; `support[c] += [S[t, c] == |c|]`)
+//!   in pure Rust. Counts are small integers in f32 (< 2^24), so the two
+//!   backends are numerically identical — the `rust/tests/runtime_xla.rs`
+//!   suite checks both against the u64-bitset reference.
 
 use anyhow::{bail, Context as _, Result};
 use std::path::{Path, PathBuf};
@@ -30,13 +42,6 @@ impl ArtifactSpec {
     }
 }
 
-/// A PJRT CPU client holding one compiled support-count executable.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    pub spec: ArtifactSpec,
-}
-
 /// Locate the artifacts directory: `$MRAPRIORI_ARTIFACTS`, else
 /// `./artifacts`, else `artifacts/` next to the workspace root.
 pub fn artifacts_dir() -> PathBuf {
@@ -51,6 +56,15 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// A PJRT CPU client holding one compiled support-count executable.
+#[cfg(feature = "xla-pjrt")]
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+#[cfg(feature = "xla-pjrt")]
 impl PjrtRuntime {
     /// Load and compile the artifact for `spec` from `dir`.
     pub fn load(dir: &Path, spec: ArtifactSpec) -> Result<Self> {
@@ -99,6 +113,69 @@ impl PjrtRuntime {
     }
 }
 
+/// Native interpreter for the support-count artifact (default backend):
+/// executes the tile's semantics directly rather than through PJRT.
+#[cfg(not(feature = "xla-pjrt"))]
+pub struct PjrtRuntime {
+    pub spec: ArtifactSpec,
+}
+
+#[cfg(not(feature = "xla-pjrt"))]
+impl PjrtRuntime {
+    /// Load the artifact for `spec` from `dir`. The interpreter derives the
+    /// tile program from `spec` alone, but still requires the artifact file
+    /// to exist and be well-formed so both backends share one contract.
+    pub fn load(dir: &Path, spec: ArtifactSpec) -> Result<Self> {
+        let path = dir.join(spec.file_name());
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading HLO text {}", path.display()))?;
+        if !text.contains("HloModule") {
+            bail!("{} does not look like an HLO text artifact", path.display());
+        }
+        Ok(Self { spec })
+    }
+
+    /// Load the default artifact from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir(), ArtifactSpec::DEFAULT)
+    }
+
+    pub fn platform(&self) -> String {
+        "cpu".to_string()
+    }
+
+    /// Execute one tile: `txns` is a row-major (T × I) 0/1 matrix, `cands`
+    /// a (C × I) matrix, `lengths` a C-vector of candidate lengths (padding
+    /// rows carry an unmatchable sentinel). Returns per-candidate supports
+    /// over the valid transaction rows — the exact semantics of the
+    /// compiled kernel: `support[c] = Σ_t [⟨txns[t], cands[c]⟩ == lengths[c]]`.
+    pub fn support_tile(&self, txns: &[f32], cands: &[f32], lengths: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        anyhow::ensure!(txns.len() == s.txn_tile * s.item_width, "txns buffer shape");
+        anyhow::ensure!(cands.len() == s.cand_tile * s.item_width, "cands buffer shape");
+        anyhow::ensure!(lengths.len() == s.cand_tile, "lengths buffer shape");
+        let width = s.item_width;
+        let mut out = vec![0f32; s.cand_tile];
+        for (support, (crow, len)) in
+            out.iter_mut().zip(cands.chunks_exact(width).zip(lengths))
+        {
+            for trow in txns.chunks_exact(width) {
+                let dot: f32 = trow.iter().zip(crow).map(|(t, c)| t * c).sum();
+                if dot == *len {
+                    *support += 1.0;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +196,32 @@ mod tests {
             Ok(_) => panic!("load must fail without artifacts"),
         };
         assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    /// The interpreter must implement the kernel's dot-vs-length rule,
+    /// including the padding-row sentinel (see BitmapTile).
+    #[cfg(not(feature = "xla-pjrt"))]
+    #[test]
+    fn native_tile_counts_with_sentinel() {
+        let spec = ArtifactSpec { txn_tile: 3, item_width: 4, cand_tile: 2 };
+        let rt = PjrtRuntime { spec };
+        // txns: {0,1}, {1,2}, {0,1,2}; cands: {0,1}, padding (sentinel 5).
+        #[rustfmt::skip]
+        let txns = vec![
+            1.0, 1.0, 0.0, 0.0,
+            0.0, 1.0, 1.0, 0.0,
+            1.0, 1.0, 1.0, 0.0,
+        ];
+        #[rustfmt::skip]
+        let cands = vec![
+            1.0, 1.0, 0.0, 0.0,
+            0.0, 0.0, 0.0, 0.0,
+        ];
+        let lengths = vec![2.0, 5.0];
+        let out = rt.support_tile(&txns, &cands, &lengths).unwrap();
+        assert_eq!(out, vec![2.0, 0.0]); // {0,1} ⊆ txns 0 and 2; padding never counts
+        // Shape mismatches are rejected.
+        assert!(rt.support_tile(&txns[1..], &cands, &lengths).is_err());
     }
 
     // Execution tests live in rust/tests/runtime_xla.rs (they need the

@@ -23,21 +23,32 @@ pub struct FlagSet {
     specs: Vec<FlagSpec>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FlagError {
-    #[error("unknown flag --{0}")]
     Unknown(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("flag --{name}: cannot parse {value:?} as {ty}")]
     BadValue {
         name: String,
         value: String,
         ty: &'static str,
     },
-    #[error("missing required flag --{0}")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for FlagError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FlagError::Unknown(name) => write!(f, "unknown flag --{name}"),
+            FlagError::MissingValue(name) => write!(f, "flag --{name} requires a value"),
+            FlagError::BadValue { name, value, ty } => {
+                write!(f, "flag --{name}: cannot parse {value:?} as {ty}")
+            }
+            FlagError::MissingRequired(name) => write!(f, "missing required flag --{name}"),
+        }
+    }
+}
+
+impl std::error::Error for FlagError {}
 
 impl FlagSet {
     pub fn new(command: &'static str, about: &'static str) -> Self {

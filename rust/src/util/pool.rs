@@ -1,135 +1,58 @@
 //! A small scoped thread pool (rayon is not available offline).
 //!
-//! The MapReduce engine uses this to run map/reduce tasks on real OS threads
-//! when `workers > 1`. On the single-core CI box the simulator usually runs
-//! with `workers = 1` (sequential, zero-overhead path); the pool still gets
-//! exercised by tests so the engine is correct on multi-core machines.
+//! [`run_batch_scoped`] is the MapReduce engine's task-execution primitive
+//! for both map and reduce tasks: a batch runner for jobs that borrow from
+//! the caller's stack (mapper factories, combiners, reducers and
+//! partitioners all borrow from the driver), built on
+//! [`std::thread::scope`]. An earlier queue-based `ThreadPool` for
+//! `'static` jobs was removed when the engine migrated here — resurrect it
+//! from history if long-lived workers are ever needed.
+//!
+//! On the single-core CI box the simulator usually runs with `workers = 1`
+//! (sequential, zero-overhead path); the pool still gets exercised by tests
+//! so the engine is correct on multi-core machines.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Mutex;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-struct Shared {
-    queue: Mutex<QueueState>,
-    cond: Condvar,
-    active: AtomicUsize,
-}
-
-struct QueueState {
-    jobs: std::collections::VecDeque<Job>,
-    shutdown: bool,
-}
-
-/// Fixed-size worker pool. Dropping the pool joins all workers.
-pub struct ThreadPool {
-    shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    size: usize,
-}
-
-impl ThreadPool {
-    pub fn new(size: usize) -> Self {
-        let size = size.max(1);
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState { jobs: Default::default(), shutdown: false }),
-            cond: Condvar::new(),
-            active: AtomicUsize::new(0),
-        });
-        let handles = (0..size)
-            .map(|_| {
-                let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(shared))
-            })
-            .collect();
-        Self { shared, handles, size }
-    }
-
-    pub fn size(&self) -> usize {
-        self.size
-    }
-
-    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.jobs.push_back(Box::new(f));
-        drop(q);
-        self.shared.cond.notify_one();
-    }
-
-    /// Run a batch of closures to completion, returning outputs in order.
-    ///
-    /// This is the map-phase primitive: the closures borrow nothing from the
-    /// caller (inputs must be moved in), results come back through a channel.
-    pub fn run_batch<T, F>(&self, jobs: Vec<F>) -> Vec<T>
-    where
-        T: Send + 'static,
-        F: FnOnce() -> T + Send + 'static,
-    {
-        let n = jobs.len();
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, T)>();
-        for (i, job) in jobs.into_iter().enumerate() {
-            let tx = tx.clone();
-            self.spawn(move || {
-                let out = job();
-                // Receiver can only hang up if the caller panicked.
-                let _ = tx.send((i, out));
-            });
-        }
-        drop(tx);
-        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (i, v) = rx.recv().expect("worker thread panicked");
-            slots[i] = Some(v);
-        }
-        slots.into_iter().map(|s| s.unwrap()).collect()
-    }
-}
-
-fn worker_loop(shared: Arc<Shared>) {
-    loop {
-        let job = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(job) = q.jobs.pop_front() {
-                    break job;
-                }
-                if q.shutdown {
-                    return;
-                }
-                q = shared.cond.wait(q).unwrap();
-            }
-        };
-        shared.active.fetch_add(1, Ordering::SeqCst);
-        job();
-        shared.active.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.shutdown = true;
-        }
-        self.shared.cond.notify_all();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// Run jobs either sequentially (`workers <= 1`) or on a transient pool.
-/// The engine's entry point: keeps the fast path allocation-free of threads.
-pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+/// Run a batch of *borrowing* closures to completion on up to `workers`
+/// scoped threads, returning their outputs in job order.
+///
+/// Workers pull jobs from a shared cursor — dynamic load balancing, so one
+/// straggler task never idles the remaining workers the way fixed chunking
+/// would.
+///
+/// `workers <= 1` or a single job degrades to the sequential in-place path
+/// (no threads spawned). A panicking job propagates on scope exit.
+pub fn run_batch_scoped<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
 where
-    T: Send + 'static,
-    F: FnOnce() -> T + Send + 'static,
+    T: Send,
+    F: FnOnce() -> T + Send,
 {
     if workers <= 1 || jobs.len() <= 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
-    let pool = ThreadPool::new(workers.min(jobs.len()));
-    pool.run_batch(jobs)
+    let n = jobs.len();
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
+                let out = job();
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("missing job result"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -138,54 +61,52 @@ mod tests {
     use std::sync::atomic::AtomicU64;
 
     #[test]
-    fn batch_preserves_order() {
-        let pool = ThreadPool::new(4);
-        let jobs: Vec<_> = (0..32).map(|i| move || i * 10).collect();
-        let out = pool.run_batch(jobs);
-        assert_eq!(out, (0..32).map(|i| i * 10).collect::<Vec<_>>());
+    fn scoped_batch_borrows_from_caller() {
+        // The whole point of the scoped runner: jobs borrow local data.
+        let data: Vec<u64> = (0..100).collect();
+        let jobs: Vec<_> = data.chunks(7).map(|c| move || c.iter().sum::<u64>()).collect();
+        let out = run_batch_scoped(4, jobs);
+        assert_eq!(out.iter().sum::<u64>(), 4950);
     }
 
     #[test]
-    fn all_jobs_run_exactly_once() {
-        let pool = ThreadPool::new(3);
-        let counter = Arc::new(AtomicU64::new(0));
+    fn scoped_batch_preserves_order() {
+        let jobs: Vec<_> = (0..32).map(|i| move || i * 3).collect();
+        assert_eq!(run_batch_scoped(4, jobs), (0..32).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_batch_sequential_and_empty() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
+        assert_eq!(run_batch_scoped(1, jobs), vec![1, 2, 3, 4, 5]);
+        let out: Vec<i32> = run_batch_scoped(4, Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_batch_runs_each_job_once() {
+        let counter = AtomicU64::new(0);
         let jobs: Vec<_> = (0..100)
             .map(|_| {
-                let c = Arc::clone(&counter);
+                let c = &counter;
                 move || {
                     c.fetch_add(1, Ordering::SeqCst);
                 }
             })
             .collect();
-        pool.run_batch(jobs);
+        run_batch_scoped(3, jobs);
         assert_eq!(counter.load(Ordering::SeqCst), 100);
     }
 
     #[test]
-    fn sequential_fallback() {
-        let out = run_parallel(1, (0..5).map(|i| move || i + 1).collect::<Vec<_>>());
-        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    fn scoped_batch_more_workers_than_jobs() {
+        let jobs: Vec<_> = (0..2).map(|i| move || i).collect();
+        assert_eq!(run_batch_scoped(16, jobs), vec![0, 1]);
     }
 
     #[test]
-    fn parallel_path() {
-        let out = run_parallel(4, (0..16).map(|i| move || i * i).collect::<Vec<_>>());
-        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn drop_joins_cleanly() {
-        let pool = ThreadPool::new(2);
-        for _ in 0..10 {
-            pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(1)));
-        }
-        drop(pool); // must not hang or leak
-    }
-
-    #[test]
-    fn empty_batch() {
-        let pool = ThreadPool::new(2);
-        let out: Vec<i32> = pool.run_batch(Vec::<fn() -> i32>::new());
-        assert!(out.is_empty());
+    fn scoped_batch_single_job_runs_inline() {
+        let jobs: Vec<_> = vec![|| 42];
+        assert_eq!(run_batch_scoped(8, jobs), vec![42]);
     }
 }

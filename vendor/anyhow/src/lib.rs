@@ -1,0 +1,198 @@
+//! Minimal offline stand-in for the `anyhow` crate (1.x API subset).
+//!
+//! The build environment cannot fetch crates.io dependencies, so — in the
+//! same spirit as `mrapriori`'s `util/` shims for `rand`/`clap`/`toml`/
+//! `rayon`/`proptest` — this path dependency vendors exactly the slice of
+//! `anyhow` the workspace uses: [`Error`], [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension trait
+//! for `Result` and `Option`. Code written against it is source-compatible
+//! with the real crate; swap the path dependency for `anyhow = "1"` when
+//! building with network access.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>`: a `Result` defaulting to the dynamic [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus its flattened cause chain.
+///
+/// Unlike the real `anyhow::Error` this stores the chain as rendered
+/// strings rather than live trait objects — enough for error reporting,
+/// which is all this workspace does with it. Deliberately does NOT
+/// implement `std::error::Error`, exactly like the real crate, so that the
+/// blanket `From<E: std::error::Error>` conversion below stays coherent.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently attached) message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a plain message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, colon-separated, matching
+            // anyhow's alternate formatting.
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Context-attachment extension for fallible values.
+pub trait Context<T> {
+    /// Attach a context message to the error, if any.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message to the error, if any.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn from_std_error_flattens_sources() {
+        let e: Error = io_err().into();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(7).context("present").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        fn fails(x: u32) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("unlucky {x}");
+            }
+            Ok(())
+        }
+        assert!(fails(1).is_ok());
+        assert_eq!(format!("{}", fails(3).unwrap_err()), "unlucky 3");
+        assert_eq!(format!("{}", fails(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", anyhow!("plain {}", 5)), "plain 5");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 3);
+    }
+}
