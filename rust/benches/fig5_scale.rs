@@ -1,9 +1,13 @@
 //! Regenerates the paper's Fig. 5(a): scalability — execution time of the
 //! four proposed algorithms on growing copies of c20d10k (min_sup 0.25,
 //! 10 mappers; the InputSplit scales with the data so the map-task count
-//! stays constant, §5.4).
+//! stays constant, §5.4) — then extends the sweep past the paper to the
+//! Quest-family T*I*D* entries, mined out-of-core through the segment
+//! store. Set `FIG5_QUEST` to a comma-separated name list to override the
+//! default entries (e.g. `FIG5_QUEST=t10i4d100k,t10i4d1m,t40i10d1m`).
 
 use mrapriori::bench_harness::report::{figure_csv, figure_table, Series};
+use mrapriori::bench_harness::tables::{quest_scale_run, scale_json, scale_markdown, ScaleRun};
 use mrapriori::bench_harness::timing::save_report;
 use mrapriori::cluster::ClusterConfig;
 use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
@@ -48,4 +52,32 @@ fn main() {
     }
     save_report("fig5a_scale.csv", &figure_csv("k_txns", &series));
     save_report("fig5a_scale.txt", &table);
+
+    // ---- beyond the paper: Quest-family entries, streamed from disk -----
+    let quest: Vec<String> = match std::env::var("FIG5_QUEST") {
+        Ok(list) => list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        // Default to the 100K-class entries; the 1M entries run with
+        // FIG5_QUEST=t10i4d1m,t40i10d1m (several minutes each).
+        Err(_) => vec!["t10i4d100k".into(), "t40i10d100k".into()],
+    };
+    let cache = std::path::Path::new("target/dataset-cache");
+    let quest_algos = [Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedEtdpc];
+    let mut runs: Vec<ScaleRun> = Vec::new();
+    for name in &quest {
+        match quest_scale_run(name, &quest_algos, &cluster, cache) {
+            Ok(run) => {
+                for o in &run.outcomes {
+                    eprintln!("  {} {}: {:.0} s simulated", o.algorithm.name(), name, o.actual_time);
+                }
+                runs.push(run);
+            }
+            Err(e) => eprintln!("skipping {name}: {e}"),
+        }
+    }
+    if !runs.is_empty() {
+        let md = scale_markdown(&quest_algos, &runs);
+        println!("\n# Fig 5(a) extension: Quest-family scale entries (streamed)\n{md}");
+        save_report("fig5a_quest.md", &md);
+        save_report("fig5a_quest.json", &scale_json(&quest_algos, &runs));
+    }
 }

@@ -29,6 +29,7 @@ pub struct GenStats {
 }
 
 impl GenStats {
+    /// Accumulate another pass's meters.
     pub fn merge(&mut self, o: &GenStats) {
         self.join_pairs += o.join_pairs;
         self.prune_checks += o.prune_checks;

@@ -9,11 +9,17 @@ use crate::itemset::Itemset;
 use std::collections::HashMap;
 
 #[derive(Debug, Clone, PartialEq)]
+/// One association rule `X ⇒ Y` with its quality metrics.
 pub struct Rule {
+    /// Left-hand side X.
     pub antecedent: Itemset,
+    /// Right-hand side Y (disjoint from X).
     pub consequent: Itemset,
+    /// Fraction of transactions containing X ∪ Y.
     pub support: f64,
+    /// support(X ∪ Y) / support(X).
     pub confidence: f64,
+    /// Confidence over the consequent's base rate.
     pub lift: f64,
 }
 

@@ -14,6 +14,7 @@ use crate::util::rng::Rng;
 use std::collections::HashMap;
 
 #[derive(Debug, Clone)]
+/// Parameters of the PARMA-style sampling miner.
 pub struct ParmaParams {
     /// Absolute-frequency error tolerance ε.
     pub epsilon: f64,
@@ -23,6 +24,7 @@ pub struct ParmaParams {
     pub n_samples: usize,
     /// Require an itemset in this fraction of samples (majority by default).
     pub quorum: f64,
+    /// Sampling seed.
     pub seed: u64,
 }
 
@@ -42,11 +44,14 @@ pub fn sample_size(epsilon: f64, delta: f64, db_size: usize) -> usize {
 }
 
 #[derive(Debug, Clone)]
+/// Result of a sampling run: approximate itemsets plus metadata.
 pub struct ParmaResult {
     /// Approximate frequent itemsets with averaged estimated supports
     /// (fraction of transactions).
     pub itemsets: Vec<(Itemset, f64)>,
+    /// Rows drawn per sample (Riondato bound, clamped to |D|).
     pub sample_size: usize,
+    /// Number of independent samples mined.
     pub n_samples: usize,
 }
 

@@ -13,9 +13,11 @@ use crate::itemset::{Itemset, Trie};
 pub type Level = Vec<(Itemset, u64)>;
 
 #[derive(Debug, Clone)]
+/// Everything the sequential miner reports: levels, counts, meters.
 pub struct MineResult {
     /// `levels[k-1]` = frequent k-itemsets. Trailing empty levels trimmed.
     pub levels: Vec<Level>,
+    /// Absolute minimum support count used.
     pub min_count: u64,
     /// Per-pass candidate counts (|C_k| for k >= 2; index 0 is pass 2).
     pub candidates_per_pass: Vec<u64>,

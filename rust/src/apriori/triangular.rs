@@ -19,6 +19,7 @@ pub struct TriangularCounter {
 }
 
 impl TriangularCounter {
+    /// Zeroed counter for the dense universe `0..n_items`.
     pub fn new(n_items: usize) -> Self {
         let mut row_offset = Vec::with_capacity(n_items);
         let mut acc = 0usize;
@@ -51,10 +52,12 @@ impl TriangularCounter {
         }
     }
 
+    /// Support count of the single item `i`.
     pub fn item_count(&self, i: Item) -> u64 {
         self.item_counts[i as usize]
     }
 
+    /// Support count of pair `(i, j)`; `i == j` gives the item count.
     pub fn pair_count(&self, i: Item, j: Item) -> u64 {
         if i == j {
             return self.item_counts[i as usize];

@@ -16,6 +16,7 @@ pub const PAPER_TABLE3_SPC: [f64; 14] =
     [16.0, 18.0, 24.0, 32.0, 48.0, 70.0, 91.0, 83.0, 51.0, 34.0, 22.0, 18.0, 16.0, 21.0];
 
 #[derive(Debug)]
+/// Output of the calibration fit: scale plus agreement metrics.
 pub struct Calibration {
     /// Simulated per-phase seconds with current weights.
     pub model: Vec<f64>,

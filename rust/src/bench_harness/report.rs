@@ -7,15 +7,19 @@ use std::fmt::Write as _;
 /// across the min_sup sweep of Figs 2–4.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Series label (e.g. an algorithm name).
     pub name: String,
+    /// (x, y) points in plot order.
     pub points: Vec<(f64, f64)>,
 }
 
 impl Series {
+    /// Empty series with a label.
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), points: Vec::new() }
     }
 
+    /// Append one (x, y) point.
     pub fn push(&mut self, x: f64, y: f64) {
         self.points.push((x, y));
     }

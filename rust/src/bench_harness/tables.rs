@@ -3,15 +3,21 @@
 
 use super::report::{figure_table, Series};
 use crate::cluster::ClusterConfig;
-use crate::coordinator::{run_with, Algorithm, MiningOutcome, RunOptions};
+use crate::coordinator::{run_on_file, run_with, Algorithm, MiningOutcome, RunOptions};
 use crate::dataset::{registry, TransactionDb};
+use crate::hdfs;
 
 /// Options for a figure sweep on one dataset.
 pub struct SweepSpec<'a> {
+    /// Dataset under test.
     pub db: &'a TransactionDb,
+    /// The min_sup x-axis, paper order (high -> low).
     pub min_sups: Vec<f64>,
+    /// Algorithms to run.
     pub algorithms: Vec<Algorithm>,
+    /// Simulated cluster configuration.
     pub cluster: ClusterConfig,
+    /// Shared run options (split size, DPC α, ...).
     pub opts: RunOptions,
 }
 
@@ -39,8 +45,11 @@ impl<'a> SweepSpec<'a> {
 
 /// Result grid of a sweep: `runs[algo_idx][sup_idx]`.
 pub struct SweepResult {
+    /// Algorithms of the grid, row order.
     pub algorithms: Vec<Algorithm>,
+    /// min_sup values of the grid, column order.
     pub min_sups: Vec<f64>,
+    /// Outcome grid indexed `[algo_idx][sup_idx]`.
     pub runs: Vec<Vec<MiningOutcome>>,
 }
 
@@ -136,6 +145,124 @@ pub fn phase_time_table(outcomes: &[&MiningOutcome], title: &str) -> String {
     s
 }
 
+/// One row of a Fig 5(a)-style scale grid: a dataset mined once per
+/// algorithm at a single min_sup.
+pub struct ScaleRun {
+    /// Dataset name (registry, Quest-family, or file stem).
+    pub dataset: String,
+    /// Transactions in the dataset.
+    pub n_txns: usize,
+    /// Fractional minimum support used for this row.
+    pub min_sup: f64,
+    /// One outcome per algorithm, parallel to the grid's algorithm list.
+    pub outcomes: Vec<MiningOutcome>,
+}
+
+/// One streamed scale-grid row: build (or reuse) the Quest store for
+/// `name` under `cache`, then mine it once per algorithm at the dataset's
+/// reference min_sup with splits at the store's block granularity. Shared
+/// by `mrapriori sweep --datasets` and the fig5 bench so the two cannot
+/// drift.
+pub fn quest_scale_run(
+    name: &str,
+    algorithms: &[Algorithm],
+    cluster: &ClusterConfig,
+    cache: &std::path::Path,
+) -> Result<ScaleRun, crate::hdfs::segment::SegmentError> {
+    let src = registry::quest_store(name, cache)?;
+    let seed = RunOptions::default().seed;
+    let file = hdfs::put_segmented(
+        std::sync::Arc::new(src),
+        cluster.nodes.len(),
+        hdfs::DEFAULT_REPLICATION,
+        seed,
+    );
+    let min_sup = registry::reference_min_sup(&file.name).unwrap_or(0.01);
+    let opts = RunOptions { split_lines: file.block_lines, seed, ..Default::default() };
+    let outcomes: Vec<MiningOutcome> = algorithms
+        .iter()
+        .map(|&algo| run_on_file(algo, &file, min_sup, cluster, &opts))
+        .collect();
+    Ok(ScaleRun { dataset: file.name.clone(), n_txns: file.len(), min_sup, outcomes })
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Markdown scale table (the paper's Fig 5(a) as a table): one row per
+/// dataset, one simulated-seconds column per algorithm.
+pub fn scale_markdown(algorithms: &[Algorithm], runs: &[ScaleRun]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = write!(s, "| dataset | transactions | min_sup |");
+    for a in algorithms {
+        let _ = write!(s, " {} (s) |", a.name());
+    }
+    let _ = writeln!(s);
+    let _ = write!(s, "|---|---:|---:|");
+    for _ in algorithms {
+        let _ = write!(s, "---:|");
+    }
+    let _ = writeln!(s);
+    for run in runs {
+        let _ = write!(s, "| {} | {} | {:.4} |", run.dataset, run.n_txns, run.min_sup);
+        for o in &run.outcomes {
+            let _ = write!(s, " {:.1} |", o.actual_time);
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// JSON dump of the same grid, with per-run detail (phase count, frequent
+/// itemsets, simulated and host times) for downstream tooling.
+pub fn scale_json(algorithms: &[Algorithm], runs: &[ScaleRun]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = write!(s, "{{\n  \"algorithms\": [");
+    for (i, a) in algorithms.iter().enumerate() {
+        let _ = write!(s, "{}\"{}\"", if i > 0 { ", " } else { "" }, json_escape(a.name()));
+    }
+    let _ = writeln!(s, "],\n  \"runs\": [");
+    for (ri, run) in runs.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"dataset\": \"{}\", \"n_txns\": {}, \"min_sup\": {}, \"results\": [",
+            json_escape(&run.dataset),
+            run.n_txns,
+            run.min_sup,
+        );
+        for (i, o) in run.outcomes.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}{{\"algorithm\": \"{}\", \"actual_time\": {:.3}, \"total_time\": {:.3}, \
+                 \"wall_time\": {:.3}, \"phases\": {}, \"frequent\": {}, \"levels\": {}}}",
+                if i > 0 { ", " } else { "" },
+                json_escape(o.algorithm.name()),
+                o.actual_time,
+                o.total_time,
+                o.wall_time,
+                o.n_phases(),
+                o.total_frequent(),
+                o.levels.len(),
+            );
+        }
+        let _ = writeln!(s, "]}}{}", if ri + 1 < runs.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "  ]\n}}");
+    s
+}
+
 /// Candidates-per-phase table (Tables 7-9 layout).
 pub fn candidates_table(outcomes: &[&MiningOutcome], title: &str) -> String {
     use std::fmt::Write as _;
@@ -222,6 +349,54 @@ mod tests {
         assert!(t.contains("SPC"));
         let c = candidates_table(&outs, "tiny 0.2 candidates");
         assert!(c.contains("Pass 2"));
+    }
+
+    #[test]
+    fn scale_table_renders_markdown_and_json() {
+        let db = tiny_db();
+        let algorithms = vec![Algorithm::Spc, Algorithm::OptimizedEtdpc];
+        let cluster = ClusterConfig::uniform(2, 2);
+        let opts = RunOptions { split_lines: 30, ..Default::default() };
+        let outcomes: Vec<MiningOutcome> =
+            algorithms.iter().map(|&a| run_with(a, &db, 0.3, &cluster, &opts)).collect();
+        let runs = vec![ScaleRun {
+            dataset: db.name.clone(),
+            n_txns: db.len(),
+            min_sup: 0.3,
+            outcomes,
+        }];
+        let md = scale_markdown(&algorithms, &runs);
+        assert!(md.contains("| dataset |"));
+        assert!(md.contains("SPC (s)"));
+        assert!(md.contains("Optimized-ETDPC (s)"));
+        assert!(md.contains(&format!("| {} | 120 | 0.3000 |", db.name)));
+        let json = scale_json(&algorithms, &runs);
+        assert!(json.contains("\"algorithms\": [\"SPC\", \"Optimized-ETDPC\"]"));
+        assert!(json.contains("\"n_txns\": 120"));
+        assert!(json.contains("\"frequent\":"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let o = json.matches(open).count();
+            let c = json.matches(close).count();
+            assert_eq!(o, c, "unbalanced {open}{close} in {json}");
+        }
+    }
+
+    #[test]
+    fn quest_scale_run_streams_and_renders() {
+        let cache = std::env::temp_dir().join("mrapriori_tables_quest_cache");
+        let _ = std::fs::remove_dir_all(&cache);
+        let algorithms = vec![Algorithm::Spc];
+        let run =
+            quest_scale_run("t6i2d300", &algorithms, &ClusterConfig::uniform(2, 2), &cache)
+                .unwrap();
+        assert_eq!(run.dataset, "t6i2d300");
+        assert_eq!(run.n_txns, 300);
+        assert_eq!(run.outcomes.len(), 1);
+        assert!(run.outcomes[0].total_frequent() > 0);
+        let md = scale_markdown(&algorithms, &[run]);
+        assert!(md.contains("t6i2d300"));
+        std::fs::remove_dir_all(&cache).unwrap();
     }
 
     #[test]

@@ -4,14 +4,20 @@
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy)]
+/// Timing summary of one micro-benchmark.
 pub struct Stats {
+    /// Timed iterations.
     pub iters: usize,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
+    /// Median iteration, seconds.
     pub median_s: f64,
+    /// Mean iteration, seconds.
     pub mean_s: f64,
 }
 
 impl Stats {
+    /// Throughput at the median: units per second.
     pub fn per_sec(&self, units_per_iter: f64) -> f64 {
         units_per_iter / self.median_s
     }

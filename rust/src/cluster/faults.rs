@@ -16,6 +16,7 @@ use super::scheduler::SimTask;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// Failure/straggler injection parameters.
 pub struct FaultModel {
     /// Probability an attempt fails (uniform per attempt).
     pub fail_prob: f64,
@@ -30,6 +31,7 @@ pub struct FaultModel {
     /// Launch a backup when an attempt exceeds this multiple of the median
     /// finished-attempt duration.
     pub spec_threshold: f64,
+    /// Injection seed (fully deterministic).
     pub seed: u64,
 }
 
@@ -48,12 +50,19 @@ impl Default for FaultModel {
 }
 
 #[derive(Debug, Clone, Default)]
+/// What the fault-injected schedule produced.
 pub struct FaultOutcome {
+    /// Phase makespan with faults, seconds.
     pub makespan: f64,
+    /// Total attempts launched (retries and backups included).
     pub attempts: usize,
+    /// Failed attempts.
     pub failures: usize,
+    /// Straggling attempts.
     pub stragglers: usize,
+    /// Backup attempts launched.
     pub speculative_launches: usize,
+    /// Backups that finished before their original attempt.
     pub speculative_wins: usize,
     /// True if some task exhausted its attempts.
     pub job_failed: bool,

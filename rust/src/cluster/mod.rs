@@ -25,18 +25,24 @@ use crate::mapreduce::engine::TaskMeter;
 /// cluster: two physical 2 GB nodes, two faster virtual 4 GB nodes).
 #[derive(Debug, Clone)]
 pub struct NodeSpec {
+    /// Node name (DN1, DN2, ...).
     pub name: String,
     /// Relative compute speed (1.0 = baseline physical node).
     pub speed: f64,
+    /// Concurrent map tasks the node can run.
     pub map_slots: usize,
+    /// Concurrent reduce tasks the node can run.
     pub reduce_slots: usize,
 }
 
 /// Full cluster + cost-model configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// DataNode topology.
     pub nodes: Vec<NodeSpec>,
+    /// Cost-model weights (operation counters -> seconds).
     pub weights: CostWeights,
+    /// Fixed overheads (job submit, task start, ...).
     pub overhead: OverheadParams,
     /// Reduce tasks per job.
     pub n_reducers: usize,
@@ -82,10 +88,12 @@ impl ClusterConfig {
         }
     }
 
+    /// Sum of map slots across all nodes.
     pub fn total_map_slots(&self) -> usize {
         self.nodes.iter().map(|n| n.map_slots).sum()
     }
 
+    /// Sum of reduce slots across all nodes.
     pub fn total_reduce_slots(&self) -> usize {
         self.nodes.iter().map(|n| n.reduce_slots).sum()
     }
@@ -94,9 +102,13 @@ impl ClusterConfig {
 /// Simulated timing of one MapReduce job (one "phase" of the paper).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct JobTiming {
+    /// Fixed job-submit overhead, seconds.
     pub submit: f64,
+    /// Map-phase makespan, seconds.
     pub map_makespan: f64,
+    /// Serialized shuffle time, seconds.
     pub shuffle: f64,
+    /// Reduce-phase makespan, seconds.
     pub reduce_makespan: f64,
 }
 

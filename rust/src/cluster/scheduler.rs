@@ -13,23 +13,33 @@ use super::costmodel::OverheadParams;
 /// nodes holding its input replicas.
 #[derive(Debug, Clone)]
 pub struct SimTask {
+    /// Cost-modeled compute seconds.
     pub compute_secs: f64,
+    /// Nodes holding the task's input replicas.
     pub preferred_nodes: Vec<usize>,
 }
 
 /// Placement decision for one task.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Assignment {
+    /// Chosen DataNode.
     pub node: usize,
+    /// Slot index on that node.
     pub slot: usize,
+    /// Start time, seconds into the phase.
     pub start: f64,
+    /// Finish time, seconds into the phase.
     pub finish: f64,
+    /// Whether the placement was data-local.
     pub local: bool,
 }
 
 #[derive(Debug, Clone, Default)]
+/// Full placement of one phase.
 pub struct ScheduleOutcome {
+    /// Per-task placements, in submission order.
     pub assignments: Vec<Assignment>,
+    /// When the last task finishes, seconds.
     pub makespan: f64,
 }
 

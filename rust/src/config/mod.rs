@@ -7,12 +7,18 @@ use crate::util::tomlmini::Doc;
 use std::path::Path;
 
 #[derive(Debug)]
+/// Failures loading a configuration file.
 pub enum ConfigError {
+    /// The file could not be read.
     Io {
+        /// Path that failed.
         path: String,
+        /// Underlying error.
         source: std::io::Error,
     },
+    /// The file is not valid TOML-subset syntax.
     Parse(crate::util::tomlmini::ParseError),
+    /// The file parsed but holds inconsistent settings.
     Invalid(String),
 }
 
@@ -49,6 +55,7 @@ pub fn load_cluster(path: &Path) -> Result<ClusterConfig, ConfigError> {
     cluster_from_doc(&Doc::parse(&text)?)
 }
 
+/// Build a cluster config from a parsed document.
 pub fn cluster_from_doc(doc: &Doc) -> Result<ClusterConfig, ConfigError> {
     let mut cfg = ClusterConfig::paper_cluster();
 
@@ -155,7 +162,9 @@ pub fn render_cluster(cfg: &ClusterConfig) -> String {
 
 /// Keep NodeSpec public-API discoverable from this module too.
 pub type Node = NodeSpec;
+/// Alias of [`CostWeights`].
 pub type Weights = CostWeights;
+/// Alias of [`OverheadParams`].
 pub type Overheads = OverheadParams;
 
 #[cfg(test)]

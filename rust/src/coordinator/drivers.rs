@@ -49,6 +49,7 @@ impl PhaseController for SpcController {
 
 /// FPC: a fixed number of passes per phase ("generally 3", Lin et al.).
 pub struct FpcController {
+    /// Fixed passes per phase (the paper quotes 3).
     pub n: usize,
 }
 
@@ -81,6 +82,7 @@ pub struct DpcController {
 }
 
 impl DpcController {
+    /// Build with the paper's fast-phase α and β threshold.
     pub fn new(alpha_fast: f64, beta: f64) -> Self {
         Self { alpha_fast, beta, et_prev: 0.0 }
     }
@@ -135,8 +137,11 @@ impl PhaseController for VfpcController {
 /// ETDPC (Algorithm 4): candidate threshold with α driven by the *relative*
 /// elapsed time of the two preceding phases (β₁ = 40 s, β₂ = 60 s).
 pub struct EtdpcController {
+    /// Current candidate-threshold multiplier α.
     pub alpha: f64,
+    /// β₁ threshold in seconds (paper: 40).
     pub beta1: f64,
+    /// β₂ threshold in seconds (paper: 60).
     pub beta2: f64,
     /// Elapsed time of the phase before the last (ETprev).
     pub et_prev: f64,
@@ -145,6 +150,7 @@ pub struct EtdpcController {
 }
 
 impl EtdpcController {
+    /// Start with α = 1 and the paper's β₁/β₂ thresholds.
     pub fn new() -> Self {
         Self { alpha: 1.0, beta1: 40.0, beta2: 60.0, et_prev: 0.0, started: false }
     }

@@ -44,6 +44,7 @@ pub struct FusedOneTwoMapper {
 }
 
 impl FusedOneTwoMapper {
+    /// Counter over the dense universe `0..n_items`.
     pub fn new(n_items: usize) -> Self {
         Self { counter: crate::apriori::triangular::TriangularCounter::new(n_items), raw_writes: 0 }
     }
@@ -88,8 +89,10 @@ pub enum PassPolicy {
 /// MapReduce implementation) or once per task (hand-optimized variant).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum GenMode {
+    /// Charge generation cost once per record (the paper's mappers).
     #[default]
     PerRecord,
+    /// Charge generation cost once per task (hand-optimized ablation).
     PerTask,
 }
 
@@ -165,6 +168,7 @@ pub struct Job2Mapper {
 }
 
 impl Job2Mapper {
+    /// Mapper executing `plan`, with one count buffer per pass trie.
     pub fn new(plan: Arc<PhasePlan>, gen_mode: GenMode) -> Self {
         let counts = plan.tries.iter().map(|t| vec![0u64; t.node_count()]).collect();
         Self { plan, gen_mode, counts, scratch: Vec::new(), records: 0 }

@@ -24,16 +24,24 @@ use std::sync::Arc;
 /// The seven algorithms of the paper's evaluation (§5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
+    /// Single Pass Counting: one MapReduce job per Apriori pass.
     Spc,
+    /// Fixed Passes Combined-counting: every phase combines n passes.
     Fpc,
+    /// Dynamic Passes Combined-counting: candidate-count threshold α·|L|.
     Dpc,
+    /// Variable-size FPC: pass count grows per phase (2, 3, 4, ...).
     Vfpc,
+    /// Elapsed-Time-based DPC: α driven by preceding phase times.
     Etdpc,
+    /// VFPC with pruning skipped after a phase's first pass (§4.2).
     OptimizedVfpc,
+    /// ETDPC with pruning skipped after a phase's first pass (§4.2).
     OptimizedEtdpc,
 }
 
 impl Algorithm {
+    /// All seven algorithms, in the paper's presentation order.
     pub const ALL: [Algorithm; 7] = [
         Algorithm::Spc,
         Algorithm::Fpc,
@@ -44,6 +52,7 @@ impl Algorithm {
         Algorithm::OptimizedEtdpc,
     ];
 
+    /// The paper's display name (e.g. "Optimized-VFPC").
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Spc => "SPC",
@@ -56,6 +65,7 @@ impl Algorithm {
         }
     }
 
+    /// Parse an algorithm name (case- and punctuation-insensitive).
     pub fn parse(s: &str) -> Option<Algorithm> {
         let norm = s.to_ascii_lowercase().replace(['-', '_'], "");
         Some(match norm.as_str() {
@@ -145,12 +155,17 @@ pub struct PhaseRecord {
 /// Result of one full mining run.
 #[derive(Debug, Clone)]
 pub struct MiningOutcome {
+    /// Which algorithm produced this outcome.
     pub algorithm: Algorithm,
+    /// Name of the mined dataset.
     pub dataset: String,
+    /// Fractional minimum support of the run.
     pub min_sup: f64,
+    /// Absolute minimum support count (ceil of min_sup · N).
     pub min_count: u64,
     /// `levels[k-1]` = frequent k-itemsets (identical to the oracle's).
     pub levels: Vec<Level>,
+    /// Per-phase metrics, in execution order.
     pub phases: Vec<PhaseRecord>,
     /// Sum of per-phase simulated elapsed times ("Total" in Tables 3-5).
     pub total_time: f64,
@@ -161,14 +176,17 @@ pub struct MiningOutcome {
 }
 
 impl MiningOutcome {
+    /// Total frequent itemsets across all levels.
     pub fn total_frequent(&self) -> usize {
         self.levels.iter().map(|l| l.len()).sum()
     }
 
+    /// |L_k| per level (the shape of the paper's Table 6).
     pub fn lk_profile(&self) -> Vec<usize> {
         self.levels.iter().map(|l| l.len()).collect()
     }
 
+    /// Number of MapReduce phases the run took.
     pub fn n_phases(&self) -> usize {
         self.phases.len()
     }
@@ -218,7 +236,8 @@ pub fn run(
     run_with(algo, db, min_sup, cluster, &RunOptions { split_lines, ..Default::default() })
 }
 
-/// Run `algo` on `db` with explicit options.
+/// Run `algo` on an in-memory `db` with explicit options: stores the
+/// database as an in-memory HDFS file, then mines it via [`run_on_file`].
 pub fn run_with(
     algo: Algorithm,
     db: &TransactionDb,
@@ -226,10 +245,27 @@ pub fn run_with(
     cluster: &ClusterConfig,
     opts: &RunOptions,
 ) -> MiningOutcome {
+    let file =
+        hdfs::put(db, opts.split_lines, cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, opts.seed);
+    run_on_file(algo, &file, min_sup, cluster, opts)
+}
+
+/// Run `algo` over an already-stored HDFS file — the out-of-core entry
+/// point. The file may be backed by either [`hdfs::RecordSource`] backend;
+/// with a segment store ([`hdfs::put_segmented`]) the driver never
+/// materializes the dataset, and each map task's resident record buffer is
+/// bounded by the HDFS block size. Output is byte-identical to mining the
+/// materialized database through [`run_with`].
+pub fn run_on_file(
+    algo: Algorithm,
+    file: &hdfs::HdfsFile,
+    min_sup: f64,
+    cluster: &ClusterConfig,
+    opts: &RunOptions,
+) -> MiningOutcome {
     let run_start = std::time::Instant::now();
-    let min_count = db.min_count(min_sup);
-    let file = hdfs::put(db, opts.split_lines, cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, opts.seed);
-    let splits = hdfs::nline_splits(&file, opts.split_lines);
+    let min_count = file.min_count(min_sup);
+    let splits = hdfs::nline_splits(file, opts.split_lines);
 
     let mut levels: Vec<Level> = Vec::new();
     let mut phases: Vec<PhaseRecord> = Vec::new();
@@ -237,7 +273,7 @@ pub fn run_with(
     // ---- Job1: frequent 1-itemsets (Algorithm 1), optionally fused with
     // pass 2 via the triangular-matrix counter (ref [6]) ------------------
     let job1_wall = std::time::Instant::now();
-    let n_items = db.n_items;
+    let n_items = file.n_items;
     let out = if opts.fuse_pass_2 {
         run_job(JobSpec {
             name: "job1+2".into(),
@@ -296,7 +332,7 @@ pub fn run_with(
         let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
         return MiningOutcome {
             algorithm: algo,
-            dataset: db.name.clone(),
+            dataset: file.name.clone(),
             min_sup,
             min_count,
             levels,
@@ -316,7 +352,7 @@ pub fn run_with(
             let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
             return MiningOutcome {
                 algorithm: algo,
-                dataset: db.name.clone(),
+                dataset: file.name.clone(),
                 min_sup,
                 min_count,
                 levels,
@@ -416,7 +452,7 @@ pub fn run_with(
     let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
     MiningOutcome {
         algorithm: algo,
-        dataset: db.name.clone(),
+        dataset: file.name.clone(),
         min_sup,
         min_count,
         levels,

@@ -22,6 +22,7 @@ use crate::itemset::{Item, Itemset};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// One relational attribute of the generated dataset.
 pub struct AttrSpec {
     /// Number of distinct values of this attribute.
     pub domain: usize,
@@ -30,9 +31,13 @@ pub struct AttrSpec {
 }
 
 #[derive(Debug, Clone)]
+/// Parameters of the attribute-value generator.
 pub struct AttrParams {
+    /// Dataset name.
     pub name: String,
+    /// Transactions to generate.
     pub n_txns: usize,
+    /// Attribute domains and dominances.
     pub attrs: Vec<AttrSpec>,
     /// Probability a transaction is conformist.
     pub conform_prob: f64,
@@ -45,10 +50,12 @@ pub struct AttrParams {
     /// without this split, *every* k-subset of dominant values inherits the
     /// conformist joint support and |L_k| explodes combinatorially.
     pub core_attrs: usize,
+    /// Generator seed.
     pub seed: u64,
 }
 
 impl AttrParams {
+    /// Total items: the sum of attribute domains.
     pub fn n_items(&self) -> usize {
         self.attrs.iter().map(|a| a.domain).sum()
     }

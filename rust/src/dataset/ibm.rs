@@ -18,8 +18,11 @@ use crate::itemset::{Item, Itemset};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// Parameters of the IBM Quest generative process.
 pub struct IbmParams {
+    /// `D`: number of transactions.
     pub n_txns: usize,
+    /// `N`: size of the item universe.
     pub n_items: usize,
     /// `T`: mean transaction width.
     pub avg_txn_len: f64,
@@ -29,7 +32,9 @@ pub struct IbmParams {
     pub n_patterns: usize,
     /// Fraction of a pattern inherited from its predecessor.
     pub correlation: f64,
+    /// Mean of the per-pattern corruption level.
     pub corruption_mean: f64,
+    /// Std-dev of the per-pattern corruption level.
     pub corruption_sd: f64,
     /// Optional "anchor": force pattern 0 to have exactly this many items.
     /// Long anchors model the heavy maximal itemsets that give dense Quest
@@ -37,6 +42,7 @@ pub struct IbmParams {
     pub anchor_len: Option<usize>,
     /// Fraction of the total pattern weight given to the anchor.
     pub anchor_weight: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 
@@ -58,72 +64,120 @@ impl Default for IbmParams {
     }
 }
 
-/// Generate a database according to `p`.
-pub fn generate(p: &IbmParams) -> TransactionDb {
-    assert!(p.n_items >= 2 && p.n_txns > 0 && p.n_patterns > 0);
-    let mut rng = Rng::new(p.seed);
+/// Streaming Quest generator: the pattern tables are built eagerly (they
+/// are small — `O(n_patterns · avg_pattern_len)`), then transactions are
+/// drawn one at a time from the iterator, so a T40I10D1M-class dataset can
+/// be written straight to a segment store without ever being resident.
+///
+/// The RNG call sequence is identical to the original batch [`generate`],
+/// so `generate(p).txns == QuestGen::new(p).collect::<Vec<_>>()` for every
+/// parameter set (tested below) — the registry's tuned datasets keep their
+/// exact |L_k| profiles.
+pub struct QuestGen {
+    rng: Rng,
+    item_cum: Vec<f64>,
+    patterns: Vec<Itemset>,
+    corruption: Vec<f64>,
+    weight_cum: Vec<f64>,
+    avg_txn_len: f64,
+    n_items: usize,
+    remaining: usize,
+}
 
-    // Exponentially-skewed item popularity (common items get low ids).
-    let mut item_cum = Vec::with_capacity(p.n_items);
-    let mut acc = 0.0;
-    for i in 0..p.n_items {
-        // weight ∝ exp(-i / (n/5)): a few hundred dominate, long tail.
-        acc += (-(i as f64) / (p.n_items as f64 / 5.0)).exp();
-        item_cum.push(acc);
-    }
+impl QuestGen {
+    /// Build the pattern tables for `p` (steps 1–2 of the generative
+    /// process); transactions are then drawn lazily via [`Iterator`].
+    pub fn new(p: &IbmParams) -> Self {
+        assert!(p.n_items >= 2 && p.n_txns > 0 && p.n_patterns > 0);
+        let mut rng = Rng::new(p.seed);
 
-    // 1-2. Maximal potential patterns with weights and corruption levels.
-    let mut patterns: Vec<Itemset> = Vec::with_capacity(p.n_patterns);
-    let mut weights = Vec::with_capacity(p.n_patterns);
-    let mut corruption = Vec::with_capacity(p.n_patterns);
-    for pi in 0..p.n_patterns {
-        let len = p.avg_pattern_len.max(1.0);
-        let mut size = rng.poisson(len).max(1).min(p.n_items);
-        if pi == 0 {
-            if let Some(a) = p.anchor_len {
-                size = a.min(p.n_items);
-            }
+        // Exponentially-skewed item popularity (common items get low ids).
+        let mut item_cum = Vec::with_capacity(p.n_items);
+        let mut acc = 0.0;
+        for i in 0..p.n_items {
+            // weight ∝ exp(-i / (n/5)): a few hundred dominate, long tail.
+            acc += (-(i as f64) / (p.n_items as f64 / 5.0)).exp();
+            item_cum.push(acc);
         }
-        let mut set: Itemset = Vec::with_capacity(size);
-        if pi > 0 && !patterns[pi - 1].is_empty() {
-            // Inherit ~correlation fraction from the previous pattern.
-            let prev = &patterns[pi - 1];
-            for &it in prev.iter() {
-                if set.len() < size && rng.chance(p.correlation) {
-                    set.push(it);
+
+        // 1-2. Maximal potential patterns with weights and corruption levels.
+        let mut patterns: Vec<Itemset> = Vec::with_capacity(p.n_patterns);
+        let mut weights = Vec::with_capacity(p.n_patterns);
+        let mut corruption = Vec::with_capacity(p.n_patterns);
+        for pi in 0..p.n_patterns {
+            let len = p.avg_pattern_len.max(1.0);
+            let mut size = rng.poisson(len).max(1).min(p.n_items);
+            if pi == 0 {
+                if let Some(a) = p.anchor_len {
+                    size = a.min(p.n_items);
                 }
             }
+            let mut set: Itemset = Vec::with_capacity(size);
+            if pi > 0 && !patterns[pi - 1].is_empty() {
+                // Inherit ~correlation fraction from the previous pattern.
+                let prev = &patterns[pi - 1];
+                for &it in prev.iter() {
+                    if set.len() < size && rng.chance(p.correlation) {
+                        set.push(it);
+                    }
+                }
+            }
+            while set.len() < size {
+                set.push(rng.weighted(&item_cum) as Item);
+            }
+            crate::itemset::canonicalize(&mut set);
+            patterns.push(set);
+            weights.push(rng.exp());
+            corruption
+                .push((p.corruption_mean + p.corruption_sd * rng.gaussian()).clamp(0.0, 0.95));
         }
-        while set.len() < size {
-            set.push(rng.weighted(&item_cum) as Item);
+        if p.anchor_len.is_some() && p.anchor_weight > 0.0 && p.n_patterns > 1 {
+            // Give the anchor `anchor_weight` of the total mass.
+            let others: f64 = weights[1..].iter().sum();
+            weights[0] = p.anchor_weight / (1.0 - p.anchor_weight) * others;
         }
-        crate::itemset::canonicalize(&mut set);
-        patterns.push(set);
-        weights.push(rng.exp());
-        corruption.push((p.corruption_mean + p.corruption_sd * rng.gaussian()).clamp(0.0, 0.95));
-    }
-    if p.anchor_len.is_some() && p.anchor_weight > 0.0 && p.n_patterns > 1 {
-        // Give the anchor `anchor_weight` of the total mass.
-        let others: f64 = weights[1..].iter().sum();
-        weights[0] = p.anchor_weight / (1.0 - p.anchor_weight) * others;
-    }
-    let mut weight_cum = Vec::with_capacity(p.n_patterns);
-    let mut acc = 0.0;
-    for w in &weights {
-        acc += w;
-        weight_cum.push(acc);
+        let mut weight_cum = Vec::with_capacity(p.n_patterns);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w;
+            weight_cum.push(acc);
+        }
+
+        Self {
+            rng,
+            item_cum,
+            patterns,
+            corruption,
+            weight_cum,
+            avg_txn_len: p.avg_txn_len,
+            n_items: p.n_items,
+            remaining: p.n_txns,
+        }
     }
 
-    // 3. Transactions.
-    let mut txns: Vec<Itemset> = Vec::with_capacity(p.n_txns);
-    for _ in 0..p.n_txns {
-        let size = rng.poisson(p.avg_txn_len).max(1);
+    /// Size of the dense item universe the generator draws from.
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+}
+
+impl Iterator for QuestGen {
+    type Item = Itemset;
+
+    /// Step 3 of the generative process: one transaction per call.
+    fn next(&mut self) -> Option<Itemset> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let rng = &mut self.rng;
+        let size = rng.poisson(self.avg_txn_len).max(1);
         let mut t: Itemset = Vec::with_capacity(size + 4);
         let mut guard = 0;
         while t.len() < size && guard < 64 {
             guard += 1;
-            let pat = &patterns[rng.weighted(&weight_cum)];
-            let corr = corruption[guard % corruption.len()];
+            let pat = &self.patterns[rng.weighted(&self.weight_cum)];
+            let corr = self.corruption[guard % self.corruption.len()];
             // Corrupt: drop items while the coin stays below the level.
             let mut chosen: Vec<Item> = pat.clone();
             while !chosen.is_empty() && rng.chance(corr) {
@@ -141,11 +195,19 @@ pub fn generate(p: &IbmParams) -> TransactionDb {
         }
         crate::itemset::canonicalize(&mut t);
         if t.is_empty() {
-            t.push(rng.weighted(&item_cum) as Item);
+            t.push(rng.weighted(&self.item_cum) as Item);
         }
-        txns.push(t);
+        Some(t)
     }
 
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+/// Generate a database according to `p`, fully materialized.
+pub fn generate(p: &IbmParams) -> TransactionDb {
+    let txns: Vec<Itemset> = QuestGen::new(p).collect();
     let db = TransactionDb::new(
         format!("ibm-t{}-d{}", p.avg_txn_len as usize, p.n_txns),
         p.n_items,
@@ -176,6 +238,20 @@ mod tests {
         assert_eq!(db.len(), 500);
         assert!(db.validate().is_ok());
         assert!(db.max_item().unwrap() < 100);
+    }
+
+    #[test]
+    fn streamed_matches_batch() {
+        // The lazy iterator must replay the exact batch RNG sequence —
+        // the registry's tuned |L_k| profiles depend on it.
+        let p = small();
+        let streamed: Vec<Itemset> = QuestGen::new(&p).collect();
+        assert_eq!(generate(&p).txns, streamed);
+        let mut gen = QuestGen::new(&p);
+        assert_eq!(gen.size_hint(), (500, Some(500)));
+        gen.next();
+        assert_eq!(gen.size_hint(), (499, Some(499)));
+        assert_eq!(gen.n_items(), 100);
     }
 
     #[test]

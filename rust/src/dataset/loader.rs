@@ -2,15 +2,27 @@
 //! datasets use: one transaction per line, space-separated integer items.
 
 use super::TransactionDb;
+use crate::hdfs::segment::{SegmentError, SegmentSource, SegmentWriter};
 use crate::itemset::Itemset;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
+/// Errors reading a transaction file.
 #[derive(Debug)]
 pub enum LoadError {
+    /// Underlying filesystem error.
     Io(std::io::Error),
-    BadItem { line: usize, token: String },
+    /// A token on `line` is not a parsable item id.
+    BadItem {
+        /// 1-based source line number.
+        line: usize,
+        /// The offending token.
+        token: String,
+    },
+    /// The file holds no transactions.
     Empty,
+    /// A segment-store error during import.
+    Store(SegmentError),
 }
 
 impl std::fmt::Display for LoadError {
@@ -21,6 +33,7 @@ impl std::fmt::Display for LoadError {
                 write!(f, "line {line}: cannot parse item {token:?}")
             }
             LoadError::Empty => write!(f, "dataset is empty"),
+            LoadError::Store(e) => write!(f, "segment store: {e}"),
         }
     }
 }
@@ -29,6 +42,7 @@ impl std::error::Error for LoadError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             LoadError::Io(e) => Some(e),
+            LoadError::Store(e) => Some(e),
             _ => None,
         }
     }
@@ -37,6 +51,12 @@ impl std::error::Error for LoadError {
 impl From<std::io::Error> for LoadError {
     fn from(e: std::io::Error) -> Self {
         LoadError::Io(e)
+    }
+}
+
+impl From<SegmentError> for LoadError {
+    fn from(e: SegmentError) -> Self {
+        LoadError::Store(e)
     }
 }
 
@@ -73,10 +93,87 @@ pub fn read_transactions<R: std::io::Read>(r: R, name: &str) -> Result<Transacti
     Ok(TransactionDb::new(name, max_item as usize + 1, txns))
 }
 
+/// Load a FIMI text file, fully materialized.
 pub fn load_file(path: &Path) -> Result<TransactionDb, LoadError> {
     let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset").to_string();
     let f = std::fs::File::open(path)?;
     read_transactions(f, &name)
+}
+
+/// Statistics of a streamed FIMI scan.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamStats {
+    /// Transactions visited.
+    pub n_records: usize,
+    /// Largest item id seen (None when the file had no records).
+    pub max_item: Option<u32>,
+}
+
+/// Stream the FIMI text format record by record: `f` sees each canonical
+/// transaction once, and only one line is resident at a time. The
+/// out-of-core counterpart of [`read_transactions`].
+pub fn stream_transactions<R: std::io::Read>(
+    r: R,
+    mut f: impl FnMut(&Itemset) -> Result<(), LoadError>,
+) -> Result<StreamStats, LoadError> {
+    let reader = BufReader::new(r);
+    let mut stats = StreamStats { n_records: 0, max_item: None };
+    let mut t: Itemset = Vec::new();
+    for (idx, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        t.clear();
+        for tok in line.split_whitespace() {
+            let item: u32 = tok
+                .parse()
+                .map_err(|_| LoadError::BadItem { line: idx + 1, token: tok.to_string() })?;
+            t.push(item);
+        }
+        crate::itemset::canonicalize(&mut t);
+        if let Some(&m) = t.last() {
+            stats.max_item = Some(stats.max_item.map_or(m, |prev| prev.max(m)));
+        }
+        if !t.is_empty() {
+            stats.n_records += 1;
+            f(&t)?;
+        }
+    }
+    if stats.n_records == 0 {
+        return Err(LoadError::Empty);
+    }
+    Ok(stats)
+}
+
+/// Import a FIMI text file into an on-disk segment store at `dir` without
+/// materializing it: the streaming bridge from arbitrary user files into
+/// the out-of-core mining path ([`crate::hdfs::put_segmented`]).
+pub fn import_segmented(
+    path: &Path,
+    dir: &Path,
+    block_lines: usize,
+) -> Result<SegmentSource, LoadError> {
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset").to_string();
+    let f = std::fs::File::open(path)?;
+    let mut w = SegmentWriter::create(dir, name, block_lines)?;
+    stream_transactions(f, |t| w.push(t).map_err(LoadError::from))?;
+    Ok(w.finish()?)
+}
+
+/// Serialize one transaction as a FIMI line (shared with the segment
+/// store's writer so the two on-disk formats can never drift).
+pub(crate) fn write_txn(w: &mut impl Write, t: &Itemset) -> std::io::Result<()> {
+    let mut first = true;
+    for &i in t {
+        if !first {
+            write!(w, " ")?;
+        }
+        write!(w, "{i}")?;
+        first = false;
+    }
+    writeln!(w)
 }
 
 /// Write in the same format (round-trips with [`read_transactions`]).
@@ -84,17 +181,27 @@ pub fn write_file(db: &TransactionDb, path: &Path) -> std::io::Result<()> {
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
     for t in &db.txns {
-        let mut first = true;
-        for &i in t {
-            if !first {
-                write!(w, " ")?;
-            }
-            write!(w, "{i}")?;
-            first = false;
-        }
-        writeln!(w)?;
+        write_txn(&mut w, t)?;
     }
     w.flush()
+}
+
+/// Stream transactions from an iterator (e.g. a running
+/// [`crate::dataset::ibm::QuestGen`]) to a FIMI text file without ever
+/// materializing the dataset; returns the record count.
+pub fn write_file_streamed(
+    txns: impl IntoIterator<Item = Itemset>,
+    path: &Path,
+) -> std::io::Result<usize> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let mut n = 0;
+    for t in txns {
+        write_txn(&mut w, &t)?;
+        n += 1;
+    }
+    w.flush()?;
+    Ok(n)
 }
 
 #[cfg(test)]
@@ -127,6 +234,45 @@ mod tests {
     fn rejects_empty() {
         assert!(matches!(read_transactions("".as_bytes(), "t"), Err(LoadError::Empty)));
         assert!(matches!(read_transactions("\n#c\n".as_bytes(), "t"), Err(LoadError::Empty)));
+    }
+
+    #[test]
+    fn stream_matches_batch_reader() {
+        let text = "1 2 3\n\n# c\n3 1 2 1\n9\n";
+        let batch = read_transactions(text.as_bytes(), "t").unwrap();
+        let mut streamed: Vec<Itemset> = Vec::new();
+        let stats = stream_transactions(text.as_bytes(), |t| {
+            streamed.push(t.clone());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(streamed, batch.txns);
+        assert_eq!(stats.n_records, batch.len());
+        assert_eq!(stats.max_item, Some(9));
+        assert!(matches!(
+            stream_transactions("#only\n".as_bytes(), |_| Ok(())),
+            Err(LoadError::Empty)
+        ));
+    }
+
+    #[test]
+    fn import_segmented_roundtrip() {
+        use crate::hdfs::RecordSource as _;
+        let dir = std::env::temp_dir().join("mrapriori_loader_import");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("in.txt");
+        let db = TransactionDb::new("in", 8, vec![vec![0, 3], vec![1, 7], vec![2], vec![4, 5, 6]]);
+        write_file(&db, &file).unwrap();
+        let store_dir = dir.join("store");
+        let src = import_segmented(&file, &store_dir, 3).unwrap();
+        assert_eq!(src.len(), 4);
+        assert_eq!(src.name(), "in");
+        assert_eq!(src.block_lines(), 3);
+        let mut got = Vec::new();
+        src.for_each(0..4, &mut |_, r| got.push(r.clone()));
+        assert_eq!(got, db.txns);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -13,20 +13,26 @@ use crate::itemset::{Item, Itemset};
 /// An in-memory transaction database with a dense item universe `0..n_items`.
 #[derive(Debug, Clone)]
 pub struct TransactionDb {
+    /// Dataset name (registry key / report label).
     pub name: String,
+    /// Size of the dense item universe.
     pub n_items: usize,
+    /// Transactions, each a canonical itemset.
     pub txns: Vec<Itemset>,
 }
 
 impl TransactionDb {
+    /// Assemble a database from its parts.
     pub fn new(name: impl Into<String>, n_items: usize, txns: Vec<Itemset>) -> Self {
         Self { name: name.into(), n_items, txns }
     }
 
+    /// Number of transactions.
     pub fn len(&self) -> usize {
         self.txns.len()
     }
 
+    /// Whether the database holds no transactions.
     pub fn is_empty(&self) -> bool {
         self.txns.is_empty()
     }

@@ -8,20 +8,102 @@
 //! as Table 6: unimodal, peak near k=6..7, maximal frequent length ~13–15.
 //! See DESIGN.md §3 (substitution table).
 
+use super::ibm::{self, IbmParams, QuestGen};
 use super::attr::{self, AttrParams, AttrSpec};
-use super::ibm::{self, IbmParams};
 use super::TransactionDb;
+use crate::hdfs::segment::{self, SegmentError, SegmentSource};
+use std::path::Path;
 
 /// Dataset names accepted by the CLI and the bench harness.
 pub const NAMES: [&str; 3] = ["c20d10k", "chess", "mushroom"];
 
-/// The paper's reference minimum support for each dataset (§5.3).
+/// Canonical members of the large-synthetic Quest family. Any name of the
+/// shape `t{T}i{I}d{D}` (D suffixed `k`/`m`) is accepted by
+/// [`quest_params`]; these four are the documented scale-sweep entries.
+pub const QUEST_NAMES: [&str; 4] = ["t10i4d100k", "t40i10d100k", "t10i4d1m", "t40i10d1m"];
+
+/// Parse a Quest-family name like `t10i4d100k` or `t40i10d1m` into
+/// generator parameters: `T` = mean transaction width, `I` = mean pattern
+/// size, `D` = transaction count (with `k`/`m` multipliers). Standard
+/// Quest settings otherwise: 1000 items, 2000 maximal patterns, 0.5
+/// correlation and corruption. The seed is a fixed function of (T, I, D),
+/// so every entry is deterministic across builds and machines.
+pub fn quest_params(name: &str) -> Option<IbmParams> {
+    let lower = name.to_ascii_lowercase();
+    let rest = lower.strip_prefix('t')?;
+    let ipos = rest.find('i')?;
+    let (t_str, rest) = rest.split_at(ipos);
+    let rest = rest.strip_prefix('i')?;
+    let dpos = rest.find('d')?;
+    let (i_str, rest) = rest.split_at(dpos);
+    let rest = rest.strip_prefix('d')?;
+    let (d_str, mult) = match rest.strip_suffix('m') {
+        Some(d) => (d, 1_000_000usize),
+        None => match rest.strip_suffix('k') {
+            Some(d) => (d, 1_000),
+            None => (rest, 1),
+        },
+    };
+    let t: usize = t_str.parse().ok().filter(|&v| v >= 1)?;
+    let i: usize = i_str.parse().ok().filter(|&v| v >= 1)?;
+    let d: usize = d_str.parse().ok().filter(|&v| v >= 1)?;
+    let n_txns = d.checked_mul(mult)?;
+    let seed = 0x9E37_79B9_7F4A_7C15u64
+        ^ (t as u64).wrapping_mul(1_000_003)
+        ^ (i as u64).wrapping_mul(7_919)
+        ^ n_txns as u64;
+    Some(IbmParams {
+        n_txns,
+        n_items: 1000,
+        avg_txn_len: t as f64,
+        avg_pattern_len: i as f64,
+        n_patterns: 2000,
+        correlation: 0.5,
+        corruption_mean: 0.5,
+        corruption_sd: 0.1,
+        anchor_len: None,
+        anchor_weight: 0.0,
+        seed,
+    })
+}
+
+/// Generate-to-disk cache for Quest-family datasets: the store lives at
+/// `<cache_dir>/<name>/` and is reused when present (stale stores whose
+/// record count disagrees with the name are regenerated). Generation
+/// streams [`QuestGen`] into a [`segment::SegmentWriter`], so even the
+/// million-transaction entries never materialize in memory. Block size is
+/// the dataset's [`split_lines`], keeping one lazily-decoded block per
+/// paper-style map task.
+pub fn quest_store(name: &str, cache_dir: &Path) -> Result<SegmentSource, SegmentError> {
+    let p = quest_params(name).ok_or_else(|| {
+        SegmentError::InvalidName(format!(
+            "{name:?} is not a Quest-family name (expected t<T>i<I>d<D>, e.g. t10i4d100k)"
+        ))
+    })?;
+    let canonical = name.to_ascii_lowercase();
+    let dir = cache_dir.join(&canonical);
+    let block_lines = split_lines(&canonical);
+    if segment::exists(&dir) {
+        let src = segment::open(&dir)?;
+        // A store is current only if both the record count and the block
+        // granularity match what this name implies (someone may have
+        // `generate --segmented`-ed a custom-block store into the cache).
+        if src.len() == p.n_txns && src.block_lines() == block_lines {
+            return Ok(src);
+        }
+    }
+    segment::write_store(&dir, canonical.as_str(), block_lines, p.n_items, QuestGen::new(&p))
+}
+
+/// The paper's reference minimum support for each dataset (§5.3). Quest
+/// entries use scale-sweep defaults: sparse T10 mines at 1%, the denser
+/// T40 at 3% (keeping the candidate space sane at 10^5–10^6 rows).
 pub fn reference_min_sup(name: &str) -> Option<f64> {
     match name {
         "c20d10k" => Some(0.15),
         "chess" => Some(0.65),
         "mushroom" => Some(0.15),
-        _ => None,
+        _ => quest_params(name).map(|p| if p.avg_txn_len >= 20.0 { 0.03 } else { 0.01 }),
     }
 }
 
@@ -35,12 +117,18 @@ pub fn figure_min_sups(name: &str) -> Option<Vec<f64>> {
     }
 }
 
-/// The paper's InputSplit (lines per split, §5.2) per dataset.
+/// The paper's InputSplit (lines per split, §5.2) per dataset. Quest
+/// entries keep the paper's 10-map-task shape: the split (and segment
+/// block) scales with D, as in the Fig 5(a) setup.
 pub fn split_lines(name: &str) -> usize {
     match name {
         "chess" => 400,
-        // c20d10k and mushroom: 1K lines -> 10 and 9 mappers.
-        _ => 1000,
+        "c20d10k" | "mushroom" => 1000,
+        _ => match quest_params(name) {
+            Some(p) => (p.n_txns / 10).max(1),
+            // Unknown names (file paths): 1K lines, the paper's common case.
+            None => 1000,
+        },
     }
 }
 
@@ -49,12 +137,20 @@ pub fn load(name: &str) -> TransactionDb {
     try_load(name).unwrap_or_else(|| panic!("unknown dataset {name:?}; known: {NAMES:?}"))
 }
 
+/// Build a dataset by name, including Quest-family `t*i*d*` names (which
+/// are materialized in memory — prefer [`quest_store`] +
+/// [`crate::hdfs::put_segmented`] for the large entries).
 pub fn try_load(name: &str) -> Option<TransactionDb> {
     match name {
         "c20d10k" => Some(c20d10k()),
         "chess" => Some(chess()),
         "mushroom" => Some(mushroom()),
-        _ => None,
+        _ => {
+            let p = quest_params(name)?;
+            let mut db = ibm::generate(&p);
+            db.name = name.to_ascii_lowercase();
+            Some(db)
+        }
     }
 }
 
@@ -160,6 +256,58 @@ mod tests {
         assert!(try_load("nope").is_none());
         assert_eq!(split_lines("chess"), 400);
         assert_eq!(split_lines("c20d10k"), 1000);
+    }
+
+    #[test]
+    fn quest_name_parsing() {
+        let p = quest_params("t10i4d100k").unwrap();
+        assert_eq!(p.n_txns, 100_000);
+        assert!((p.avg_txn_len - 10.0).abs() < 1e-9);
+        assert!((p.avg_pattern_len - 4.0).abs() < 1e-9);
+        let p = quest_params("T40I10D1M").unwrap(); // case-insensitive
+        assert_eq!(p.n_txns, 1_000_000);
+        assert!((p.avg_txn_len - 40.0).abs() < 1e-9);
+        let tiny = quest_params("t5i2d300").unwrap(); // bare D, family is open
+        assert_eq!(tiny.n_txns, 300);
+        for bad in ["", "c20d10k", "t10", "t10i4", "t10i4dxk", "ti4d100k", "t0i4d100k"] {
+            assert!(quest_params(bad).is_none(), "{bad:?} must not parse");
+        }
+        // Distinct entries get distinct seeds.
+        assert_ne!(quest_params("t10i4d100k").unwrap().seed, quest_params("t40i10d100k").unwrap().seed);
+        for name in QUEST_NAMES {
+            assert!(quest_params(name).is_some(), "{name}");
+            assert!(reference_min_sup(name).is_some(), "{name}");
+            assert_eq!(split_lines(name), quest_params(name).unwrap().n_txns / 10);
+        }
+    }
+
+    #[test]
+    fn quest_try_load_materializes_small_entries() {
+        let db = try_load("t8i3d500").expect("family name loads");
+        assert_eq!(db.len(), 500);
+        assert_eq!(db.name, "t8i3d500");
+        assert_eq!(db.n_items, 1000);
+        assert!(db.validate().is_ok());
+    }
+
+    #[test]
+    fn quest_store_caches_and_matches_materialized() {
+        let cache = std::env::temp_dir().join("mrapriori_registry_quest_cache");
+        let _ = std::fs::remove_dir_all(&cache);
+        let src = quest_store("t6i3d400", &cache).unwrap();
+        assert_eq!(src.len(), 400);
+        assert_eq!(src.n_items(), 1000);
+        // Reopen hits the cache (same manifest, no regeneration) and the
+        // records equal the in-memory generator's output.
+        let again = quest_store("t6i3d400", &cache).unwrap();
+        assert_eq!(again.len(), 400);
+        let db = try_load("t6i3d400").unwrap();
+        let mut streamed = Vec::new();
+        use crate::hdfs::RecordSource as _;
+        src.for_each(0..400, &mut |_, r| streamed.push(r.clone()));
+        assert_eq!(streamed, db.txns);
+        assert!(quest_store("chess", &cache).is_err());
+        std::fs::remove_dir_all(&cache).unwrap();
     }
 
     #[test]

@@ -4,18 +4,27 @@
 use super::TransactionDb;
 
 #[derive(Debug, Clone)]
+/// Table-2-style dataset summary.
 pub struct Summary {
+    /// Dataset name.
     pub name: String,
+    /// Transaction count (N).
     pub n_txns: usize,
+    /// Item-universe size |I|.
     pub n_items: usize,
+    /// Mean transaction width (w).
     pub avg_width: f64,
+    /// Smallest transaction width.
     pub min_width: usize,
+    /// Largest transaction width.
     pub max_width: usize,
+    /// Fraction of the N x |I| grid that is set.
     pub density: f64,
     /// Top-10 item frequencies (fraction of transactions).
     pub top_items: Vec<(u32, f64)>,
 }
 
+/// Compute a [`Summary`] in one scan.
 pub fn summarize(db: &TransactionDb) -> Summary {
     let mut freq = vec![0usize; db.n_items];
     let mut min_w = usize::MAX;

@@ -6,6 +6,15 @@
 //! for c20d10k/mushroom -> 10/9 mappers, 400 for chess -> 8 mappers); split
 //! construction here mirrors that. Replica placement feeds the scheduler's
 //! data-locality preference.
+//!
+//! Storage is pluggable behind [`RecordSource`] (DESIGN.md §7): the
+//! in-memory backend keeps the whole record vector resident (fast path for
+//! the paper-sized datasets), while [`segment::SegmentSource`] backs blocks
+//! with on-disk segment files decoded lazily one block at a time, so map
+//! tasks over a T10I4D100K-class file never hold more than one block of
+//! records in memory.
+
+pub mod segment;
 
 use crate::dataset::TransactionDb;
 use crate::itemset::Itemset;
@@ -13,51 +22,166 @@ use crate::util::rng::Rng;
 use std::ops::Range;
 use std::sync::Arc;
 
+/// Index of a simulated DataNode.
 pub type NodeId = usize;
+
+/// Abstract record storage: a fixed-length sequence of transactions that
+/// can be visited in order over any sub-range.
+///
+/// `for_each` is an internal iterator so backends control buffering: the
+/// in-memory source hands out borrowed slices with zero copies, while the
+/// segment source decodes one on-disk block at a time into a reusable
+/// buffer bounded by `block_lines` records.
+pub trait RecordSource: Send + Sync + std::fmt::Debug {
+    /// Total number of records in the file.
+    fn len(&self) -> usize;
+
+    /// Whether the file holds no records.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit records `range` in order as `(offset, record)` pairs.
+    fn for_each(&self, range: Range<usize>, f: &mut dyn FnMut(usize, &Itemset));
+}
+
+/// The fully-resident backend: an `Arc`-shared record vector (the original
+/// representation, kept as the fast path for small datasets).
+#[derive(Debug, Clone)]
+pub struct InMemorySource {
+    records: Arc<Vec<Itemset>>,
+}
+
+impl InMemorySource {
+    /// Wrap an owned record vector.
+    pub fn new(records: Vec<Itemset>) -> Self {
+        Self { records: Arc::new(records) }
+    }
+}
+
+impl RecordSource for InMemorySource {
+    fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    fn for_each(&self, range: Range<usize>, f: &mut dyn FnMut(usize, &Itemset)) {
+        for (i, r) in self.records[range.clone()].iter().enumerate() {
+            f(range.start + i, r);
+        }
+    }
+}
 
 /// One HDFS block: a line range plus the nodes holding replicas.
 #[derive(Debug, Clone)]
 pub struct Block {
+    /// The records this block covers (line numbers in the file).
     pub range: Range<usize>,
+    /// DataNodes holding a replica of this block.
     pub replicas: Vec<NodeId>,
 }
 
-/// A stored file: immutable records plus its block map.
+/// A stored file: a record source plus its block map.
 #[derive(Debug, Clone)]
 pub struct HdfsFile {
+    /// Dataset name (drives per-dataset defaults in the registry).
     pub name: String,
-    pub records: Arc<Vec<Itemset>>,
+    /// Backing storage (in-memory or on-disk segments).
+    pub source: Arc<dyn RecordSource>,
+    /// Size of the dense item universe `0..n_items`.
     pub n_items: usize,
+    /// Records per block (the HDFS block size, in lines).
     pub block_lines: usize,
+    /// Block map with replica placement.
     pub blocks: Vec<Block>,
+}
+
+impl HdfsFile {
+    /// Total number of records in the file.
+    pub fn len(&self) -> usize {
+        self.source.len()
+    }
+
+    /// Whether the file holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.source.is_empty()
+    }
+
+    /// Minimum support count for a fractional threshold (ceil, >= 1) —
+    /// mirrors [`TransactionDb::min_count`] for files that were never
+    /// materialized in memory.
+    pub fn min_count(&self, min_sup: f64) -> u64 {
+        ((min_sup * self.len() as f64).ceil() as u64).max(1)
+    }
 }
 
 /// One input split handed to a single map task.
 #[derive(Debug, Clone)]
 pub struct InputSplit {
-    pub records: Arc<Vec<Itemset>>,
+    /// Backing storage shared with the owning [`HdfsFile`].
+    pub source: Arc<dyn RecordSource>,
+    /// The records this split covers.
     pub range: Range<usize>,
     /// Nodes that hold a replica of the split's first block (locality hint).
     pub preferred_nodes: Vec<NodeId>,
 }
 
 impl InputSplit {
+    /// Number of records in the split.
     pub fn len(&self) -> usize {
         self.range.len()
     }
+
+    /// Whether the split covers no records.
     pub fn is_empty(&self) -> bool {
         self.range.is_empty()
     }
-    /// Iterate `(byte-offset-like key, record)` pairs, as a RecordReader.
-    pub fn iter(&self) -> impl Iterator<Item = (usize, &Itemset)> {
-        self.records[self.range.clone()].iter().enumerate().map(move |(i, r)| (self.range.start + i, r))
+
+    /// Visit the split's records as a RecordReader would: `(byte-offset-like
+    /// key, record)` pairs in line order. Streaming backends decode at most
+    /// one block at a time, so a map task's resident buffer is bounded by
+    /// the block size, not the dataset size.
+    pub fn for_each_record(&self, mut f: impl FnMut(usize, &Itemset)) {
+        self.source.for_each(self.range.clone(), &mut f);
+    }
+
+    /// Materialize the split's records (tests and small consumers only —
+    /// defeats the streaming bound on purpose).
+    pub fn collect_records(&self) -> Vec<(usize, Itemset)> {
+        let mut out = Vec::with_capacity(self.len());
+        self.for_each_record(|off, r| out.push((off, r.clone())));
+        out
     }
 }
 
 /// Default HDFS replication factor.
 pub const DEFAULT_REPLICATION: usize = 3;
 
-/// Store a database as an HDFS file across `n_nodes` DataNodes.
+/// Build a block map with pipeline replica placement over `n_records`
+/// records: first replica on a random node, the rest on successive distinct
+/// nodes (rack-unaware variant of the HDFS default).
+fn place_blocks(
+    n_records: usize,
+    block_lines: usize,
+    n_nodes: usize,
+    replication: usize,
+    seed: u64,
+) -> Vec<Block> {
+    assert!(block_lines > 0 && n_nodes > 0);
+    let replication = replication.min(n_nodes).max(1);
+    let mut rng = Rng::new(seed ^ 0x4DF5);
+    let mut blocks = Vec::new();
+    let mut start = 0;
+    while start < n_records {
+        let end = (start + block_lines).min(n_records);
+        let first = rng.below(n_nodes as u64) as usize;
+        let replicas: Vec<NodeId> = (0..replication).map(|r| (first + r) % n_nodes).collect();
+        blocks.push(Block { range: start..end, replicas });
+        start = end;
+    }
+    blocks
+}
+
+/// Store an in-memory database as an HDFS file across `n_nodes` DataNodes.
 pub fn put(
     db: &TransactionDb,
     block_lines: usize,
@@ -65,28 +189,42 @@ pub fn put(
     replication: usize,
     seed: u64,
 ) -> HdfsFile {
-    assert!(block_lines > 0 && n_nodes > 0);
-    let replication = replication.min(n_nodes).max(1);
-    let mut rng = Rng::new(seed ^ 0x4DF5);
-    let records = Arc::new(db.txns.clone());
-    let mut blocks = Vec::new();
-    let mut start = 0;
-    while start < records.len() {
-        let end = (start + block_lines).min(records.len());
-        // Pipeline placement: first replica on a random node, the rest on
-        // successive distinct nodes (rack-unaware variant of HDFS default).
-        let first = rng.below(n_nodes as u64) as usize;
-        let replicas: Vec<NodeId> = (0..replication).map(|r| (first + r) % n_nodes).collect();
-        blocks.push(Block { range: start..end, replicas });
-        start = end;
+    let blocks = place_blocks(db.txns.len(), block_lines, n_nodes, replication, seed);
+    HdfsFile {
+        name: db.name.clone(),
+        source: Arc::new(InMemorySource::new(db.txns.clone())),
+        n_items: db.n_items,
+        block_lines,
+        blocks,
     }
-    HdfsFile { name: db.name.clone(), records, n_items: db.n_items, block_lines, blocks }
+}
+
+/// Store an on-disk segment store as an HDFS file across `n_nodes`
+/// DataNodes. Blocks follow the store's own segment granularity
+/// (`SegmentSource::block_lines`), so each simulated HDFS block is exactly
+/// one lazily-decoded segment file. Takes an `Arc` so the caller can keep
+/// a handle for observability (e.g.
+/// [`segment::SegmentSource::peak_resident_records`]).
+pub fn put_segmented(
+    src: Arc<segment::SegmentSource>,
+    n_nodes: usize,
+    replication: usize,
+    seed: u64,
+) -> HdfsFile {
+    let blocks = place_blocks(src.len(), src.block_lines(), n_nodes, replication, seed);
+    HdfsFile {
+        name: src.name().to_string(),
+        n_items: src.n_items(),
+        block_lines: src.block_lines(),
+        source: src,
+        blocks,
+    }
 }
 
 /// Cut a file into NLine splits of `lines_per_split` records each.
 pub fn nline_splits(file: &HdfsFile, lines_per_split: usize) -> Vec<InputSplit> {
     assert!(lines_per_split > 0);
-    let n = file.records.len();
+    let n = file.len();
     let mut out = Vec::with_capacity(n.div_ceil(lines_per_split));
     let mut start = 0;
     while start < n {
@@ -98,7 +236,7 @@ pub fn nline_splits(file: &HdfsFile, lines_per_split: usize) -> Vec<InputSplit> 
             .map(|b| b.replicas.clone())
             .unwrap_or_default();
         out.push(InputSplit {
-            records: Arc::clone(&file.records),
+            source: Arc::clone(&file.source),
             range: start..end,
             preferred_nodes: preferred,
         });
@@ -142,10 +280,10 @@ mod tests {
         assert_eq!(splits.len(), 7); // ceil(2500/400)
         let mut seen = vec![false; 2500];
         for s in &splits {
-            for (off, _) in s.iter() {
+            s.for_each_record(|off, _| {
                 assert!(!seen[off], "record {off} in two splits");
                 seen[off] = true;
-            }
+            });
         }
         assert!(seen.iter().all(|&s| s));
     }
@@ -172,10 +310,19 @@ mod tests {
     }
 
     #[test]
-    fn split_iter_yields_offsets() {
+    fn split_iteration_yields_offsets() {
         let f = put(&db(30), 10, 2, 1, 3);
         let splits = nline_splits(&f, 25);
-        let (offs, _): (Vec<usize>, Vec<_>) = splits[1].iter().unzip();
+        let (offs, _): (Vec<usize>, Vec<_>) = splits[1].collect_records().into_iter().unzip();
         assert_eq!(offs, (25..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn file_min_count_matches_db() {
+        let d = db(100);
+        let f = put(&d, 10, 2, 1, 3);
+        for ms in [0.0, 0.013, 0.5, 1.0] {
+            assert_eq!(f.min_count(ms), d.min_count(ms));
+        }
     }
 }

@@ -1,0 +1,534 @@
+//! On-disk segment store: the streaming [`RecordSource`] backend.
+//!
+//! A segment store is a directory holding one FIMI text file per HDFS
+//! block (`block-00000.txt`, `block-00001.txt`, ...) plus a small
+//! `manifest` describing the file. [`SegmentWriter`] streams records into
+//! the store block by block (a generator never materializes the dataset);
+//! [`SegmentSource`] decodes blocks lazily during
+//! [`RecordSource::for_each`], holding at most one block of records
+//! resident at a time. See DESIGN.md §7.
+
+use super::RecordSource;
+use crate::itemset::Itemset;
+use std::io::{BufWriter, Write as _};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Manifest file name inside a segment store directory.
+pub const MANIFEST: &str = "manifest";
+
+/// Errors opening or writing a segment store.
+#[derive(Debug)]
+pub enum SegmentError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// The manifest is missing a key or holds an unparsable value.
+    BadManifest(String),
+    /// An empty transaction was pushed (record `index`, 0-based). Empty
+    /// lines are skipped on decode, so storing one would desynchronize
+    /// record offsets.
+    EmptyTransaction(usize),
+    /// A dataset name that cannot name a store (no disk state involved —
+    /// used by name-keyed store builders like the registry's quest cache).
+    InvalidName(String),
+}
+
+impl std::fmt::Display for SegmentError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SegmentError::Io(e) => write!(f, "segment store io error: {e}"),
+            SegmentError::BadManifest(msg) => write!(f, "bad segment manifest: {msg}"),
+            SegmentError::EmptyTransaction(i) => {
+                write!(f, "transaction {i} is empty; segment stores cannot hold empty records")
+            }
+            SegmentError::InvalidName(msg) => write!(f, "invalid dataset name: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SegmentError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SegmentError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SegmentError {
+    fn from(e: std::io::Error) -> Self {
+        SegmentError::Io(e)
+    }
+}
+
+fn block_path(dir: &Path, index: usize) -> PathBuf {
+    dir.join(format!("block-{index:05}.txt"))
+}
+
+/// Streams records into a new segment store, rolling over to a fresh block
+/// file every `block_lines` records. Memory use is one `BufWriter`, never
+/// the dataset.
+///
+/// Writes land in a `<dir>.partial-<pid>-<seq>` staging directory (unique
+/// per writer, even across threads of one process) and move into place
+/// with a `rename` when [`SegmentWriter::finish`] has written the manifest
+/// — so a reader can never observe a store whose manifest exists but whose
+/// blocks are still being (re)written. A writer dropped before `finish`
+/// removes its staging directory.
+pub struct SegmentWriter {
+    /// Final store location, published on `finish`.
+    dest: PathBuf,
+    /// Staging directory all writes go to.
+    dir: PathBuf,
+    name: String,
+    block_lines: usize,
+    writer: Option<BufWriter<std::fs::File>>,
+    in_block: usize,
+    n_blocks: usize,
+    n_records: usize,
+    max_item: u32,
+    declared_n_items: Option<usize>,
+    /// Set once the staging dir was renamed away (suppresses Drop cleanup).
+    published: bool,
+}
+
+impl SegmentWriter {
+    /// Create a store that will be published at `dir` (an existing store
+    /// there is replaced on [`SegmentWriter::finish`]).
+    pub fn create(
+        dir: impl Into<PathBuf>,
+        name: impl Into<String>,
+        block_lines: usize,
+    ) -> Result<Self, SegmentError> {
+        assert!(block_lines > 0);
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let dest = dir.into();
+        let mut staging = dest.as_os_str().to_os_string();
+        staging.push(format!(
+            ".partial-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let dir = PathBuf::from(staging);
+        // A crashed run with the same pid+seq would corrupt block
+        // numbering — start clean.
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self {
+            dest,
+            dir,
+            name: name.into(),
+            block_lines,
+            writer: None,
+            in_block: 0,
+            n_blocks: 0,
+            n_records: 0,
+            max_item: 0,
+            declared_n_items: None,
+            published: false,
+        })
+    }
+
+    /// Declare the item-universe size up front (e.g. a generator's
+    /// configured `n_items`). The manifest records
+    /// `max(declared, max observed item + 1)`, so a streamed store reports
+    /// the same universe as the materialized database would.
+    pub fn declare_n_items(&mut self, n_items: usize) {
+        self.declared_n_items = Some(n_items);
+    }
+
+    /// Append one transaction (canonical item order expected, as produced
+    /// by the generators and [`crate::itemset::canonicalize`]). Empty
+    /// transactions are rejected — the text format cannot represent them.
+    pub fn push(&mut self, txn: &Itemset) -> Result<(), SegmentError> {
+        if txn.is_empty() {
+            return Err(SegmentError::EmptyTransaction(self.n_records));
+        }
+        if self.writer.is_none() {
+            let f = std::fs::File::create(block_path(&self.dir, self.n_blocks))?;
+            self.writer = Some(BufWriter::new(f));
+            self.n_blocks += 1;
+            self.in_block = 0;
+        }
+        let w = self.writer.as_mut().expect("writer just ensured");
+        crate::dataset::loader::write_txn(w, txn)?;
+        if let Some(m) = txn.iter().copied().max() {
+            self.max_item = self.max_item.max(m);
+        }
+        self.in_block += 1;
+        self.n_records += 1;
+        if self.in_block == self.block_lines {
+            self.writer.take().expect("open block").flush()?;
+        }
+        Ok(())
+    }
+
+    /// Flush, write the manifest, publish the staging directory to its
+    /// final location via rename (removing any previous store there
+    /// first), and reopen the store for reading. If a concurrent writer
+    /// publishes the same destination first, its store is used.
+    pub fn finish(mut self) -> Result<SegmentSource, SegmentError> {
+        if let Some(mut w) = self.writer.take() {
+            w.flush()?;
+        }
+        let observed = if self.n_records == 0 { 0 } else { self.max_item as usize + 1 };
+        let n_items = observed.max(self.declared_n_items.unwrap_or(0));
+        let manifest = format!(
+            "name {}\nn_items {}\nn_records {}\nblock_lines {}\nn_blocks {}\n",
+            self.name, n_items, self.n_records, self.block_lines, self.n_blocks,
+        );
+        std::fs::write(self.dir.join(MANIFEST), manifest)?;
+        if self.dest.exists() {
+            // Replace an existing store by renaming it aside first, so the
+            // not-a-store window at `dest` is two renames, not a recursive
+            // delete. (True atomic exchange would need renameat2, which
+            // std does not expose; stores are cache artifacts, and a
+            // reader racing a replacement regenerates on failure.)
+            let mut aside = self.dir.as_os_str().to_os_string();
+            aside.push(".old");
+            let aside = PathBuf::from(aside);
+            std::fs::rename(&self.dest, &aside)?;
+            let renamed = std::fs::rename(&self.dir, &self.dest);
+            let _ = std::fs::remove_dir_all(&aside);
+            match renamed {
+                Ok(()) => self.published = true,
+                // A concurrent writer slipped its store in between our two
+                // renames — same source, so use the winner's.
+                Err(_) if self.dest.join(MANIFEST).is_file() => {}
+                Err(e) => return Err(e.into()),
+            }
+        } else {
+            match std::fs::rename(&self.dir, &self.dest) {
+                Ok(()) => self.published = true,
+                // A concurrent writer published the same destination first.
+                // Stores for one destination are built from one source, so
+                // theirs is as good as ours — drop our staging copy (via
+                // Drop) and read the winner.
+                Err(_) if self.dest.join(MANIFEST).is_file() => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        open(&self.dest)
+    }
+}
+
+impl Drop for SegmentWriter {
+    fn drop(&mut self) {
+        if !self.published {
+            // Close the open block handle before removing the directory
+            // (required on platforms that refuse to unlink open files).
+            self.writer.take();
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+/// Stream `txns` into a new store published at `dir` — the one-call form
+/// of the create / `declare_n_items` / push-loop / `finish` ritual shared
+/// by the generators, the registry cache, and the CLI.
+pub fn write_store(
+    dir: impl Into<PathBuf>,
+    name: impl Into<String>,
+    block_lines: usize,
+    n_items: usize,
+    txns: impl IntoIterator<Item = Itemset>,
+) -> Result<SegmentSource, SegmentError> {
+    let mut w = SegmentWriter::create(dir, name, block_lines)?;
+    w.declare_n_items(n_items);
+    for t in txns {
+        w.push(&t)?;
+    }
+    w.finish()
+}
+
+/// A read-only segment store: block files decoded lazily, one at a time.
+pub struct SegmentSource {
+    dir: PathBuf,
+    name: String,
+    n_items: usize,
+    n_records: usize,
+    block_lines: usize,
+    /// High-water mark of records decoded at once (observability for the
+    /// streaming-memory bound; see the equivalence tests).
+    peak_resident: AtomicUsize,
+}
+
+impl std::fmt::Debug for SegmentSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SegmentSource")
+            .field("dir", &self.dir)
+            .field("name", &self.name)
+            .field("n_records", &self.n_records)
+            .field("block_lines", &self.block_lines)
+            .finish()
+    }
+}
+
+/// Open an existing segment store directory.
+pub fn open(dir: impl Into<PathBuf>) -> Result<SegmentSource, SegmentError> {
+    let dir = dir.into();
+    let text = std::fs::read_to_string(dir.join(MANIFEST))?;
+    let mut name = None;
+    let mut fields = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        let Some((key, value)) = line.split_once(' ') else { continue };
+        if key == "name" {
+            name = Some(value.to_string());
+        } else {
+            let v: usize = value.parse().map_err(|_| {
+                SegmentError::BadManifest(format!("{key}: cannot parse {value:?}"))
+            })?;
+            fields.insert(key.to_string(), v);
+        }
+    }
+    let get = |key: &str| {
+        fields.get(key).copied().ok_or_else(|| SegmentError::BadManifest(format!("missing {key}")))
+    };
+    let block_lines = get("block_lines")?;
+    if block_lines == 0 {
+        return Err(SegmentError::BadManifest("block_lines must be > 0".into()));
+    }
+    Ok(SegmentSource {
+        name: name.ok_or_else(|| SegmentError::BadManifest("missing name".into()))?,
+        n_items: get("n_items")?,
+        n_records: get("n_records")?,
+        block_lines,
+        dir,
+        peak_resident: AtomicUsize::new(0),
+    })
+}
+
+/// Whether `dir` already holds a finished segment store.
+pub fn exists(dir: &Path) -> bool {
+    dir.join(MANIFEST).is_file()
+}
+
+impl SegmentSource {
+    /// Dataset name recorded in the manifest.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Size of the dense item universe `0..n_items`.
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    /// Records per block file.
+    pub fn block_lines(&self) -> usize {
+        self.block_lines
+    }
+
+    /// Store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// High-water mark of records resident at once across all `for_each`
+    /// calls so far — bounded by [`Self::block_lines`] by construction.
+    pub fn peak_resident_records(&self) -> usize {
+        self.peak_resident.load(Ordering::Relaxed)
+    }
+
+    /// Decode block `index` into `buf` (clearing it first). Panics with a
+    /// readable message on a corrupt store — a segment store is a cache
+    /// artifact, so the fix is always "delete the directory and regenerate".
+    fn decode_block(&self, index: usize, buf: &mut Vec<Itemset>) {
+        buf.clear();
+        let path = block_path(&self.dir, index);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("segment store {:?}: cannot read {path:?}: {e}", self.dir));
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut t: Itemset = Vec::new();
+            for tok in line.split_whitespace() {
+                let item: u32 = tok.parse().unwrap_or_else(|_| {
+                    panic!("segment store {path:?} line {}: bad item {tok:?}", lno + 1)
+                });
+                t.push(item);
+            }
+            crate::itemset::canonicalize(&mut t);
+            buf.push(t);
+        }
+        self.peak_resident.fetch_max(buf.len(), Ordering::Relaxed);
+    }
+}
+
+impl RecordSource for SegmentSource {
+    fn len(&self) -> usize {
+        self.n_records
+    }
+
+    fn for_each(&self, range: Range<usize>, f: &mut dyn FnMut(usize, &Itemset)) {
+        if range.is_empty() {
+            return;
+        }
+        assert!(range.end <= self.n_records, "range {range:?} beyond {} records", self.n_records);
+        let mut buf: Vec<Itemset> = Vec::new();
+        let first_block = range.start / self.block_lines;
+        let last_block = (range.end - 1) / self.block_lines;
+        for b in first_block..=last_block {
+            self.decode_block(b, &mut buf);
+            let block_start = b * self.block_lines;
+            // Corrupt-store policy: a block holding fewer records than the
+            // manifest implies must fail loudly, never silently undercount.
+            let expected = self.block_lines.min(self.n_records - block_start);
+            assert_eq!(
+                buf.len(),
+                expected,
+                "segment store {:?}: block {b} holds {} records, manifest implies {expected} — \
+                 delete the store directory and regenerate",
+                self.dir,
+                buf.len(),
+            );
+            let lo = range.start.max(block_start) - block_start;
+            let hi = range.end.min(block_start + expected) - block_start;
+            for (i, r) in buf[lo..hi].iter().enumerate() {
+                f(block_start + lo + i, r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("mrapriori_segment_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn write_store(dir: &Path, n: usize, block_lines: usize) -> SegmentSource {
+        let mut w = SegmentWriter::create(dir, "demo", block_lines).unwrap();
+        for i in 0..n {
+            w.push(&vec![i as u32 % 7, 10 + i as u32 % 3]).unwrap();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let dir = tmp("roundtrip");
+        let src = write_store(&dir, 25, 10);
+        assert_eq!(src.len(), 25);
+        assert_eq!(src.name(), "demo");
+        assert_eq!(src.n_items(), 13); // max item 12
+        let mut got = Vec::new();
+        src.for_each(0..25, &mut |off, r| got.push((off, r.clone())));
+        assert_eq!(got.len(), 25);
+        for (i, (off, r)) in got.iter().enumerate() {
+            assert_eq!(*off, i);
+            let mut expect = vec![i as u32 % 7, 10 + i as u32 % 3];
+            crate::itemset::canonicalize(&mut expect);
+            assert_eq!(r, &expect, "record {i}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn blocks_on_disk_match_block_lines() {
+        let dir = tmp("blocks");
+        let src = write_store(&dir, 25, 10);
+        assert_eq!(src.block_lines(), 10);
+        // 3 block files: 10 + 10 + 5.
+        for b in 0..3 {
+            assert!(block_path(&dir, b).is_file(), "missing block {b}");
+        }
+        assert!(!block_path(&dir, 3).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resident_buffer_bounded_by_block() {
+        let dir = tmp("bounded");
+        let src = write_store(&dir, 100, 8);
+        let mut n = 0;
+        src.for_each(0..100, &mut |_, _| n += 1);
+        assert_eq!(n, 100);
+        assert!(src.peak_resident_records() <= 8, "peak {}", src.peak_resident_records());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn subrange_spanning_blocks() {
+        let dir = tmp("subrange");
+        let src = write_store(&dir, 30, 10);
+        let mut offs = Vec::new();
+        src.for_each(7..23, &mut |off, _| offs.push(off));
+        assert_eq!(offs, (7..23).collect::<Vec<_>>());
+        src.for_each(5..5, &mut |_, _| panic!("empty range must not visit"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_rejects_missing_manifest() {
+        let dir = tmp("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(!exists(&dir));
+        assert!(matches!(open(&dir), Err(SegmentError::Io(_))));
+        std::fs::write(dir.join(MANIFEST), "name x\nn_items 3\n").unwrap();
+        assert!(exists(&dir));
+        assert!(matches!(open(&dir), Err(SegmentError::BadManifest(_))));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_transactions_rejected() {
+        let dir = tmp("empty-txn");
+        let mut w = SegmentWriter::create(&dir, "x", 4).unwrap();
+        w.push(&vec![1]).unwrap();
+        assert!(matches!(w.push(&vec![]), Err(SegmentError::EmptyTransaction(1))));
+        // Dropping an unfinished writer removes its staging directory and
+        // never publishes anything.
+        drop(w);
+        assert!(!dir.exists(), "unfinished store must not be published");
+        let parent = dir.parent().unwrap();
+        let stem = dir.file_name().unwrap().to_str().unwrap().to_string();
+        for entry in std::fs::read_dir(parent).unwrap() {
+            let name = entry.unwrap().file_name().to_string_lossy().to_string();
+            assert!(!name.starts_with(&format!("{stem}.partial")), "leaked staging dir {name}");
+        }
+    }
+
+    #[test]
+    fn finish_replaces_existing_store_atomically() {
+        let dir = tmp("replace");
+        let old = super::write_store(&dir, "v1", 5, 0, vec![vec![1u32, 2]]).unwrap();
+        assert_eq!(old.len(), 1);
+        // No partial state is ever visible at `dir`: while the second store
+        // is being written, the published one still reads consistently.
+        let w2 = {
+            let mut w = SegmentWriter::create(&dir, "v2", 5).unwrap();
+            for i in 0..7u32 {
+                w.push(&vec![i]).unwrap();
+            }
+            let still = open(&dir).unwrap();
+            assert_eq!(still.len(), 1, "published store must be intact mid-write");
+            w
+        };
+        let new = w2.finish().unwrap();
+        assert_eq!(new.len(), 7);
+        assert_eq!(new.name(), "v2");
+        assert_eq!(open(&dir).unwrap().len(), 7);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let dir = tmp("empty");
+        let w = SegmentWriter::create(&dir, "none", 4).unwrap();
+        let src = w.finish().unwrap();
+        assert_eq!(src.len(), 0);
+        assert!(src.is_empty());
+        src.for_each(0..0, &mut |_, _| panic!("no records"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -13,7 +13,9 @@ use super::Item;
 pub struct BitmapTile {
     /// Row-major `rows x width` f32 0/1 matrix.
     pub data: Vec<f32>,
+    /// Number of rows (padding included).
     pub rows: usize,
+    /// Row width in items (bitmap columns).
     pub width: usize,
     /// Number of meaningful (non-padding) rows.
     pub valid_rows: usize,
@@ -52,9 +54,22 @@ impl BitmapTile {
 }
 
 #[derive(Debug, PartialEq)]
+/// Why a tile could not be encoded.
 pub enum EncodeError {
-    TooManyRows { got: usize, max: usize },
-    ItemOutOfRange { item: Item, width: usize },
+    /// More sets than tile rows.
+    TooManyRows {
+        /// Sets offered.
+        got: usize,
+        /// Tile row capacity.
+        max: usize,
+    },
+    /// An item id does not fit the bitmap width.
+    ItemOutOfRange {
+        /// Offending item.
+        item: Item,
+        /// Bitmap width.
+        width: usize,
+    },
 }
 
 impl std::fmt::Display for EncodeError {
@@ -81,6 +96,7 @@ pub struct BitVec64 {
 }
 
 impl BitVec64 {
+    /// Bitset of `set` over `width` items.
     pub fn from_set(set: &[Item], width: usize) -> Self {
         let mut words = vec![0u64; width.div_ceil(64)];
         for &i in set {
@@ -98,6 +114,7 @@ impl BitVec64 {
         self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
     }
 
+    /// Number of set bits.
     pub fn popcount(&self) -> u32 {
         self.words.iter().map(|w| w.count_ones()).sum()
     }

@@ -28,11 +28,13 @@ pub struct HashTableTrie {
 const ROOT: u32 = 0;
 
 impl HashTableTrie {
+    /// Empty trie for k-itemsets.
     pub fn new(k: usize) -> Self {
         assert!(k >= 1);
         Self { nodes: vec![Node::default()], k, len: 0 }
     }
 
+    /// Bulk-build from canonical k-itemsets.
     pub fn from_itemsets<'a, I: IntoIterator<Item = &'a Itemset>>(k: usize, sets: I) -> Self {
         let mut t = Self::new(k);
         for s in sets {
@@ -41,19 +43,24 @@ impl HashTableTrie {
         t
     }
 
+    /// The stored itemset length k.
     pub fn level(&self) -> usize {
         self.k
     }
+    /// Number of stored itemsets.
     pub fn len(&self) -> usize {
         self.len
     }
+    /// Whether the trie stores nothing.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
+    /// Total allocated nodes.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Insert a canonical k-itemset; returns whether it was new.
     pub fn insert(&mut self, set: &[Item]) -> bool {
         debug_assert_eq!(set.len(), self.k);
         debug_assert!(super::is_canonical(set));
@@ -77,6 +84,7 @@ impl HashTableTrie {
         created
     }
 
+    /// Membership test for a canonical k-itemset.
     pub fn contains(&self, set: &[Item]) -> bool {
         let mut node = ROOT;
         for item in set {
@@ -88,6 +96,7 @@ impl HashTableTrie {
         true
     }
 
+    /// Support count accumulated for `set` (0 if absent).
     pub fn count_of(&self, set: &[Item]) -> Option<u64> {
         let mut node = ROOT;
         for item in set {
@@ -121,6 +130,7 @@ impl HashTableTrie {
         (visits, hits)
     }
 
+    /// Reset all support counts to zero.
     pub fn clear_counts(&mut self) {
         for n in &mut self.nodes {
             n.count = 0;
@@ -148,6 +158,7 @@ impl HashTableTrie {
         }
     }
 
+    /// Itemsets whose count reaches `min_count`, with counts, sorted.
     pub fn frequent(&self, min_count: u64) -> Vec<(Itemset, u64)> {
         self.entries().into_iter().filter(|(_, c)| *c >= min_count).collect()
     }

@@ -34,10 +34,12 @@ pub struct HashTree {
 const ROOT: u32 = 0;
 
 impl HashTree {
+    /// Empty tree for k-itemsets with default fanout/leaf capacity.
     pub fn new(k: usize) -> Self {
         Self::with_params(k, 8, 16)
     }
 
+    /// Empty tree with explicit fanout and leaf capacity.
     pub fn with_params(k: usize, fanout: usize, leaf_cap: usize) -> Self {
         assert!(k >= 1 && fanout >= 2 && leaf_cap >= 1);
         Self {
@@ -49,6 +51,7 @@ impl HashTree {
         }
     }
 
+    /// Bulk-build from canonical k-itemsets.
     pub fn from_itemsets<'a, I: IntoIterator<Item = &'a Itemset>>(k: usize, sets: I) -> Self {
         let mut t = Self::new(k);
         for s in sets {
@@ -57,18 +60,22 @@ impl HashTree {
         t
     }
 
+    /// The stored itemset length k.
     pub fn level(&self) -> usize {
         self.k
     }
 
+    /// Number of stored itemsets.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the tree stores nothing.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Total allocated nodes.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
@@ -159,6 +166,7 @@ impl HashTree {
         }
     }
 
+    /// Membership test for a canonical k-itemset.
     pub fn contains(&self, set: &[Item]) -> bool {
         self.find(set).is_some()
     }
@@ -179,6 +187,7 @@ impl HashTree {
         }
     }
 
+    /// Support count accumulated for `set` (0 if absent).
     pub fn count_of(&self, set: &[Item]) -> Option<u64> {
         let (node, i) = self.find(set)?;
         match &self.nodes[node as usize].kind {
@@ -247,6 +256,7 @@ impl HashTree {
         }
     }
 
+    /// Reset all support counts to zero.
     pub fn clear_counts(&mut self) {
         for n in &mut self.nodes {
             if let NodeKind::Leaf { sets } = &mut n.kind {
@@ -269,6 +279,7 @@ impl HashTree {
         out
     }
 
+    /// Itemsets whose count reaches `min_count`, with counts, sorted.
     pub fn frequent(&self, min_count: u64) -> Vec<(Itemset, u64)> {
         self.entries().into_iter().filter(|(_, c)| *c >= min_count).collect()
     }

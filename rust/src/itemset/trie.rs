@@ -73,6 +73,7 @@ impl Trie {
         self.len
     }
 
+    /// Whether the trie stores nothing.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

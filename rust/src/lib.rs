@@ -15,7 +15,11 @@
 //!
 //! The engine runs map AND reduce tasks on `workers` host threads with a
 //! map-side partitioned shuffle; outputs are deterministic regardless of
-//! the worker count (DESIGN.md §4).
+//! the worker count (DESIGN.md §4). Storage is pluggable behind
+//! [`hdfs::RecordSource`]: datasets either live in memory or stream from
+//! an on-disk segment store with per-block decoding, which is how the
+//! Quest-family T*I*D* entries (up to millions of transactions) are mined
+//! out-of-core (DESIGN.md §7).
 //!
 //! Quick start:
 //! ```no_run
@@ -27,6 +31,8 @@
 //! println!("{} frequent itemsets in {:.0} simulated s",
 //!          outcome.total_frequent(), outcome.actual_time);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod apriori;
 pub mod bench_harness;

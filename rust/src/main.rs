@@ -2,12 +2,19 @@
 //! benchmark sweeps, and cost-model calibration.
 
 use anyhow::{bail, Result};
-use mrapriori::bench_harness::tables::{self, SweepSpec};
+use mrapriori::bench_harness::tables::{self, ScaleRun, SweepSpec};
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{self, mappers::GenMode, Algorithm, RunOptions};
+use mrapriori::coordinator::{self, mappers::GenMode, Algorithm, MiningOutcome, RunOptions};
+use mrapriori::dataset::ibm::QuestGen;
 use mrapriori::dataset::{loader, registry, stats};
+use mrapriori::hdfs;
 use mrapriori::util::flags::FlagSet;
 use mrapriori::util::logging::{self, Level};
+use std::path::{Path, PathBuf};
+
+/// Default generate-to-disk cache for Quest-family datasets and segment
+/// imports (under cargo's target dir, so it never pollutes the tree).
+const DEFAULT_CACHE: &str = "target/dataset-cache";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -44,12 +51,17 @@ fn print_help() {
 
 Commands:
   mine       run one algorithm on a dataset, print phase breakdown
-  sweep      run the paper's Figs 2-4 sweep on a dataset
+  sweep      paper's Figs 2-4 min_sup sweep, or a scale grid (--datasets)
   lk         print the |L_k| profile (paper Table 6) via the oracle
   inspect    dataset summary statistics (paper Table 2)
-  generate   write a registry dataset to a FIMI text file
+  generate   write a dataset to a FIMI text file or segment store
   calibrate  fit cost-model weights against the paper's Table 3
   help       this message
+
+Datasets: registry names (c20d10k, chess, mushroom), Quest-family names
+(t<T>i<I>d<D>, e.g. t10i4d100k or t40i10d1m — generated to a disk cache
+on first use), or FIMI file paths. `--streamed` mines through the
+out-of-core segment store; memory stays bounded by the block size.
 
 Run `mrapriori <command> --help` for flags."
     );
@@ -70,27 +82,120 @@ fn common_cluster(p: &mrapriori::util::flags::Parsed) -> Result<ClusterConfig> {
     Ok(cluster)
 }
 
-/// Resolve `--dataset` through [`registry::try_load`] (never the panicking
-/// [`registry::load`]): unknown names come back as a clean error listing
-/// the known registry datasets, and the process exits 1 without a backtrace.
-fn load_db(p: &mrapriori::util::flags::Parsed) -> Result<mrapriori::dataset::TransactionDb> {
-    let name = p.required("dataset")?;
+/// Resolve a dataset name through [`registry::try_load`] (never the
+/// panicking [`registry::load`]): unknown names come back as a clean error
+/// listing the known registry datasets, and the process exits 1 without a
+/// backtrace.
+fn unknown_dataset(name: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "unknown dataset {name:?}: not a registry dataset (known: {}), not a Quest-family \
+         name (t<T>i<I>d<D>, e.g. {}), and not a readable file",
+        registry::NAMES.join(", "),
+        registry::QUEST_NAMES.join(", ")
+    )
+}
+
+fn resolve_db(name: &str) -> Result<mrapriori::dataset::TransactionDb> {
     if let Some(db) = registry::try_load(name) {
         return Ok(db);
     }
-    let path = std::path::Path::new(name);
+    let path = Path::new(name);
     if path.exists() {
         return Ok(loader::load_file(path)?);
     }
-    bail!(
-        "unknown dataset {name:?}: not a registry dataset (known: {}) and not a readable file",
-        registry::NAMES.join(", ")
-    )
+    Err(unknown_dataset(name))
+}
+
+/// Resolve `--dataset` via [`resolve_db`].
+fn load_db(p: &mrapriori::util::flags::Parsed) -> Result<mrapriori::dataset::TransactionDb> {
+    resolve_db(p.required("dataset")?)
+}
+
+/// The `--cache-dir` for generated/imported segment stores.
+fn cache_dir(p: &mrapriori::util::flags::Parsed) -> PathBuf {
+    PathBuf::from(p.get("cache-dir").unwrap_or(DEFAULT_CACHE))
+}
+
+/// Cache slot for a file import: the store directory is keyed by the
+/// file's canonical path only (stable across edits, so re-imports replace
+/// in place and the cache holds at most one copy per source file), while a
+/// `.fingerprint` sidecar records size + mtime to detect staleness.
+fn import_cache_entry(cache: &Path, path: &Path) -> (PathBuf, PathBuf, String) {
+    use std::hash::{Hash, Hasher as _};
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset");
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    path.canonicalize().unwrap_or_else(|_| path.to_path_buf()).hash(&mut h);
+    let dir = cache.join(format!("import-{stem}-{:016x}", h.finish()));
+    let fingerprint = std::fs::metadata(path)
+        .map(|m| format!("{} {:?}", m.len(), m.modified().ok()))
+        .unwrap_or_default();
+    let mut fp = dir.as_os_str().to_os_string();
+    fp.push(".fingerprint");
+    (dir, PathBuf::from(fp), fingerprint)
+}
+
+/// Resolve a dataset name into a segment-store-backed HDFS file — the
+/// out-of-core path. Quest-family names generate to the cache on first
+/// use; FIMI file paths are imported into the cache (keyed by path + size,
+/// reused when present); registry names are materialized once and written
+/// through (reused when the cached length matches).
+fn streamed_file(
+    name: &str,
+    cache: &Path,
+    cluster: &ClusterConfig,
+    seed: u64,
+) -> Result<hdfs::HdfsFile> {
+    use anyhow::Context as _;
+    use mrapriori::hdfs::segment;
+    let n_nodes = cluster.nodes.len();
+    let put = |src: segment::SegmentSource| {
+        hdfs::put_segmented(std::sync::Arc::new(src), n_nodes, hdfs::DEFAULT_REPLICATION, seed)
+    };
+    if registry::quest_params(name).is_some() {
+        let src = registry::quest_store(name, cache)
+            .with_context(|| format!("building quest store for {name:?}"))?;
+        return Ok(put(src));
+    }
+    // Registry names resolve before file paths, exactly like [`resolve_db`]
+    // — `--streamed` must never change WHICH dataset a name denotes.
+    if let Some(db) = registry::try_load(name) {
+        let dir = cache.join(&db.name);
+        if segment::exists(&dir) {
+            let src = segment::open(&dir)?;
+            if src.len() == db.len() {
+                return Ok(put(src));
+            }
+        }
+        let src = segment::write_store(
+            &dir,
+            db.name.as_str(),
+            registry::split_lines(&db.name),
+            db.n_items,
+            db.txns.iter().cloned(),
+        )
+        .with_context(|| format!("writing store for {name:?}"))?;
+        return Ok(put(src));
+    }
+    let path = Path::new(name);
+    if path.exists() {
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset");
+        let (dir, fp_path, fingerprint) = import_cache_entry(cache, path);
+        let fresh = !fingerprint.is_empty()
+            && std::fs::read_to_string(&fp_path).is_ok_and(|s| s == fingerprint);
+        if segment::exists(&dir) && fresh {
+            return Ok(put(segment::open(&dir)?));
+        }
+        let src = loader::import_segmented(path, &dir, registry::split_lines(stem))
+            .with_context(|| format!("importing {name:?} into {dir:?}"))?;
+        std::fs::write(&fp_path, &fingerprint)?;
+        return Ok(put(src));
+    }
+    Err(unknown_dataset(name))
 }
 
 fn cmd_mine(args: &[String]) -> Result<()> {
     let set = FlagSet::new("mine", "run one algorithm on a dataset")
-        .opt("dataset", "registry name (c20d10k|chess|mushroom) or FIMI file path")
+        .opt("dataset", "registry name, t<T>i<I>d<D> Quest name, or FIMI file path")
         .opt("algo", "algorithm: spc|fpc|dpc|vfpc|etdpc|opt-vfpc|opt-etdpc")
         .opt("min-sup", "fractional minimum support (default: paper reference)")
         .opt("split-lines", "lines per input split (default: paper setting)")
@@ -99,6 +204,8 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         .opt("workers", "host threads for real execution")
         .opt_default("gen-mode", "per-record", "per-record|per-task generation cost")
         .flag("fuse-12", "fuse passes 1+2 via triangular matrix (ref [6])")
+        .flag("streamed", "mine through the on-disk segment store (out-of-core)")
+        .opt("cache-dir", "segment-store cache directory")
         .flag("verbose", "debug logging")
         .flag("rules", "derive association rules (conf >= 0.9) at the end")
         .flag("help", "show usage");
@@ -110,32 +217,59 @@ fn cmd_mine(args: &[String]) -> Result<()> {
     if p.bool("verbose") {
         logging::set_level(Level::Debug);
     }
-    let db = load_db(&p)?;
     let algo = Algorithm::parse(p.get("algo").unwrap_or("opt-vfpc"))
         .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
+    if p.usize("split-lines")?.is_some_and(|s| s == 0) {
+        bail!("--split-lines must be > 0");
+    }
+    let cluster = common_cluster(&p)?;
+    let seed = RunOptions::default().seed;
+    // Store the dataset as an HDFS file on the chosen backend; blocks
+    // follow the split size (one block per paper-style map task).
+    let file = if p.bool("streamed") {
+        streamed_file(p.required("dataset")?, &cache_dir(&p), &cluster, seed)?
+    } else {
+        let db = load_db(&p)?;
+        let block = p.usize("split-lines")?.unwrap_or_else(|| registry::split_lines(&db.name));
+        hdfs::put(&db, block, cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, seed)
+    };
     let min_sup = p
         .f64("min-sup")?
-        .or_else(|| registry::reference_min_sup(&db.name))
+        .or_else(|| registry::reference_min_sup(&file.name))
         .unwrap_or(0.25);
-    let cluster = common_cluster(&p)?;
+    // Streamed runs split at the store's block granularity: finer splits
+    // would re-decode a whole block file per overlapping map task.
+    let split_lines = if p.bool("streamed") {
+        if p.usize("split-lines")?.is_some_and(|s| s != file.block_lines) {
+            eprintln!(
+                "note: --split-lines ignored for --streamed; using the store's block size ({})",
+                file.block_lines
+            );
+        }
+        file.block_lines
+    } else {
+        p.usize("split-lines")?.unwrap_or_else(|| registry::split_lines(&file.name))
+    };
     let opts = RunOptions {
-        split_lines: p.usize("split-lines")?.unwrap_or_else(|| registry::split_lines(&db.name)),
+        split_lines,
         gen_mode: match p.get("gen-mode") {
             Some("per-task") => GenMode::PerTask,
             _ => GenMode::PerRecord,
         },
-        dpc_alpha: if db.name == "chess" { 3.0 } else { 2.0 },
+        dpc_alpha: if file.name == "chess" { 3.0 } else { 2.0 },
         fuse_pass_2: p.bool("fuse-12"),
+        seed,
         ..Default::default()
     };
 
-    let out = coordinator::run_with(algo, &db, min_sup, &cluster, &opts);
+    let out = coordinator::run_on_file(algo, &file, min_sup, &cluster, &opts);
     println!(
-        "{} on {} @ min_sup {:.2} (min_count {})",
+        "{} on {} @ min_sup {:.2} (min_count {}){}",
         algo.name(),
-        db.name,
+        file.name,
         min_sup,
-        out.min_count
+        out.min_count,
+        if p.bool("streamed") { " [streamed]" } else { "" }
     );
     println!(
         "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}  {}",
@@ -184,7 +318,7 @@ fn cmd_mine(args: &[String]) -> Result<()> {
             gen_stats: Default::default(),
             subset_visits: 0,
         };
-        let rules = mrapriori::apriori::rules::derive_rules(&mined, db.len(), 0.9);
+        let rules = mrapriori::apriori::rules::derive_rules(&mined, file.len(), 0.9);
         println!("\ntop association rules (conf >= 0.9):");
         for r in rules.iter().take(15) {
             println!("  {r}");
@@ -208,23 +342,67 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
 }
 
 fn cmd_generate(args: &[String]) -> Result<()> {
-    let set = FlagSet::new("generate", "write a registry dataset to a FIMI file")
-        .opt("dataset", "registry name")
-        .opt("out", "output path")
+    let set = FlagSet::new("generate", "write a dataset to a FIMI file or segment store")
+        .opt("dataset", "registry or Quest-family name (or FIMI file path)")
+        .opt("out", "output path (a directory with --segmented)")
         .opt("scale", "repeat to N transactions (e.g. 200000 for c20d200k)")
+        .flag("segmented", "write an on-disk segment store instead of one text file")
+        .opt("block-lines", "records per segment block (default: the dataset's split size)")
         .flag("help", "show usage");
     let p = set.parse(args)?;
     if p.bool("help") {
         println!("{}", set.usage());
         return Ok(());
     }
-    let mut db = load_db(&p)?;
-    if let Some(target) = p.usize("scale")? {
-        let name = format!("{}-x{}", db.name, target);
-        db = db.scaled_to(target, name);
-    }
+    let name = p.required("dataset")?;
     let out = p.required("out")?;
-    loader::write_file(&db, std::path::Path::new(out))?;
+    let quest = registry::quest_params(name);
+
+    if p.bool("segmented") {
+        use mrapriori::hdfs::segment;
+        if p.usize("scale")?.is_some() {
+            bail!("--scale is not supported with --segmented (pick a larger t*i*d* name)");
+        }
+        let block = p.usize("block-lines")?.unwrap_or_else(|| registry::split_lines(name));
+        if block == 0 {
+            bail!("--block-lines must be > 0");
+        }
+        let src = if let Some(qp) = &quest {
+            // Quest names stream straight to disk — never materialized.
+            segment::write_store(
+                out,
+                name.to_ascii_lowercase(),
+                block,
+                qp.n_items,
+                QuestGen::new(qp),
+            )?
+        } else if let Some(db) = registry::try_load(name) {
+            // Registry before file path, like every other resolution site.
+            segment::write_store(out, db.name.as_str(), block, db.n_items, db.txns.iter().cloned())?
+        } else if Path::new(name).exists() {
+            // FIMI files stream line by line through the importer.
+            loader::import_segmented(Path::new(name), Path::new(out), block)?
+        } else {
+            return Err(unknown_dataset(name));
+        };
+        let blocks = src.len().div_ceil(src.block_lines());
+        println!("wrote {} transactions in {blocks} blocks to {out} (segment store)", src.len());
+        return Ok(());
+    }
+
+    if let (Some(qp), None) = (&quest, p.usize("scale")?) {
+        // Quest names stream to the text file record by record.
+        let n = loader::write_file_streamed(QuestGen::new(qp), Path::new(out))?;
+        println!("wrote {n} transactions to {out}");
+        return Ok(());
+    }
+
+    let mut db = resolve_db(name)?;
+    if let Some(target) = p.usize("scale")? {
+        let scaled_name = format!("{}-x{}", db.name, target);
+        db = db.scaled_to(target, scaled_name);
+    }
+    loader::write_file(&db, Path::new(out))?;
     println!("wrote {} transactions to {}", db.len(), out);
     Ok(())
 }
@@ -251,9 +429,16 @@ fn cmd_lk(args: &[String]) -> Result<()> {
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
-    let set = FlagSet::new("sweep", "run the paper's figure sweep on a dataset")
-        .opt("dataset", "registry name or file path")
+    let set = FlagSet::new("sweep", "figure sweep on one dataset, or a scale grid")
+        .opt("dataset", "registry name or file path (figure-sweep mode)")
         .opt("min-sups", "comma-separated min_sup list (default: paper sweep)")
+        .opt("datasets", "comma-separated names -> algorithm x dataset scale grid")
+        .opt("algos", "grid algorithms, comma-separated (default: spc,opt-etdpc)")
+        .opt("min-sup", "single min_sup for every grid cell (default: per-dataset)")
+        .flag("in-memory", "grid mode: materialize datasets instead of streaming")
+        .opt("cache-dir", "segment-store cache directory")
+        .opt("json-out", "grid mode: write the scale table as JSON here")
+        .opt("md-out", "grid mode: write the markdown scale table here")
         .opt("workers", "host threads")
         .opt("cluster-config", "TOML cluster config path")
         .opt("data-nodes", "uniform cluster of N DataNodes")
@@ -262,6 +447,9 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     if p.bool("help") {
         println!("{}", set.usage());
         return Ok(());
+    }
+    if p.has("datasets") {
+        return scale_sweep(&p);
     }
     let db = load_db(&p)?;
     let mut spec = SweepSpec::paper(&db);
@@ -272,6 +460,80 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let result = tables::sweep(&spec);
     println!("{}", tables::figure_a(&result, &db.name));
     println!("{}", tables::figure_b(&result, &db.name));
+    Ok(())
+}
+
+/// `sweep --datasets ...`: the Fig 5(a)-style algorithm x dataset scale
+/// grid. Datasets stream through the segment store by default, so
+/// T*I*D100K/1M-class entries mine with memory bounded by the block size;
+/// results render as a markdown table (stdout / --md-out) and JSON
+/// (--json-out).
+fn scale_sweep(p: &mrapriori::util::flags::Parsed) -> Result<()> {
+    let cluster = common_cluster(p)?;
+    let cache = cache_dir(p);
+    let names: Vec<&str> = p
+        .get("datasets")
+        .unwrap_or_default()
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        bail!("--datasets needs at least one name");
+    }
+    let algos: Vec<Algorithm> = match p.get("algos") {
+        None => vec![Algorithm::Spc, Algorithm::OptimizedEtdpc],
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| Algorithm::parse(s).ok_or_else(|| anyhow::anyhow!("unknown algorithm {s:?}")))
+            .collect::<Result<_>>()?,
+    };
+    let seed = RunOptions::default().seed;
+    let mut runs = Vec::with_capacity(names.len());
+    for name in names {
+        let file = if p.bool("in-memory") {
+            let db = resolve_db(name)?;
+            let block = registry::split_lines(&db.name);
+            hdfs::put(&db, block, cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, seed)
+        } else {
+            streamed_file(name, &cache, &cluster, seed)?
+        };
+        let min_sup = match p.f64("min-sup")? {
+            Some(ms) => ms,
+            None => registry::reference_min_sup(&file.name).unwrap_or(0.01),
+        };
+        let opts = RunOptions {
+            split_lines: registry::split_lines(&file.name),
+            dpc_alpha: if file.name == "chess" { 3.0 } else { 2.0 },
+            seed,
+            ..Default::default()
+        };
+        let outcomes: Vec<MiningOutcome> = algos
+            .iter()
+            .map(|&algo| {
+                eprintln!("  {} on {} ({} txns) @ min_sup {min_sup}", algo.name(), file.name, file.len());
+                coordinator::run_on_file(algo, &file, min_sup, &cluster, &opts)
+            })
+            .collect();
+        runs.push(ScaleRun {
+            dataset: file.name.clone(),
+            n_txns: file.len(),
+            min_sup,
+            outcomes,
+        });
+    }
+    let md = tables::scale_markdown(&algos, &runs);
+    print!("{md}");
+    if let Some(path) = p.get("md-out") {
+        std::fs::write(path, &md)?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = p.get("json-out") {
+        std::fs::write(path, tables::scale_json(&algos, &runs))?;
+        eprintln!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -12,12 +12,14 @@ use std::hash::{Hash, Hasher};
 /// `candidateCount` / `npass` back to the driver.
 pub struct Context<K, V> {
     out: Vec<(K, V)>,
+    /// Task-local operation counters (feed the cluster cost model).
     pub counters: Counters,
     /// Driver side-channel (`set the value of X to context`, Algs 3–5).
     pub aux: BTreeMap<&'static str, u64>,
 }
 
 impl<K, V> Context<K, V> {
+    /// Fresh context with empty output, counters, and aux channel.
     pub fn new() -> Self {
         Self { out: Vec::new(), counters: Counters::new(), aux: BTreeMap::new() }
     }
@@ -37,14 +39,17 @@ impl<K, V> Context<K, V> {
         self.out.push((key, value));
     }
 
+    /// Send a driver value through the job-configuration side-channel.
     pub fn set_aux(&mut self, name: &'static str, value: u64) {
         self.aux.insert(name, value);
     }
 
+    /// Drain the collected (key, value) output.
     pub fn take_output(&mut self) -> Vec<(K, V)> {
         std::mem::take(&mut self.out)
     }
 
+    /// Number of buffered output tuples.
     pub fn output_len(&self) -> usize {
         self.out.len()
     }
@@ -59,29 +64,37 @@ impl<K, V> Default for Context<K, V> {
 /// A map task body. One instance per task (per input split); `map` is called
 /// once per record; `cleanup` runs after the last record (Hadoop semantics).
 pub trait Mapper: Send {
+    /// Output key type.
     type K: Send + Clone + Ord + Hash;
+    /// Output value type.
     type V: Send + Clone;
 
+    /// Process one record at byte-offset-like key `offset`.
     fn map(&mut self, offset: usize, record: &Itemset, ctx: &mut Context<Self::K, Self::V>);
 
+    /// Runs after the last record of the split (Hadoop's `cleanup`).
     fn cleanup(&mut self, _ctx: &mut Context<Self::K, Self::V>) {}
 }
 
 /// Combiner: folds the values of one key locally on the map side.
 /// `ItemsetCombiner` of the paper = [`SumCombiner`].
 pub trait Combiner<K, V>: Send + Sync {
+    /// Fold `values` of one `key` into a single value.
     fn combine(&self, key: &K, values: &mut Vec<V>) -> V;
 }
 
 /// Reducer: folds the values of one key globally; `None` drops the key
 /// (how `ItemsetReducer` applies the min-support filter).
 pub trait Reducer<K, V>: Send + Sync {
+    /// Reduce output record type.
     type Out: Send;
+    /// Fold all `values` of `key`; `None` drops the key.
     fn reduce(&self, key: &K, values: &[V]) -> Option<Self::Out>;
 }
 
 /// Partitioner: key -> reducer index. Default is hash partitioning.
 pub trait Partitioner<K>: Send + Sync {
+    /// Reducer index for `key`, in `[0, n_reducers)`.
     fn partition(&self, key: &K, n_reducers: usize) -> usize;
 }
 
@@ -109,6 +122,7 @@ impl<K: Send + Sync> Combiner<K, u64> for SumCombiner {
 /// The paper's `ItemsetReducer`: sums counts, keeps keys meeting
 /// `min_count` (Algorithm 1).
 pub struct MinSupportReducer {
+    /// Keys whose summed count falls below this are dropped.
     pub min_count: u64,
 }
 

@@ -38,33 +38,40 @@ pub mod keys {
 pub struct Counters(BTreeMap<&'static str, u64>);
 
 impl Counters {
+    /// Empty counter bag.
     pub fn new() -> Self {
         Self::default()
     }
 
     #[inline]
+    /// Add `delta` to `name` (creating it at 0).
     pub fn add(&mut self, name: &'static str, delta: u64) {
         *self.0.entry(name).or_insert(0) += delta;
     }
 
+    /// Overwrite `name` with `value`.
     pub fn set(&mut self, name: &'static str, value: u64) {
         self.0.insert(name, value);
     }
 
+    /// Read `name` (0 when absent).
     pub fn get(&self, name: &str) -> u64 {
         self.0.get(name).copied().unwrap_or(0)
     }
 
+    /// Add every counter of `other` into `self`.
     pub fn merge(&mut self, other: &Counters) {
         for (k, v) in &other.0 {
             *self.0.entry(k).or_insert(0) += v;
         }
     }
 
+    /// Iterate `(name, value)` pairs in name order.
     pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
         self.0.iter().map(|(&k, &v)| (k, v))
     }
 
+    /// Whether no counter was ever touched.
     pub fn is_empty(&self) -> bool {
         self.0.is_empty()
     }

@@ -27,9 +27,11 @@ use std::time::Instant;
 /// Per-task measurement record consumed by the cluster scheduler.
 #[derive(Debug, Clone)]
 pub struct TaskMeter {
+    /// Task index within its phase (map and reduce number independently).
     pub task_id: usize,
     /// Name of the job this task belongs to (phase attribution in reports).
     pub job: Arc<str>,
+    /// The task's operation counters.
     pub counters: Counters,
     /// Locality hint from the task's input split (empty for reduce tasks).
     pub preferred_nodes: Vec<usize>,
@@ -42,9 +44,13 @@ pub struct TaskMeter {
 pub struct JobOutput<O> {
     /// The `JobSpec::name` this output belongs to.
     pub name: String,
+    /// Reduce outputs, concatenated in reduce-task order.
     pub outputs: Vec<O>,
+    /// Merged counters across all map and reduce tasks.
     pub counters: Counters,
+    /// One meter per map task.
     pub map_meters: Vec<TaskMeter>,
+    /// One meter per reduce task.
     pub reduce_meters: Vec<TaskMeter>,
     /// Driver side-channel values (max across tasks — every map task of an
     /// Apriori job computes the same `candidateCount`/`npass`).
@@ -59,14 +65,20 @@ pub struct JobOutput<O> {
 
 /// A configured job, ready to run. Mirrors Hadoop's `Job` object.
 pub struct JobSpec<'a, M: Mapper, R> {
+    /// Job name (flows into meters and phase records).
     pub name: String,
+    /// Input splits; one map task each.
     pub splits: Vec<InputSplit>,
     /// Builds the mapper instance for task `i` (Hadoop constructs one Mapper
     /// per split); runs on the task's thread.
     pub mapper_factory: Box<dyn Fn(usize) -> M + Send + Sync + 'a>,
+    /// Optional map-side combiner.
     pub combiner: Option<Box<dyn Combiner<M::K, M::V> + 'a>>,
+    /// The reduce function (shared read-only across tasks).
     pub reducer: R,
+    /// Key -> reducer routing.
     pub partitioner: Box<dyn Partitioner<M::K> + 'a>,
+    /// Number of reduce tasks (clamped to >= 1).
     pub n_reducers: usize,
     /// Host threads for real execution (not simulated slots!) of both the
     /// map AND reduce phases. On the single-core CI box this is 1; the
@@ -105,9 +117,11 @@ where
         let mut mapper = factory(task_id);
         let mut ctx: Context<M::K, M::V> = Context::new();
         ctx.counters.add(keys::MAP_INPUT_RECORDS, split.len() as u64);
-        for (offset, record) in split.iter() {
-            mapper.map(offset, record, &mut ctx);
-        }
+        // RecordReader loop: the split streams records from its backing
+        // RecordSource (zero-copy for in-memory files; one decoded block at
+        // a time for segment stores, so task memory is bounded by the HDFS
+        // block size rather than the dataset size).
+        split.for_each_record(|offset, record| mapper.map(offset, record, &mut ctx));
         mapper.cleanup(&mut ctx);
         // Map-side partitioned spill: route every pair to its reducer's
         // bucket HERE, on the task's own thread, then combine each bucket

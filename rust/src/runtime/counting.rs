@@ -27,10 +27,12 @@ pub struct XlaCounter {
 }
 
 impl XlaCounter {
+    /// Wrap a loaded runtime.
     pub fn new(runtime: PjrtRuntime) -> Self {
         Self { runtime }
     }
 
+    /// The underlying tile runtime.
     pub fn runtime(&self) -> &PjrtRuntime {
         &self.runtime
     }

@@ -34,6 +34,7 @@ impl ArtifactSpec {
     pub const DEFAULT: ArtifactSpec =
         ArtifactSpec { txn_tile: 256, item_width: 256, cand_tile: 256 };
 
+    /// Artifact file name for this tile shape.
     pub fn file_name(&self) -> String {
         format!(
             "support_count_t{}_i{}_c{}.hlo.txt",
@@ -61,6 +62,7 @@ pub fn artifacts_dir() -> PathBuf {
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
+    /// Tile shape of the loaded executable.
     pub spec: ArtifactSpec,
 }
 
@@ -90,6 +92,7 @@ impl PjrtRuntime {
         Self::load(&artifacts_dir(), ArtifactSpec::DEFAULT)
     }
 
+    /// PJRT platform name of the client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -117,6 +120,7 @@ impl PjrtRuntime {
 /// executes the tile's semantics directly rather than through PJRT.
 #[cfg(not(feature = "xla-pjrt"))]
 pub struct PjrtRuntime {
+    /// Tile shape of the loaded artifact.
     pub spec: ArtifactSpec,
 }
 
@@ -146,6 +150,7 @@ impl PjrtRuntime {
         Self::load(&artifacts_dir(), ArtifactSpec::DEFAULT)
     }
 
+    /// Backend platform name (always "cpu").
     pub fn platform(&self) -> String {
         "cpu".to_string()
     }

@@ -9,7 +9,9 @@ use crate::util::rng::Rng;
 
 /// A reproducible generator of test inputs with an optional shrinker.
 pub trait Gen {
+    /// Generated value type.
     type Item: Clone + std::fmt::Debug;
+    /// Draw one value.
     fn generate(&self, rng: &mut Rng) -> Self::Item;
     /// Candidate smaller versions of `item`, tried in order during shrinking.
     fn shrink(&self, _item: &Self::Item) -> Vec<Self::Item> {
@@ -51,7 +53,9 @@ fn shrink_loop<G: Gen>(gen: &G, mut item: G::Item, prop: &impl Fn(&G::Item) -> b
 
 /// usize in [lo, hi], shrinking toward lo.
 pub struct UsizeGen {
+    /// Inclusive lower bound.
     pub lo: usize,
+    /// Inclusive upper bound.
     pub hi: usize,
 }
 
@@ -74,7 +78,9 @@ impl Gen for UsizeGen {
 
 /// Vec of items with length in [0, max_len], shrinking by halving / popping.
 pub struct VecGen<G> {
+    /// Element generator.
     pub inner: G,
+    /// Maximum vector length.
     pub max_len: usize,
 }
 
@@ -106,7 +112,9 @@ impl<G: Gen> Gen for VecGen<G> {
 
 /// A sorted set of distinct item-ids in [0, universe): a random itemset.
 pub struct ItemsetGen {
+    /// Item ids are drawn from `[0, universe)`.
     pub universe: usize,
+    /// Maximum itemset length.
     pub max_len: usize,
 }
 
@@ -135,14 +143,20 @@ impl Gen for ItemsetGen {
 
 /// A small transaction database: Vec<sorted itemset>, plus the universe size.
 pub struct DbGen {
+    /// Item ids are drawn from `[0, universe)`.
     pub universe: usize,
+    /// Maximum transaction count.
     pub max_txns: usize,
+    /// Maximum transaction width.
     pub max_width: usize,
 }
 
 #[derive(Clone, Debug)]
+/// A generated mini transaction database.
 pub struct SmallDb {
+    /// Size of the item universe.
     pub universe: usize,
+    /// The transactions (canonical itemsets).
     pub txns: Vec<Vec<u32>>,
 }
 

@@ -8,30 +8,45 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 #[derive(Debug, Clone)]
+/// Declaration of one flag.
 pub struct FlagSpec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Whether the flag consumes a value.
     pub takes_value: bool,
+    /// Default value, for value-taking flags.
     pub default: Option<&'static str>,
 }
 
 /// Declarative flag set for one (sub)command.
 #[derive(Debug, Default, Clone)]
 pub struct FlagSet {
+    /// Subcommand name.
     pub command: &'static str,
+    /// One-line subcommand description.
     pub about: &'static str,
     specs: Vec<FlagSpec>,
 }
 
 #[derive(Debug)]
+/// Parse failures surfaced to the CLI user.
 pub enum FlagError {
+    /// A flag that was never declared.
     Unknown(String),
+    /// A value-taking flag at the end of argv.
     MissingValue(String),
+    /// A value that does not parse as the requested type.
     BadValue {
+        /// Flag name.
         name: String,
+        /// Offending raw value.
         value: String,
+        /// Requested type name.
         ty: &'static str,
     },
+    /// A required flag that was not given.
     MissingRequired(String),
 }
 
@@ -51,20 +66,24 @@ impl std::fmt::Display for FlagError {
 impl std::error::Error for FlagError {}
 
 impl FlagSet {
+    /// Empty flag set for `command`.
     pub fn new(command: &'static str, about: &'static str) -> Self {
         Self { command, about, specs: Vec::new() }
     }
 
+    /// Add a boolean flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(FlagSpec { name, help, takes_value: false, default: None });
         self
     }
 
+    /// Add a value-taking flag.
     pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(FlagSpec { name, help, takes_value: true, default: None });
         self
     }
 
+    /// Add a value-taking flag with a default.
     pub fn opt_default(
         mut self,
         name: &'static str,
@@ -75,6 +94,7 @@ impl FlagSet {
         self
     }
 
+    /// Render the help text.
     pub fn usage(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}", self.command, self.about);
@@ -135,26 +155,32 @@ impl FlagSet {
 #[derive(Debug, Clone, Default)]
 pub struct Parsed {
     values: BTreeMap<String, Vec<String>>,
+    /// Bare (non-flag) arguments, in order.
     pub positional: Vec<String>,
 }
 
 impl Parsed {
+    /// Last value of `name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
+    /// Every value of a repeated flag.
     pub fn get_all(&self, name: &str) -> Vec<&str> {
         self.values.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
     }
 
+    /// Whether the flag appeared (or defaulted).
     pub fn has(&self, name: &str) -> bool {
         self.values.contains_key(name)
     }
 
+    /// Boolean view of a flag.
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Value of `name`, or a `MissingRequired` error.
     pub fn required(&self, name: &str) -> Result<&str, FlagError> {
         self.get(name).ok_or_else(|| FlagError::MissingRequired(name.to_string()))
     }
@@ -170,14 +196,17 @@ impl Parsed {
         }
     }
 
+    /// Parse `name` as `usize`.
     pub fn usize(&self, name: &str) -> Result<Option<usize>, FlagError> {
         self.parse_as::<usize>(name, "usize")
     }
 
+    /// Parse `name` as `u64`.
     pub fn u64(&self, name: &str) -> Result<Option<u64>, FlagError> {
         self.parse_as::<u64>(name, "u64")
     }
 
+    /// Parse `name` as `f64`.
     pub fn f64(&self, name: &str) -> Result<Option<f64>, FlagError> {
         self.parse_as::<f64>(name, "f64")
     }

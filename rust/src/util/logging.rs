@@ -5,19 +5,26 @@ use std::sync::atomic::{AtomicU8, Ordering};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
+/// Verbosity levels, most severe first.
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but non-fatal conditions.
     Warn = 1,
+    /// High-level progress (the default).
     Info = 2,
+    /// Per-job engine detail (`--verbose`).
     Debug = 3,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
+/// Set the global log level.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Current global log level.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -27,10 +34,12 @@ pub fn level() -> Level {
     }
 }
 
+/// Whether level `l` would currently print.
 pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Print `args` at level `l` (used by the logging macros).
 pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if enabled(l) {
         let tag = match l {
@@ -43,21 +52,25 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at [`Level::Info`] with `format!` syntax.
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*)) };
 }
 
+/// Log at [`Level::Warn`] (named `warn_` to dodge the built-in lint name).
 #[macro_export]
 macro_rules! warn_ {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*)) };
 }
 
+/// Log at [`Level::Debug`] with `format!` syntax.
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*)) };
 }
 
+/// Log at [`Level::Error`] with `format!` syntax.
 #[macro_export]
 macro_rules! error {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*)) };

@@ -12,21 +12,29 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed TOML-subset value.
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A `[...]` list.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string, if this value is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer, if this value is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -41,12 +49,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The bool, if this value is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this value is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -56,8 +66,11 @@ impl Value {
 }
 
 #[derive(Debug)]
+/// Parse failure: line number plus message.
 pub struct ParseError {
+    /// 1-based line of the failure.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -76,6 +89,7 @@ pub struct Doc {
 }
 
 impl Doc {
+    /// Parse a TOML-subset document into dotted-key entries.
     pub fn parse(text: &str) -> Result<Doc, ParseError> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -114,19 +128,24 @@ impl Doc {
         Ok(Doc { entries })
     }
 
+    /// Raw value at a dotted key path.
     pub fn get(&self, path: &str) -> Option<&Value> {
         self.entries.get(path)
     }
 
+    /// String at a dotted key path.
     pub fn str(&self, path: &str) -> Option<&str> {
         self.get(path).and_then(Value::as_str)
     }
+    /// Integer at a dotted key path.
     pub fn int(&self, path: &str) -> Option<i64> {
         self.get(path).and_then(Value::as_int)
     }
+    /// Float at a dotted key path (integers widen).
     pub fn float(&self, path: &str) -> Option<f64> {
         self.get(path).and_then(Value::as_float)
     }
+    /// Bool at a dotted key path.
     pub fn bool(&self, path: &str) -> Option<bool> {
         self.get(path).and_then(Value::as_bool)
     }
@@ -141,6 +160,7 @@ impl Doc {
             .collect()
     }
 
+    /// All dotted keys in the document, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.entries.keys()
     }

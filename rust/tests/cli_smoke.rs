@@ -97,6 +97,110 @@ fn generate_roundtrip() {
 }
 
 #[test]
+fn mine_streamed_quest_dataset() {
+    let cache = std::env::temp_dir().join("mrapriori_cli_streamed_cache");
+    let _ = std::fs::remove_dir_all(&cache);
+    let cache_s = cache.to_str().unwrap();
+    let (stdout, stderr, ok) = run(&[
+        "mine",
+        "--dataset",
+        "t5i2d500",
+        "--algo",
+        "spc",
+        "--min-sup",
+        "0.05",
+        "--streamed",
+        "--cache-dir",
+        cache_s,
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("[streamed]"), "{stdout}");
+    assert!(stdout.contains("frequent itemsets:"), "{stdout}");
+    // The quest store was generated to the cache on first use.
+    assert!(cache.join("t5i2d500").join("manifest").is_file());
+    // Second run hits the cache and must agree.
+    let (stdout2, stderr2, ok2) = run(&[
+        "mine",
+        "--dataset",
+        "t5i2d500",
+        "--algo",
+        "spc",
+        "--min-sup",
+        "0.05",
+        "--streamed",
+        "--cache-dir",
+        cache_s,
+    ]);
+    assert!(ok2, "stderr: {stderr2}");
+    // Mining results must agree run-to-run (wall-clock lines will differ).
+    let result_lines = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("frequent itemsets:") || l.starts_with("|L_k|"))
+            .map(String::from)
+            .collect()
+    };
+    assert_eq!(result_lines(&stdout), result_lines(&stdout2), "cached rerun diverged");
+    assert!(!result_lines(&stdout).is_empty());
+    std::fs::remove_dir_all(&cache).unwrap();
+}
+
+#[test]
+fn sweep_scale_grid_emits_markdown_and_json() {
+    let dir = std::env::temp_dir().join("mrapriori_cli_scale_grid");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let json = dir.join("scale.json");
+    let md = dir.join("scale.md");
+    let cache = dir.join("cache");
+    let (stdout, stderr, ok) = run(&[
+        "sweep",
+        "--datasets",
+        "t5i2d500,t6i2d400",
+        "--algos",
+        "spc,opt-etdpc",
+        "--min-sup",
+        "0.05",
+        "--cache-dir",
+        cache.to_str().unwrap(),
+        "--json-out",
+        json.to_str().unwrap(),
+        "--md-out",
+        md.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("| dataset |"), "{stdout}");
+    assert!(stdout.contains("t5i2d500"), "{stdout}");
+    let json_text = std::fs::read_to_string(&json).unwrap();
+    assert!(json_text.contains("\"algorithms\": [\"SPC\", \"Optimized-ETDPC\"]"), "{json_text}");
+    assert!(json_text.contains("\"dataset\": \"t6i2d400\""), "{json_text}");
+    let md_text = std::fs::read_to_string(&md).unwrap();
+    assert!(md_text.contains("Optimized-ETDPC (s)"), "{md_text}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn generate_segmented_store() {
+    let dir = std::env::temp_dir().join("mrapriori_cli_gen_segmented");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = dir.join("store");
+    let (stdout, stderr, ok) = run(&[
+        "generate",
+        "--dataset",
+        "t5i2d300",
+        "--out",
+        store.to_str().unwrap(),
+        "--segmented",
+        "--block-lines",
+        "100",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("300 transactions in 3 blocks"), "{stdout}");
+    assert!(store.join("manifest").is_file());
+    assert!(store.join("block-00002.txt").is_file());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn lk_profile_output() {
     let (stdout, _, ok) = run(&["lk", "--dataset", "mushroom", "--min-sup", "0.5"]);
     assert!(ok);

@@ -1,0 +1,126 @@
+//! Streamed (segment-store) and in-memory dataset loading must be
+//! indistinguishable to the miners: identical frequent itemsets, counts,
+//! and phase structure — with the streamed path's resident record buffer
+//! bounded by the HDFS block size, not the dataset size (ISSUE 2
+//! acceptance; DESIGN.md §7).
+
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{run_on_file, run_with, Algorithm, RunOptions};
+use mrapriori::dataset::ibm::QuestGen;
+use mrapriori::dataset::registry;
+use mrapriori::hdfs::{self, RecordSource as _};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A small Quest-family entry: big enough for several blocks and deep
+/// enough mining to exercise Job2 phases, small enough for tier-1.
+const NAME: &str = "t8i3d2k";
+const MIN_SUP: f64 = 0.02;
+
+fn tmp_cache(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("mrapriori_streaming_equiv").join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn streamed_mining_matches_in_memory() {
+    let cache = tmp_cache("equiv");
+    let cluster = ClusterConfig::paper_cluster();
+    let src = Arc::new(registry::quest_store(NAME, &cache).unwrap());
+    let file =
+        hdfs::put_segmented(Arc::clone(&src), cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, 1);
+    let db = registry::try_load(NAME).unwrap();
+    assert_eq!(file.len(), db.len());
+    assert_eq!(file.n_items, db.n_items);
+    let opts = RunOptions { split_lines: registry::split_lines(NAME), ..Default::default() };
+    for algo in [Algorithm::Spc, Algorithm::OptimizedEtdpc] {
+        let streamed = run_on_file(algo, &file, MIN_SUP, &cluster, &opts);
+        let memory = run_with(algo, &db, MIN_SUP, &cluster, &opts);
+        assert!(!streamed.all_frequent().is_empty(), "{algo}: degenerate run");
+        assert_eq!(streamed.all_frequent(), memory.all_frequent(), "{algo}");
+        assert_eq!(streamed.lk_profile(), memory.lk_profile(), "{algo}");
+        assert_eq!(streamed.n_phases(), memory.n_phases(), "{algo}");
+        assert_eq!(streamed.min_count, memory.min_count, "{algo}");
+    }
+    // The acceptance bound: mining touched every record of every split,
+    // yet the decode buffer never held more than one block.
+    assert!(src.peak_resident_records() > 0, "mining must have streamed records");
+    assert!(
+        src.peak_resident_records() <= file.block_lines,
+        "resident buffer {} exceeds block size {}",
+        src.peak_resident_records(),
+        file.block_lines
+    );
+    assert!(file.block_lines < file.len(), "bound is only meaningful with multiple blocks");
+    std::fs::remove_dir_all(&cache).unwrap();
+}
+
+#[test]
+fn streamed_outcome_stable_across_worker_counts() {
+    let cache = tmp_cache("workers");
+    let src = Arc::new(registry::quest_store(NAME, &cache).unwrap());
+    let mut cluster = ClusterConfig::paper_cluster();
+    let file =
+        hdfs::put_segmented(Arc::clone(&src), cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, 1);
+    let opts = RunOptions { split_lines: registry::split_lines(NAME), ..Default::default() };
+    cluster.workers = 1;
+    let baseline = run_on_file(Algorithm::OptimizedEtdpc, &file, MIN_SUP, &cluster, &opts);
+    for workers in [2, 4] {
+        cluster.workers = workers;
+        let out = run_on_file(Algorithm::OptimizedEtdpc, &file, MIN_SUP, &cluster, &opts);
+        assert_eq!(out.all_frequent(), baseline.all_frequent(), "workers={workers}");
+        // Simulated time is a function of metered counters, not host
+        // threads — it must not drift either.
+        assert!((out.total_time - baseline.total_time).abs() < 1e-9, "workers={workers}");
+    }
+    std::fs::remove_dir_all(&cache).unwrap();
+}
+
+#[test]
+fn generator_store_is_deterministic_per_seed() {
+    let cache_a = tmp_cache("det-a");
+    let cache_b = tmp_cache("det-b");
+    let a = registry::quest_store(NAME, &cache_a).unwrap();
+    let b = registry::quest_store(NAME, &cache_b).unwrap();
+    assert_eq!(a.len(), b.len());
+    // Byte-identical block files: two generations from the same name agree
+    // exactly, so the disk cache can never go stale against the generator.
+    let n_blocks = a.len().div_ceil(a.block_lines());
+    for i in 0..n_blocks {
+        let name = format!("block-{i:05}.txt");
+        let ba = std::fs::read(a.dir().join(&name)).unwrap();
+        let bb = std::fs::read(b.dir().join(&name)).unwrap();
+        assert_eq!(ba, bb, "block {i} differs between generations");
+        assert!(!ba.is_empty());
+    }
+    // ... and the streamed store equals the in-memory generator output.
+    let p = registry::quest_params(NAME).unwrap();
+    let expected: Vec<_> = QuestGen::new(&p).collect();
+    let mut streamed = Vec::new();
+    a.for_each(0..a.len(), &mut |_, r| streamed.push(r.clone()));
+    assert_eq!(streamed, expected);
+    std::fs::remove_dir_all(&cache_a).unwrap();
+    std::fs::remove_dir_all(&cache_b).unwrap();
+}
+
+#[test]
+fn imported_file_mines_identically() {
+    use mrapriori::dataset::loader;
+    let dir = tmp_cache("import");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Round-trip an in-memory registry dataset through FIMI text and a
+    // segment import; mining the import must match mining the original.
+    let db = registry::load("mushroom");
+    let path = dir.join("mushroom.txt");
+    loader::write_file(&db, &path).unwrap();
+    let src = loader::import_segmented(&path, &dir.join("store"), 1000).unwrap();
+    let cluster = ClusterConfig::paper_cluster();
+    let file =
+        hdfs::put_segmented(Arc::new(src), cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, 1);
+    let opts = RunOptions { split_lines: 1000, ..Default::default() };
+    let streamed = run_on_file(Algorithm::Spc, &file, 0.35, &cluster, &opts);
+    let memory = run_with(Algorithm::Spc, &db, 0.35, &cluster, &opts);
+    assert_eq!(streamed.all_frequent(), memory.all_frequent());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
