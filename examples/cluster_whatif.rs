@@ -3,12 +3,14 @@
 //! cluster's speed changes its decisions (and can degrade it); ETDPC keys
 //! on the *relative* times of consecutive phases and keeps its plan.
 //!
-//! Also demonstrates the TOML config system end to end.
+//! Each cluster shape is one `MiningSession` over the same dataset — the
+//! session API's "same data, different cluster" comparison pattern. Also
+//! demonstrates the TOML config system end to end.
 //!
 //! Run: `cargo run --release --example cluster_whatif`
 
 use mrapriori::config;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 use mrapriori::util::tomlmini::Doc;
 
@@ -31,16 +33,26 @@ fn plan(outcome: &mrapriori::coordinator::MiningOutcome) -> Vec<usize> {
 fn main() {
     let db = registry::load("mushroom");
     let min_sup = 0.15;
-    let opts = RunOptions { split_lines: 1000, ..Default::default() };
 
     let fast = mrapriori::cluster::ClusterConfig::paper_cluster();
     let slow = config::cluster_from_doc(&Doc::parse(SLOW_CLUSTER).unwrap()).unwrap();
     println!("fast cluster: node speed {:.2}", fast.nodes[0].speed);
     println!("slow cluster: node speed {:.2}\n", slow.nodes[0].speed);
 
+    // One session per cluster shape; both bind the same dataset.
+    let on_fast_session = MiningSession::for_db(&db, fast.clone())
+        .split_lines(1000)
+        .build()
+        .expect("valid session");
+    let on_slow_session = MiningSession::for_db(&db, slow.clone())
+        .split_lines(1000)
+        .build()
+        .expect("valid session");
+
     for algo in [Algorithm::Dpc, Algorithm::Etdpc] {
-        let on_fast = run_with(algo, &db, min_sup, &fast, &opts);
-        let on_slow = run_with(algo, &db, min_sup, &slow, &opts);
+        let req = MiningRequest::new(algo).min_sup(min_sup);
+        let on_fast = on_fast_session.run(&req).expect("valid request");
+        let on_slow = on_slow_session.run(&req).expect("valid request");
         let same = plan(&on_fast) == plan(&on_slow);
         println!("{}:", algo.name());
         println!("  fast cluster plan (passes/phase): {:?}  -> {:.0} s", plan(&on_fast), on_fast.actual_time);

@@ -4,13 +4,17 @@
 //! against the sequential oracle, and report the paper's headline metric
 //! (execution-time ranking and the Optimized-* savings).
 //!
+//! Each dataset is served by ONE `MiningSession`, so its seven algorithm
+//! runs share a single Job1 dataset scan — the run asserts the reuse via
+//! the session counters.
+//!
 //! This is the run recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example paper_figures`
 
 use mrapriori::apriori::sequential::mine;
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 
 fn main() {
@@ -25,11 +29,11 @@ fn main() {
     for name in registry::NAMES {
         let db = registry::load(name);
         let min_sup = registry::reference_min_sup(name).unwrap();
-        let opts = RunOptions {
-            split_lines: registry::split_lines(name),
-            dpc_alpha: if name == "chess" { 3.0 } else { 2.0 },
-            ..Default::default()
-        };
+        let session = MiningSession::for_db(&db, cluster.clone())
+            .split_lines(registry::split_lines(name))
+            .build()
+            .expect("registry datasets are valid");
+        let dpc_alpha = if name == "chess" { 3.0 } else { 2.0 };
         let oracle = mine(&db, min_sup);
         println!(
             "=== {name} @ min_sup {min_sup} — oracle: {} frequent, max length {} ===",
@@ -42,7 +46,8 @@ fn main() {
         );
         let mut spc_actual = 0.0;
         for algo in Algorithm::ALL {
-            let out = run_with(algo, &db, min_sup, &cluster, &opts);
+            let req = MiningRequest::new(algo).min_sup(min_sup).dpc_alpha(dpc_alpha);
+            let out = session.run(&req).expect("valid request");
             if algo == Algorithm::Spc {
                 spc_actual = out.actual_time;
             }
@@ -58,7 +63,12 @@ fn main() {
             );
             assert!(ok, "{algo} diverged from the oracle on {name}");
         }
-        println!();
+        let stats = session.stats();
+        assert_eq!(stats.job1_runs, 1, "{name}: Job1 must run once per session support");
+        println!(
+            "session: Job1 ran {} time(s) for {} queries ({} cache hits)\n",
+            stats.job1_runs, stats.queries, stats.job1_cache_hits
+        );
     }
     println!("all 21 runs matched the sequential oracle exactly.");
 }

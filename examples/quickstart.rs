@@ -1,13 +1,14 @@
-//! Quickstart: mine frequent itemsets with the paper's best algorithm
-//! (Optimized-VFPC) on the mushroom dataset, on the paper's 4-DataNode
-//! cluster, then derive association rules.
+//! Quickstart: open a mining session on the mushroom dataset over the
+//! paper's 4-DataNode cluster, run the paper's best algorithm
+//! (Optimized-VFPC) with live phase events, reuse the session's Job1 cache
+//! for a second query, then derive association rules.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use mrapriori::apriori::rules::derive_rules;
 use mrapriori::apriori::sequential::MineResult;
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{self, Algorithm};
+use mrapriori::coordinator::{Algorithm, CancelToken, MiningRequest, MiningSession, PhaseEvent};
 use mrapriori::dataset::registry;
 
 fn main() {
@@ -16,17 +17,28 @@ fn main() {
     let db = registry::load("mushroom");
     println!("dataset: {} ({} txns, {} items)", db.name, db.len(), db.n_items);
 
-    // 2. A cluster: the paper's heterogeneous 4-DataNode setup (Table 1).
-    let cluster = ClusterConfig::paper_cluster();
+    // 2. A session: the dataset bound to the paper's heterogeneous
+    //    4-DataNode cluster (Table 1). The split plan is computed once and
+    //    Job1 results are memoized across queries.
+    let session = MiningSession::for_db(&db, ClusterConfig::paper_cluster())
+        .build()
+        .expect("mushroom is a valid dataset");
 
-    // 3. Mine.
-    let out = coordinator::run(
-        Algorithm::OptimizedVfpc,
-        &db,
-        0.25,
-        &cluster,
-        registry::split_lines("mushroom"),
-    );
+    // 3. Mine, streaming phase events as the run executes.
+    let request = MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(0.25);
+    let out = session
+        .run_streaming(&request, &CancelToken::new(), |event| {
+            if let PhaseEvent::PhaseFinished { record, from_cache } = event {
+                println!(
+                    "  phase {} ({}): {:.0} simulated s{}",
+                    record.phase,
+                    record.job,
+                    record.elapsed,
+                    if from_cache { " [job1 cache]" } else { "" }
+                );
+            }
+        })
+        .expect("valid request");
     println!(
         "{}: {} frequent itemsets in {} phases — {:.0} simulated s ({:.2} s host)",
         out.algorithm,
@@ -37,7 +49,18 @@ fn main() {
     );
     println!("|L_k| profile: {:?}", out.lk_profile());
 
-    // 4. Association rules from the mined itemsets.
+    // 4. A second query at the same support skips the dataset scan: Job1
+    //    comes straight from the session cache.
+    let spc = session
+        .run(&MiningRequest::new(Algorithm::Spc).min_sup(0.25))
+        .expect("valid request");
+    let stats = session.stats();
+    println!(
+        "second query ({}): {:.0} simulated s; Job1 ran {} time(s) for {} queries",
+        spc.algorithm, spc.actual_time, stats.job1_runs, stats.queries
+    );
+
+    // 5. Association rules from the mined itemsets.
     let as_mine_result = MineResult {
         levels: out.levels.clone(),
         min_count: out.min_count,

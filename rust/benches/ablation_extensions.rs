@@ -9,7 +9,7 @@ use mrapriori::apriori::sampling::{mine_approximate, ParmaParams};
 use mrapriori::apriori::sequential::mine;
 use mrapriori::bench_harness::timing::{bench, save_report};
 use mrapriori::cluster::{schedule_with_faults, ClusterConfig, FaultModel, SimTask};
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 use std::fmt::Write as _;
 
@@ -22,10 +22,14 @@ fn main() {
     for name in registry::NAMES {
         let db = registry::load(name);
         let min_sup = registry::reference_min_sup(name).unwrap();
-        let base = RunOptions { split_lines: registry::split_lines(name), ..Default::default() };
-        let fused_opts = RunOptions { fuse_pass_2: true, ..base.clone() };
-        let plain = run_with(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &base);
-        let fused = run_with(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &fused_opts);
+        // One session; fused and unfused occupy distinct Job1 cache keys.
+        let session = MiningSession::for_db(&db, cluster.clone())
+            .split_lines(registry::split_lines(name))
+            .build()
+            .expect("valid session");
+        let base = MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(min_sup);
+        let plain = session.run(&base).expect("valid request");
+        let fused = session.run(&base.clone().fuse_pass_2(true)).expect("valid request");
         assert_eq!(plain.all_frequent(), fused.all_frequent(), "{name}: fused diverged");
         let _ = writeln!(
             out,

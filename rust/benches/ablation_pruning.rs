@@ -8,7 +8,7 @@
 use mrapriori::bench_harness::timing::save_report;
 use mrapriori::cluster::ClusterConfig;
 use mrapriori::coordinator::mappers::GenMode;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 use mrapriori::mapreduce::{keys, Counters};
 use std::fmt::Write as _;
@@ -32,10 +32,17 @@ fn main() {
     for name in registry::NAMES {
         let db = registry::load(name);
         let min_sup = registry::reference_min_sup(name).unwrap();
-        let opts = RunOptions { split_lines: registry::split_lines(name), ..Default::default() };
-
-        let plain = run_with(Algorithm::Vfpc, &db, min_sup, &cluster, &opts);
-        let optim = run_with(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &opts);
+        // Plain and optimized share one session (and one Job1 scan).
+        let session = MiningSession::for_db(&db, cluster.clone())
+            .split_lines(registry::split_lines(name))
+            .build()
+            .expect("valid session");
+        let plain = session
+            .run(&MiningRequest::new(Algorithm::Vfpc).min_sup(min_sup))
+            .expect("valid request");
+        let optim = session
+            .run(&MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(min_sup))
+            .expect("valid request");
         let mut pc = Counters::new();
         let mut oc = Counters::new();
         for p in &plain.phases {
@@ -70,14 +77,13 @@ fn main() {
     for name in registry::NAMES {
         let db = registry::load(name);
         let min_sup = registry::reference_min_sup(name).unwrap();
-        let mk = |gm| RunOptions {
-            split_lines: registry::split_lines(name),
-            gen_mode: gm,
-            ..Default::default()
-        };
-        let faithful =
-            run_with(Algorithm::Vfpc, &db, min_sup, &cluster, &mk(GenMode::PerRecord));
-        let hoisted = run_with(Algorithm::Vfpc, &db, min_sup, &cluster, &mk(GenMode::PerTask));
+        let session = MiningSession::for_db(&db, cluster.clone())
+            .split_lines(registry::split_lines(name))
+            .build()
+            .expect("valid session");
+        let mk = |gm| MiningRequest::new(Algorithm::Vfpc).min_sup(min_sup).gen_mode(gm);
+        let faithful = session.run(&mk(GenMode::PerRecord)).expect("valid request");
+        let hoisted = session.run(&mk(GenMode::PerTask)).expect("valid request");
         let _ = writeln!(
             out,
             "{name:<10} VFPC: per-record {:>7.0} s vs per-task {:>7.0} s ({:.1}x) — identical output: {}",

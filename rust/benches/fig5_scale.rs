@@ -10,7 +10,7 @@ use mrapriori::bench_harness::report::{figure_csv, figure_table, Series};
 use mrapriori::bench_harness::tables::{quest_scale_run, scale_json, scale_markdown, ScaleRun};
 use mrapriori::bench_harness::timing::save_report;
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 
 fn main() {
@@ -26,10 +26,16 @@ fn main() {
     let mut series: Vec<Series> = algos.iter().map(|a| Series::new(a.name())).collect();
     for &n in &sizes {
         let db = base.scaled_to(n, format!("c20d{}k", n / 1000));
-        // Split scales so the run keeps 10 map tasks (paper setup).
-        let opts = RunOptions { split_lines: n / 10, ..Default::default() };
+        // Split scales so the run keeps 10 map tasks (paper setup); one
+        // session per size shares Job1 across the four algorithms.
+        let session = MiningSession::for_db(&db, cluster.clone())
+            .split_lines(n / 10)
+            .build()
+            .expect("valid session");
         for (ai, &algo) in algos.iter().enumerate() {
-            let out = run_with(algo, &db, 0.25, &cluster, &opts);
+            let out = session
+                .run(&MiningRequest::new(algo).min_sup(0.25))
+                .expect("valid request");
             series[ai].push(n as f64 / 1000.0, out.actual_time);
             eprintln!("  {} x{}k: {:.0} s", algo.name(), n / 1000, out.actual_time);
         }

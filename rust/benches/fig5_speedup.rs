@@ -1,11 +1,13 @@
 //! Regenerates the paper's Fig. 5(b): speedup of the four proposed
 //! algorithms on c20d200k (min_sup 0.40, 10 mappers) as DataNodes grow
-//! from 1 to 4. Speedup = T(1 node) / T(n nodes) (§5.4).
+//! from 1 to 4. Speedup = T(1 node) / T(n nodes) (§5.4). One
+//! `MiningSession` per cluster size; the four algorithms of each size
+//! share its Job1 scan.
 
 use mrapriori::bench_harness::report::{figure_csv, figure_table, Series};
 use mrapriori::bench_harness::timing::save_report;
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 
 fn main() {
@@ -15,7 +17,6 @@ fn main() {
     // (the paper's 10-mapper setup on its unspecified slot count shows the
     // same continued growth; with 10 tasks and >=4 slots/node the curve
     // would plateau at 3 nodes).
-    let opts = RunOptions { split_lines: 10_000, ..Default::default() };
     let algos = [
         Algorithm::Vfpc,
         Algorithm::OptimizedVfpc,
@@ -26,8 +27,14 @@ fn main() {
     let mut base_time = vec![0.0f64; algos.len()];
     for nodes in 1..=4usize {
         let cluster = ClusterConfig::uniform(nodes, 3);
+        let session = MiningSession::for_db(&db, cluster)
+            .split_lines(10_000)
+            .build()
+            .expect("valid session");
         for (ai, &algo) in algos.iter().enumerate() {
-            let out = run_with(algo, &db, 0.40, &cluster, &opts);
+            let out = session
+                .run(&MiningRequest::new(algo).min_sup(0.40))
+                .expect("valid request");
             if nodes == 1 {
                 base_time[ai] = out.actual_time;
             }

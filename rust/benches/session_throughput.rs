@@ -1,0 +1,99 @@
+//! Seed of the session-layer perf trajectory: warm-session queries/sec
+//! (repeated min_sup queries on c20d10k through one `MiningSession`, Job1
+//! memoized) vs the cold path (the deprecated one-shot free functions,
+//! which replay split planning and Job1 on every call). Emits
+//! `BENCH_session.json` under `target/paper_results/`.
+//!
+//! Run: `cargo bench --bench session_throughput`
+
+use mrapriori::bench_harness::timing::save_report;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{Algorithm, MiningOutcome, MiningRequest, MiningSession, RunOptions};
+use mrapriori::dataset::{registry, TransactionDb};
+use std::time::Instant;
+
+/// The pre-session baseline, isolated so the deprecation allowance stays
+/// scoped to the one caller whose job is to measure the old path.
+#[allow(deprecated)]
+fn cold_run(
+    algo: Algorithm,
+    db: &TransactionDb,
+    min_sup: f64,
+    cluster: &ClusterConfig,
+    opts: &RunOptions,
+) -> MiningOutcome {
+    mrapriori::coordinator::run_with(algo, db, min_sup, cluster, opts)
+}
+
+fn main() {
+    let db = registry::c20d10k();
+    let cluster = ClusterConfig::paper_cluster();
+    let opts = RunOptions { split_lines: registry::split_lines("c20d10k"), ..Default::default() };
+    // The repeated-query workload of the paper's evaluation: several
+    // algorithms swept over a handful of supports on one dataset.
+    let supports = [0.35, 0.30, 0.25];
+    let algorithms = [Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedVfpc];
+    let n_queries = (supports.len() * algorithms.len()) as f64;
+
+    // Warm path: one session; each support's Job1 runs once and the other
+    // algorithm queries at that support hit the cache.
+    let session = MiningSession::for_db(&db, cluster.clone())
+        .options(&opts)
+        .build()
+        .expect("valid session");
+    let t0 = Instant::now();
+    let mut warm_outcomes = Vec::new();
+    for &ms in &supports {
+        for &algo in &algorithms {
+            let req = MiningRequest::from_options(algo, ms, &opts);
+            warm_outcomes.push(session.run(&req).expect("valid request"));
+        }
+    }
+    let warm_secs = t0.elapsed().as_secs_f64();
+    let stats = session.stats();
+
+    // Cold path: the pre-session free functions — every query replays
+    // split planning and Job1 from scratch.
+    let t0 = Instant::now();
+    let mut cold_outcomes = Vec::new();
+    for &ms in &supports {
+        for &algo in &algorithms {
+            cold_outcomes.push(cold_run(algo, &db, ms, &cluster, &opts));
+        }
+    }
+    let cold_secs = t0.elapsed().as_secs_f64();
+
+    // The comparison is only meaningful if both paths mine identically.
+    for (w, c) in warm_outcomes.iter().zip(&cold_outcomes) {
+        assert_eq!(w.all_frequent(), c.all_frequent(), "warm/cold outputs diverged");
+    }
+
+    let warm_qps = n_queries / warm_secs;
+    let cold_qps = n_queries / cold_secs;
+    println!(
+        "session_throughput: {} queries on c20d10k ({} supports x {} algorithms)",
+        warm_outcomes.len(),
+        supports.len(),
+        algorithms.len()
+    );
+    println!(
+        "  warm session: {warm_secs:.2} s total, {warm_qps:.3} queries/s \
+         (Job1 runs {}, cache hits {})",
+        stats.job1_runs, stats.job1_cache_hits
+    );
+    println!("  cold free-fn: {cold_secs:.2} s total, {cold_qps:.3} queries/s");
+    println!("  speedup: {:.2}x", cold_secs / warm_secs);
+
+    let json = format!(
+        "{{\n  \"bench\": \"session_throughput\",\n  \"dataset\": \"c20d10k\",\n  \
+         \"queries\": {},\n  \"warm_secs\": {warm_secs:.6},\n  \"cold_secs\": {cold_secs:.6},\n  \
+         \"warm_queries_per_sec\": {warm_qps:.6},\n  \"cold_queries_per_sec\": {cold_qps:.6},\n  \
+         \"speedup\": {:.6},\n  \"job1_runs\": {},\n  \"job1_cache_hits\": {}\n}}\n",
+        warm_outcomes.len(),
+        cold_secs / warm_secs,
+        stats.job1_runs,
+        stats.job1_cache_hits
+    );
+    save_report("BENCH_session.json", &json);
+    print!("{json}");
+}

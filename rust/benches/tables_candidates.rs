@@ -1,11 +1,12 @@
 //! Regenerates the paper's Tables 7-9: candidates generated in each
 //! MapReduce phase for SPC, VFPC, Optimized-VFPC, ETDPC, Optimized-ETDPC on
-//! the three datasets at the reference supports.
+//! the three datasets at the reference supports — all five runs per dataset
+//! served from one `MiningSession` (one Job1 scan per dataset).
 
 use mrapriori::bench_harness::tables::candidates_table;
 use mrapriori::bench_harness::timing::save_report;
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 
 fn main() {
@@ -14,7 +15,10 @@ fn main() {
     for (table_no, name) in [(7, "c20d10k"), (8, "chess"), (9, "mushroom")] {
         let db = registry::load(name);
         let min_sup = registry::reference_min_sup(name).unwrap();
-        let opts = RunOptions { split_lines: registry::split_lines(name), ..Default::default() };
+        let session = MiningSession::for_db(&db, cluster.clone())
+            .split_lines(registry::split_lines(name))
+            .build()
+            .expect("registry datasets are valid");
         let runs: Vec<_> = [
             Algorithm::Spc,
             Algorithm::Vfpc,
@@ -23,7 +27,11 @@ fn main() {
             Algorithm::OptimizedEtdpc,
         ]
         .iter()
-        .map(|&a| run_with(a, &db, min_sup, &cluster, &opts))
+        .map(|&a| {
+            session
+                .run(&MiningRequest::new(a).min_sup(min_sup))
+                .expect("reference supports are valid")
+        })
         .collect();
         let refs: Vec<_> = runs.iter().collect();
         let t = candidates_table(

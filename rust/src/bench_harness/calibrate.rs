@@ -8,7 +8,7 @@
 //! per-algorithm fitting can occur.
 
 use crate::cluster::ClusterConfig;
-use crate::coordinator::{run_with, Algorithm, RunOptions};
+use crate::coordinator::{Algorithm, MiningRequest, MiningSession, RunOptions};
 use crate::dataset::registry;
 
 /// Paper Table 3, SPC row: per-phase elapsed seconds on c20d10k @ 0.15.
@@ -30,7 +30,12 @@ pub struct Calibration {
 pub fn calibrate(cluster: &ClusterConfig) -> Calibration {
     let db = registry::c20d10k();
     let opts = RunOptions { split_lines: registry::split_lines("c20d10k"), ..Default::default() };
-    let out = run_with(Algorithm::Spc, &db, 0.15, cluster, &opts);
+    let out = MiningSession::for_db(&db, cluster.clone())
+        .options(&opts)
+        .build()
+        .expect("calibration session")
+        .run(&MiningRequest::new(Algorithm::Spc).min_sup(0.15))
+        .expect("calibration run");
     let model: Vec<f64> = out.phases.iter().map(|p| p.elapsed).collect();
 
     // Compare compute portions (subtract the fixed per-job floor).

@@ -19,7 +19,7 @@ pub fn run_figure_bench(dataset: &str, figure_no: usize) {
         dataset, spec.min_sups, spec.algorithms.len()
     );
     let t0 = std::time::Instant::now();
-    let result = sweep(&spec);
+    let result = sweep(&spec).expect("paper sweep specs are always valid");
     let fa = figure_a(&result, dataset);
     let fb = figure_b(&result, dataset);
     println!("{fa}");

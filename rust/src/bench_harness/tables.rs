@@ -3,7 +3,9 @@
 
 use super::report::{figure_table, Series};
 use crate::cluster::ClusterConfig;
-use crate::coordinator::{run_on_file, run_with, Algorithm, MiningOutcome, RunOptions};
+use crate::coordinator::{
+    Algorithm, MiningError, MiningOutcome, MiningRequest, MiningSession, RunOptions,
+};
 use crate::dataset::{registry, TransactionDb};
 use crate::hdfs;
 
@@ -53,17 +55,24 @@ pub struct SweepResult {
     pub runs: Vec<Vec<MiningOutcome>>,
 }
 
-/// Run the full grid.
-pub fn sweep(spec: &SweepSpec<'_>) -> SweepResult {
+/// Run the full grid over one shared [`MiningSession`]: the split plan is
+/// computed once, and every cell at the same support reuses the memoized
+/// Job1 scan across all algorithms (DESIGN.md §8). Spec values are
+/// user-reachable (CLI `--min-sups`), so validation errors propagate as
+/// typed [`MiningError`]s rather than panicking.
+pub fn sweep(spec: &SweepSpec<'_>) -> Result<SweepResult, MiningError> {
+    let session =
+        MiningSession::for_db(spec.db, spec.cluster.clone()).options(&spec.opts).build()?;
     let mut runs = Vec::with_capacity(spec.algorithms.len());
     for &algo in &spec.algorithms {
         let mut row = Vec::with_capacity(spec.min_sups.len());
         for &ms in &spec.min_sups {
-            row.push(run_with(algo, spec.db, ms, &spec.cluster, &spec.opts));
+            let req = MiningRequest::from_options(algo, ms, &spec.opts);
+            row.push(session.run(&req)?);
         }
         runs.push(row);
     }
-    SweepResult { algorithms: spec.algorithms.clone(), min_sups: spec.min_sups.clone(), runs }
+    Ok(SweepResult { algorithms: spec.algorithms.clone(), min_sups: spec.min_sups.clone(), runs })
 }
 
 /// Figure (a) of Figs 2-4: SPC/FPC/VFPC/DPC/ETDPC execution time vs min_sup.
@@ -168,7 +177,7 @@ pub fn quest_scale_run(
     algorithms: &[Algorithm],
     cluster: &ClusterConfig,
     cache: &std::path::Path,
-) -> Result<ScaleRun, crate::hdfs::segment::SegmentError> {
+) -> anyhow::Result<ScaleRun> {
     let src = registry::quest_store(name, cache)?;
     let seed = RunOptions::default().seed;
     let file = hdfs::put_segmented(
@@ -178,12 +187,21 @@ pub fn quest_scale_run(
         seed,
     );
     let min_sup = registry::reference_min_sup(&file.name).unwrap_or(0.01);
-    let opts = RunOptions { split_lines: file.block_lines, seed, ..Default::default() };
-    let outcomes: Vec<MiningOutcome> = algorithms
-        .iter()
-        .map(|&algo| run_on_file(algo, &file, min_sup, cluster, &opts))
-        .collect();
-    Ok(ScaleRun { dataset: file.name.clone(), n_txns: file.len(), min_sup, outcomes })
+    // One session per row: splits follow the store's block granularity
+    // (the builder's default for pre-stored files) and every algorithm
+    // after the first reuses the row's Job1 scan. Errors (e.g. a
+    // degenerate caller-supplied cluster) propagate instead of panicking.
+    let session = MiningSession::builder(file, cluster.clone()).build()?;
+    let mut outcomes = Vec::with_capacity(algorithms.len());
+    for &algo in algorithms {
+        outcomes.push(session.run(&MiningRequest::new(algo).min_sup(min_sup))?);
+    }
+    Ok(ScaleRun {
+        dataset: session.file().name.clone(),
+        n_txns: session.file().len(),
+        min_sup,
+        outcomes,
+    })
 }
 
 fn json_escape(s: &str) -> String {
@@ -323,7 +341,7 @@ mod tests {
     #[test]
     fn sweep_grid_shape() {
         let db = tiny_db();
-        let r = sweep(&tiny_spec(&db));
+        let r = sweep(&tiny_spec(&db)).unwrap();
         assert_eq!(r.runs.len(), 3);
         assert_eq!(r.runs[0].len(), 2);
     }
@@ -331,7 +349,7 @@ mod tests {
     #[test]
     fn figures_render() {
         let db = tiny_db();
-        let r = sweep(&tiny_spec(&db));
+        let r = sweep(&tiny_spec(&db)).unwrap();
         let fa = figure_a(&r, "tiny");
         assert!(fa.contains("SPC"));
         assert!(fa.contains("VFPC"));
@@ -342,7 +360,7 @@ mod tests {
     #[test]
     fn phase_tables_render() {
         let db = tiny_db();
-        let r = sweep(&tiny_spec(&db));
+        let r = sweep(&tiny_spec(&db)).unwrap();
         let outs: Vec<&MiningOutcome> = r.runs.iter().map(|row| &row[1]).collect();
         let t = phase_time_table(&outs, "tiny 0.2");
         assert!(t.contains("Total"));
@@ -357,8 +375,12 @@ mod tests {
         let algorithms = vec![Algorithm::Spc, Algorithm::OptimizedEtdpc];
         let cluster = ClusterConfig::uniform(2, 2);
         let opts = RunOptions { split_lines: 30, ..Default::default() };
-        let outcomes: Vec<MiningOutcome> =
-            algorithms.iter().map(|&a| run_with(a, &db, 0.3, &cluster, &opts)).collect();
+        let session =
+            MiningSession::for_db(&db, cluster).options(&opts).build().unwrap();
+        let outcomes: Vec<MiningOutcome> = algorithms
+            .iter()
+            .map(|&a| session.run(&MiningRequest::from_options(a, 0.3, &opts)).unwrap())
+            .collect();
         let runs = vec![ScaleRun {
             dataset: db.name.clone(),
             n_txns: db.len(),

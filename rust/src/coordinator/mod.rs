@@ -5,21 +5,24 @@
 
 pub mod drivers;
 pub mod mappers;
+pub mod session;
+
+pub use session::{
+    CancelToken, MiningError, MiningRequest, MiningSession, PhaseEvent, RunHandle,
+    SessionBuilder, SessionStats,
+};
 
 use crate::apriori::sequential::Level;
-use crate::cluster::{simulate_job, ClusterConfig, JobTiming};
+use crate::cluster::{ClusterConfig, JobTiming};
 use crate::dataset::TransactionDb;
 use crate::hdfs;
-use crate::itemset::{Itemset, Trie};
-use crate::mapreduce::api::{HashPartitioner, MinSupportReducer, SumCombiner};
-use crate::mapreduce::counters::{keys, Counters};
-use crate::mapreduce::engine::{run_job, JobSpec};
+use crate::itemset::Itemset;
+use crate::mapreduce::counters::Counters;
 use drivers::{
-    DpcController, EtdpcController, FpcController, PhaseController, PhaseObservation,
-    SpcController, VfpcController,
+    DpcController, EtdpcController, FpcController, PhaseController, SpcController,
+    VfpcController,
 };
-use mappers::{GenMode, Job2Mapper, OneItemsetMapper};
-use std::sync::Arc;
+use mappers::GenMode;
 
 /// The seven algorithms of the paper's evaluation (§5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -214,11 +217,16 @@ fn debug_assert_aux_agreement<O>(out: &crate::mapreduce::JobOutput<O>) {
     );
 }
 
-fn controller_for(algo: Algorithm, opts: &RunOptions) -> Box<dyn PhaseController> {
+fn controller_for(
+    algo: Algorithm,
+    fpc_n: usize,
+    dpc_alpha: f64,
+    dpc_beta: f64,
+) -> Box<dyn PhaseController> {
     match algo {
         Algorithm::Spc => Box::new(SpcController),
-        Algorithm::Fpc => Box::new(FpcController { n: opts.fpc_n }),
-        Algorithm::Dpc => Box::new(DpcController::new(opts.dpc_alpha, opts.dpc_beta)),
+        Algorithm::Fpc => Box::new(FpcController { n: fpc_n }),
+        Algorithm::Dpc => Box::new(DpcController::new(dpc_alpha, dpc_beta)),
         Algorithm::Vfpc | Algorithm::OptimizedVfpc => Box::new(VfpcController::default()),
         Algorithm::Etdpc | Algorithm::OptimizedEtdpc => Box::new(EtdpcController::new()),
     }
@@ -226,6 +234,11 @@ fn controller_for(algo: Algorithm, opts: &RunOptions) -> Box<dyn PhaseController
 
 /// Run `algo` on `db` with default options (paper's split size must be
 /// passed; see [`crate::dataset::registry::split_lines`]).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::MiningSession and submit MiningRequests (DESIGN.md §8)"
+)]
+#[allow(deprecated)]
 pub fn run(
     algo: Algorithm,
     db: &TransactionDb,
@@ -238,6 +251,11 @@ pub fn run(
 
 /// Run `algo` on an in-memory `db` with explicit options: stores the
 /// database as an in-memory HDFS file, then mines it via [`run_on_file`].
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::MiningSession and submit MiningRequests (DESIGN.md §8)"
+)]
+#[allow(deprecated)]
 pub fn run_with(
     algo: Algorithm,
     db: &TransactionDb,
@@ -251,11 +269,17 @@ pub fn run_with(
 }
 
 /// Run `algo` over an already-stored HDFS file — the out-of-core entry
-/// point. The file may be backed by either [`hdfs::RecordSource`] backend;
-/// with a segment store ([`hdfs::put_segmented`]) the driver never
-/// materializes the dataset, and each map task's resident record buffer is
-/// bounded by the HDFS block size. Output is byte-identical to mining the
-/// materialized database through [`run_with`].
+/// point. The file may be backed by either [`hdfs::RecordSource`] backend.
+///
+/// Deprecated shim: a one-shot, validation-free [`MiningSession`] that
+/// preserves the legacy permissive semantics exactly (out-of-domain
+/// `min_sup` mines its degenerate outcome instead of erroring). Every call
+/// replays split planning and Job1 from scratch — a session amortizes
+/// both across queries.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::MiningSession and submit MiningRequests (DESIGN.md §8)"
+)]
 pub fn run_on_file(
     algo: Algorithm,
     file: &hdfs::HdfsFile,
@@ -263,204 +287,7 @@ pub fn run_on_file(
     cluster: &ClusterConfig,
     opts: &RunOptions,
 ) -> MiningOutcome {
-    let run_start = std::time::Instant::now();
-    let min_count = file.min_count(min_sup);
-    let splits = hdfs::nline_splits(file, opts.split_lines);
-
-    let mut levels: Vec<Level> = Vec::new();
-    let mut phases: Vec<PhaseRecord> = Vec::new();
-
-    // ---- Job1: frequent 1-itemsets (Algorithm 1), optionally fused with
-    // pass 2 via the triangular-matrix counter (ref [6]) ------------------
-    let job1_wall = std::time::Instant::now();
-    let n_items = file.n_items;
-    let out = if opts.fuse_pass_2 {
-        run_job(JobSpec {
-            name: "job1+2".into(),
-            splits: splits.clone(),
-            mapper_factory: Box::new(move |_| mappers::FusedOneTwoMapper::new(n_items)),
-            combiner: Some(Box::new(SumCombiner)),
-            reducer: MinSupportReducer { min_count },
-            partitioner: Box::new(HashPartitioner),
-            n_reducers: cluster.n_reducers,
-            workers: cluster.workers,
-        })
-    } else {
-        run_job(JobSpec {
-            name: "job1".into(),
-            splits: splits.clone(),
-            mapper_factory: Box::new(|_| OneItemsetMapper),
-            combiner: Some(Box::new(SumCombiner)),
-            reducer: MinSupportReducer { min_count },
-            partitioner: Box::new(HashPartitioner),
-            n_reducers: cluster.n_reducers,
-            workers: cluster.workers,
-        })
-    };
-    debug_assert_aux_agreement(&out);
-    let timing = simulate_job(&out.map_meters, &out.reduce_meters, cluster);
-    let mut l1: Level = Vec::new();
-    let mut l2: Level = Vec::new();
-    for (set, count) in out.outputs {
-        match set.len() {
-            1 => l1.push((set, count)),
-            _ => l2.push((set, count)),
-        }
-    }
-    l1.sort();
-    l2.sort();
-    phases.push(PhaseRecord {
-        phase: 1,
-        job: out.name,
-        first_pass: 1,
-        n_passes: if opts.fuse_pass_2 { 2 } else { 1 },
-        candidates: 0,
-        elapsed: timing.elapsed(),
-        timing,
-        wall: job1_wall.elapsed().as_secs_f64(),
-        counters: out.counters,
-    });
-
-    let mut controller = controller_for(algo, opts);
-    // DPC/ETDPC initialize their elapsed-time feedback from Job1
-    // (Algorithm 4 line 3) — without changing their initial α.
-    controller.init_job1(phases[0].elapsed);
-
-    if l1.is_empty() {
-        let wall_time = run_start.elapsed().as_secs_f64();
-        let total_time: f64 = phases.iter().map(|p| p.elapsed).sum();
-        let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
-        return MiningOutcome {
-            algorithm: algo,
-            dataset: file.name.clone(),
-            min_sup,
-            min_count,
-            levels,
-            phases,
-            total_time,
-            actual_time,
-            wall_time,
-        };
-    }
-    let mut l_prev = Arc::new(Trie::from_itemsets(1, l1.iter().map(|(s, _)| s)));
-    levels.push(l1);
-    let mut k = 2usize; // first pass of the upcoming phase
-    if opts.fuse_pass_2 {
-        if l2.is_empty() {
-            // Fused phase already proved nothing larger exists.
-            let total_time: f64 = phases.iter().map(|p| p.elapsed).sum();
-            let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
-            return MiningOutcome {
-                algorithm: algo,
-                dataset: file.name.clone(),
-                min_sup,
-                min_count,
-                levels,
-                phases,
-                total_time,
-                actual_time,
-                wall_time: run_start.elapsed().as_secs_f64(),
-            };
-        }
-        l_prev = Arc::new(Trie::from_itemsets(2, l2.iter().map(|(s, _)| s)));
-        levels.push(l2);
-        k = 3;
-    }
-
-    // ---- Job2 phases ------------------------------------------------------
-    let optimized = algo.optimized();
-    loop {
-        if l_prev.is_empty() || k > 64 {
-            break;
-        }
-        let policy = controller.next_policy(l_prev.len() as u64);
-        let phase_wall = std::time::Instant::now();
-        // Build the phase's candidate tries once per job and share them
-        // read-only across tasks (distributed-cache pattern); the faithful
-        // per-record generation *cost* is still charged by the mapper.
-        let plan = Arc::new(mappers::PhasePlan::build(&l_prev, policy, optimized));
-        let gen_mode = opts.gen_mode;
-        let plan_for_tasks = Arc::clone(&plan);
-        let out = run_job(JobSpec {
-            name: format!("job2-k{k}"),
-            splits: splits.clone(),
-            mapper_factory: Box::new(move |_| {
-                Job2Mapper::new(Arc::clone(&plan_for_tasks), gen_mode)
-            }),
-            combiner: Some(Box::new(SumCombiner)),
-            reducer: MinSupportReducer { min_count },
-            partitioner: Box::new(HashPartitioner),
-            n_reducers: cluster.n_reducers,
-            workers: cluster.workers,
-        });
-        debug_assert_aux_agreement(&out);
-        let timing = simulate_job(&out.map_meters, &out.reduce_meters, cluster);
-        let candidates = out.aux.get(keys::CANDIDATES).copied().unwrap_or(0);
-        let npass = out.aux.get(keys::NPASS).copied().unwrap_or(0) as usize;
-
-        let elapsed = timing.elapsed();
-        phases.push(PhaseRecord {
-            phase: phases.len() + 1,
-            job: out.name,
-            first_pass: k,
-            n_passes: npass,
-            candidates,
-            elapsed,
-            timing,
-            wall: phase_wall.elapsed().as_secs_f64(),
-            counters: out.counters,
-        });
-        controller.observe(PhaseObservation { candidates, npass, elapsed });
-
-        if npass == 0 {
-            break; // no candidates could be generated at all
-        }
-
-        // Group phase output by itemset size into levels k .. k+npass-1.
-        let mut by_size: std::collections::BTreeMap<usize, Level> = Default::default();
-        for (set, count) in out.outputs {
-            by_size.entry(set.len()).or_default().push((set, count));
-        }
-        for (size, mut level) in by_size {
-            level.sort();
-            debug_assert!(size >= 2, "Job2 must not emit 1-itemsets");
-            if levels.len() < size {
-                levels.resize(size, Vec::new());
-            }
-            levels[size - 1] = level;
-        }
-
-        // Seed for the next phase: the longest-sized frequent itemsets of
-        // this phase. If empty, downward closure says we are done.
-        let last_size = k + npass - 1;
-        let seed_level = levels.get(last_size - 1).filter(|l| !l.is_empty());
-        match seed_level {
-            Some(level) => {
-                l_prev = Arc::new(Trie::from_itemsets(last_size, level.iter().map(|(s, _)| s)));
-            }
-            None => break,
-        }
-        k = last_size + 1;
-    }
-
-    // Trim trailing empty levels (possible when a phase overshoots).
-    while levels.last().is_some_and(|l| l.is_empty()) {
-        levels.pop();
-    }
-
-    let total_time: f64 = phases.iter().map(|p| p.elapsed).sum();
-    let actual_time = total_time + cluster.overhead.driver_gap * phases.len() as f64;
-    MiningOutcome {
-        algorithm: algo,
-        dataset: file.name.clone(),
-        min_sup,
-        min_count,
-        levels,
-        phases,
-        total_time,
-        actual_time,
-        wall_time: run_start.elapsed().as_secs_f64(),
-    }
+    session::legacy_run(algo, file, min_sup, cluster, opts)
 }
 
 #[cfg(test)]
@@ -488,6 +315,22 @@ mod tests {
         RunOptions { split_lines: 50, ..Default::default() }
     }
 
+    /// One-shot session run — the tests' equivalent of the old `run_with`.
+    fn mine_s(
+        algo: Algorithm,
+        db: &TransactionDb,
+        min_sup: f64,
+        cluster: &ClusterConfig,
+        o: &RunOptions,
+    ) -> MiningOutcome {
+        MiningSession::for_db(db, cluster.clone())
+            .options(o)
+            .build()
+            .expect("test session")
+            .run(&MiningRequest::from_options(algo, min_sup, o))
+            .expect("test run")
+    }
+
     #[test]
     fn every_algorithm_matches_oracle() {
         let db = small_db();
@@ -495,7 +338,7 @@ mod tests {
         for min_sup in [0.3, 0.15] {
             let oracle = mine(&db, min_sup).all_frequent();
             for algo in Algorithm::ALL {
-                let got = run_with(algo, &db, min_sup, &cluster, &opts());
+                let got = mine_s(algo, &db, min_sup, &cluster, &opts());
                 assert_eq!(
                     got.all_frequent(),
                     oracle,
@@ -509,7 +352,7 @@ mod tests {
     fn spc_has_one_pass_per_phase() {
         let db = small_db();
         let cluster = ClusterConfig::paper_cluster();
-        let out = run_with(Algorithm::Spc, &db, 0.2, &cluster, &opts());
+        let out = mine_s(Algorithm::Spc, &db, 0.2, &cluster, &opts());
         assert!(out.phases.iter().all(|p| p.n_passes <= 1));
         // SPC phases = 1 (Job1) + one per pass that generated candidates.
         let oracle = mine(&db, 0.2);
@@ -520,9 +363,9 @@ mod tests {
     fn combined_algorithms_use_fewer_phases() {
         let db = small_db();
         let cluster = ClusterConfig::paper_cluster();
-        let spc = run_with(Algorithm::Spc, &db, 0.15, &cluster, &opts());
+        let spc = mine_s(Algorithm::Spc, &db, 0.15, &cluster, &opts());
         for algo in [Algorithm::Fpc, Algorithm::Vfpc, Algorithm::OptimizedVfpc] {
-            let out = run_with(algo, &db, 0.15, &cluster, &opts());
+            let out = mine_s(algo, &db, 0.15, &cluster, &opts());
             assert!(
                 out.n_phases() < spc.n_phases(),
                 "{algo}: {} phases vs SPC {}",
@@ -536,7 +379,7 @@ mod tests {
     fn actual_exceeds_total_by_driver_gaps() {
         let db = small_db();
         let cluster = ClusterConfig::paper_cluster();
-        let out = run_with(Algorithm::Vfpc, &db, 0.2, &cluster, &opts());
+        let out = mine_s(Algorithm::Vfpc, &db, 0.2, &cluster, &opts());
         let expect = out.total_time + cluster.overhead.driver_gap * out.n_phases() as f64;
         assert!((out.actual_time - expect).abs() < 1e-9);
     }
@@ -545,8 +388,8 @@ mod tests {
     fn optimized_generates_at_least_as_many_candidates() {
         let db = small_db();
         let cluster = ClusterConfig::paper_cluster();
-        let plain = run_with(Algorithm::Vfpc, &db, 0.15, &cluster, &opts());
-        let opt = run_with(Algorithm::OptimizedVfpc, &db, 0.15, &cluster, &opts());
+        let plain = mine_s(Algorithm::Vfpc, &db, 0.15, &cluster, &opts());
+        let opt = mine_s(Algorithm::OptimizedVfpc, &db, 0.15, &cluster, &opts());
         let plain_c: u64 = plain.phases.iter().map(|p| p.candidates).sum();
         let opt_c: u64 = opt.phases.iter().map(|p| p.candidates).sum();
         assert!(opt_c >= plain_c, "optimized {opt_c} < plain {plain_c}");
@@ -558,7 +401,7 @@ mod tests {
     fn phase_records_are_consistent() {
         let db = small_db();
         let cluster = ClusterConfig::paper_cluster();
-        let out = run_with(Algorithm::Etdpc, &db, 0.2, &cluster, &opts());
+        let out = mine_s(Algorithm::Etdpc, &db, 0.2, &cluster, &opts());
         // Phases numbered 1.., passes contiguous.
         let mut next_pass = 2;
         for (i, p) in out.phases.iter().enumerate() {
@@ -587,8 +430,8 @@ mod tests {
         let db = small_db();
         let cluster = ClusterConfig::paper_cluster();
         for algo in [Algorithm::Spc, Algorithm::OptimizedVfpc] {
-            let plain = run_with(algo, &db, 0.2, &cluster, &opts());
-            let fused = run_with(
+            let plain = mine_s(algo, &db, 0.2, &cluster, &opts());
+            let fused = mine_s(
                 algo,
                 &db,
                 0.2,
@@ -608,7 +451,7 @@ mod tests {
     fn high_min_sup_trivial_run() {
         let db = small_db();
         let cluster = ClusterConfig::paper_cluster();
-        let out = run_with(Algorithm::OptimizedEtdpc, &db, 0.999, &cluster, &opts());
+        let out = mine_s(Algorithm::OptimizedEtdpc, &db, 0.999, &cluster, &opts());
         // Nothing (or almost nothing) frequent; must terminate cleanly.
         assert!(out.levels.len() <= 1);
     }

@@ -1,0 +1,854 @@
+//! Mining-as-a-service: the session/query layer over the Layer-3 driver.
+//!
+//! The paper's drivers are one-shot scripts, but both its evaluation and
+//! the companion study (Singh et al., *Observations on Factors Affecting
+//! Performance...*) sweep the **same dataset** across many supports,
+//! algorithms, and cluster shapes. A [`MiningSession`] binds a dataset
+//! ([`HdfsFile`], either [`crate::hdfs::RecordSource`] backend) plus a
+//! [`ClusterConfig`] once, then serves many queries concurrently (`&self`,
+//! `Sync`):
+//!
+//! * the input-split plan is computed once per session;
+//! * Job1 (frequent 1-itemsets, Algorithm 1) is memoized per
+//!   `(min_count, fuse_pass_2)` key, so a seven-algorithm comparison or a
+//!   support sweep pays for the first dataset scan exactly once — the
+//!   reuse is observable through [`MiningSession::stats`];
+//! * queries are [`MiningRequest`] builder values validated into typed
+//!   [`MiningError`]s (no panics on zero `split_lines`, out-of-domain
+//!   `min_sup`, empty datasets);
+//! * execution either runs inline ([`MiningSession::run`] /
+//!   [`MiningSession::run_streaming`]) or on a background thread behind a
+//!   [`RunHandle`] that streams [`PhaseEvent`]s and supports cooperative
+//!   cancellation ([`CancelToken`]).
+//!
+//! The legacy `coordinator::run*` free functions are thin deprecated shims
+//! over a one-shot session (see DESIGN.md §8).
+
+use super::drivers::PhaseObservation;
+use super::mappers::{self, GenMode, Job2Mapper, OneItemsetMapper};
+use super::{
+    controller_for, debug_assert_aux_agreement, Algorithm, MiningOutcome, PhaseRecord, RunOptions,
+};
+use crate::apriori::sequential::Level;
+use crate::cluster::{simulate_job, ClusterConfig};
+use crate::dataset::{registry, TransactionDb};
+use crate::hdfs::{self, HdfsFile, InputSplit};
+use crate::itemset::Trie;
+use crate::mapreduce::api::{HashPartitioner, MinSupportReducer, SumCombiner};
+use crate::mapreduce::counters::keys;
+use crate::mapreduce::engine::{run_job, JobSpec};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Error taxonomy
+// ---------------------------------------------------------------------------
+
+/// Typed failure modes of the session/query API — everything the legacy
+/// free functions either panicked on or silently mis-handled.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MiningError {
+    /// The bound dataset holds no transactions.
+    EmptyDataset(String),
+    /// `split_lines == 0`: a split plan cannot be built.
+    InvalidSplitLines,
+    /// `min_sup` outside `(0, 1]` (or NaN): no meaningful support count.
+    InvalidMinSup(f64),
+    /// `fpc_n == 0`: an FPC phase must combine at least one pass.
+    InvalidFpcN,
+    /// `dpc_alpha` non-finite or `< 1.0`: DPC's candidate budget
+    /// `α · |L|` would admit fewer candidates than the seed level itself,
+    /// silently degenerating every phase to zero passes.
+    InvalidDpcAlpha(f64),
+    /// `dpc_beta` non-finite or negative: the elapsed-time threshold is a
+    /// duration in seconds.
+    InvalidDpcBeta(f64),
+    /// The cluster cannot execute jobs (no DataNodes, zero reducers, or
+    /// zero host workers).
+    InvalidCluster(&'static str),
+    /// The run was cancelled through its [`CancelToken`] before finishing.
+    Cancelled,
+}
+
+impl std::fmt::Display for MiningError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MiningError::EmptyDataset(name) => {
+                write!(f, "dataset {name:?} holds no transactions")
+            }
+            MiningError::InvalidSplitLines => write!(f, "split_lines must be > 0"),
+            MiningError::InvalidMinSup(v) => {
+                write!(f, "min_sup must lie in (0, 1], got {v}")
+            }
+            MiningError::InvalidFpcN => write!(f, "fpc_n must be > 0"),
+            MiningError::InvalidDpcAlpha(v) => {
+                write!(f, "dpc_alpha must be finite and >= 1.0, got {v}")
+            }
+            MiningError::InvalidDpcBeta(v) => {
+                write!(f, "dpc_beta must be finite and >= 0, got {v}")
+            }
+            MiningError::InvalidCluster(why) => write!(f, "invalid cluster config: {why}"),
+            MiningError::Cancelled => write!(f, "mining run cancelled"),
+        }
+    }
+}
+
+impl std::error::Error for MiningError {}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// A mining query against a [`MiningSession`], built fluently:
+///
+/// ```no_run
+/// # use mrapriori::coordinator::{Algorithm, MiningRequest};
+/// let req = MiningRequest::new(Algorithm::Vfpc).min_sup(0.02).fpc_n(3);
+/// ```
+///
+/// Defaults mirror the paper's §5.2 settings: `min_sup` 0.25, `fpc_n` 3,
+/// `dpc_alpha` 2.0, `dpc_beta` 60 s, unfused passes 1/2, faithful
+/// per-record candidate generation. Domain validation happens when the
+/// request is submitted, returning [`MiningError`] instead of panicking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MiningRequest {
+    algorithm: Algorithm,
+    min_sup: f64,
+    fpc_n: usize,
+    dpc_alpha: f64,
+    dpc_beta: f64,
+    fuse_pass_2: bool,
+    gen_mode: GenMode,
+}
+
+impl MiningRequest {
+    /// A request for `algorithm` with the paper-default tunables.
+    pub fn new(algorithm: Algorithm) -> Self {
+        let d = RunOptions::default();
+        Self {
+            algorithm,
+            min_sup: 0.25,
+            fpc_n: d.fpc_n,
+            dpc_alpha: d.dpc_alpha,
+            dpc_beta: d.dpc_beta,
+            fuse_pass_2: d.fuse_pass_2,
+            gen_mode: d.gen_mode,
+        }
+    }
+
+    /// Carry the tunables of a legacy [`RunOptions`] into a request (the
+    /// migration path for pre-session callers). Performs no validation.
+    pub fn from_options(algorithm: Algorithm, min_sup: f64, opts: &RunOptions) -> Self {
+        Self {
+            algorithm,
+            min_sup,
+            fpc_n: opts.fpc_n,
+            dpc_alpha: opts.dpc_alpha,
+            dpc_beta: opts.dpc_beta,
+            fuse_pass_2: opts.fuse_pass_2,
+            gen_mode: opts.gen_mode,
+        }
+    }
+
+    /// Fractional minimum support, in `(0, 1]`.
+    pub fn min_sup(mut self, min_sup: f64) -> Self {
+        self.min_sup = min_sup;
+        self
+    }
+
+    /// FPC's fixed pass count per phase (paper: "generally 3").
+    pub fn fpc_n(mut self, fpc_n: usize) -> Self {
+        self.fpc_n = fpc_n;
+        self
+    }
+
+    /// DPC's fast-phase α (paper: 2.0 for c20d10k/mushroom, 3.0 for chess).
+    pub fn dpc_alpha(mut self, dpc_alpha: f64) -> Self {
+        self.dpc_alpha = dpc_alpha;
+        self
+    }
+
+    /// DPC's β elapsed-time threshold in seconds (paper: 60).
+    pub fn dpc_beta(mut self, dpc_beta: f64) -> Self {
+        self.dpc_beta = dpc_beta;
+        self
+    }
+
+    /// Fuse passes 1+2 into one job with a triangular-matrix counter
+    /// (Kovacs & Illes, the paper's ref [6]); Job2 then starts at k = 3.
+    pub fn fuse_pass_2(mut self, fuse: bool) -> Self {
+        self.fuse_pass_2 = fuse;
+        self
+    }
+
+    /// Faithful per-record candidate generation vs once-per-task (ablation).
+    pub fn gen_mode(mut self, gen_mode: GenMode) -> Self {
+        self.gen_mode = gen_mode;
+        self
+    }
+
+    /// Which algorithm this request runs.
+    pub fn algorithm(&self) -> Algorithm {
+        self.algorithm
+    }
+
+    /// The request's fractional minimum support.
+    pub fn min_sup_value(&self) -> f64 {
+        self.min_sup
+    }
+
+    /// Check every tunable's domain, the library-level validation layer.
+    pub fn validate(&self) -> Result<(), MiningError> {
+        if !(self.min_sup > 0.0 && self.min_sup <= 1.0) {
+            return Err(MiningError::InvalidMinSup(self.min_sup));
+        }
+        if self.fpc_n == 0 {
+            return Err(MiningError::InvalidFpcN);
+        }
+        if !self.dpc_alpha.is_finite() || self.dpc_alpha < 1.0 {
+            return Err(MiningError::InvalidDpcAlpha(self.dpc_alpha));
+        }
+        if !self.dpc_beta.is_finite() || self.dpc_beta < 0.0 {
+            return Err(MiningError::InvalidDpcBeta(self.dpc_beta));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase events and cancellation
+// ---------------------------------------------------------------------------
+
+/// One step of a query's lifecycle, streamed while the run executes.
+#[derive(Debug, Clone)]
+pub enum PhaseEvent {
+    /// A MapReduce phase is about to execute.
+    PhaseStarted {
+        /// 1-based phase index (phase 1 = Job1).
+        phase: usize,
+        /// Name of the MapReduce job about to run (e.g. `job2-k3`).
+        job: String,
+        /// Apriori pass number of the phase's first pass.
+        first_pass: usize,
+    },
+    /// A MapReduce phase finished; carries its full metrics row.
+    PhaseFinished {
+        /// The phase's metrics (identical to the outcome's entry).
+        record: PhaseRecord,
+        /// Whether the result came from the session's Job1 cache instead
+        /// of executing the job again.
+        from_cache: bool,
+    },
+}
+
+/// Cooperative cancellation flag, checked between MapReduce phases.
+/// Cloning shares the flag.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation: the run stops before its next phase and
+    /// returns [`MiningError::Cancelled`].
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    fn check(&self) -> Result<(), MiningError> {
+        if self.is_cancelled() {
+            Err(MiningError::Cancelled)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// Observability counters of one session (see [`MiningSession::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Queries that started executing (including cancelled ones).
+    pub queries: u64,
+    /// Times Job1 actually executed (one per distinct cache key).
+    pub job1_runs: u64,
+    /// Queries served from the Job1 cache instead of re-scanning.
+    pub job1_cache_hits: u64,
+}
+
+/// Job1's reusable result: frequent 1-itemsets (plus 2-itemsets when the
+/// pass-1/2 fusion ran) and the phase metrics row.
+struct Job1Data {
+    l1: Level,
+    l2: Level,
+    record: PhaseRecord,
+}
+
+struct SessionCore {
+    file: HdfsFile,
+    cluster: ClusterConfig,
+    split_lines: usize,
+    splits: Vec<InputSplit>,
+    /// Memoized Job1 keyed by `(min_count, fuse_pass_2)`. The
+    /// [`OnceLock`] per key gives exactly-once execution under concurrent
+    /// queries: racers block until the first initializer finishes.
+    job1_cache: Mutex<HashMap<(u64, bool), Arc<OnceLock<Job1Data>>>>,
+    queries: AtomicU64,
+    job1_runs: AtomicU64,
+    job1_cache_hits: AtomicU64,
+}
+
+/// A long-lived mining service over one dataset and one cluster: create it
+/// with [`MiningSession::builder`] (an existing [`HdfsFile`], either
+/// storage backend) or [`MiningSession::for_db`] (an in-memory
+/// [`TransactionDb`], stored through [`hdfs::put`]), then issue
+/// [`MiningRequest`]s from any number of threads.
+///
+/// Cloning is cheap and shares the session (split plan, Job1 cache,
+/// counters) — clones are how a session crosses thread boundaries when
+/// scoped borrows are inconvenient.
+///
+/// The Job1 cache retains one `L1` (plus `L2` when fused) per distinct
+/// `(min_count, fuse_pass_2)` key for the session's lifetime. Support
+/// sweeps touch a handful of keys, so this is small in practice; a caller
+/// serving *unbounded* distinct supports should recycle sessions
+/// periodically (drop and rebuild) to bound memory.
+#[derive(Clone)]
+pub struct MiningSession {
+    core: Arc<SessionCore>,
+}
+
+/// Configures and validates a [`MiningSession`]; see
+/// [`MiningSession::builder`] / [`MiningSession::for_db`]. Borrows an
+/// in-memory source until [`build`](SessionBuilder::build), which stores
+/// it as an HDFS file exactly once (no intermediate copy).
+pub struct SessionBuilder<'a> {
+    source: SessionSource<'a>,
+    cluster: ClusterConfig,
+    split_lines: Option<usize>,
+    seed: u64,
+}
+
+enum SessionSource<'a> {
+    File(HdfsFile),
+    Db(&'a TransactionDb),
+}
+
+impl SessionBuilder<'_> {
+    /// Lines per input split (the paper's `setNumLinesPerSplit`). Defaults
+    /// to the dataset's registry setting for in-memory sources and to the
+    /// file's block size for pre-stored files (segment stores decode one
+    /// block per task, so finer splits would re-decode whole blocks).
+    pub fn split_lines(mut self, split_lines: usize) -> Self {
+        self.split_lines = Some(split_lines);
+        self
+    }
+
+    /// Placement seed for HDFS replicas of an in-memory source.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Carry `split_lines` and `seed` from a legacy [`RunOptions`] (the
+    /// migration path for pre-session callers).
+    pub fn options(self, opts: &RunOptions) -> Self {
+        self.split_lines(opts.split_lines).seed(opts.seed)
+    }
+
+    /// Validate and build the session: cluster shape, split size, and
+    /// dataset emptiness are checked here, once, instead of panicking
+    /// somewhere inside a run.
+    pub fn build(self) -> Result<MiningSession, MiningError> {
+        if self.cluster.nodes.is_empty() {
+            return Err(MiningError::InvalidCluster("no DataNodes"));
+        }
+        if self.cluster.n_reducers == 0 {
+            return Err(MiningError::InvalidCluster("n_reducers must be > 0"));
+        }
+        if self.cluster.workers == 0 {
+            return Err(MiningError::InvalidCluster("workers must be > 0"));
+        }
+        let split_lines = self.split_lines.unwrap_or_else(|| match &self.source {
+            SessionSource::File(f) => f.block_lines,
+            SessionSource::Db(db) => registry::split_lines(&db.name),
+        });
+        if split_lines == 0 {
+            return Err(MiningError::InvalidSplitLines);
+        }
+        let file = match self.source {
+            SessionSource::File(f) => f,
+            SessionSource::Db(db) => hdfs::put(
+                db,
+                split_lines,
+                self.cluster.nodes.len(),
+                hdfs::DEFAULT_REPLICATION,
+                self.seed,
+            ),
+        };
+        if file.is_empty() {
+            return Err(MiningError::EmptyDataset(file.name.clone()));
+        }
+        Ok(MiningSession { core: Arc::new(SessionCore::new(file, self.cluster, split_lines)) })
+    }
+}
+
+impl MiningSession {
+    /// Serve queries over an already-stored HDFS file (either
+    /// [`crate::hdfs::RecordSource`] backend — this is the out-of-core
+    /// entry point for segment stores).
+    pub fn builder(file: HdfsFile, cluster: ClusterConfig) -> SessionBuilder<'static> {
+        SessionBuilder { source: SessionSource::File(file), cluster, split_lines: None, seed: 1 }
+    }
+
+    /// Serve queries over an in-memory database, stored as an HDFS file at
+    /// [`SessionBuilder::build`] time (the session does not borrow `db`
+    /// after `build`).
+    pub fn for_db(db: &TransactionDb, cluster: ClusterConfig) -> SessionBuilder<'_> {
+        SessionBuilder { source: SessionSource::Db(db), cluster, split_lines: None, seed: 1 }
+    }
+
+    /// Execute a query inline and return its outcome. The session is
+    /// `&self` — any number of threads may call this concurrently.
+    pub fn run(&self, req: &MiningRequest) -> Result<MiningOutcome, MiningError> {
+        req.validate()?;
+        self.core.execute(req, &CancelToken::new(), &mut |_| {})
+    }
+
+    /// Execute a query inline, streaming [`PhaseEvent`]s to `on_event` as
+    /// phases start and finish, under an external [`CancelToken`].
+    pub fn run_streaming(
+        &self,
+        req: &MiningRequest,
+        token: &CancelToken,
+        mut on_event: impl FnMut(PhaseEvent),
+    ) -> Result<MiningOutcome, MiningError> {
+        req.validate()?;
+        self.core.execute(req, token, &mut on_event)
+    }
+
+    /// Execute a query on a background thread: returns a [`RunHandle`]
+    /// immediately; events stream through the handle while the run
+    /// proceeds, and [`RunHandle::join`] yields the outcome.
+    pub fn submit(&self, req: MiningRequest) -> Result<RunHandle, MiningError> {
+        req.validate()?;
+        let algorithm = req.algorithm;
+        let core = Arc::clone(&self.core);
+        let token = CancelToken::new();
+        let thread_token = token.clone();
+        let (tx, rx) = mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name(format!("mine-{}", algorithm.name().to_ascii_lowercase()))
+            .spawn(move || {
+                core.execute(&req, &thread_token, &mut |ev| {
+                    let _ = tx.send(ev); // receiver may have been dropped
+                })
+            })
+            .expect("spawning a mining worker thread");
+        Ok(RunHandle { algorithm, token, events: rx, join: Some(join) })
+    }
+
+    /// The dataset this session serves.
+    pub fn file(&self) -> &HdfsFile {
+        &self.core.file
+    }
+
+    /// The cluster every query of this session simulates.
+    pub fn cluster(&self) -> &ClusterConfig {
+        &self.core.cluster
+    }
+
+    /// Lines per input split of the cached split plan.
+    pub fn split_lines(&self) -> usize {
+        self.core.split_lines
+    }
+
+    /// Snapshot of the session's query/cache counters — how a caller (or a
+    /// test) proves that cross-query Job1 reuse actually happened.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            queries: self.core.queries.load(Ordering::SeqCst),
+            job1_runs: self.core.job1_runs.load(Ordering::SeqCst),
+            job1_cache_hits: self.core.job1_cache_hits.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl std::fmt::Debug for MiningSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MiningSession")
+            .field("dataset", &self.core.file.name)
+            .field("records", &self.core.file.len())
+            .field("split_lines", &self.core.split_lines)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// Shim path for the deprecated `coordinator::run*` free functions: a
+/// one-shot, validation-free session preserving the legacy permissive
+/// semantics exactly (min_sup 0 or > 1 mine to their degenerate outcomes
+/// instead of erroring; `split_lines == 0` still panics as it always did).
+pub(crate) fn legacy_run(
+    algo: Algorithm,
+    file: &HdfsFile,
+    min_sup: f64,
+    cluster: &ClusterConfig,
+    opts: &RunOptions,
+) -> MiningOutcome {
+    let core = SessionCore::new(file.clone(), cluster.clone(), opts.split_lines);
+    let req = MiningRequest::from_options(algo, min_sup, opts);
+    core.execute(&req, &CancelToken::new(), &mut |_| {})
+        .expect("legacy runs are never cancelled")
+}
+
+// ---------------------------------------------------------------------------
+// Run handles
+// ---------------------------------------------------------------------------
+
+/// A query executing on a background thread (see [`MiningSession::submit`]):
+/// stream its [`PhaseEvent`]s, cancel it cooperatively, and
+/// [`join`](RunHandle::join) it into the final [`MiningOutcome`].
+///
+/// Dropping the handle without joining cancels the run (best effort — the
+/// worker notices before its next phase).
+#[derive(Debug)]
+pub struct RunHandle {
+    algorithm: Algorithm,
+    token: CancelToken,
+    events: mpsc::Receiver<PhaseEvent>,
+    join: Option<std::thread::JoinHandle<Result<MiningOutcome, MiningError>>>,
+}
+
+impl RunHandle {
+    /// Which algorithm this run executes.
+    pub fn algorithm(&self) -> Algorithm {
+        self.algorithm
+    }
+
+    /// Request cooperative cancellation; the run stops before its next
+    /// phase and [`join`](RunHandle::join) returns
+    /// [`MiningError::Cancelled`].
+    pub fn cancel(&self) {
+        self.token.cancel();
+    }
+
+    /// A clone of the run's cancellation token.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.token.clone()
+    }
+
+    /// Block until the next event arrives; `None` once the run finished
+    /// and all events were drained.
+    pub fn next_event(&self) -> Option<PhaseEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking poll for the next event.
+    pub fn try_next_event(&self) -> Option<PhaseEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Iterate the remaining events, blocking until the run finishes.
+    pub fn events(&self) -> impl Iterator<Item = PhaseEvent> + '_ {
+        std::iter::from_fn(move || self.next_event())
+    }
+
+    /// Wait for the run and return its outcome (or its error). Propagates
+    /// a worker panic.
+    pub fn join(mut self) -> Result<MiningOutcome, MiningError> {
+        let handle = self.join.take().expect("join handle taken only once");
+        match handle.join() {
+            Ok(result) => result,
+            Err(panic) => std::panic::resume_unwind(panic),
+        }
+    }
+}
+
+impl Drop for RunHandle {
+    fn drop(&mut self) {
+        if self.join.is_some() {
+            // Un-joined handle: stop the detached worker at its next
+            // cancellation point rather than mining into the void.
+            self.token.cancel();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution core (the ported driver loop)
+// ---------------------------------------------------------------------------
+
+impl SessionCore {
+    fn new(file: HdfsFile, cluster: ClusterConfig, split_lines: usize) -> Self {
+        let splits = hdfs::nline_splits(&file, split_lines);
+        Self {
+            file,
+            cluster,
+            split_lines,
+            splits,
+            job1_cache: Mutex::new(HashMap::new()),
+            queries: AtomicU64::new(0),
+            job1_runs: AtomicU64::new(0),
+            job1_cache_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Job1 through the cache: exactly-once execution per
+    /// `(min_count, fused)` key, concurrent callers blocking on the
+    /// initializer. Returns the shared slot plus whether this call hit.
+    fn job1(&self, min_count: u64, fused: bool) -> (Arc<OnceLock<Job1Data>>, bool) {
+        let slot = {
+            let mut cache = self.job1_cache.lock().expect("job1 cache poisoned");
+            Arc::clone(cache.entry((min_count, fused)).or_default())
+        };
+        let mut ran = false;
+        slot.get_or_init(|| {
+            ran = true;
+            self.run_job1(min_count, fused)
+        });
+        if ran {
+            self.job1_runs.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.job1_cache_hits.fetch_add(1, Ordering::SeqCst);
+        }
+        (slot, !ran)
+    }
+
+    /// Execute Job1 (Algorithm 1), optionally fused with pass 2 via the
+    /// triangular-matrix counter (ref [6]).
+    fn run_job1(&self, min_count: u64, fused: bool) -> Job1Data {
+        let wall = Instant::now();
+        let n_items = self.file.n_items;
+        let out = if fused {
+            run_job(JobSpec {
+                name: "job1+2".into(),
+                splits: self.splits.clone(),
+                mapper_factory: Box::new(move |_| mappers::FusedOneTwoMapper::new(n_items)),
+                combiner: Some(Box::new(SumCombiner)),
+                reducer: MinSupportReducer { min_count },
+                partitioner: Box::new(HashPartitioner),
+                n_reducers: self.cluster.n_reducers,
+                workers: self.cluster.workers,
+            })
+        } else {
+            run_job(JobSpec {
+                name: "job1".into(),
+                splits: self.splits.clone(),
+                mapper_factory: Box::new(|_| OneItemsetMapper),
+                combiner: Some(Box::new(SumCombiner)),
+                reducer: MinSupportReducer { min_count },
+                partitioner: Box::new(HashPartitioner),
+                n_reducers: self.cluster.n_reducers,
+                workers: self.cluster.workers,
+            })
+        };
+        debug_assert_aux_agreement(&out);
+        let timing = simulate_job(&out.map_meters, &out.reduce_meters, &self.cluster);
+        let mut l1: Level = Vec::new();
+        let mut l2: Level = Vec::new();
+        for (set, count) in out.outputs {
+            match set.len() {
+                1 => l1.push((set, count)),
+                _ => l2.push((set, count)),
+            }
+        }
+        l1.sort();
+        l2.sort();
+        let record = PhaseRecord {
+            phase: 1,
+            job: out.name,
+            first_pass: 1,
+            n_passes: if fused { 2 } else { 1 },
+            candidates: 0,
+            elapsed: timing.elapsed(),
+            timing,
+            wall: wall.elapsed().as_secs_f64(),
+            counters: out.counters,
+        };
+        Job1Data { l1, l2, record }
+    }
+
+    fn outcome(
+        &self,
+        req: &MiningRequest,
+        min_count: u64,
+        levels: Vec<Level>,
+        phases: Vec<PhaseRecord>,
+        run_start: Instant,
+    ) -> MiningOutcome {
+        let total_time: f64 = phases.iter().map(|p| p.elapsed).sum();
+        let actual_time = total_time + self.cluster.overhead.driver_gap * phases.len() as f64;
+        MiningOutcome {
+            algorithm: req.algorithm,
+            dataset: self.file.name.clone(),
+            min_sup: req.min_sup,
+            min_count,
+            levels,
+            phases,
+            total_time,
+            actual_time,
+            wall_time: run_start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// The driver loop: Job1 through the cache, then Job2 phases under the
+    /// algorithm's pass-combining controller — identical computation to the
+    /// pre-session `run_on_file`, plus events and cancellation points.
+    fn execute(
+        &self,
+        req: &MiningRequest,
+        token: &CancelToken,
+        sink: &mut dyn FnMut(PhaseEvent),
+    ) -> Result<MiningOutcome, MiningError> {
+        self.queries.fetch_add(1, Ordering::SeqCst);
+        let run_start = Instant::now();
+        let algo = req.algorithm;
+        let min_count = self.file.min_count(req.min_sup);
+
+        let mut levels: Vec<Level> = Vec::new();
+        let mut phases: Vec<PhaseRecord> = Vec::new();
+
+        // ---- Job1 (memoized) ---------------------------------------------
+        token.check()?;
+        let job1_name = if req.fuse_pass_2 { "job1+2" } else { "job1" };
+        sink(PhaseEvent::PhaseStarted {
+            phase: 1,
+            job: job1_name.to_string(),
+            first_pass: 1,
+        });
+        let (slot, from_cache) = self.job1(min_count, req.fuse_pass_2);
+        let job1 = slot.get().expect("job1 slot initialized");
+        phases.push(job1.record.clone());
+        sink(PhaseEvent::PhaseFinished { record: job1.record.clone(), from_cache });
+
+        let mut controller = controller_for(algo, req.fpc_n, req.dpc_alpha, req.dpc_beta);
+        // DPC/ETDPC initialize their elapsed-time feedback from Job1
+        // (Algorithm 4 line 3) — without changing their initial α.
+        controller.init_job1(phases[0].elapsed);
+
+        if job1.l1.is_empty() {
+            return Ok(self.outcome(req, min_count, levels, phases, run_start));
+        }
+        let mut l_prev = Arc::new(Trie::from_itemsets(1, job1.l1.iter().map(|(s, _)| s)));
+        levels.push(job1.l1.clone());
+        let mut k = 2usize; // first pass of the upcoming phase
+        if req.fuse_pass_2 {
+            if job1.l2.is_empty() {
+                // Fused phase already proved nothing larger exists.
+                return Ok(self.outcome(req, min_count, levels, phases, run_start));
+            }
+            l_prev = Arc::new(Trie::from_itemsets(2, job1.l2.iter().map(|(s, _)| s)));
+            levels.push(job1.l2.clone());
+            k = 3;
+        }
+
+        // ---- Job2 phases --------------------------------------------------
+        let optimized = algo.optimized();
+        loop {
+            if l_prev.is_empty() || k > 64 {
+                break;
+            }
+            token.check()?;
+            let policy = controller.next_policy(l_prev.len() as u64);
+            let phase_wall = Instant::now();
+            sink(PhaseEvent::PhaseStarted {
+                phase: phases.len() + 1,
+                job: format!("job2-k{k}"),
+                first_pass: k,
+            });
+            // Build the phase's candidate tries once per job and share them
+            // read-only across tasks (distributed-cache pattern); the
+            // faithful per-record generation *cost* is still charged by the
+            // mapper.
+            let plan = Arc::new(mappers::PhasePlan::build(&l_prev, policy, optimized));
+            let gen_mode = req.gen_mode;
+            let plan_for_tasks = Arc::clone(&plan);
+            let out = run_job(JobSpec {
+                name: format!("job2-k{k}"),
+                splits: self.splits.clone(),
+                mapper_factory: Box::new(move |_| {
+                    Job2Mapper::new(Arc::clone(&plan_for_tasks), gen_mode)
+                }),
+                combiner: Some(Box::new(SumCombiner)),
+                reducer: MinSupportReducer { min_count },
+                partitioner: Box::new(HashPartitioner),
+                n_reducers: self.cluster.n_reducers,
+                workers: self.cluster.workers,
+            });
+            debug_assert_aux_agreement(&out);
+            let timing = simulate_job(&out.map_meters, &out.reduce_meters, &self.cluster);
+            let candidates = out.aux.get(keys::CANDIDATES).copied().unwrap_or(0);
+            let npass = out.aux.get(keys::NPASS).copied().unwrap_or(0) as usize;
+
+            let elapsed = timing.elapsed();
+            let record = PhaseRecord {
+                phase: phases.len() + 1,
+                job: out.name,
+                first_pass: k,
+                n_passes: npass,
+                candidates,
+                elapsed,
+                timing,
+                wall: phase_wall.elapsed().as_secs_f64(),
+                counters: out.counters,
+            };
+            sink(PhaseEvent::PhaseFinished { record: record.clone(), from_cache: false });
+            phases.push(record);
+            controller.observe(PhaseObservation { candidates, npass, elapsed });
+
+            if npass == 0 {
+                break; // no candidates could be generated at all
+            }
+
+            // Group phase output by itemset size into levels k .. k+npass-1.
+            let mut by_size: std::collections::BTreeMap<usize, Level> = Default::default();
+            for (set, count) in out.outputs {
+                by_size.entry(set.len()).or_default().push((set, count));
+            }
+            for (size, mut level) in by_size {
+                level.sort();
+                debug_assert!(size >= 2, "Job2 must not emit 1-itemsets");
+                if levels.len() < size {
+                    levels.resize(size, Vec::new());
+                }
+                levels[size - 1] = level;
+            }
+
+            // Seed for the next phase: the longest-sized frequent itemsets
+            // of this phase. If empty, downward closure says we are done.
+            let last_size = k + npass - 1;
+            let seed_level = levels.get(last_size - 1).filter(|l| !l.is_empty());
+            match seed_level {
+                Some(level) => {
+                    l_prev =
+                        Arc::new(Trie::from_itemsets(last_size, level.iter().map(|(s, _)| s)));
+                }
+                None => break,
+            }
+            k = last_size + 1;
+        }
+
+        // Trim trailing empty levels (possible when a phase overshoots).
+        while levels.last().is_some_and(|l| l.is_empty()) {
+            levels.pop();
+        }
+
+        Ok(self.outcome(req, min_count, levels, phases, run_start))
+    }
+}

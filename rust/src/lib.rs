@@ -21,13 +21,21 @@
 //! Quest-family T*I*D* entries (up to millions of transactions) are mined
 //! out-of-core (DESIGN.md §7).
 //!
-//! Quick start:
+//! Quick start — bind a dataset + cluster to a [`coordinator::MiningSession`]
+//! once, then serve any number of queries (Job1 and the split plan are
+//! shared across them; see DESIGN.md §8):
 //! ```no_run
-//! use mrapriori::{cluster::ClusterConfig, coordinator::{self, Algorithm}, dataset::registry};
+//! use mrapriori::cluster::ClusterConfig;
+//! use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
+//! use mrapriori::dataset::registry;
 //!
 //! let db = registry::load("mushroom");
-//! let cluster = ClusterConfig::paper_cluster();
-//! let outcome = coordinator::run(Algorithm::OptimizedVfpc, &db, 0.15, &cluster, 1000);
+//! let session = MiningSession::for_db(&db, ClusterConfig::paper_cluster())
+//!     .build()
+//!     .expect("valid session");
+//! let outcome = session
+//!     .run(&MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(0.15))
+//!     .expect("valid request");
 //! println!("{} frequent itemsets in {:.0} simulated s",
 //!          outcome.total_frequent(), outcome.actual_time);
 //! ```

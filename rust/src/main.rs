@@ -4,7 +4,10 @@
 use anyhow::{bail, Result};
 use mrapriori::bench_harness::tables::{self, ScaleRun, SweepSpec};
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{self, mappers::GenMode, Algorithm, MiningOutcome, RunOptions};
+use mrapriori::coordinator::{
+    mappers::GenMode, Algorithm, CancelToken, MiningError, MiningOutcome, MiningRequest,
+    MiningSession, PhaseEvent, RunOptions,
+};
 use mrapriori::dataset::ibm::QuestGen;
 use mrapriori::dataset::{loader, registry, stats};
 use mrapriori::hdfs;
@@ -50,7 +53,7 @@ fn print_help() {
         "mrapriori — MapReduce-based Apriori on a simulated Hadoop cluster
 
 Commands:
-  mine       run one algorithm on a dataset, print phase breakdown
+  mine       run one algorithm (or --algo all) on a dataset, print phase breakdown
   sweep      paper's Figs 2-4 min_sup sweep, or a scale grid (--datasets)
   lk         print the |L_k| profile (paper Table 6) via the oracle
   inspect    dataset summary statistics (paper Table 2)
@@ -114,6 +117,31 @@ fn load_db(p: &mrapriori::util::flags::Parsed) -> Result<mrapriori::dataset::Tra
 /// The `--cache-dir` for generated/imported segment stores.
 fn cache_dir(p: &mrapriori::util::flags::Parsed) -> PathBuf {
     PathBuf::from(p.get("cache-dir").unwrap_or(DEFAULT_CACHE))
+}
+
+/// Run one query, streaming live phase-finished lines to stderr when
+/// `verbose` (with an optional `[algo]` prefix for multi-algorithm runs).
+fn run_with_live_events(
+    session: &MiningSession,
+    req: &MiningRequest,
+    verbose: bool,
+    label: Option<&str>,
+) -> std::result::Result<MiningOutcome, MiningError> {
+    if !verbose {
+        return session.run(req);
+    }
+    session.run_streaming(req, &CancelToken::new(), |ev| {
+        if let PhaseEvent::PhaseFinished { record, from_cache } = ev {
+            eprintln!(
+                "  {}phase {} ({}) finished: {:.1} s simulated{}",
+                label.map(|l| format!("[{l}] ")).unwrap_or_default(),
+                record.phase,
+                record.job,
+                record.elapsed,
+                if from_cache { " [job1 cache]" } else { "" }
+            );
+        }
+    })
 }
 
 /// Cache slot for a file import: the store directory is keyed by the
@@ -194,11 +222,14 @@ fn streamed_file(
 }
 
 fn cmd_mine(args: &[String]) -> Result<()> {
-    let set = FlagSet::new("mine", "run one algorithm on a dataset")
+    let set = FlagSet::new("mine", "run one algorithm (or --algo all) on a dataset")
         .opt("dataset", "registry name, t<T>i<I>d<D> Quest name, or FIMI file path")
-        .opt("algo", "algorithm: spc|fpc|dpc|vfpc|etdpc|opt-vfpc|opt-etdpc")
+        .opt("algo", "algorithm: spc|fpc|dpc|vfpc|etdpc|opt-vfpc|opt-etdpc, or `all`")
         .opt("min-sup", "fractional minimum support (default: paper reference)")
         .opt("split-lines", "lines per input split (default: paper setting)")
+        .opt("fpc-n", "FPC passes per phase (default 3)")
+        .opt("dpc-alpha", "DPC candidate-budget alpha (default: paper per-dataset)")
+        .opt("dpc-beta", "DPC elapsed-time beta, seconds (default 60)")
         .opt("cluster-config", "TOML cluster config path")
         .opt("data-nodes", "override: uniform cluster of N DataNodes")
         .opt("workers", "host threads for real execution")
@@ -206,7 +237,7 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         .flag("fuse-12", "fuse passes 1+2 via triangular matrix (ref [6])")
         .flag("streamed", "mine through the on-disk segment store (out-of-core)")
         .opt("cache-dir", "segment-store cache directory")
-        .flag("verbose", "debug logging")
+        .flag("verbose", "debug logging + live phase events")
         .flag("rules", "derive association rules (conf >= 0.9) at the end")
         .flag("help", "show usage");
     let p = set.parse(args)?;
@@ -217,59 +248,158 @@ fn cmd_mine(args: &[String]) -> Result<()> {
     if p.bool("verbose") {
         logging::set_level(Level::Debug);
     }
-    let algo = Algorithm::parse(p.get("algo").unwrap_or("opt-vfpc"))
-        .ok_or_else(|| anyhow::anyhow!("unknown algorithm"))?;
-    if p.usize("split-lines")?.is_some_and(|s| s == 0) {
-        bail!("--split-lines must be > 0");
-    }
+    let streamed = p.bool("streamed");
+    // Parse --algo first: a typo'd name must fail before any dataset work
+    // (a streamed Quest dataset can cost minutes to generate).
+    let algo_flag = p.get("algo").unwrap_or("opt-vfpc");
+    let single_algo = if algo_flag == "all" {
+        None
+    } else {
+        Some(
+            Algorithm::parse(algo_flag)
+                .ok_or_else(|| anyhow::anyhow!("unknown algorithm {algo_flag:?} (or `all`)"))?,
+        )
+    };
     let cluster = common_cluster(&p)?;
     let seed = RunOptions::default().seed;
-    // Store the dataset as an HDFS file on the chosen backend; blocks
-    // follow the split size (one block per paper-style map task).
-    let file = if p.bool("streamed") {
-        streamed_file(p.required("dataset")?, &cache_dir(&p), &cluster, seed)?
-    } else {
-        let db = load_db(&p)?;
-        let block = p.usize("split-lines")?.unwrap_or_else(|| registry::split_lines(&db.name));
-        hdfs::put(&db, block, cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, seed)
+    // Bind the dataset + cluster to a session once; split-size, cluster
+    // and empty-dataset validation happens here as typed MiningErrors.
+    // `--split-lines 0` is invalid on every path, including --streamed
+    // (where a nonzero value is merely overridden by the block size).
+    if p.usize("split-lines")?.is_some_and(|s| s == 0) {
+        return Err(MiningError::InvalidSplitLines.into());
+    }
+    let gen_mode = match p.get("gen-mode").unwrap_or("per-record") {
+        "per-task" => GenMode::PerTask,
+        "per-record" => GenMode::PerRecord,
+        other => bail!("unknown --gen-mode {other:?}; expected per-record or per-task"),
     };
-    let min_sup = p
-        .f64("min-sup")?
-        .or_else(|| registry::reference_min_sup(&file.name))
-        .unwrap_or(0.25);
-    // Streamed runs split at the store's block granularity: finer splits
-    // would re-decode a whole block file per overlapping map task.
-    let split_lines = if p.bool("streamed") {
+    // Validate the user-provided query tunables before dataset work too:
+    // the defaults are always valid, so a probe request carrying exactly
+    // the explicit flag values checks everything the user typed.
+    {
+        let mut probe = MiningRequest::new(single_algo.unwrap_or(Algorithm::Spc));
+        if let Some(ms) = p.f64("min-sup")? {
+            probe = probe.min_sup(ms);
+        }
+        if let Some(n) = p.usize("fpc-n")? {
+            probe = probe.fpc_n(n);
+        }
+        if let Some(alpha) = p.f64("dpc-alpha")? {
+            probe = probe.dpc_alpha(alpha);
+        }
+        if let Some(beta) = p.f64("dpc-beta")? {
+            probe = probe.dpc_beta(beta);
+        }
+        probe.validate()?;
+    }
+    let session = if streamed {
+        let file = streamed_file(p.required("dataset")?, &cache_dir(&p), &cluster, seed)?;
+        // Streamed runs split at the store's block granularity (the
+        // builder's default for pre-stored files): finer splits would
+        // re-decode a whole block file per overlapping map task.
         if p.usize("split-lines")?.is_some_and(|s| s != file.block_lines) {
             eprintln!(
                 "note: --split-lines ignored for --streamed; using the store's block size ({})",
                 file.block_lines
             );
         }
-        file.block_lines
+        MiningSession::builder(file, cluster.clone()).build()?
     } else {
-        p.usize("split-lines")?.unwrap_or_else(|| registry::split_lines(&file.name))
+        let db = load_db(&p)?;
+        let mut builder = MiningSession::for_db(&db, cluster.clone()).seed(seed);
+        if let Some(split) = p.usize("split-lines")? {
+            builder = builder.split_lines(split);
+        }
+        builder.build()?
     };
-    let opts = RunOptions {
-        split_lines,
-        gen_mode: match p.get("gen-mode") {
-            Some("per-task") => GenMode::PerTask,
-            _ => GenMode::PerRecord,
-        },
-        dpc_alpha: if file.name == "chess" { 3.0 } else { 2.0 },
-        fuse_pass_2: p.bool("fuse-12"),
-        seed,
-        ..Default::default()
+    let name = session.file().name.clone();
+    let min_sup = p
+        .f64("min-sup")?
+        .or_else(|| registry::reference_min_sup(&name))
+        .unwrap_or(0.25);
+    let request_for = |algo: Algorithm| -> Result<MiningRequest> {
+        let mut req = MiningRequest::new(algo)
+            .min_sup(min_sup)
+            .gen_mode(gen_mode)
+            .dpc_alpha(match p.f64("dpc-alpha")? {
+                Some(alpha) => alpha,
+                None => {
+                    if name == "chess" {
+                        3.0
+                    } else {
+                        2.0
+                    }
+                }
+            })
+            .fuse_pass_2(p.bool("fuse-12"));
+        if let Some(n) = p.usize("fpc-n")? {
+            req = req.fpc_n(n);
+        }
+        if let Some(beta) = p.f64("dpc-beta")? {
+            req = req.dpc_beta(beta);
+        }
+        Ok(req)
     };
 
-    let out = coordinator::run_on_file(algo, &file, min_sup, &cluster, &opts);
+    if single_algo.is_none() {
+        if p.bool("rules") {
+            bail!("--rules needs a single algorithm; drop it or pick one with --algo");
+        }
+        // All seven algorithms over ONE session: Job1 runs once for the
+        // shared support, every later query is served from the cache.
+        let mut outcomes = Vec::with_capacity(Algorithm::ALL.len());
+        println!(
+            "all algorithms on {} @ min_sup {:.2}{}",
+            name,
+            min_sup,
+            if streamed { " [streamed]" } else { "" }
+        );
+        println!(
+            "{:<18} {:>7} {:>11} {:>10} {:>10} {:>9}",
+            "algorithm", "phases", "candidates", "total(s)", "actual(s)", "frequent"
+        );
+        for algo in Algorithm::ALL {
+            let req = request_for(algo)?;
+            let out = run_with_live_events(&session, &req, p.bool("verbose"), Some(algo.name()))?;
+            println!(
+                "{:<18} {:>7} {:>11} {:>10.0} {:>10.0} {:>9}",
+                algo.name(),
+                out.n_phases(),
+                out.phases.iter().map(|ph| ph.candidates).sum::<u64>(),
+                out.total_time,
+                out.actual_time,
+                out.total_frequent()
+            );
+            outcomes.push(out);
+        }
+        let refs: Vec<&MiningOutcome> = outcomes.iter().collect();
+        println!();
+        println!(
+            "{}",
+            tables::phase_time_table(
+                &refs,
+                &format!("{name} @ min_sup {min_sup}: per-phase elapsed time (s)")
+            )
+        );
+        let st = session.stats();
+        println!(
+            "session: {} queries served; Job1 executed {} time(s), {} served from cache",
+            st.queries, st.job1_runs, st.job1_cache_hits
+        );
+        return Ok(());
+    }
+
+    let algo = single_algo.expect("the --algo all branch returned above");
+    let req = request_for(algo)?;
+    let out = run_with_live_events(&session, &req, p.bool("verbose"), None)?;
     println!(
         "{} on {} @ min_sup {:.2} (min_count {}){}",
         algo.name(),
-        file.name,
+        name,
         min_sup,
         out.min_count,
-        if p.bool("streamed") { " [streamed]" } else { "" }
+        if streamed { " [streamed]" } else { "" }
     );
     println!(
         "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}  {}",
@@ -318,7 +448,7 @@ fn cmd_mine(args: &[String]) -> Result<()> {
             gen_stats: Default::default(),
             subset_visits: 0,
         };
-        let rules = mrapriori::apriori::rules::derive_rules(&mined, file.len(), 0.9);
+        let rules = mrapriori::apriori::rules::derive_rules(&mined, session.file().len(), 0.9);
         println!("\ntop association rules (conf >= 0.9):");
         for r in rules.iter().take(15) {
             println!("  {r}");
@@ -457,7 +587,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     if let Some(sups) = p.f64_list("min-sups")? {
         spec.min_sups = sups;
     }
-    let result = tables::sweep(&spec);
+    let result = tables::sweep(&spec)?;
     println!("{}", tables::figure_a(&result, &db.name));
     println!("{}", tables::figure_b(&result, &db.name));
     Ok(())
@@ -504,25 +634,25 @@ fn scale_sweep(p: &mrapriori::util::flags::Parsed) -> Result<()> {
             Some(ms) => ms,
             None => registry::reference_min_sup(&file.name).unwrap_or(0.01),
         };
-        let opts = RunOptions {
-            split_lines: registry::split_lines(&file.name),
-            dpc_alpha: if file.name == "chess" { 3.0 } else { 2.0 },
-            seed,
-            ..Default::default()
-        };
+        let dataset = file.name.clone();
+        let n_txns = file.len();
+        let split = registry::split_lines(&dataset);
+        // One session per grid row: every algorithm after the first reuses
+        // the row's Job1 scan.
+        let session =
+            MiningSession::builder(file, cluster.clone()).split_lines(split).build()?;
         let outcomes: Vec<MiningOutcome> = algos
             .iter()
             .map(|&algo| {
-                eprintln!("  {} on {} ({} txns) @ min_sup {min_sup}", algo.name(), file.name, file.len());
-                coordinator::run_on_file(algo, &file, min_sup, &cluster, &opts)
+                eprintln!("  {} on {dataset} ({n_txns} txns) @ min_sup {min_sup}", algo.name());
+                session.run(
+                    &MiningRequest::new(algo)
+                        .min_sup(min_sup)
+                        .dpc_alpha(if dataset == "chess" { 3.0 } else { 2.0 }),
+                )
             })
-            .collect();
-        runs.push(ScaleRun {
-            dataset: file.name.clone(),
-            n_txns: file.len(),
-            min_sup,
-            outcomes,
-        });
+            .collect::<Result<_, _>>()?;
+        runs.push(ScaleRun { dataset, n_txns, min_sup, outcomes });
     }
     let md = tables::scale_markdown(&algos, &runs);
     print!("{md}");

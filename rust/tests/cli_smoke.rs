@@ -65,6 +65,60 @@ fn mine_small_run_end_to_end() {
 }
 
 #[test]
+fn mine_algo_all_shares_one_session() {
+    let (stdout, stderr, ok) =
+        run(&["mine", "--dataset", "chess", "--algo", "all", "--min-sup", "0.9"]);
+    assert!(ok, "stderr: {stderr}");
+    // Summary row per algorithm plus the phase-time comparison table.
+    for name in ["SPC", "FPC", "DPC", "VFPC", "ETDPC", "Optimized-VFPC", "Optimized-ETDPC"] {
+        assert!(stdout.contains(name), "missing {name} in {stdout}");
+    }
+    assert!(stdout.contains("per-phase elapsed time"), "{stdout}");
+    // The seven queries share one session: Job1 executed once.
+    assert!(
+        stdout.contains("Job1 executed 1 time(s), 6 served from cache"),
+        "{stdout}"
+    );
+}
+
+#[test]
+fn mine_invalid_min_sup_is_a_clean_one_line_error() {
+    let (_, stderr, ok) =
+        run(&["mine", "--dataset", "chess", "--algo", "spc", "--min-sup", "1.5"]);
+    assert!(!ok);
+    assert!(stderr.contains("min_sup must lie in (0, 1]"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
+fn mine_zero_split_lines_is_a_clean_error() {
+    let (_, stderr, ok) =
+        run(&["mine", "--dataset", "chess", "--algo", "spc", "--split-lines", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("split_lines must be > 0"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
+fn mine_zero_fpc_n_is_a_clean_error() {
+    let (_, stderr, ok) = run(&[
+        "mine", "--dataset", "chess", "--algo", "fpc", "--min-sup", "0.9", "--fpc-n", "0",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("fpc_n must be > 0"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
+fn sweep_invalid_min_sups_is_a_clean_error() {
+    let (_, stderr, ok) =
+        run(&["sweep", "--dataset", "chess", "--min-sups", "0.9,1.5"]);
+    assert!(!ok);
+    assert!(stderr.contains("min_sup must lie in (0, 1]"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
 fn mine_unknown_dataset_fails_cleanly() {
     let (_, stderr, ok) = run(&["mine", "--dataset", "nope", "--algo", "spc"]);
     assert!(!ok);

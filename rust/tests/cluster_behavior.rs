@@ -3,8 +3,11 @@
 //! invariants on the real system.
 
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, RunOptions};
 use mrapriori::dataset::registry;
+
+mod common;
+use common::run_s;
 
 fn opts(name: &str) -> RunOptions {
     RunOptions {
@@ -21,7 +24,7 @@ fn spc_upper_bounds_adaptive_algorithms() {
     let cluster = ClusterConfig::paper_cluster();
     for (name, min_sup) in [("c20d10k", 0.15), ("chess", 0.65), ("mushroom", 0.15)] {
         let db = registry::load(name);
-        let spc = run_with(Algorithm::Spc, &db, min_sup, &cluster, &opts(name));
+        let spc = run_s(Algorithm::Spc, &db, min_sup, &cluster, &opts(name));
         for algo in [
             Algorithm::Vfpc,
             Algorithm::Etdpc,
@@ -29,7 +32,7 @@ fn spc_upper_bounds_adaptive_algorithms() {
             Algorithm::OptimizedVfpc,
             Algorithm::OptimizedEtdpc,
         ] {
-            let out = run_with(algo, &db, min_sup, &cluster, &opts(name));
+            let out = run_s(algo, &db, min_sup, &cluster, &opts(name));
             assert!(
                 out.actual_time <= spc.actual_time * 1.02,
                 "{algo} on {name}: {:.0} > SPC {:.0}",
@@ -47,8 +50,8 @@ fn fpc_crosses_spc_on_dense_datasets_at_low_support() {
     let cluster = ClusterConfig::paper_cluster();
     for (name, min_sup) in [("chess", 0.65), ("mushroom", 0.15)] {
         let db = registry::load(name);
-        let spc = run_with(Algorithm::Spc, &db, min_sup, &cluster, &opts(name));
-        let fpc = run_with(Algorithm::Fpc, &db, min_sup, &cluster, &opts(name));
+        let spc = run_s(Algorithm::Spc, &db, min_sup, &cluster, &opts(name));
+        let fpc = run_s(Algorithm::Fpc, &db, min_sup, &cluster, &opts(name));
         // Paper Tables 4-5: FPC's actual time reaches ~99-103% of SPC's at
         // the lowest support; allow the same near-convergence band here.
         assert!(
@@ -65,8 +68,8 @@ fn fpc_crosses_spc_on_dense_datasets_at_low_support() {
 fn fpc_beats_spc_at_high_support() {
     let cluster = ClusterConfig::paper_cluster();
     let db = registry::c20d10k();
-    let spc = run_with(Algorithm::Spc, &db, 0.35, &cluster, &opts("c20d10k"));
-    let fpc = run_with(Algorithm::Fpc, &db, 0.35, &cluster, &opts("c20d10k"));
+    let spc = run_s(Algorithm::Spc, &db, 0.35, &cluster, &opts("c20d10k"));
+    let fpc = run_s(Algorithm::Fpc, &db, 0.35, &cluster, &opts("c20d10k"));
     assert!(
         fpc.actual_time < spc.actual_time,
         "FPC {:.0} should beat SPC {:.0} at high support",
@@ -81,9 +84,9 @@ fn phase_counts_match_paper_structure() {
     let cluster = ClusterConfig::paper_cluster();
     let db = registry::mushroom();
     let o = opts("mushroom");
-    let spc = run_with(Algorithm::Spc, &db, 0.15, &cluster, &o);
-    let fpc = run_with(Algorithm::Fpc, &db, 0.15, &cluster, &o);
-    let vfpc = run_with(Algorithm::Vfpc, &db, 0.15, &cluster, &o);
+    let spc = run_s(Algorithm::Spc, &db, 0.15, &cluster, &o);
+    let fpc = run_s(Algorithm::Fpc, &db, 0.15, &cluster, &o);
+    let vfpc = run_s(Algorithm::Vfpc, &db, 0.15, &cluster, &o);
     // Paper: SPC 16 phases, FPC 7, VFPC 7 (mushroom @0.15).
     assert!(spc.n_phases() >= 14, "SPC phases {}", spc.n_phases());
     assert!(fpc.n_phases() <= 8, "FPC phases {}", fpc.n_phases());
@@ -98,8 +101,8 @@ fn actual_total_gap_tracks_phase_count() {
     let cluster = ClusterConfig::paper_cluster();
     let db = registry::mushroom();
     let o = opts("mushroom");
-    let spc = run_with(Algorithm::Spc, &db, 0.15, &cluster, &o);
-    let vfpc = run_with(Algorithm::Vfpc, &db, 0.15, &cluster, &o);
+    let spc = run_s(Algorithm::Spc, &db, 0.15, &cluster, &o);
+    let vfpc = run_s(Algorithm::Vfpc, &db, 0.15, &cluster, &o);
     let gap_spc = spc.actual_time - spc.total_time;
     let gap_vfpc = vfpc.actual_time - vfpc.total_time;
     assert!(gap_spc > gap_vfpc, "gap {gap_spc:.0} !> {gap_vfpc:.0}");
@@ -113,8 +116,8 @@ fn skipped_pruning_trade_holds() {
     for (name, min_sup) in [("c20d10k", 0.15), ("mushroom", 0.15)] {
         let db = registry::load(name);
         let o = opts(name);
-        let plain = run_with(Algorithm::Vfpc, &db, min_sup, &cluster, &o);
-        let optim = run_with(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &o);
+        let plain = run_s(Algorithm::Vfpc, &db, min_sup, &cluster, &o);
+        let optim = run_s(Algorithm::OptimizedVfpc, &db, min_sup, &cluster, &o);
         let plain_cands: u64 = plain.phases.iter().map(|p| p.candidates).sum();
         let optim_cands: u64 = optim.phases.iter().map(|p| p.candidates).sum();
         assert!(optim_cands >= plain_cands, "{name}: candidates must not shrink");
@@ -135,8 +138,8 @@ fn optimized_equals_plain_at_high_support() {
     let cluster = ClusterConfig::paper_cluster();
     let db = registry::c20d10k();
     let o = opts("c20d10k");
-    let plain = run_with(Algorithm::Vfpc, &db, 0.6, &cluster, &o);
-    let optim = run_with(Algorithm::OptimizedVfpc, &db, 0.6, &cluster, &o);
+    let plain = run_s(Algorithm::Vfpc, &db, 0.6, &cluster, &o);
+    let optim = run_s(Algorithm::OptimizedVfpc, &db, 0.6, &cluster, &o);
     let rel = (optim.actual_time - plain.actual_time).abs() / plain.actual_time;
     assert!(rel < 0.05, "high-support gap {rel:.3} should vanish");
 }
@@ -154,7 +157,7 @@ fn etdpc_more_stable_than_dpc_across_cluster_speeds() {
         n.speed /= 3.0;
     }
     let phases = |algo, cluster: &ClusterConfig| -> Vec<usize> {
-        run_with(algo, &db, 0.15, cluster, &o).phases.iter().map(|p| p.n_passes).collect()
+        run_s(algo, &db, 0.15, cluster, &o).phases.iter().map(|p| p.n_passes).collect()
     };
     let dpc_change = phases(Algorithm::Dpc, &fast) != phases(Algorithm::Dpc, &slow);
     let etdpc_same = phases(Algorithm::Etdpc, &fast) == phases(Algorithm::Etdpc, &slow);

@@ -1,0 +1,45 @@
+//! Shared helpers for the integration tests: one-shot session runs, the
+//! tests' equivalent of the pre-session `run_with`/`run_on_file` free
+//! functions. (Not a test target itself — cargo only builds top-level
+//! files under `tests/` as test binaries.)
+#![allow(dead_code)] // each test binary uses the subset it needs
+
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{
+    Algorithm, MiningOutcome, MiningRequest, MiningSession, RunOptions,
+};
+use mrapriori::dataset::TransactionDb;
+use mrapriori::hdfs::HdfsFile;
+
+/// One-shot session run over an in-memory database (the old `run_with`).
+pub fn run_s(
+    algo: Algorithm,
+    db: &TransactionDb,
+    min_sup: f64,
+    cluster: &ClusterConfig,
+    o: &RunOptions,
+) -> MiningOutcome {
+    MiningSession::for_db(db, cluster.clone())
+        .options(o)
+        .build()
+        .expect("test session")
+        .run(&MiningRequest::from_options(algo, min_sup, o))
+        .expect("test run")
+}
+
+/// One-shot session run over a pre-stored HDFS file (the old
+/// `run_on_file`).
+pub fn run_file_s(
+    algo: Algorithm,
+    file: &HdfsFile,
+    min_sup: f64,
+    cluster: &ClusterConfig,
+    o: &RunOptions,
+) -> MiningOutcome {
+    MiningSession::builder(file.clone(), cluster.clone())
+        .options(o)
+        .build()
+        .expect("test session")
+        .run(&MiningRequest::from_options(algo, min_sup, o))
+        .expect("test run")
+}

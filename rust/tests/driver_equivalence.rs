@@ -5,9 +5,12 @@
 
 use mrapriori::apriori::sequential::mine;
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, RunOptions};
 use mrapriori::dataset::ibm::{generate, IbmParams};
 use mrapriori::dataset::registry;
+
+mod common;
+use common::run_s;
 
 fn opts(split: usize) -> RunOptions {
     RunOptions { split_lines: split, ..Default::default() }
@@ -23,7 +26,7 @@ fn registry_datasets_all_algorithms_match_oracle() {
         let oracle = mine(&db, min_sup).all_frequent();
         for algo in Algorithm::ALL {
             let got =
-                run_with(algo, &db, min_sup, &cluster, &opts(registry::split_lines(name)));
+                run_s(algo, &db, min_sup, &cluster, &opts(registry::split_lines(name)));
             assert_eq!(
                 got.all_frequent(),
                 oracle,
@@ -41,7 +44,7 @@ fn deep_mining_equivalence_low_support() {
     let db = registry::chess();
     let oracle = mine(&db, 0.65).all_frequent();
     for algo in [Algorithm::Vfpc, Algorithm::OptimizedVfpc, Algorithm::OptimizedEtdpc] {
-        let got = run_with(algo, &db, 0.65, &cluster, &opts(400));
+        let got = run_s(algo, &db, 0.65, &cluster, &opts(400));
         assert_eq!(got.all_frequent(), oracle, "{algo} diverges at 0.65");
     }
 }
@@ -60,7 +63,7 @@ fn split_size_does_not_change_results() {
     });
     let oracle = mine(&db, 0.2).all_frequent();
     for split in [50, 100, 333, 700, 1000] {
-        let got = run_with(Algorithm::OptimizedVfpc, &db, 0.2, &cluster, &opts(split));
+        let got = run_s(Algorithm::OptimizedVfpc, &db, 0.2, &cluster, &opts(split));
         assert_eq!(got.all_frequent(), oracle, "split {split} changes results");
     }
 }
@@ -79,13 +82,13 @@ fn cluster_size_does_not_change_results() {
     let oracle = mine(&db, 0.25).all_frequent();
     for nodes in [1, 2, 4, 8] {
         let cluster = ClusterConfig::uniform(nodes, 4);
-        let got = run_with(Algorithm::Etdpc, &db, 0.25, &cluster, &opts(100));
+        let got = run_s(Algorithm::Etdpc, &db, 0.25, &cluster, &opts(100));
         assert_eq!(got.all_frequent(), oracle, "{nodes} nodes changes results");
     }
     // ... but MORE nodes means LESS simulated time (speedup sanity).
-    let t1 = run_with(Algorithm::Etdpc, &db, 0.25, &ClusterConfig::uniform(1, 4), &opts(50))
+    let t1 = run_s(Algorithm::Etdpc, &db, 0.25, &ClusterConfig::uniform(1, 4), &opts(50))
         .total_time;
-    let t4 = run_with(Algorithm::Etdpc, &db, 0.25, &ClusterConfig::uniform(4, 4), &opts(50))
+    let t4 = run_s(Algorithm::Etdpc, &db, 0.25, &ClusterConfig::uniform(4, 4), &opts(50))
         .total_time;
     assert!(t4 < t1, "speedup missing: {t4} !< {t1}");
 }
@@ -106,8 +109,8 @@ fn host_workers_do_not_change_results() {
     c1.workers = 1;
     let mut c4 = ClusterConfig::paper_cluster();
     c4.workers = 4;
-    let a = run_with(Algorithm::OptimizedEtdpc, &db, 0.2, &c1, &opts(100));
-    let b = run_with(Algorithm::OptimizedEtdpc, &db, 0.2, &c4, &opts(100));
+    let a = run_s(Algorithm::OptimizedEtdpc, &db, 0.2, &c1, &opts(100));
+    let b = run_s(Algorithm::OptimizedEtdpc, &db, 0.2, &c4, &opts(100));
     assert_eq!(a.all_frequent(), b.all_frequent());
     // Simulated time is deterministic regardless of host threading.
     assert!((a.total_time - b.total_time).abs() < 1e-9);
@@ -129,8 +132,8 @@ fn workers_speed_up_full_c20d10k_run() {
     let mut c4 = ClusterConfig::paper_cluster();
     c4.workers = 4;
     let o = opts(registry::split_lines("c20d10k"));
-    let serial = run_with(Algorithm::OptimizedVfpc, &db, 0.15, &c1, &o);
-    let threaded = run_with(Algorithm::OptimizedVfpc, &db, 0.15, &c4, &o);
+    let serial = run_s(Algorithm::OptimizedVfpc, &db, 0.15, &c1, &o);
+    let threaded = run_s(Algorithm::OptimizedVfpc, &db, 0.15, &c4, &o);
     assert_eq!(serial.all_frequent(), threaded.all_frequent());
     assert!((serial.total_time - threaded.total_time).abs() < 1e-9);
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
@@ -151,14 +154,14 @@ fn gen_mode_ablation_same_results_different_cost() {
     use mrapriori::coordinator::mappers::GenMode;
     let cluster = ClusterConfig::paper_cluster();
     let db = registry::mushroom();
-    let faithful = run_with(
+    let faithful = run_s(
         Algorithm::Vfpc,
         &db,
         0.25,
         &cluster,
         &RunOptions { split_lines: 1000, gen_mode: GenMode::PerRecord, ..Default::default() },
     );
-    let cached = run_with(
+    let cached = run_s(
         Algorithm::Vfpc,
         &db,
         0.25,

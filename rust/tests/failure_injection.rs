@@ -1,10 +1,16 @@
 //! Failure injection and edge cases: malformed inputs, degenerate datasets,
-//! hostile configurations — the system must fail loudly or degrade
-//! gracefully, never silently mis-mine.
+//! hostile configurations — the system must fail loudly (typed
+//! `MiningError`s at the session layer) or degrade gracefully, never
+//! silently mis-mine.
 
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{
+    Algorithm, MiningError, MiningRequest, MiningSession, RunOptions,
+};
 use mrapriori::dataset::{loader, TransactionDb};
+
+mod common;
+use common::run_s;
 
 fn opts() -> RunOptions {
     RunOptions { split_lines: 10, ..Default::default() }
@@ -15,7 +21,7 @@ fn single_transaction_database() {
     let db = TransactionDb::new("one", 5, vec![vec![0, 1, 2, 3, 4]]);
     let cluster = ClusterConfig::paper_cluster();
     for algo in Algorithm::ALL {
-        let out = run_with(algo, &db, 1.0, &cluster, &opts());
+        let out = run_s(algo, &db, 1.0, &cluster, &opts());
         // Every subset of the single transaction is frequent.
         assert_eq!(out.total_frequent(), 31, "{algo}");
         assert_eq!(out.levels.len(), 5, "{algo}");
@@ -26,7 +32,7 @@ fn single_transaction_database() {
 fn single_item_transactions() {
     let db = TransactionDb::new("singles", 3, vec![vec![0], vec![1], vec![0], vec![2]]);
     let cluster = ClusterConfig::paper_cluster();
-    let out = run_with(Algorithm::OptimizedVfpc, &db, 0.5, &cluster, &opts());
+    let out = run_s(Algorithm::OptimizedVfpc, &db, 0.5, &cluster, &opts());
     assert_eq!(out.lk_profile(), vec![1]); // only item 0 (2/4)
 }
 
@@ -35,7 +41,7 @@ fn nothing_frequent() {
     let db = TransactionDb::new("sparse", 10, (0..10u32).map(|i| vec![i]).collect());
     let cluster = ClusterConfig::paper_cluster();
     for algo in Algorithm::ALL {
-        let out = run_with(algo, &db, 0.5, &cluster, &opts());
+        let out = run_s(algo, &db, 0.5, &cluster, &opts());
         assert_eq!(out.total_frequent(), 0, "{algo}");
         assert_eq!(out.n_phases(), 1, "{algo} must stop after Job1");
     }
@@ -45,12 +51,44 @@ fn nothing_frequent() {
 fn identical_transactions_everything_frequent() {
     let db = TransactionDb::new("dup", 6, vec![vec![0, 2, 4]; 50]);
     let cluster = ClusterConfig::paper_cluster();
-    let out = run_with(Algorithm::OptimizedEtdpc, &db, 1.0, &cluster, &opts());
+    let out = run_s(Algorithm::OptimizedEtdpc, &db, 1.0, &cluster, &opts());
     assert_eq!(out.lk_profile(), vec![3, 3, 1]);
 }
 
 #[test]
-fn min_sup_extremes() {
+fn out_of_domain_min_sup_is_a_typed_error() {
+    let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![1, 2], vec![2, 3]]);
+    let session = MiningSession::for_db(&db, ClusterConfig::paper_cluster())
+        .options(&opts())
+        .build()
+        .unwrap();
+    // The session API rejects min_sup outside (0, 1] up front instead of
+    // mining a degenerate outcome.
+    for bad in [0.0, -0.3, 1.5, f64::NAN] {
+        let err = session
+            .run(&MiningRequest::new(Algorithm::Spc).min_sup(bad))
+            .expect_err("out-of-domain min_sup must be rejected");
+        assert!(
+            matches!(err, MiningError::InvalidMinSup(_)),
+            "min_sup {bad}: wrong error {err:?}"
+        );
+        // The rendered message is a single clean line (what the CLI shows).
+        let msg = err.to_string();
+        assert!(msg.contains("min_sup"), "{msg}");
+        assert!(!msg.contains('\n'));
+    }
+    // Boundary: exactly 1.0 is valid ("everything must appear everywhere").
+    let out = session.run(&MiningRequest::new(Algorithm::Spc).min_sup(1.0)).unwrap();
+    assert_eq!(out.total_frequent(), 0);
+}
+
+/// The deprecated free functions keep the legacy permissive semantics:
+/// min_sup = 0 still mines observed itemsets (count >= 1) and min_sup > 1
+/// mines to an empty outcome, exactly as before the session redesign.
+#[test]
+#[allow(deprecated)]
+fn legacy_shims_preserve_permissive_min_sup() {
+    use mrapriori::coordinator::run_with;
     let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![1, 2], vec![2, 3]]);
     let cluster = ClusterConfig::paper_cluster();
     // min_sup = 0 still requires count >= 1 (observed itemsets only).
@@ -60,6 +98,62 @@ fn min_sup_extremes() {
     // min_sup > 1 can never be satisfied.
     let hi = run_with(Algorithm::Spc, &db, 1.5, &cluster, &opts());
     assert_eq!(hi.total_frequent(), 0);
+}
+
+#[test]
+fn invalid_tunables_are_typed_errors() {
+    let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![0, 1], vec![1, 2]]);
+    let session = MiningSession::for_db(&db, ClusterConfig::paper_cluster())
+        .options(&opts())
+        .build()
+        .unwrap();
+    let err = session
+        .run(&MiningRequest::new(Algorithm::Fpc).min_sup(0.5).fpc_n(0))
+        .expect_err("fpc_n = 0 must be rejected");
+    assert_eq!(err, MiningError::InvalidFpcN);
+    for bad_alpha in [0.5, 0.0, -2.0, f64::NAN, f64::INFINITY] {
+        let err = session
+            .run(&MiningRequest::new(Algorithm::Dpc).min_sup(0.5).dpc_alpha(bad_alpha))
+            .expect_err("degenerate dpc_alpha must be rejected");
+        assert!(
+            matches!(err, MiningError::InvalidDpcAlpha(_)),
+            "alpha {bad_alpha}: wrong error {err:?}"
+        );
+    }
+    let err = session
+        .run(&MiningRequest::new(Algorithm::Dpc).min_sup(0.5).dpc_beta(f64::NAN))
+        .expect_err("non-finite dpc_beta must be rejected");
+    assert!(matches!(err, MiningError::InvalidDpcBeta(_)));
+}
+
+#[test]
+fn empty_dataset_and_zero_split_are_typed_errors() {
+    let empty = TransactionDb::new("empty", 4, vec![]);
+    let err = MiningSession::for_db(&empty, ClusterConfig::paper_cluster())
+        .options(&opts())
+        .build()
+        .expect_err("empty dataset must be rejected");
+    assert_eq!(err, MiningError::EmptyDataset("empty".into()));
+
+    let db = TransactionDb::new("t", 4, vec![vec![0, 1]]);
+    let err = MiningSession::for_db(&db, ClusterConfig::paper_cluster())
+        .split_lines(0)
+        .build()
+        .expect_err("split_lines = 0 must be rejected");
+    assert_eq!(err, MiningError::InvalidSplitLines);
+}
+
+#[test]
+fn degenerate_clusters_are_typed_errors() {
+    let db = TransactionDb::new("t", 4, vec![vec![0, 1]]);
+    let mut no_workers = ClusterConfig::paper_cluster();
+    no_workers.workers = 0;
+    let err = MiningSession::for_db(&db, no_workers).build().unwrap_err();
+    assert!(matches!(err, MiningError::InvalidCluster(_)));
+    let mut no_reducers = ClusterConfig::paper_cluster();
+    no_reducers.n_reducers = 0;
+    let err = MiningSession::for_db(&db, no_reducers).build().unwrap_err();
+    assert!(matches!(err, MiningError::InvalidCluster(_)));
 }
 
 #[test]
@@ -92,7 +186,7 @@ fn config_rejects_hostile_values() {
 fn zero_sized_cluster_is_impossible_but_one_node_works() {
     let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![0, 1], vec![1, 2]]);
     let cluster = ClusterConfig::uniform(1, 1); // minimal cluster: 1 node, 1 slot
-    let out = run_with(Algorithm::Vfpc, &db, 0.5, &cluster, &opts());
+    let out = run_s(Algorithm::Vfpc, &db, 0.5, &cluster, &opts());
     assert_eq!(out.lk_profile(), vec![2, 1]); // {0},{1},{0,1}
     assert!(out.total_time > 0.0);
 }
@@ -101,7 +195,7 @@ fn zero_sized_cluster_is_impossible_but_one_node_works() {
 fn split_larger_than_dataset() {
     let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![0, 1]]);
     let cluster = ClusterConfig::paper_cluster();
-    let out = run_with(
+    let out = run_s(
         Algorithm::Spc,
         &db,
         0.5,
@@ -119,7 +213,7 @@ fn wide_transaction_deep_mining_terminates() {
     let t: Vec<u32> = (0..18).collect();
     let db = TransactionDb::new("wide", 18, vec![t.clone(), t]);
     let cluster = ClusterConfig::paper_cluster();
-    let out = run_with(Algorithm::Fpc, &db, 1.0, &cluster, &opts());
+    let out = run_s(Algorithm::Fpc, &db, 1.0, &cluster, &opts());
     assert_eq!(out.levels.len(), 18);
     assert_eq!(out.levels[17].len(), 1);
 }

@@ -1,0 +1,307 @@
+//! The session/query API: cross-query Job1 reuse (the ISSUE 3 acceptance
+//! criterion), phase-event streaming, cooperative cancellation, background
+//! handles, concurrent queries against one session, and byte-identical
+//! equivalence with the pre-redesign free functions.
+
+use mrapriori::apriori::sequential::mine;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{
+    Algorithm, CancelToken, MiningError, MiningRequest, MiningSession, PhaseEvent, RunOptions,
+};
+use mrapriori::dataset::ibm::{generate, IbmParams};
+use mrapriori::dataset::{registry, TransactionDb};
+
+fn small_db() -> TransactionDb {
+    generate(&IbmParams {
+        n_txns: 300,
+        n_items: 40,
+        avg_txn_len: 8.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 10,
+        correlation: 0.5,
+        corruption_mean: 0.3,
+        corruption_sd: 0.1,
+        seed: 42,
+        ..Default::default()
+    })
+}
+
+fn session_for(db: &TransactionDb) -> MiningSession {
+    MiningSession::for_db(db, ClusterConfig::paper_cluster())
+        .split_lines(50)
+        .build()
+        .expect("valid session")
+}
+
+/// The acceptance criterion: two consecutive queries on one session at the
+/// same support run Job1 exactly once, verified via the session counters
+/// AND the phase records, with identical mining output.
+#[test]
+fn job1_runs_once_across_queries_at_same_support() {
+    let db = small_db();
+    let session = session_for(&db);
+    let first = session.run(&MiningRequest::new(Algorithm::Vfpc).min_sup(0.2)).unwrap();
+    let second = session.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.2)).unwrap();
+
+    let stats = session.stats();
+    assert_eq!(stats.queries, 2);
+    assert_eq!(stats.job1_runs, 1, "Job1 must execute once for one min_count");
+    assert_eq!(stats.job1_cache_hits, 1);
+
+    // The cached phase is the same measurement: identical job name,
+    // simulated timing, and counters in both outcomes' phase records.
+    let (a, b) = (&first.phases[0], &second.phases[0]);
+    assert_eq!(a.job, "job1");
+    assert_eq!(a.job, b.job);
+    assert_eq!(a.elapsed, b.elapsed);
+    assert_eq!(a.counters, b.counters);
+
+    // And the mining output still matches the oracle exactly.
+    let oracle = mine(&db, 0.2).all_frequent();
+    assert_eq!(first.all_frequent(), oracle);
+    assert_eq!(second.all_frequent(), oracle);
+}
+
+#[test]
+fn job1_cache_keyed_by_min_count_and_fusion() {
+    let db = small_db(); // 300 txns
+    let session = session_for(&db);
+    // 0.30 and 0.2999 both round up to min_count 90 — one Job1.
+    session.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.30)).unwrap();
+    session.run(&MiningRequest::new(Algorithm::Vfpc).min_sup(0.2999)).unwrap();
+    assert_eq!(session.stats().job1_runs, 1, "same min_count must share Job1");
+    // A genuinely different support is a new key...
+    session.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.15)).unwrap();
+    assert_eq!(session.stats().job1_runs, 2);
+    // ... and so is the fused pass-1+2 variant of an existing support.
+    session
+        .run(&MiningRequest::new(Algorithm::Spc).min_sup(0.30).fuse_pass_2(true))
+        .unwrap();
+    assert_eq!(session.stats().job1_runs, 3);
+}
+
+/// Session-API results are byte-identical to the pre-redesign `run_with`
+/// output for all seven algorithms (the other half of the acceptance
+/// criterion).
+#[test]
+#[allow(deprecated)]
+fn session_matches_legacy_free_functions_for_all_algorithms() {
+    let db = small_db();
+    let cluster = ClusterConfig::paper_cluster();
+    let opts = RunOptions { split_lines: 50, ..Default::default() };
+    let session = MiningSession::for_db(&db, cluster.clone()).options(&opts).build().unwrap();
+    for min_sup in [0.3, 0.15] {
+        for algo in Algorithm::ALL {
+            let legacy = mrapriori::coordinator::run_with(algo, &db, min_sup, &cluster, &opts);
+            let new = session.run(&MiningRequest::from_options(algo, min_sup, &opts)).unwrap();
+            assert_eq!(
+                new.all_frequent(),
+                legacy.all_frequent(),
+                "{algo} @ {min_sup}: session output diverged from run_with"
+            );
+            assert_eq!(new.lk_profile(), legacy.lk_profile(), "{algo} @ {min_sup}");
+            assert_eq!(new.n_phases(), legacy.n_phases(), "{algo} @ {min_sup}");
+            assert_eq!(new.min_count, legacy.min_count, "{algo} @ {min_sup}");
+            // Simulated time is metered, not wall-clock, so it is exactly
+            // reproducible across both paths.
+            assert!(
+                (new.total_time - legacy.total_time).abs() < 1e-9,
+                "{algo} @ {min_sup}: {} vs {}",
+                new.total_time,
+                legacy.total_time
+            );
+        }
+    }
+}
+
+#[test]
+fn event_stream_matches_outcome_phases() {
+    let db = small_db();
+    let session = session_for(&db);
+    let mut started = Vec::new();
+    let mut finished = Vec::new();
+    let out = session
+        .run_streaming(
+            &MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(0.2),
+            &CancelToken::new(),
+            |ev| match ev {
+                PhaseEvent::PhaseStarted { phase, job, first_pass } => {
+                    started.push((phase, job, first_pass))
+                }
+                PhaseEvent::PhaseFinished { record, from_cache } => {
+                    finished.push((record, from_cache))
+                }
+            },
+        )
+        .unwrap();
+    assert_eq!(started.len(), out.n_phases());
+    assert_eq!(finished.len(), out.n_phases());
+    for (i, phase) in out.phases.iter().enumerate() {
+        let (ev_phase, ev_job, ev_first_pass) = &started[i];
+        assert_eq!(*ev_phase, phase.phase);
+        assert_eq!(ev_job, &phase.job);
+        assert_eq!(*ev_first_pass, phase.first_pass);
+        let (record, _) = &finished[i];
+        assert_eq!(record.phase, phase.phase);
+        assert_eq!(record.job, phase.job);
+        assert_eq!(record.elapsed, phase.elapsed);
+    }
+    // A fresh session's first query computes Job1; nothing is cached.
+    assert!(!finished[0].1, "first query must not report a cache hit");
+
+    // A second streamed query reports its Job1 as served from cache.
+    let mut cache_flags = Vec::new();
+    session
+        .run_streaming(
+            &MiningRequest::new(Algorithm::Spc).min_sup(0.2),
+            &CancelToken::new(),
+            |ev| {
+                if let PhaseEvent::PhaseFinished { from_cache, .. } = ev {
+                    cache_flags.push(from_cache);
+                }
+            },
+        )
+        .unwrap();
+    assert_eq!(cache_flags[0], true, "second query's Job1 must hit the cache");
+    assert!(cache_flags[1..].iter().all(|&f| !f), "Job2 phases are never cached");
+}
+
+#[test]
+fn cancellation_stops_between_phases() {
+    let db = small_db();
+    let session = session_for(&db);
+    let token = CancelToken::new();
+    let mut seen = 0usize;
+    let err = session
+        .run_streaming(
+            &MiningRequest::new(Algorithm::Spc).min_sup(0.15),
+            &token,
+            |ev| {
+                if let PhaseEvent::PhaseFinished { .. } = ev {
+                    seen += 1;
+                    token.cancel(); // cancel as soon as the first phase lands
+                }
+            },
+        )
+        .expect_err("cancelled run must not produce an outcome");
+    assert_eq!(err, MiningError::Cancelled);
+    assert_eq!(seen, 1, "exactly one phase should finish before the cancel lands");
+    // The session stays fully usable afterwards.
+    let out = session.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.15)).unwrap();
+    assert_eq!(out.all_frequent(), mine(&db, 0.15).all_frequent());
+}
+
+#[test]
+fn submit_streams_events_and_joins_to_the_same_outcome() {
+    let db = small_db();
+    let session = session_for(&db);
+    let reference = session.run(&MiningRequest::new(Algorithm::Vfpc).min_sup(0.2)).unwrap();
+
+    let handle = session.submit(MiningRequest::new(Algorithm::Vfpc).min_sup(0.2)).unwrap();
+    assert_eq!(handle.algorithm(), Algorithm::Vfpc);
+    let events: Vec<PhaseEvent> = handle.events().collect();
+    let finished = events
+        .iter()
+        .filter(|e| matches!(e, PhaseEvent::PhaseFinished { .. }))
+        .count();
+    let out = handle.join().expect("background run succeeds");
+    assert_eq!(finished, out.n_phases());
+    assert_eq!(out.all_frequent(), reference.all_frequent());
+    assert!((out.total_time - reference.total_time).abs() < 1e-9);
+}
+
+#[test]
+fn submit_rejects_invalid_requests_before_spawning() {
+    let db = small_db();
+    let session = session_for(&db);
+    let err = session
+        .submit(MiningRequest::new(Algorithm::Spc).min_sup(2.0))
+        .expect_err("invalid request must fail fast");
+    assert!(matches!(err, MiningError::InvalidMinSup(_)));
+}
+
+#[test]
+fn handle_cancel_is_cooperative() {
+    let db = small_db();
+    let session = session_for(&db);
+    let handle = session.submit(MiningRequest::new(Algorithm::Spc).min_sup(0.15)).unwrap();
+    handle.cancel();
+    // The worker may have raced past the last cancellation point; both a
+    // cancelled and a completed run are legal — but nothing else.
+    match handle.join() {
+        Err(MiningError::Cancelled) => {}
+        Ok(out) => assert_eq!(out.all_frequent(), mine(&db, 0.15).all_frequent()),
+        Err(other) => panic!("unexpected error: {other}"),
+    }
+}
+
+/// Concurrency stress (ISSUE 3 satellite): N threads x 7 algorithms
+/// against ONE session. Every outcome must be byte-identical to the
+/// sequential oracle, and Job1 must have executed exactly once for the
+/// single distinct min_count.
+#[test]
+fn concurrent_queries_share_one_job1_and_match_the_oracle() {
+    const THREADS: usize = 3;
+    let db = small_db();
+    let min_sup = 0.2;
+    let oracle = mine(&db, min_sup).all_frequent();
+    let session = session_for(&db);
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for t in 0..THREADS {
+            let session = &session;
+            let oracle = &oracle;
+            joins.push(scope.spawn(move || {
+                // Stagger the per-thread algorithm order so the cache sees
+                // genuinely interleaved keys.
+                for i in 0..Algorithm::ALL.len() {
+                    let algo = Algorithm::ALL[(i + t) % Algorithm::ALL.len()];
+                    let out = session
+                        .run(&MiningRequest::new(algo).min_sup(min_sup))
+                        .expect("concurrent run");
+                    assert_eq!(
+                        &out.all_frequent(),
+                        oracle,
+                        "{algo} diverged from the oracle under concurrency"
+                    );
+                }
+            }));
+        }
+        for j in joins {
+            j.join().expect("stress thread panicked");
+        }
+    });
+
+    let stats = session.stats();
+    assert_eq!(stats.queries, (THREADS * Algorithm::ALL.len()) as u64);
+    assert_eq!(stats.job1_runs, 1, "one min_count => exactly one Job1 execution");
+    assert_eq!(stats.job1_cache_hits, stats.queries - 1);
+}
+
+#[test]
+fn builder_defaults_follow_registry_and_block_size() {
+    // In-memory sources default to the dataset's registry split size.
+    let db = registry::load("chess");
+    let session = MiningSession::for_db(&db, ClusterConfig::paper_cluster()).build().unwrap();
+    assert_eq!(session.split_lines(), registry::split_lines("chess"));
+    assert_eq!(session.file().name, "chess");
+    assert_eq!(session.file().len(), db.len());
+
+    // Pre-stored files default to their block granularity.
+    let file = mrapriori::hdfs::put(&db, 123, 4, 3, 1);
+    let session =
+        MiningSession::builder(file, ClusterConfig::paper_cluster()).build().unwrap();
+    assert_eq!(session.split_lines(), 123);
+}
+
+#[test]
+fn cloned_sessions_share_the_cache() {
+    let db = small_db();
+    let session = session_for(&db);
+    let clone = session.clone();
+    session.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.2)).unwrap();
+    clone.run(&MiningRequest::new(Algorithm::Vfpc).min_sup(0.2)).unwrap();
+    assert_eq!(session.stats().job1_runs, 1);
+    assert_eq!(clone.stats().queries, 2);
+}

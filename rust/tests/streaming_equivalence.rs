@@ -5,7 +5,7 @@
 //! acceptance; DESIGN.md §7).
 
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{run_on_file, run_with, Algorithm, RunOptions};
+use mrapriori::coordinator::{Algorithm, RunOptions};
 use mrapriori::dataset::ibm::QuestGen;
 use mrapriori::dataset::registry;
 use mrapriori::hdfs::{self, RecordSource as _};
@@ -16,6 +16,9 @@ use std::sync::Arc;
 /// enough mining to exercise Job2 phases, small enough for tier-1.
 const NAME: &str = "t8i3d2k";
 const MIN_SUP: f64 = 0.02;
+
+mod common;
+use common::{run_file_s, run_s as run_db_s};
 
 fn tmp_cache(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("mrapriori_streaming_equiv").join(tag);
@@ -35,8 +38,8 @@ fn streamed_mining_matches_in_memory() {
     assert_eq!(file.n_items, db.n_items);
     let opts = RunOptions { split_lines: registry::split_lines(NAME), ..Default::default() };
     for algo in [Algorithm::Spc, Algorithm::OptimizedEtdpc] {
-        let streamed = run_on_file(algo, &file, MIN_SUP, &cluster, &opts);
-        let memory = run_with(algo, &db, MIN_SUP, &cluster, &opts);
+        let streamed = run_file_s(algo, &file, MIN_SUP, &cluster, &opts);
+        let memory = run_db_s(algo, &db, MIN_SUP, &cluster, &opts);
         assert!(!streamed.all_frequent().is_empty(), "{algo}: degenerate run");
         assert_eq!(streamed.all_frequent(), memory.all_frequent(), "{algo}");
         assert_eq!(streamed.lk_profile(), memory.lk_profile(), "{algo}");
@@ -65,10 +68,10 @@ fn streamed_outcome_stable_across_worker_counts() {
         hdfs::put_segmented(Arc::clone(&src), cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, 1);
     let opts = RunOptions { split_lines: registry::split_lines(NAME), ..Default::default() };
     cluster.workers = 1;
-    let baseline = run_on_file(Algorithm::OptimizedEtdpc, &file, MIN_SUP, &cluster, &opts);
+    let baseline = run_file_s(Algorithm::OptimizedEtdpc, &file, MIN_SUP, &cluster, &opts);
     for workers in [2, 4] {
         cluster.workers = workers;
-        let out = run_on_file(Algorithm::OptimizedEtdpc, &file, MIN_SUP, &cluster, &opts);
+        let out = run_file_s(Algorithm::OptimizedEtdpc, &file, MIN_SUP, &cluster, &opts);
         assert_eq!(out.all_frequent(), baseline.all_frequent(), "workers={workers}");
         // Simulated time is a function of metered counters, not host
         // threads — it must not drift either.
@@ -119,8 +122,8 @@ fn imported_file_mines_identically() {
     let file =
         hdfs::put_segmented(Arc::new(src), cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, 1);
     let opts = RunOptions { split_lines: 1000, ..Default::default() };
-    let streamed = run_on_file(Algorithm::Spc, &file, 0.35, &cluster, &opts);
-    let memory = run_with(Algorithm::Spc, &db, 0.35, &cluster, &opts);
+    let streamed = run_file_s(Algorithm::Spc, &file, 0.35, &cluster, &opts);
+    let memory = run_db_s(Algorithm::Spc, &db, 0.35, &cluster, &opts);
     assert_eq!(streamed.all_frequent(), memory.all_frequent());
     std::fs::remove_dir_all(&dir).unwrap();
 }
