@@ -24,11 +24,15 @@ fn main() {
         .build()
         .expect("mushroom is a valid dataset");
 
-    // 3. Mine, streaming phase events as the run executes.
+    // 3. Mine, streaming events as the run executes: phase boundaries plus
+    //    the executor's per-task progress (every map/reduce task started
+    //    and finished on the session's shared worker pool).
     let request = MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(0.25);
+    let mut tasks_done = 0usize;
     let out = session
-        .run_streaming(&request, &CancelToken::new(), |event| {
-            if let PhaseEvent::PhaseFinished { record, from_cache } = event {
+        .run_streaming(&request, &CancelToken::new(), |event| match event {
+            PhaseEvent::TaskFinished { .. } => tasks_done += 1,
+            PhaseEvent::PhaseFinished { record, from_cache } => {
                 println!(
                     "  phase {} ({}): {:.0} simulated s{}",
                     record.phase,
@@ -37,6 +41,7 @@ fn main() {
                     if from_cache { " [job1 cache]" } else { "" }
                 );
             }
+            _ => {}
         })
         .expect("valid request");
     println!(
@@ -48,6 +53,12 @@ fn main() {
         out.wall_time
     );
     println!("|L_k| profile: {:?}", out.lk_profile());
+    println!(
+        "executor: {} tasks on a {}-thread pool (peak task concurrency {})",
+        tasks_done,
+        session.executor().workers(),
+        session.executor().high_water_mark()
+    );
 
     // 4. A second query at the same support skips the dataset scan: Job1
     //    comes straight from the session cache.

@@ -1,10 +1,13 @@
-//! Seed of the session-layer perf trajectory: warm-session queries/sec
-//! (repeated min_sup queries on c20d10k through one `MiningSession`, Job1
-//! memoized) vs the cold path (the deprecated one-shot free functions,
-//! which replay split planning and Job1 on every call). Emits
-//! `BENCH_session.json` under `target/paper_results/`.
+//! Session-layer perf trajectory: warm-session queries/sec (repeated
+//! min_sup queries on c20d10k through one `MiningSession`, Job1 memoized,
+//! every job on the session's one shared executor pool) vs the cold path
+//! (a fresh session per query, which replays split planning, Job1, and
+//! pool construction every time — the pre-session cost model; the
+//! deprecated free functions it used to measure were removed in 0.3.0).
+//! Emits `BENCH_session.json` under `target/paper_results/`.
 //!
 //! Run: `cargo bench --bench session_throughput`
+//! Quick mode (CI telemetry): `BENCH_QUICK=1 cargo bench --bench session_throughput`
 
 use mrapriori::bench_harness::timing::save_report;
 use mrapriori::cluster::ClusterConfig;
@@ -12,9 +15,9 @@ use mrapriori::coordinator::{Algorithm, MiningOutcome, MiningRequest, MiningSess
 use mrapriori::dataset::{registry, TransactionDb};
 use std::time::Instant;
 
-/// The pre-session baseline, isolated so the deprecation allowance stays
-/// scoped to the one caller whose job is to measure the old path.
-#[allow(deprecated)]
+/// The pre-session baseline: a throwaway session per query pays for split
+/// planning, HDFS placement, a fresh executor pool, and a fresh Job1 scan
+/// on every call — exactly what the retired one-shot free functions did.
 fn cold_run(
     algo: Algorithm,
     db: &TransactionDb,
@@ -22,7 +25,12 @@ fn cold_run(
     cluster: &ClusterConfig,
     opts: &RunOptions,
 ) -> MiningOutcome {
-    mrapriori::coordinator::run_with(algo, db, min_sup, cluster, opts)
+    MiningSession::for_db(db, cluster.clone())
+        .options(opts)
+        .build()
+        .expect("valid session")
+        .run(&MiningRequest::from_options(algo, min_sup, opts))
+        .expect("valid request")
 }
 
 fn main() {
@@ -30,9 +38,15 @@ fn main() {
     let cluster = ClusterConfig::paper_cluster();
     let opts = RunOptions { split_lines: registry::split_lines("c20d10k"), ..Default::default() };
     // The repeated-query workload of the paper's evaluation: several
-    // algorithms swept over a handful of supports on one dataset.
-    let supports = [0.35, 0.30, 0.25];
-    let algorithms = [Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedVfpc];
+    // algorithms swept over a handful of supports on one dataset. Quick
+    // mode (BENCH_QUICK=1) shrinks the grid for CI telemetry runs.
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
+    let supports: &[f64] = if quick { &[0.35, 0.30] } else { &[0.35, 0.30, 0.25] };
+    let algorithms: &[Algorithm] = if quick {
+        &[Algorithm::Spc, Algorithm::OptimizedVfpc]
+    } else {
+        &[Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedVfpc]
+    };
     let n_queries = (supports.len() * algorithms.len()) as f64;
 
     // Warm path: one session; each support's Job1 runs once and the other
@@ -43,8 +57,8 @@ fn main() {
         .expect("valid session");
     let t0 = Instant::now();
     let mut warm_outcomes = Vec::new();
-    for &ms in &supports {
-        for &algo in &algorithms {
+    for &ms in supports {
+        for &algo in algorithms {
             let req = MiningRequest::from_options(algo, ms, &opts);
             warm_outcomes.push(session.run(&req).expect("valid request"));
         }
@@ -52,12 +66,11 @@ fn main() {
     let warm_secs = t0.elapsed().as_secs_f64();
     let stats = session.stats();
 
-    // Cold path: the pre-session free functions — every query replays
-    // split planning and Job1 from scratch.
+    // Cold path: fresh session per query.
     let t0 = Instant::now();
     let mut cold_outcomes = Vec::new();
-    for &ms in &supports {
-        for &algo in &algorithms {
+    for &ms in supports {
+        for &algo in algorithms {
             cold_outcomes.push(cold_run(algo, &db, ms, &cluster, &opts));
         }
     }
@@ -71,28 +84,35 @@ fn main() {
     let warm_qps = n_queries / warm_secs;
     let cold_qps = n_queries / cold_secs;
     println!(
-        "session_throughput: {} queries on c20d10k ({} supports x {} algorithms)",
+        "session_throughput: {} queries on c20d10k ({} supports x {} algorithms{})",
         warm_outcomes.len(),
         supports.len(),
-        algorithms.len()
+        algorithms.len(),
+        if quick { ", quick mode" } else { "" }
     );
     println!(
         "  warm session: {warm_secs:.2} s total, {warm_qps:.3} queries/s \
-         (Job1 runs {}, cache hits {})",
-        stats.job1_runs, stats.job1_cache_hits
+         (Job1 runs {}, cache hits {}, pool high-water {})",
+        stats.job1_runs,
+        stats.job1_cache_hits,
+        session.executor().high_water_mark()
     );
-    println!("  cold free-fn: {cold_secs:.2} s total, {cold_qps:.3} queries/s");
+    println!("  cold sessions: {cold_secs:.2} s total, {cold_qps:.3} queries/s");
     println!("  speedup: {:.2}x", cold_secs / warm_secs);
 
     let json = format!(
         "{{\n  \"bench\": \"session_throughput\",\n  \"dataset\": \"c20d10k\",\n  \
-         \"queries\": {},\n  \"warm_secs\": {warm_secs:.6},\n  \"cold_secs\": {cold_secs:.6},\n  \
+         \"quick\": {quick},\n  \"queries\": {},\n  \"warm_secs\": {warm_secs:.6},\n  \
+         \"cold_secs\": {cold_secs:.6},\n  \
          \"warm_queries_per_sec\": {warm_qps:.6},\n  \"cold_queries_per_sec\": {cold_qps:.6},\n  \
-         \"speedup\": {:.6},\n  \"job1_runs\": {},\n  \"job1_cache_hits\": {}\n}}\n",
+         \"speedup\": {:.6},\n  \"job1_runs\": {},\n  \"job1_cache_hits\": {},\n  \
+         \"pool_workers\": {},\n  \"pool_high_water\": {}\n}}\n",
         warm_outcomes.len(),
         cold_secs / warm_secs,
         stats.job1_runs,
-        stats.job1_cache_hits
+        stats.job1_cache_hits,
+        session.executor().workers(),
+        session.executor().high_water_mark()
     );
     save_report("BENCH_session.json", &json);
     print!("{json}");

@@ -145,7 +145,8 @@ pub fn phase_time_table(outcomes: &[&MiningOutcome], title: &str) -> String {
         let _ = writeln!(s, " {:>9.0} {:>9.0}", o.total_time, o.actual_time);
     }
     // Attribute each row's phases to the MapReduce jobs that ran them (the
-    // engine threads JobSpec.name through its task meters into PhaseRecord).
+    // executor threads the JobBuilder name through its task meters into
+    // PhaseRecord).
     let _ = writeln!(s);
     for o in outcomes {
         let jobs: Vec<&str> = o.phases.iter().map(|p| p.job.as_str()).collect();

@@ -9,13 +9,11 @@ pub mod session;
 
 pub use session::{
     CancelToken, MiningError, MiningRequest, MiningSession, PhaseEvent, RunHandle,
-    SessionBuilder, SessionStats,
+    SessionBuilder, SessionStats, TaskKind,
 };
 
 use crate::apriori::sequential::Level;
 use crate::cluster::{ClusterConfig, JobTiming};
-use crate::dataset::TransactionDb;
-use crate::hdfs;
 use crate::itemset::Itemset;
 use crate::mapreduce::counters::Counters;
 use drivers::{
@@ -69,6 +67,12 @@ impl Algorithm {
     }
 
     /// Parse an algorithm name (case- and punctuation-insensitive).
+    ///
+    /// The trait-based spellings — `s.parse::<Algorithm>()` via
+    /// [`std::str::FromStr`], or `Algorithm::try_from(s)` — are the
+    /// idiomatic entry points and carry a typed
+    /// [`ParseAlgorithmError`]; this inherent method is their shared
+    /// `Option`-shaped core.
     pub fn parse(s: &str) -> Option<Algorithm> {
         let norm = s.to_ascii_lowercase().replace(['-', '_'], "");
         Some(match norm.as_str() {
@@ -92,6 +96,44 @@ impl Algorithm {
 impl std::fmt::Display for Algorithm {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
+    }
+}
+
+/// Error of parsing an [`Algorithm`] name: carries the rejected input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseAlgorithmError(
+    /// The input string that matched no algorithm name.
+    pub String,
+);
+
+impl std::fmt::Display for ParseAlgorithmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown algorithm {:?}; expected one of spc, fpc, dpc, vfpc, etdpc, \
+             optimized-vfpc (opt-vfpc), optimized-etdpc (opt-etdpc)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseAlgorithmError {}
+
+impl std::str::FromStr for Algorithm {
+    type Err = ParseAlgorithmError;
+
+    /// `"opt-vfpc".parse::<Algorithm>()` — same normalization as
+    /// [`Algorithm::parse`], with a typed error for CLI/config surfaces.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Algorithm::parse(s).ok_or_else(|| ParseAlgorithmError(s.to_string()))
+    }
+}
+
+impl TryFrom<&str> for Algorithm {
+    type Error = ParseAlgorithmError;
+
+    fn try_from(s: &str) -> Result<Self, Self::Error> {
+        s.parse()
     }
 }
 
@@ -136,8 +178,9 @@ pub struct PhaseRecord {
     /// 1-based phase index (phase 1 = Job1).
     pub phase: usize,
     /// Name of the MapReduce job that ran this phase (e.g. `job1`,
-    /// `job2-k3`), propagated from [`crate::mapreduce::JobSpec::name`]
-    /// through the engine's task meters.
+    /// `job2-k3`), propagated from the job's
+    /// [`crate::mapreduce::JobBuilder`] name through the executor's task
+    /// meters.
     pub job: String,
     /// Apriori pass number of the first pass in this phase (1 for Job1).
     pub first_pass: usize,
@@ -232,69 +275,17 @@ fn controller_for(
     }
 }
 
-/// Run `algo` on `db` with default options (paper's split size must be
-/// passed; see [`crate::dataset::registry::split_lines`]).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a coordinator::MiningSession and submit MiningRequests (DESIGN.md §8)"
-)]
-#[allow(deprecated)]
-pub fn run(
-    algo: Algorithm,
-    db: &TransactionDb,
-    min_sup: f64,
-    cluster: &ClusterConfig,
-    split_lines: usize,
-) -> MiningOutcome {
-    run_with(algo, db, min_sup, cluster, &RunOptions { split_lines, ..Default::default() })
-}
-
-/// Run `algo` on an in-memory `db` with explicit options: stores the
-/// database as an in-memory HDFS file, then mines it via [`run_on_file`].
-#[deprecated(
-    since = "0.2.0",
-    note = "build a coordinator::MiningSession and submit MiningRequests (DESIGN.md §8)"
-)]
-#[allow(deprecated)]
-pub fn run_with(
-    algo: Algorithm,
-    db: &TransactionDb,
-    min_sup: f64,
-    cluster: &ClusterConfig,
-    opts: &RunOptions,
-) -> MiningOutcome {
-    let file =
-        hdfs::put(db, opts.split_lines, cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, opts.seed);
-    run_on_file(algo, &file, min_sup, cluster, opts)
-}
-
-/// Run `algo` over an already-stored HDFS file — the out-of-core entry
-/// point. The file may be backed by either [`hdfs::RecordSource`] backend.
-///
-/// Deprecated shim: a one-shot, validation-free [`MiningSession`] that
-/// preserves the legacy permissive semantics exactly (out-of-domain
-/// `min_sup` mines its degenerate outcome instead of erroring). Every call
-/// replays split planning and Job1 from scratch — a session amortizes
-/// both across queries.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a coordinator::MiningSession and submit MiningRequests (DESIGN.md §8)"
-)]
-pub fn run_on_file(
-    algo: Algorithm,
-    file: &hdfs::HdfsFile,
-    min_sup: f64,
-    cluster: &ClusterConfig,
-    opts: &RunOptions,
-) -> MiningOutcome {
-    session::legacy_run(algo, file, min_sup, cluster, opts)
-}
+// The deprecated one-shot free functions `run` / `run_with` / `run_on_file`
+// (shims over a validation-free session since 0.2.0) were REMOVED in 0.3.0:
+// build a `MiningSession` and submit `MiningRequest`s instead (DESIGN.md §8
+// documents the one-to-one migration).
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::apriori::sequential::mine;
     use crate::dataset::ibm::{generate, IbmParams};
+    use crate::dataset::TransactionDb;
 
     fn small_db() -> TransactionDb {
         generate(&IbmParams {
@@ -423,6 +414,23 @@ mod tests {
         }
         assert_eq!(Algorithm::parse("optimized_vfpc"), Some(Algorithm::OptimizedVfpc));
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn algorithm_fromstr_tryfrom_display_roundtrip() {
+        for algo in Algorithm::ALL {
+            // Display -> FromStr / TryFrom round-trip over the paper names.
+            let displayed = algo.to_string();
+            assert_eq!(displayed.parse::<Algorithm>(), Ok(algo), "{displayed}");
+            assert_eq!(Algorithm::try_from(displayed.as_str()), Ok(algo), "{displayed}");
+            // Same normalization as the inherent parser.
+            assert_eq!(displayed.to_ascii_lowercase().parse::<Algorithm>(), Ok(algo));
+        }
+        let err = "nope".parse::<Algorithm>().expect_err("unknown name must error");
+        assert_eq!(err, ParseAlgorithmError("nope".into()));
+        let msg = err.to_string();
+        assert!(msg.contains("unknown algorithm") && msg.contains("opt-vfpc"), "{msg}");
+        assert!(Algorithm::try_from("").is_err());
     }
 
     #[test]

@@ -16,13 +16,18 @@
 //! * queries are [`MiningRequest`] builder values validated into typed
 //!   [`MiningError`]s (no panics on zero `split_lines`, out-of-domain
 //!   `min_sup`, empty datasets);
+//! * every query's MapReduce jobs are submitted to the session's one
+//!   [`Executor`] (Engine v2, DESIGN.md §9), so N concurrent queries share
+//!   ONE bounded worker pool instead of spawning N thread batches;
 //! * execution either runs inline ([`MiningSession::run`] /
 //!   [`MiningSession::run_streaming`]) or on a background thread behind a
-//!   [`RunHandle`] that streams [`PhaseEvent`]s and supports cooperative
-//!   cancellation ([`CancelToken`]).
+//!   [`RunHandle`] that streams [`PhaseEvent`]s — phase boundaries plus
+//!   per-task progress — and supports cooperative cancellation
+//!   ([`CancelToken`]), which the executor honors *inside* a running Job2
+//!   at task granularity.
 //!
-//! The legacy `coordinator::run*` free functions are thin deprecated shims
-//! over a one-shot session (see DESIGN.md §8).
+//! The legacy `coordinator::run*` free functions, deprecated in 0.2.0,
+//! were removed in 0.3.0 (see DESIGN.md §8).
 
 use super::drivers::PhaseObservation;
 use super::mappers::{self, GenMode, Job2Mapper, OneItemsetMapper};
@@ -34,13 +39,15 @@ use crate::cluster::{simulate_job, ClusterConfig};
 use crate::dataset::{registry, TransactionDb};
 use crate::hdfs::{self, HdfsFile, InputSplit};
 use crate::itemset::Trie;
-use crate::mapreduce::api::{HashPartitioner, MinSupportReducer, SumCombiner};
+use crate::mapreduce::api::{MinSupportReducer, SumCombiner};
 use crate::mapreduce::counters::keys;
-use crate::mapreduce::engine::{run_job, JobSpec};
+use crate::mapreduce::executor::{Executor, JobBuilder, TaskEvent};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+pub use crate::mapreduce::executor::{CancelToken, TaskKind};
 
 // ---------------------------------------------------------------------------
 // Error taxonomy
@@ -222,6 +229,11 @@ impl MiningRequest {
 // ---------------------------------------------------------------------------
 
 /// One step of a query's lifecycle, streamed while the run executes.
+///
+/// Phase-level events bracket each MapReduce job; within an *executing*
+/// phase (never a cached one), task-level events report every map and
+/// reduce task the executor starts and finishes, in true execution order —
+/// the session's forwarding of [`TaskEvent`].
 #[derive(Debug, Clone)]
 pub enum PhaseEvent {
     /// A MapReduce phase is about to execute.
@@ -233,6 +245,33 @@ pub enum PhaseEvent {
         /// Apriori pass number of the phase's first pass.
         first_pass: usize,
     },
+    /// A worker began executing one task of the current phase's job.
+    TaskStarted {
+        /// 1-based phase index the task belongs to.
+        phase: usize,
+        /// Name of the job the task belongs to (shared, not copied —
+        /// large jobs stream two events per task).
+        job: Arc<str>,
+        /// Map or reduce.
+        kind: TaskKind,
+        /// Task index within its phase.
+        task: usize,
+        /// Total tasks in that phase.
+        of: usize,
+    },
+    /// One task of the current phase's job ran to completion.
+    TaskFinished {
+        /// 1-based phase index the task belongs to.
+        phase: usize,
+        /// Name of the job the task belongs to (shared, not copied).
+        job: Arc<str>,
+        /// Map or reduce.
+        kind: TaskKind,
+        /// Task index within its phase.
+        task: usize,
+        /// Total tasks in that phase.
+        of: usize,
+    },
     /// A MapReduce phase finished; carries its full metrics row.
     PhaseFinished {
         /// The phase's metrics (identical to the outcome's entry).
@@ -243,36 +282,25 @@ pub enum PhaseEvent {
     },
 }
 
-/// Cooperative cancellation flag, checked between MapReduce phases.
-/// Cloning shares the flag.
-#[derive(Debug, Clone, Default)]
-pub struct CancelToken {
-    flag: Arc<AtomicBool>,
+/// Forward one executor task event into the session's phase-event stream.
+fn task_event(phase: usize, ev: TaskEvent) -> PhaseEvent {
+    match ev {
+        TaskEvent::Started { job, kind, task, of } => {
+            PhaseEvent::TaskStarted { phase, job, kind, task, of }
+        }
+        TaskEvent::Finished { job, kind, task, of } => {
+            PhaseEvent::TaskFinished { phase, job, kind, task, of }
+        }
+    }
 }
 
-impl CancelToken {
-    /// A fresh, un-cancelled token.
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Request cancellation: the run stops before its next phase and
-    /// returns [`MiningError::Cancelled`].
-    pub fn cancel(&self) {
-        self.flag.store(true, Ordering::SeqCst);
-    }
-
-    /// Whether cancellation has been requested.
-    pub fn is_cancelled(&self) -> bool {
-        self.flag.load(Ordering::SeqCst)
-    }
-
-    fn check(&self) -> Result<(), MiningError> {
-        if self.is_cancelled() {
-            Err(MiningError::Cancelled)
-        } else {
-            Ok(())
-        }
+/// The session-layer cancellation check (between phases; the executor
+/// additionally checks the same token between tasks inside each Job2).
+fn check(token: &CancelToken) -> Result<(), MiningError> {
+    if token.is_cancelled() {
+        Err(MiningError::Cancelled)
+    } else {
+        Ok(())
     }
 }
 
@@ -304,6 +332,10 @@ struct SessionCore {
     cluster: ClusterConfig,
     split_lines: usize,
     splits: Vec<InputSplit>,
+    /// The session's job-submission service: ONE worker pool shared by
+    /// every query's map and reduce tasks, so N concurrent queries stay
+    /// inside a single `workers`-sized host budget (DESIGN.md §9).
+    executor: Executor,
     /// Memoized Job1 keyed by `(min_count, fuse_pass_2)`. The
     /// [`OnceLock`] per key gives exactly-once execution under concurrent
     /// queries: racers block until the first initializer finishes.
@@ -342,6 +374,7 @@ pub struct SessionBuilder<'a> {
     cluster: ClusterConfig,
     split_lines: Option<usize>,
     seed: u64,
+    executor: Option<Executor>,
 }
 
 enum SessionSource<'a> {
@@ -369,6 +402,16 @@ impl SessionBuilder<'_> {
     /// migration path for pre-session callers).
     pub fn options(self, opts: &RunOptions) -> Self {
         self.split_lines(opts.split_lines).seed(opts.seed)
+    }
+
+    /// Share a pre-built [`Executor`] instead of letting the session spawn
+    /// its own pool of `cluster.workers` threads — how several sessions
+    /// (or a whole process) run on ONE host-thread budget. The executor's
+    /// pool size then governs host execution; `cluster.workers` still
+    /// must be non-zero (it remains the simulated-cluster sanity check).
+    pub fn executor(mut self, executor: Executor) -> Self {
+        self.executor = Some(executor);
+        self
     }
 
     /// Validate and build the session: cluster shape, split size, and
@@ -404,7 +447,11 @@ impl SessionBuilder<'_> {
         if file.is_empty() {
             return Err(MiningError::EmptyDataset(file.name.clone()));
         }
-        Ok(MiningSession { core: Arc::new(SessionCore::new(file, self.cluster, split_lines)) })
+        let workers = self.cluster.workers;
+        let executor = self.executor.unwrap_or_else(|| Executor::new(workers));
+        Ok(MiningSession {
+            core: Arc::new(SessionCore::new(file, self.cluster, split_lines, executor)),
+        })
     }
 }
 
@@ -413,14 +460,26 @@ impl MiningSession {
     /// [`crate::hdfs::RecordSource`] backend — this is the out-of-core
     /// entry point for segment stores).
     pub fn builder(file: HdfsFile, cluster: ClusterConfig) -> SessionBuilder<'static> {
-        SessionBuilder { source: SessionSource::File(file), cluster, split_lines: None, seed: 1 }
+        SessionBuilder {
+            source: SessionSource::File(file),
+            cluster,
+            split_lines: None,
+            seed: 1,
+            executor: None,
+        }
     }
 
     /// Serve queries over an in-memory database, stored as an HDFS file at
     /// [`SessionBuilder::build`] time (the session does not borrow `db`
     /// after `build`).
     pub fn for_db(db: &TransactionDb, cluster: ClusterConfig) -> SessionBuilder<'_> {
-        SessionBuilder { source: SessionSource::Db(db), cluster, split_lines: None, seed: 1 }
+        SessionBuilder {
+            source: SessionSource::Db(db),
+            cluster,
+            split_lines: None,
+            seed: 1,
+            executor: None,
+        }
     }
 
     /// Execute a query inline and return its outcome. The session is
@@ -478,6 +537,14 @@ impl MiningSession {
         self.core.split_lines
     }
 
+    /// The session's [`Executor`]: every query's map and reduce tasks run
+    /// on its one shared worker pool. Inspect
+    /// [`Executor::workers`] / [`Executor::high_water_mark`] to verify the
+    /// host-thread budget held under concurrent queries.
+    pub fn executor(&self) -> &Executor {
+        &self.core.executor
+    }
+
     /// Snapshot of the session's query/cache counters — how a caller (or a
     /// test) proves that cross-query Job1 reuse actually happened.
     pub fn stats(&self) -> SessionStats {
@@ -498,23 +565,6 @@ impl std::fmt::Debug for MiningSession {
             .field("stats", &self.stats())
             .finish()
     }
-}
-
-/// Shim path for the deprecated `coordinator::run*` free functions: a
-/// one-shot, validation-free session preserving the legacy permissive
-/// semantics exactly (min_sup 0 or > 1 mine to their degenerate outcomes
-/// instead of erroring; `split_lines == 0` still panics as it always did).
-pub(crate) fn legacy_run(
-    algo: Algorithm,
-    file: &HdfsFile,
-    min_sup: f64,
-    cluster: &ClusterConfig,
-    opts: &RunOptions,
-) -> MiningOutcome {
-    let core = SessionCore::new(file.clone(), cluster.clone(), opts.split_lines);
-    let req = MiningRequest::from_options(algo, min_sup, opts);
-    core.execute(&req, &CancelToken::new(), &mut |_| {})
-        .expect("legacy runs are never cancelled")
 }
 
 // ---------------------------------------------------------------------------
@@ -595,13 +645,14 @@ impl Drop for RunHandle {
 // ---------------------------------------------------------------------------
 
 impl SessionCore {
-    fn new(file: HdfsFile, cluster: ClusterConfig, split_lines: usize) -> Self {
+    fn new(file: HdfsFile, cluster: ClusterConfig, split_lines: usize, executor: Executor) -> Self {
         let splits = hdfs::nline_splits(&file, split_lines);
         Self {
             file,
             cluster,
             split_lines,
             splits,
+            executor,
             job1_cache: Mutex::new(HashMap::new()),
             queries: AtomicU64::new(0),
             job1_runs: AtomicU64::new(0),
@@ -612,7 +663,14 @@ impl SessionCore {
     /// Job1 through the cache: exactly-once execution per
     /// `(min_count, fused)` key, concurrent callers blocking on the
     /// initializer. Returns the shared slot plus whether this call hit.
-    fn job1(&self, min_count: u64, fused: bool) -> (Arc<OnceLock<Job1Data>>, bool) {
+    /// Only the query that actually executes the job sees its task events
+    /// (cache hits replay no execution, so there is nothing to stream).
+    fn job1(
+        &self,
+        min_count: u64,
+        fused: bool,
+        sink: &mut dyn FnMut(PhaseEvent),
+    ) -> (Arc<OnceLock<Job1Data>>, bool) {
         let slot = {
             let mut cache = self.job1_cache.lock().expect("job1 cache poisoned");
             Arc::clone(cache.entry((min_count, fused)).or_default())
@@ -620,7 +678,7 @@ impl SessionCore {
         let mut ran = false;
         slot.get_or_init(|| {
             ran = true;
-            self.run_job1(min_count, fused)
+            self.run_job1(min_count, fused, sink)
         });
         if ran {
             self.job1_runs.fetch_add(1, Ordering::SeqCst);
@@ -632,32 +690,37 @@ impl SessionCore {
 
     /// Execute Job1 (Algorithm 1), optionally fused with pass 2 via the
     /// triangular-matrix counter (ref [6]).
-    fn run_job1(&self, min_count: u64, fused: bool) -> Job1Data {
+    ///
+    /// Job1 runs WITHOUT a cancel token: its result is memoized and shared
+    /// with every other query at the same cache key, so one query's
+    /// cancellation must not abort work its peers are blocking on. A
+    /// cancelled query still stops right after (the between-phase check).
+    fn run_job1(
+        &self,
+        min_count: u64,
+        fused: bool,
+        sink: &mut dyn FnMut(PhaseEvent),
+    ) -> Job1Data {
         let wall = Instant::now();
         let n_items = self.file.n_items;
-        let out = if fused {
-            run_job(JobSpec {
-                name: "job1+2".into(),
-                splits: self.splits.clone(),
-                mapper_factory: Box::new(move |_| mappers::FusedOneTwoMapper::new(n_items)),
-                combiner: Some(Box::new(SumCombiner)),
-                reducer: MinSupportReducer { min_count },
-                partitioner: Box::new(HashPartitioner),
-                n_reducers: self.cluster.n_reducers,
-                workers: self.cluster.workers,
-            })
+        let job = if fused {
+            JobBuilder::new("job1+2")
+                .splits(self.splits.clone())
+                .mapper(move |_| mappers::FusedOneTwoMapper::new(n_items))
         } else {
-            run_job(JobSpec {
-                name: "job1".into(),
-                splits: self.splits.clone(),
-                mapper_factory: Box::new(|_| OneItemsetMapper),
-                combiner: Some(Box::new(SumCombiner)),
-                reducer: MinSupportReducer { min_count },
-                partitioner: Box::new(HashPartitioner),
-                n_reducers: self.cluster.n_reducers,
-                workers: self.cluster.workers,
-            })
+            JobBuilder::new("job1")
+                .splits(self.splits.clone())
+                .mapper(|_| OneItemsetMapper)
         };
+        let out = self
+            .executor
+            .submit(
+                job.combiner(SumCombiner)
+                    .reducer(MinSupportReducer { min_count })
+                    .reducers(self.cluster.n_reducers),
+            )
+            .wait_with(|ev| sink(task_event(1, ev)))
+            .expect("job1 carries no cancel token, so it cannot be cancelled");
         debug_assert_aux_agreement(&out);
         let timing = simulate_job(&out.map_meters, &out.reduce_meters, &self.cluster);
         let mut l1: Level = Vec::new();
@@ -725,14 +788,14 @@ impl SessionCore {
         let mut phases: Vec<PhaseRecord> = Vec::new();
 
         // ---- Job1 (memoized) ---------------------------------------------
-        token.check()?;
+        check(token)?;
         let job1_name = if req.fuse_pass_2 { "job1+2" } else { "job1" };
         sink(PhaseEvent::PhaseStarted {
             phase: 1,
             job: job1_name.to_string(),
             first_pass: 1,
         });
-        let (slot, from_cache) = self.job1(min_count, req.fuse_pass_2);
+        let (slot, from_cache) = self.job1(min_count, req.fuse_pass_2, sink);
         let job1 = slot.get().expect("job1 slot initialized");
         phases.push(job1.record.clone());
         sink(PhaseEvent::PhaseFinished { record: job1.record.clone(), from_cache });
@@ -764,11 +827,12 @@ impl SessionCore {
             if l_prev.is_empty() || k > 64 {
                 break;
             }
-            token.check()?;
+            check(token)?;
             let policy = controller.next_policy(l_prev.len() as u64);
             let phase_wall = Instant::now();
+            let phase_no = phases.len() + 1;
             sink(PhaseEvent::PhaseStarted {
-                phase: phases.len() + 1,
+                phase: phase_no,
                 job: format!("job2-k{k}"),
                 first_pass: k,
             });
@@ -778,19 +842,22 @@ impl SessionCore {
             // mapper.
             let plan = Arc::new(mappers::PhasePlan::build(&l_prev, policy, optimized));
             let gen_mode = req.gen_mode;
-            let plan_for_tasks = Arc::clone(&plan);
-            let out = run_job(JobSpec {
-                name: format!("job2-k{k}"),
-                splits: self.splits.clone(),
-                mapper_factory: Box::new(move |_| {
-                    Job2Mapper::new(Arc::clone(&plan_for_tasks), gen_mode)
-                }),
-                combiner: Some(Box::new(SumCombiner)),
-                reducer: MinSupportReducer { min_count },
-                partitioner: Box::new(HashPartitioner),
-                n_reducers: self.cluster.n_reducers,
-                workers: self.cluster.workers,
-            });
+            // Job2 carries the query's token: the executor checks it
+            // between tasks, so cancellation lands mid-job, not just at
+            // the next phase boundary.
+            let out = self
+                .executor
+                .submit(
+                    JobBuilder::new(format!("job2-k{k}"))
+                        .splits(self.splits.clone())
+                        .mapper(move |_| Job2Mapper::new(Arc::clone(&plan), gen_mode))
+                        .combiner(SumCombiner)
+                        .reducer(MinSupportReducer { min_count })
+                        .reducers(self.cluster.n_reducers)
+                        .cancel_token(token.clone()),
+                )
+                .wait_with(|ev| sink(task_event(phase_no, ev)))
+                .map_err(|_cancelled| MiningError::Cancelled)?;
             debug_assert_aux_agreement(&out);
             let timing = simulate_job(&out.map_meters, &out.reduce_meters, &self.cluster);
             let candidates = out.aux.get(keys::CANDIDATES).copied().unwrap_or(0);

@@ -255,10 +255,9 @@ fn cmd_mine(args: &[String]) -> Result<()> {
     let single_algo = if algo_flag == "all" {
         None
     } else {
-        Some(
-            Algorithm::parse(algo_flag)
-                .ok_or_else(|| anyhow::anyhow!("unknown algorithm {algo_flag:?} (or `all`)"))?,
-        )
+        // Typed parse via FromStr: the error already names the input and
+        // lists the valid spellings; only `all` is CLI-specific.
+        Some(algo_flag.parse::<Algorithm>().map_err(|e| anyhow::anyhow!("{e} (or `all`)"))?)
     };
     let cluster = common_cluster(&p)?;
     let seed = RunOptions::default().seed;
@@ -617,7 +616,7 @@ fn scale_sweep(p: &mrapriori::util::flags::Parsed) -> Result<()> {
             .split(',')
             .map(str::trim)
             .filter(|s| !s.is_empty())
-            .map(|s| Algorithm::parse(s).ok_or_else(|| anyhow::anyhow!("unknown algorithm {s:?}")))
+            .map(|s| s.parse::<Algorithm>().map_err(anyhow::Error::from))
             .collect::<Result<_>>()?,
     };
     let seed = RunOptions::default().seed;

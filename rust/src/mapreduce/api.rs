@@ -98,13 +98,21 @@ pub trait Partitioner<K>: Send + Sync {
     fn partition(&self, key: &K, n_reducers: usize) -> usize;
 }
 
-/// Hash partitioner over the key's `Hash` impl (stable within a build —
-/// `DefaultHasher::new()` uses fixed SipHash keys).
+/// Hash partitioner over the key's `Hash` impl, routed through the crate's
+/// pinned zero-key SipHash-1-3 ([`crate::util::siphash::SipHasher13`]).
+///
+/// It used to use `std::collections::hash_map::DefaultHasher`, whose
+/// algorithm the standard library explicitly leaves unspecified across
+/// releases: a toolchain bump could silently re-route every key to a
+/// different reducer, perturbing stored segment outputs, reduce-task
+/// workload splits, and the simulated timings derived from them. The
+/// explicit fixed-key hasher makes partition placement a specified,
+/// toolchain-independent property (pinned-vector test below).
 pub struct HashPartitioner;
 
 impl<K: Hash> Partitioner<K> for HashPartitioner {
     fn partition(&self, key: &K, n_reducers: usize) -> usize {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
+        let mut h = crate::util::siphash::SipHasher13::new();
         key.hash(&mut h);
         (h.finish() % n_reducers as u64) as usize
     }
@@ -194,6 +202,39 @@ mod tests {
             seen[p.partition(&key, 4)] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    /// Pinned partition assignments. These values are frozen: stored
+    /// segment outputs and simulated per-task timings depend on partition
+    /// routing, so a change here means the partitioner stopped being
+    /// deterministic across toolchains — the exact regression this pin
+    /// exists to catch. The `u32` vectors are endianness-independent (the
+    /// hasher pins integer writes to LE); the itemset vectors additionally
+    /// assume std's native-endian integer `hash_slice` byte stream
+    /// (`len as u64 (LE)` then the elements' raw LE bytes), hence the
+    /// little-endian gate — every supported host is little-endian.
+    #[test]
+    #[cfg_attr(target_endian = "big", ignore = "itemset stream pins std's LE hash_slice bytes")]
+    fn pinned_partition_vectors() {
+        let p = HashPartitioner;
+        for (key, expect) in
+            [(0u32, 3usize), (1, 5), (2, 5), (3, 1), (42, 4), (191, 5), (u32::MAX, 6)]
+        {
+            assert_eq!(p.partition(&key, 7), expect, "u32 key {key}");
+        }
+        let itemsets: [(&[u32], usize); 7] = [
+            (&[0], 0),
+            (&[1], 5),
+            (&[5], 6),
+            (&[0, 1], 2),
+            (&[1, 2, 3], 1),
+            (&[2, 7, 19, 40], 2),
+            (&[10, 20, 30, 40, 50, 60], 2),
+        ];
+        for (items, expect) in itemsets {
+            let key: crate::itemset::Itemset = items.to_vec();
+            assert_eq!(p.partition(&key, 7), expect, "itemset key {key:?}");
+        }
     }
 
     #[test]

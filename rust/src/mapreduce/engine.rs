@@ -1,28 +1,20 @@
-//! The MapReduce execution engine: runs map tasks over input splits,
-//! applies the combiner and partitioner *inside each map task* (map-side
-//! partitioned spills, as Hadoop's sort/spill stage does), hands each
-//! reduce task its column of spill buckets to merge and reduce on real
-//! threads, and meters everything for the cluster simulator. The driver's
-//! only serial work between the phases is a bucket transpose.
+//! Engine data types ([`TaskMeter`], [`JobOutput`]) and the deprecated
+//! one-shot compatibility layer ([`JobSpec`] / [`run_job`]).
 //!
-//! The engine executes *real* work — mappers genuinely generate candidates
-//! and count supports — while the per-task [`TaskMeter`]s feed the
-//! deterministic cost model in [`crate::cluster`] that turns measured
-//! operation counts into simulated cluster seconds.
-//!
-//! `JobSpec::workers` is the host-thread budget for the WHOLE job: both map
-//! and reduce tasks execute on the scoped batch runner in
-//! [`crate::util::pool`], and outputs are deterministic regardless of the
-//! worker count (spills are pre-sorted, reduce outputs are concatenated in
-//! task order). See DESIGN.md §4.
+//! The execution engine itself lives in [`super::executor`] (Engine v2,
+//! DESIGN.md §9): jobs are built with `JobBuilder`, submitted to an
+//! `Executor` owning one persistent worker pool, and driven through a
+//! `JobHandle`. The blocking free function [`run_job`] survives only as a
+//! thin shim that submits the spec to a throwaway single-job `Executor` —
+//! byte-identical output, but a fresh pool per call and no sharing across
+//! concurrent jobs; migrate to the executor API.
 
-use super::api::{Combiner, Context, Mapper, Partitioner, Reducer};
-use super::counters::{keys, Counters};
+use super::api::{Combiner, Mapper, Partitioner, Reducer};
+use super::counters::Counters;
+use super::executor::{Executor, JobBuilder};
 use crate::hdfs::InputSplit;
-use crate::util::pool;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
 
 /// Per-task measurement record consumed by the cluster scheduler.
 #[derive(Debug, Clone)]
@@ -42,7 +34,7 @@ pub struct TaskMeter {
 /// Everything a finished job reports back to its driver.
 #[derive(Debug)]
 pub struct JobOutput<O> {
-    /// The `JobSpec::name` this output belongs to.
+    /// The job name this output belongs to.
     pub name: String,
     /// Reduce outputs, concatenated in reduce-task order.
     pub outputs: Vec<O>,
@@ -58,247 +50,85 @@ pub struct JobOutput<O> {
     /// Aux keys whose values DIVERGED across map tasks (the max still
     /// wins, for backward compatibility). An Apriori driver treats any
     /// entry here as a bug — see the `debug_assert!` in
-    /// [`crate::coordinator::run_with`] — but generic jobs may legally
+    /// `crate::coordinator::session` — but generic jobs may legally
     /// report per-task values.
     pub aux_divergence: Vec<&'static str>,
 }
 
-/// A configured job, ready to run. Mirrors Hadoop's `Job` object.
-pub struct JobSpec<'a, M: Mapper, R> {
+/// A configured job as one struct literal — the pre-executor API.
+#[deprecated(
+    since = "0.3.0",
+    note = "build the job fluently with mapreduce::executor::JobBuilder and submit it to an Executor (DESIGN.md §9)"
+)]
+pub struct JobSpec<M: Mapper, R> {
     /// Job name (flows into meters and phase records).
     pub name: String,
     /// Input splits; one map task each.
     pub splits: Vec<InputSplit>,
     /// Builds the mapper instance for task `i` (Hadoop constructs one Mapper
     /// per split); runs on the task's thread.
-    pub mapper_factory: Box<dyn Fn(usize) -> M + Send + Sync + 'a>,
+    pub mapper_factory: Box<dyn Fn(usize) -> M + Send + Sync>,
     /// Optional map-side combiner.
-    pub combiner: Option<Box<dyn Combiner<M::K, M::V> + 'a>>,
+    pub combiner: Option<Box<dyn Combiner<M::K, M::V>>>,
     /// The reduce function (shared read-only across tasks).
     pub reducer: R,
     /// Key -> reducer routing.
-    pub partitioner: Box<dyn Partitioner<M::K> + 'a>,
+    pub partitioner: Box<dyn Partitioner<M::K>>,
     /// Number of reduce tasks (clamped to >= 1).
     pub n_reducers: usize,
-    /// Host threads for real execution (not simulated slots!) of both the
-    /// map AND reduce phases. On the single-core CI box this is 1; the
-    /// simulator models cluster parallelism independently of host
-    /// parallelism.
+    /// Host threads for real execution (not simulated slots!). Under the
+    /// shim this sizes the throwaway per-call pool; the executor API sizes
+    /// one shared pool instead.
     pub workers: usize,
 }
 
-struct MapTaskResult<K, V> {
-    meter: TaskMeter,
-    /// One pre-combined, pre-sorted spill bucket per reducer.
-    buckets: Vec<Vec<(K, V)>>,
-    aux: BTreeMap<&'static str, u64>,
-}
-
-/// Run one job to completion.
-pub fn run_job<M, R, O>(spec: JobSpec<'_, M, R>) -> JobOutput<O>
+/// Run one job to completion on a throwaway, single-job [`Executor`].
+///
+/// Deprecated shim over the executor API: output is byte-identical, but
+/// every call pays for a fresh `workers`-thread pool and nothing bounds
+/// concurrent callers collectively — the very oversubscription the shared
+/// executor exists to prevent.
+#[deprecated(
+    since = "0.3.0",
+    note = "submit through mapreduce::executor::Executor, which shares one bounded worker pool across jobs (DESIGN.md §9)"
+)]
+#[allow(deprecated)]
+pub fn run_job<M, R, O>(spec: JobSpec<M, R>) -> JobOutput<O>
 where
-    M: Mapper,
-    R: Reducer<M::K, M::V, Out = O>,
-    O: Send,
+    M: Mapper + 'static,
+    R: Reducer<M::K, M::V, Out = O> + 'static,
+    M::K: 'static,
+    M::V: 'static,
+    O: Send + 'static,
 {
     let JobSpec { name, splits, mapper_factory, combiner, reducer, partitioner, n_reducers, workers } =
         spec;
-    let n_reducers = n_reducers.max(1);
-    let job: Arc<str> = Arc::from(name.as_str());
-    let job_start = Instant::now();
-
-    // ---- map (+ combine + partition) phase ------------------------------
-    let factory = &mapper_factory;
-    let combiner_ref = combiner.as_deref();
-    let partitioner_ref = &*partitioner;
-    let job_name = &job;
-    let run_map_task = |task_id: usize, split: &InputSplit| -> MapTaskResult<M::K, M::V> {
-        let start = Instant::now();
-        let mut mapper = factory(task_id);
-        let mut ctx: Context<M::K, M::V> = Context::new();
-        ctx.counters.add(keys::MAP_INPUT_RECORDS, split.len() as u64);
-        // RecordReader loop: the split streams records from its backing
-        // RecordSource (zero-copy for in-memory files; one decoded block at
-        // a time for segment stores, so task memory is bounded by the HDFS
-        // block size rather than the dataset size).
-        split.for_each_record(|offset, record| mapper.map(offset, record, &mut ctx));
-        mapper.cleanup(&mut ctx);
-        // Map-side partitioned spill: route every pair to its reducer's
-        // bucket HERE, on the task's own thread, then combine each bucket
-        // locally. The driver never re-partitions a flat pair stream — it
-        // only concatenates per-reducer buckets, like a real shuffle
-        // fetching per-partition spill files. (A key always lands in one
-        // partition, so partition-then-combine aggregates exactly like the
-        // old combine-then-partition order did.)
-        let mut buckets: Vec<Vec<(M::K, M::V)>> = (0..n_reducers).map(|_| Vec::new()).collect();
-        for (k, v) in ctx.take_output() {
-            let p = partitioner_ref.partition(&k, n_reducers);
-            buckets[p].push((k, v));
-        }
-        let mut spilled = 0u64;
-        for bucket in &mut buckets {
-            if let Some(c) = combiner_ref {
-                // Combine stage (map-side): fold values per key locally.
-                // Sorts the bucket as a side effect (deterministic spills).
-                *bucket = combine_pairs(c, std::mem::take(bucket));
-            }
-            // Without a combiner the raw emission order is kept — generic
-            // reducers may be order-sensitive.
-            spilled += bucket.len() as u64;
-        }
-        ctx.counters.add(keys::COMBINE_OUTPUT_TUPLES, spilled);
-        ctx.counters.add(
-            keys::SHUFFLE_SPILL_PARTITIONS,
-            buckets.iter().filter(|b| !b.is_empty()).count() as u64,
-        );
-        MapTaskResult {
-            meter: TaskMeter {
-                task_id,
-                job: Arc::clone(job_name),
-                counters: ctx.counters,
-                preferred_nodes: split.preferred_nodes.clone(),
-                wall_secs: start.elapsed().as_secs_f64(),
-            },
-            buckets,
-            aux: ctx.aux,
-        }
-    };
-
-    let map_results: Vec<MapTaskResult<M::K, M::V>> = {
-        let run_map_task = &run_map_task;
-        let map_jobs: Vec<_> =
-            splits.iter().enumerate().map(|(i, s)| move || run_map_task(i, s)).collect();
-        pool::run_batch_scoped(workers, map_jobs)
-    };
-
-    // ---- aggregate map side ---------------------------------------------
-    let n_map_tasks = map_results.len();
-    let mut counters = Counters::new();
-    let mut aux: BTreeMap<&'static str, u64> = BTreeMap::new();
-    let mut aux_divergence: Vec<&'static str> = Vec::new();
-    let mut map_meters = Vec::with_capacity(n_map_tasks);
-    // Transpose the task-major spills into reducer-major columns. This is
-    // the ONLY serial work between the two threaded phases — a Vec move per
-    // (task, reducer) pair; the per-key grouping happens inside each
-    // (threaded) reduce task below.
-    let mut columns: Vec<Vec<Vec<(M::K, M::V)>>> =
-        (0..n_reducers).map(|_| Vec::with_capacity(n_map_tasks)).collect();
-    for result in map_results {
-        let MapTaskResult { meter, buckets, aux: task_aux } = result;
-        counters.merge(&meter.counters);
-        for (k, v) in task_aux {
-            if let Some(prev) = aux.get(k) {
-                if *prev != v && !aux_divergence.contains(&k) {
-                    aux_divergence.push(k);
-                }
-            }
-            let slot = aux.entry(k).or_insert(0);
-            *slot = (*slot).max(v);
-        }
-        for (column, bucket) in columns.iter_mut().zip(buckets) {
-            column.push(bucket);
-        }
-        map_meters.push(meter);
+    let mut job: JobBuilder<M::K, M::V, O> = JobBuilder::new(name)
+        .splits(splits)
+        .mapper(move |task| mapper_factory(task))
+        .reducer(reducer)
+        .boxed_partitioner(partitioner)
+        .reducers(n_reducers);
+    if let Some(combiner) = combiner {
+        job = job.boxed_combiner(combiner);
     }
-
-    // ---- reduce phase ---------------------------------------------------
-    // Each reduce task merges its own spill buckets and runs as its own
-    // threaded job on the same worker budget; outputs come back in task
-    // order, so the concatenation below is byte-identical to the old
-    // sequential driver loop.
-    let reduce_results: Vec<(Vec<O>, TaskMeter)> = {
-        let reducer = &reducer;
-        let reduce_jobs: Vec<_> = columns
-            .into_iter()
-            .enumerate()
-            .map(|(rid, column)| {
-                let job = Arc::clone(&job);
-                move || {
-                    let start = Instant::now();
-                    // Hash-grouped merge, in map-task order so per-key value
-                    // order is deterministic. (A Hadoop-style sort-merge
-                    // variant was tried and reverted: sorting flat pair
-                    // vectors measured ~25% slower end-to-end than BTreeMap
-                    // insertion here — §Perf log.)
-                    let mut group: BTreeMap<M::K, Vec<M::V>> = BTreeMap::new();
-                    let mut in_tuples = 0u64;
-                    for bucket in column {
-                        in_tuples += bucket.len() as u64;
-                        for (k, v) in bucket {
-                            group.entry(k).or_default().push(v);
-                        }
-                    }
-                    let mut rc = Counters::new();
-                    rc.add(keys::REDUCE_INPUT_TUPLES, in_tuples);
-                    let mut outputs = Vec::new();
-                    for (k, vs) in &group {
-                        if let Some(o) = reducer.reduce(k, vs) {
-                            outputs.push(o);
-                        }
-                    }
-                    rc.add(keys::REDUCE_OUTPUT_RECORDS, outputs.len() as u64);
-                    let meter = TaskMeter {
-                        task_id: rid,
-                        job,
-                        counters: rc,
-                        preferred_nodes: Vec::new(),
-                        wall_secs: start.elapsed().as_secs_f64(),
-                    };
-                    (outputs, meter)
-                }
-            })
-            .collect();
-        pool::run_batch_scoped(workers, reduce_jobs)
-    };
-
-    let mut outputs = Vec::new();
-    let mut reduce_meters = Vec::with_capacity(n_reducers);
-    for (task_outputs, meter) in reduce_results {
-        counters.merge(&meter.counters);
-        outputs.extend(task_outputs);
-        reduce_meters.push(meter);
-    }
-
-    crate::debug!(
-        "job {job}: {} map + {} reduce tasks on {workers} workers, {} shuffled tuples, {:.3}s host",
-        map_meters.len(),
-        reduce_meters.len(),
-        counters.get(keys::COMBINE_OUTPUT_TUPLES),
-        job_start.elapsed().as_secs_f64(),
-    );
-
-    JobOutput { name, outputs, counters, map_meters, reduce_meters, aux, aux_divergence }
-}
-
-fn combine_pairs<K: Ord + Clone + std::hash::Hash, V, C: Combiner<K, V> + ?Sized>(
-    combiner: &C,
-    pairs: Vec<(K, V)>,
-) -> Vec<(K, V)> {
-    let mut grouped: HashMap<K, Vec<V>> = HashMap::with_capacity(pairs.len() / 2 + 1);
-    for (k, v) in pairs {
-        grouped.entry(k).or_default().push(v);
-    }
-    let mut out: Vec<(K, V)> = grouped
-        .into_iter()
-        .map(|(k, mut vs)| {
-            let v = combiner.combine(&k, &mut vs);
-            (k, v)
-        })
-        .collect();
-    // Deterministic downstream order regardless of hash iteration.
-    out.sort_by(|a, b| a.0.cmp(&b.0));
-    out
+    Executor::new(workers)
+        .submit(job)
+        .wait()
+        .expect("a JobSpec carries no cancel token, so the job cannot be cancelled")
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // this module exists to test the deprecated shim
+
     use super::*;
     use crate::dataset::TransactionDb;
     use crate::hdfs;
     use crate::itemset::Itemset;
-    use crate::mapreduce::api::{HashPartitioner, MinSupportReducer, SumCombiner};
+    use crate::mapreduce::api::{Context, HashPartitioner, MinSupportReducer, SumCombiner};
+    use crate::mapreduce::counters::keys;
 
-    /// Word-count analog: emit (item, 1) per item — the paper's Job1 mapper.
     struct ItemMapper;
     impl Mapper for ItemMapper {
         type K = u32;
@@ -310,11 +140,6 @@ mod tests {
         }
     }
 
-    fn splits_for(db: &TransactionDb, per_split: usize) -> Vec<InputSplit> {
-        let f = hdfs::put(db, per_split, 4, 3, 1);
-        hdfs::nline_splits(&f, per_split)
-    }
-
     fn demo_db() -> TransactionDb {
         TransactionDb::new(
             "d",
@@ -323,11 +148,12 @@ mod tests {
         )
     }
 
-    fn run_wordcount(workers: usize, n_reducers: usize, min_count: u64) -> JobOutput<(u32, u64)> {
+    fn run_shim(workers: usize, n_reducers: usize, min_count: u64) -> JobOutput<(u32, u64)> {
         let db = demo_db();
+        let f = hdfs::put(&db, 2, 4, 3, 1);
         run_job(JobSpec {
             name: "wc".into(),
-            splits: splits_for(&db, 2),
+            splits: hdfs::nline_splits(&f, 2),
             mapper_factory: Box::new(|_| ItemMapper),
             combiner: Some(Box::new(SumCombiner)),
             reducer: MinSupportReducer { min_count },
@@ -337,171 +163,40 @@ mod tests {
         })
     }
 
-    fn sorted(mut v: Vec<(u32, u64)>) -> Vec<(u32, u64)> {
-        v.sort();
-        v
-    }
-
     #[test]
-    fn wordcount_correct() {
-        let out = run_wordcount(1, 2, 1);
-        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
-    }
-
-    #[test]
-    fn min_support_filter_applies() {
-        let out = run_wordcount(1, 2, 3);
-        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3)]);
-    }
-
-    #[test]
-    fn parallel_equals_sequential() {
-        // Threaded mappers AND threaded reducers must be invisible in the
-        // output, across the workers × n_reducers grid.
-        let baseline = sorted(run_wordcount(1, 1, 1).outputs);
-        for workers in [1, 4] {
-            for n_reducers in [1, 3] {
-                let out = run_wordcount(workers, n_reducers, 1);
-                assert_eq!(out.reduce_meters.len(), n_reducers);
-                assert_eq!(
-                    sorted(out.outputs),
-                    baseline,
-                    "workers={workers} n_reducers={n_reducers}"
-                );
-            }
+    fn shim_matches_the_executor_byte_for_byte() {
+        // The deprecated blocking path must remain indistinguishable from
+        // the executor it now wraps: same output order, counters, meters.
+        for (workers, n_reducers) in [(1, 1), (1, 3), (4, 2)] {
+            let shim = run_shim(workers, n_reducers, 1);
+            let db = demo_db();
+            let f = hdfs::put(&db, 2, 4, 3, 1);
+            let exec = Executor::new(workers)
+                .submit(
+                    JobBuilder::new("wc")
+                        .splits(hdfs::nline_splits(&f, 2))
+                        .mapper(|_| ItemMapper)
+                        .combiner(SumCombiner)
+                        .reducer(MinSupportReducer { min_count: 1 })
+                        .reducers(n_reducers),
+                )
+                .wait()
+                .expect("no cancel token attached");
+            assert_eq!(shim.outputs, exec.outputs, "workers={workers} reducers={n_reducers}");
+            assert_eq!(shim.counters, exec.counters);
+            assert_eq!(shim.map_meters.len(), exec.map_meters.len());
+            assert_eq!(shim.reduce_meters.len(), exec.reduce_meters.len());
         }
     }
 
     #[test]
-    fn threaded_execution_is_deterministic() {
-        // Not just the same multiset: byte-identical output ORDER, because
-        // spills are pre-sorted and reduce outputs concatenate in task
-        // order regardless of which worker thread ran them.
-        let seq = run_wordcount(1, 3, 1).outputs;
-        for _ in 0..5 {
-            assert_eq!(run_wordcount(4, 3, 1).outputs, seq);
-        }
-    }
-
-    #[test]
-    fn counters_account_for_combine() {
-        let out = run_wordcount(1, 1, 1);
+    fn shim_filters_and_counts_like_before() {
+        let out = run_shim(1, 2, 3);
+        let mut sorted = out.outputs.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![(0, 4), (1, 3)]);
         assert_eq!(out.counters.get(keys::MAP_INPUT_RECORDS), 5);
-        assert_eq!(out.counters.get(keys::MAP_OUTPUT_TUPLES), 9); // raw item writes
-        // 3 splits: {01,02}->(0:2,1:1,2:1)=3, {013,1}->(0:1,1:2,3:1)=3, {0}->1
-        assert_eq!(out.counters.get(keys::COMBINE_OUTPUT_TUPLES), 7);
-        assert_eq!(out.counters.get(keys::REDUCE_INPUT_TUPLES), 7);
-        assert_eq!(out.counters.get(keys::REDUCE_OUTPUT_RECORDS), 4);
-    }
-
-    #[test]
-    fn spill_partitions_metered() {
-        // 3 map tasks spilling into 2 partitions each: at most 6 non-empty
-        // buckets, at least one per non-empty task.
-        let out = run_wordcount(1, 2, 1);
-        let spills = out.counters.get(keys::SHUFFLE_SPILL_PARTITIONS);
-        assert!((3..=6).contains(&spills), "spills {spills}");
-        // Single reducer: exactly one bucket per task.
-        let out = run_wordcount(1, 1, 1);
-        assert_eq!(out.counters.get(keys::SHUFFLE_SPILL_PARTITIONS), 3);
-    }
-
-    #[test]
-    fn task_meters_present() {
-        let out = run_wordcount(1, 2, 1);
-        assert_eq!(out.map_meters.len(), 3);
-        assert_eq!(out.reduce_meters.len(), 2);
-        assert!(out.map_meters.iter().all(|m| m.wall_secs >= 0.0));
-        assert!(!out.map_meters[0].preferred_nodes.is_empty());
-    }
-
-    #[test]
-    fn job_name_reaches_meters() {
-        let out = run_wordcount(1, 2, 1);
         assert_eq!(out.name, "wc");
         assert!(out.map_meters.iter().all(|m| &*m.job == "wc"));
-        assert!(out.reduce_meters.iter().all(|m| &*m.job == "wc"));
-    }
-
-    #[test]
-    fn reducer_count_respected() {
-        let out = run_wordcount(1, 4, 1);
-        assert_eq!(out.reduce_meters.len(), 4);
-        let total: u64 =
-            out.reduce_meters.iter().map(|m| m.counters.get(keys::REDUCE_INPUT_TUPLES)).sum();
-        assert_eq!(total, 7);
-    }
-
-    /// Mapper that reports through the aux side-channel.
-    struct AuxMapper(u64);
-    impl Mapper for AuxMapper {
-        type K = u32;
-        type V = u64;
-        fn map(&mut self, _o: usize, _r: &Itemset, _c: &mut Context<u32, u64>) {}
-        fn cleanup(&mut self, ctx: &mut Context<u32, u64>) {
-            ctx.set_aux(keys::CANDIDATES, self.0);
-        }
-    }
-
-    fn run_aux_job(factory: impl Fn(usize) -> AuxMapper + Send + Sync) -> JobOutput<(u32, u64)> {
-        let db = demo_db();
-        run_job(JobSpec {
-            name: "aux".into(),
-            splits: splits_for(&db, 2),
-            mapper_factory: Box::new(factory),
-            combiner: None,
-            reducer: MinSupportReducer { min_count: 1 },
-            partitioner: Box::new(HashPartitioner),
-            n_reducers: 1,
-            workers: 1,
-        })
-    }
-
-    #[test]
-    fn aux_takes_max_across_tasks() {
-        let db = demo_db();
-        let out = run_job(JobSpec {
-            name: "aux".into(),
-            splits: splits_for(&db, 2),
-            mapper_factory: Box::new(|task| AuxMapper(10 + task as u64)),
-            combiner: None,
-            reducer: MinSupportReducer { min_count: 1 },
-            partitioner: Box::new(HashPartitioner),
-            n_reducers: 1,
-            workers: 1,
-        });
-        assert_eq!(out.aux.get(keys::CANDIDATES), Some(&12)); // 3 tasks: 10,11,12
-    }
-
-    #[test]
-    fn divergent_aux_values_are_detected() {
-        // Per-task values 10,11,12: legal for a generic job, but flagged so
-        // an Apriori driver (where all tasks must agree) can assert.
-        let out = run_aux_job(|task| AuxMapper(10 + task as u64));
-        assert_eq!(out.aux_divergence, vec![keys::CANDIDATES]);
-    }
-
-    #[test]
-    fn agreeing_aux_values_are_not_flagged() {
-        let out = run_aux_job(|_| AuxMapper(7));
-        assert_eq!(out.aux.get(keys::CANDIDATES), Some(&7));
-        assert!(out.aux_divergence.is_empty());
-    }
-
-    #[test]
-    fn no_combiner_shuffles_raw_tuples() {
-        let db = demo_db();
-        let out = run_job(JobSpec {
-            name: "raw".into(),
-            splits: splits_for(&db, 2),
-            mapper_factory: Box::new(|_| ItemMapper),
-            combiner: None,
-            reducer: MinSupportReducer { min_count: 1 },
-            partitioner: Box::new(HashPartitioner),
-            n_reducers: 2,
-            workers: 1,
-        });
-        assert_eq!(out.counters.get(keys::COMBINE_OUTPUT_TUPLES), 9); // = raw
-        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
     }
 }

@@ -1,0 +1,1218 @@
+//! The executor-backed job submission API (Engine v2, DESIGN.md §9).
+//!
+//! Hadoop drivers do not *run* jobs — they configure a `Job`, submit it to
+//! a shared cluster through a `JobClient`, and watch its progress. This
+//! module is that shape for the simulator's host execution:
+//!
+//! * [`Executor`] owns ONE persistent [`WorkerPool`] sized once. Every job
+//!   submitted to it — from any number of concurrent mining queries —
+//!   executes its map and reduce tasks on that fixed thread set, so N
+//!   simultaneous queries share one bounded host budget instead of each
+//!   spawning its own `workers`-sized batch.
+//! * [`JobBuilder`] replaces the struct-literal `JobSpec`: name, splits,
+//!   mapper factory, optional combiner, reducer, partitioner and reducer
+//!   count, with defaults ([`HashPartitioner`], one reducer) and
+//!   type-erased `dyn` stages so drivers no longer thread three generic
+//!   parameters around.
+//! * [`JobHandle`] is returned by [`Executor::submit`] once the job's map
+//!   tasks are enqueued: [`JobHandle::wait`] completes the job, and
+//!   [`JobHandle::wait_with`] additionally streams task-granularity
+//!   [`TaskEvent`]s (map/reduce task started/finished) to the caller.
+//!   Cooperative cancellation via a [`CancelToken`] is checked *between
+//!   tasks inside the running job*: tasks not yet started are skipped and
+//!   the job returns [`JobError::Cancelled`].
+//!
+//! Execution semantics — spill format, combiner placement, counters,
+//! [`TaskMeter`]s, aux-divergence detection, and byte-level output order —
+//! are identical to the retired in-place engine: task bodies are the same
+//! code, results are collected by task index, and reduce outputs
+//! concatenate in task order. The cluster simulator cannot tell the
+//! difference.
+
+use super::api::{Combiner, Context, HashPartitioner, Mapper, Partitioner, Reducer};
+use super::counters::{keys, Counters};
+use super::engine::{JobOutput, TaskMeter};
+use crate::hdfs::InputSplit;
+use crate::util::pool::WorkerPool;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Cancellation
+// ---------------------------------------------------------------------------
+
+/// Cooperative cancellation flag. Inside a running job it is checked
+/// between tasks (a started task always completes); the session layer
+/// additionally checks it between MapReduce phases. Cloning shares the
+/// flag.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation: tasks not yet started are skipped and the
+    /// owning job (or mining run) reports itself cancelled.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Errors and events
+// ---------------------------------------------------------------------------
+
+/// How a submitted job can fail. (Task panics are not errors — they
+/// propagate to the waiting driver exactly like the in-place engine did.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobError {
+    /// The job's [`CancelToken`] fired while tasks were still pending; the
+    /// skipped tasks make the output unusable, so no [`JobOutput`] exists.
+    Cancelled,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Cancelled => write!(f, "job cancelled before all tasks ran"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Which phase of a job a task belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// A map task (one per input split).
+    Map,
+    /// A reduce task (one per configured reducer).
+    Reduce,
+}
+
+impl std::fmt::Display for TaskKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TaskKind::Map => "map",
+            TaskKind::Reduce => "reduce",
+        })
+    }
+}
+
+/// Task-granularity progress of a running job, streamed to
+/// [`JobHandle::wait_with`] in true execution order (a task's `Started`
+/// always precedes its `Finished`; tasks from the same phase interleave
+/// freely). The session layer forwards these into its `PhaseEvent` stream.
+#[derive(Debug, Clone)]
+pub enum TaskEvent {
+    /// A worker began executing the task.
+    Started {
+        /// Name of the job the task belongs to.
+        job: Arc<str>,
+        /// Map or reduce.
+        kind: TaskKind,
+        /// Task index within its phase.
+        task: usize,
+        /// Total tasks in that phase.
+        of: usize,
+    },
+    /// The task ran to completion.
+    Finished {
+        /// Name of the job the task belongs to.
+        job: Arc<str>,
+        /// Map or reduce.
+        kind: TaskKind,
+        /// Task index within its phase.
+        task: usize,
+        /// Total tasks in that phase.
+        of: usize,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// JobBuilder
+// ---------------------------------------------------------------------------
+
+/// The type-erased mapper constructor: one fresh mapper per task index.
+type DynMapperFactory<K, V> = dyn Fn(usize) -> Box<dyn Mapper<K = K, V = V>> + Send + Sync;
+
+/// A configured MapReduce job, built fluently and submitted to an
+/// [`Executor`]. Mirrors Hadoop's `Job` object the way the retired
+/// `JobSpec` struct literal did, but with defaults and `dyn`-erased stages:
+///
+/// ```no_run
+/// # use mrapriori::mapreduce::executor::{Executor, JobBuilder};
+/// # use mrapriori::mapreduce::api::{MinSupportReducer, SumCombiner};
+/// # use mrapriori::coordinator::mappers::OneItemsetMapper;
+/// # let splits = Vec::new();
+/// let executor = Executor::new(4);
+/// let out = executor
+///     .submit(
+///         JobBuilder::new("job1")
+///             .splits(splits)
+///             .mapper(|_task| OneItemsetMapper)
+///             .combiner(SumCombiner)
+///             .reducer(MinSupportReducer { min_count: 3 })
+///             .reducers(4),
+///     )
+///     .wait()
+///     .expect("no cancel token was attached");
+/// # let _ = out.outputs;
+/// ```
+///
+/// `mapper` and `reducer` are mandatory; [`Executor::submit`] panics with
+/// the job's name if either is missing (a driver bug, not a runtime
+/// condition). The partitioner defaults to [`HashPartitioner`] and the
+/// reducer count to 1.
+pub struct JobBuilder<K, V, O> {
+    name: String,
+    splits: Vec<InputSplit>,
+    mapper_factory: Option<Arc<DynMapperFactory<K, V>>>,
+    combiner: Option<Arc<dyn Combiner<K, V>>>,
+    reducer: Option<Arc<dyn Reducer<K, V, Out = O>>>,
+    partitioner: Arc<dyn Partitioner<K>>,
+    n_reducers: usize,
+    cancel: Option<CancelToken>,
+}
+
+impl<K, V, O> JobBuilder<K, V, O>
+where
+    K: Send + Clone + Ord + Hash + 'static,
+    V: Send + Clone + 'static,
+    O: Send + 'static,
+{
+    /// Start configuring a job. The name flows into task meters, the
+    /// job output, and progress events.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            splits: Vec::new(),
+            mapper_factory: None,
+            combiner: None,
+            reducer: None,
+            partitioner: Arc::new(HashPartitioner),
+            n_reducers: 1,
+            cancel: None,
+        }
+    }
+
+    /// Input splits; one map task each.
+    pub fn splits(mut self, splits: Vec<InputSplit>) -> Self {
+        self.splits = splits;
+        self
+    }
+
+    /// Mapper factory: builds the mapper instance for task `i` (Hadoop
+    /// constructs one Mapper per split); runs on the task's worker thread.
+    pub fn mapper<M, F>(mut self, factory: F) -> Self
+    where
+        M: Mapper<K = K, V = V> + 'static,
+        F: Fn(usize) -> M + Send + Sync + 'static,
+    {
+        self.mapper_factory =
+            Some(Arc::new(move |task| Box::new(factory(task)) as Box<dyn Mapper<K = K, V = V>>));
+        self
+    }
+
+    /// Optional map-side combiner.
+    pub fn combiner(mut self, combiner: impl Combiner<K, V> + 'static) -> Self {
+        self.combiner = Some(Arc::new(combiner));
+        self
+    }
+
+    /// Type-erased variant of [`JobBuilder::combiner`] for callers that
+    /// already hold a boxed stage (e.g. the deprecated `JobSpec` shim).
+    pub fn boxed_combiner(mut self, combiner: Box<dyn Combiner<K, V>>) -> Self {
+        self.combiner = Some(Arc::from(combiner));
+        self
+    }
+
+    /// The reduce function (shared read-only across reduce tasks).
+    pub fn reducer(mut self, reducer: impl Reducer<K, V, Out = O> + 'static) -> Self {
+        self.reducer = Some(Arc::new(reducer));
+        self
+    }
+
+    /// Key → reducer routing; defaults to [`HashPartitioner`].
+    pub fn partitioner(mut self, partitioner: impl Partitioner<K> + 'static) -> Self {
+        self.partitioner = Arc::new(partitioner);
+        self
+    }
+
+    /// Type-erased variant of [`JobBuilder::partitioner`].
+    pub fn boxed_partitioner(mut self, partitioner: Box<dyn Partitioner<K>>) -> Self {
+        self.partitioner = Arc::from(partitioner);
+        self
+    }
+
+    /// Number of reduce tasks (clamped to ≥ 1 at submit).
+    pub fn reducers(mut self, n_reducers: usize) -> Self {
+        self.n_reducers = n_reducers;
+        self
+    }
+
+    /// Attach a cancellation token: tasks check it before starting, so the
+    /// token cancels the job *mid-flight* at task granularity.
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// A job-submission service over one persistent, bounded worker pool.
+///
+/// Sized once (per process or per mining session); cloning shares the
+/// pool, which is how one `Executor` serves many concurrent submitters.
+/// All host-thread consumption of every submitted job is bounded by
+/// [`Executor::workers`], observable via [`Executor::high_water_mark`].
+#[derive(Clone)]
+pub struct Executor {
+    pool: Arc<WorkerPool>,
+}
+
+impl Executor {
+    /// Spawn an executor with `workers.max(1)` pool threads.
+    pub fn new(workers: usize) -> Self {
+        Self { pool: Arc::new(WorkerPool::new(workers)) }
+    }
+
+    /// Size of the shared worker pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Maximum number of tasks that ever executed concurrently on this
+    /// executor's pool — the oversubscription instrument (never exceeds
+    /// [`Executor::workers`] by construction).
+    pub fn high_water_mark(&self) -> usize {
+        self.pool.high_water_mark()
+    }
+
+    /// Submit a job: its map tasks are enqueued immediately and start
+    /// executing on the shared pool; the returned [`JobHandle`] completes
+    /// the job.
+    ///
+    /// Panics if the builder lacks a mapper or reducer (driver bug).
+    pub fn submit<K, V, O>(&self, job: JobBuilder<K, V, O>) -> JobHandle<O>
+    where
+        K: Send + Clone + Ord + Hash + 'static,
+        V: Send + Clone + 'static,
+        O: Send + 'static,
+    {
+        let JobBuilder { name, splits, mapper_factory, combiner, reducer, partitioner, n_reducers, cancel } =
+            job;
+        let mapper_factory = mapper_factory
+            .unwrap_or_else(|| panic!("job {name:?} submitted without a mapper"));
+        let reducer =
+            reducer.unwrap_or_else(|| panic!("job {name:?} submitted without a reducer"));
+        let n_reducers = n_reducers.max(1);
+        let job_name: Arc<str> = Arc::from(name.as_str());
+        let cancel = cancel.unwrap_or_default();
+        let abort = CancelToken::new();
+        let job_start = Instant::now();
+
+        // ---- enqueue the map (+ combine + partition) phase ----------------
+        let n_maps = splits.len();
+        let (tx, map_rx) = mpsc::channel();
+        for (task_id, split) in splits.into_iter().enumerate() {
+            let tx = tx.clone();
+            let cancel = cancel.clone();
+            let abort = abort.clone();
+            let factory = Arc::clone(&mapper_factory);
+            let combiner = combiner.clone();
+            let partitioner = Arc::clone(&partitioner);
+            let job = Arc::clone(&job_name);
+            self.pool.spawn(move || {
+                // The in-job cancellation point: a task checks before it
+                // starts; a started task always completes.
+                if cancel.is_cancelled() || abort.is_cancelled() {
+                    let _ = tx.send(TaskMsg::Skipped);
+                    return;
+                }
+                let _ = tx.send(TaskMsg::Started(task_id));
+                let run = || {
+                    run_map_task(
+                        task_id,
+                        &split,
+                        &*factory,
+                        combiner.as_deref(),
+                        &*partitioner,
+                        n_reducers,
+                        &job,
+                    )
+                };
+                // Forward panics to the waiting driver instead of killing
+                // the shared worker thread.
+                match catch_unwind(AssertUnwindSafe(run)) {
+                    Ok(result) => {
+                        let _ = tx.send(TaskMsg::Finished(task_id, Box::new(result)));
+                    }
+                    Err(payload) => {
+                        let _ = tx.send(TaskMsg::Panicked(payload));
+                    }
+                }
+            });
+        }
+
+        JobHandle {
+            name: Arc::clone(&job_name),
+            cancel: cancel.clone(),
+            abort: abort.clone(),
+            inner: Some(Box::new(PendingJob {
+                pool: Arc::clone(&self.pool),
+                spec_name: name,
+                job_name,
+                n_maps,
+                n_reducers,
+                reducer,
+                cancel,
+                abort,
+                map_rx,
+                job_start,
+            })),
+        }
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("workers", &self.pool.workers())
+            .field("high_water_mark", &self.pool.high_water_mark())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobHandle
+// ---------------------------------------------------------------------------
+
+/// A submitted job: its map tasks are already queued on the executor's
+/// pool. [`JobHandle::wait`] (or [`JobHandle::wait_with`]) completes the
+/// job and returns its [`JobOutput`]. Dropping the handle without waiting
+/// aborts the job best-effort: tasks not yet started are skipped.
+pub struct JobHandle<O> {
+    name: Arc<str>,
+    cancel: CancelToken,
+    abort: CancelToken,
+    inner: Option<Box<dyn Pending<O>>>,
+}
+
+impl<O> JobHandle<O> {
+    /// The job's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Request cooperative cancellation through the job's token (the one
+    /// attached via [`JobBuilder::cancel_token`], or the job's own if none
+    /// was attached — note an attached token may be shared with the whole
+    /// mining run).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clone of the job's cancellation token.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Drive the job to completion and return its output. A map or reduce
+    /// task that panicked re-raises the panic here, on the driver thread.
+    pub fn wait(self) -> Result<JobOutput<O>, JobError> {
+        self.wait_with(|_| {})
+    }
+
+    /// Like [`JobHandle::wait`], streaming task-granularity progress
+    /// events to `on_event` (invoked on this thread, in execution order).
+    pub fn wait_with(
+        mut self,
+        mut on_event: impl FnMut(TaskEvent),
+    ) -> Result<JobOutput<O>, JobError> {
+        let inner = self.inner.take().expect("a job is waited on at most once");
+        inner.wait(&mut on_event)
+    }
+}
+
+impl<O> Drop for JobHandle<O> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            // Dropped without waiting: skip whatever has not started yet
+            // rather than mining into the void.
+            self.abort.cancel();
+        }
+    }
+}
+
+impl<O> std::fmt::Debug for JobHandle<O> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("job", &self.name)
+            .field("cancelled", &self.cancel.is_cancelled())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The driving side: drain map results, transpose, run reduce, assemble.
+// ---------------------------------------------------------------------------
+
+/// What a worker reports back per task.
+enum TaskMsg<T> {
+    /// The worker began executing task `i`.
+    Started(usize),
+    /// Task `i` completed with this result.
+    Finished(usize, Box<T>),
+    /// The task observed cancellation and never ran.
+    Skipped,
+    /// The task panicked; the payload re-raises on the driver.
+    Panicked(Box<dyn std::any::Any + Send + 'static>),
+}
+
+/// Object-safe continuation of a submitted job (erases K and V so
+/// [`JobHandle`] is generic only in the output type).
+trait Pending<O>: Send {
+    fn wait(
+        self: Box<Self>,
+        on_event: &mut dyn FnMut(TaskEvent),
+    ) -> Result<JobOutput<O>, JobError>;
+}
+
+struct PendingJob<K, V, O> {
+    pool: Arc<WorkerPool>,
+    /// Original `String` name, returned in [`JobOutput::name`].
+    spec_name: String,
+    /// Shared name for meters and events.
+    job_name: Arc<str>,
+    n_maps: usize,
+    n_reducers: usize,
+    reducer: Arc<dyn Reducer<K, V, Out = O>>,
+    cancel: CancelToken,
+    abort: CancelToken,
+    map_rx: mpsc::Receiver<TaskMsg<MapTaskResult<K, V>>>,
+    job_start: Instant,
+}
+
+struct MapTaskResult<K, V> {
+    meter: TaskMeter,
+    /// One pre-combined, pre-sorted spill bucket per reducer.
+    buckets: Vec<Vec<(K, V)>>,
+    aux: BTreeMap<&'static str, u64>,
+}
+
+/// Drain one phase's channel: deliver events, place results by task index.
+/// Returns `true` if any task was skipped due to cancellation.
+fn drain_phase<T>(
+    rx: &mpsc::Receiver<TaskMsg<T>>,
+    n_tasks: usize,
+    kind: TaskKind,
+    job: &Arc<str>,
+    on_event: &mut dyn FnMut(TaskEvent),
+    slots: &mut [Option<T>],
+) -> bool {
+    let mut pending = n_tasks;
+    let mut skipped = false;
+    while pending > 0 {
+        let msg = rx.recv().expect("a task worker died without reporting");
+        match msg {
+            TaskMsg::Started(task) => on_event(TaskEvent::Started {
+                job: Arc::clone(job),
+                kind,
+                task,
+                of: n_tasks,
+            }),
+            TaskMsg::Finished(task, result) => {
+                slots[task] = Some(*result);
+                pending -= 1;
+                on_event(TaskEvent::Finished { job: Arc::clone(job), kind, task, of: n_tasks });
+            }
+            TaskMsg::Skipped => {
+                skipped = true;
+                pending -= 1;
+            }
+            TaskMsg::Panicked(payload) => resume_unwind(payload),
+        }
+    }
+    skipped
+}
+
+/// Cancels the job's private abort token when dropped. Armed for the whole
+/// of [`PendingJob::wait`], it guarantees that EVERY exit — success,
+/// cancellation, a task panic re-raised by `drain_phase`, or a panic
+/// unwinding out of the caller's event callback — leaves no queued task of
+/// a job nobody will collect burning the shared pool. (On success all
+/// tasks already ran, so the cancel is a no-op; `JobHandle::drop` cannot
+/// cover these paths because `inner` was taken by `wait_with`.)
+struct AbortOnExit(CancelToken);
+
+impl Drop for AbortOnExit {
+    fn drop(&mut self) {
+        self.0.cancel();
+    }
+}
+
+impl<K, V, O> Pending<O> for PendingJob<K, V, O>
+where
+    K: Send + Clone + Ord + Hash + 'static,
+    V: Send + Clone + 'static,
+    O: Send + 'static,
+{
+    fn wait(
+        self: Box<Self>,
+        on_event: &mut dyn FnMut(TaskEvent),
+    ) -> Result<JobOutput<O>, JobError> {
+        let PendingJob {
+            pool,
+            spec_name,
+            job_name,
+            n_maps,
+            n_reducers,
+            reducer,
+            cancel,
+            abort,
+            map_rx,
+            job_start,
+        } = *self;
+        // Abort the job's queued tasks on ANY exit from this function —
+        // see [`AbortOnExit`]. Harmless on success (nothing left to skip).
+        let _abort_on_exit = AbortOnExit(abort.clone());
+
+        // ---- drain the map phase ------------------------------------------
+        let mut map_slots: Vec<Option<MapTaskResult<K, V>>> = (0..n_maps).map(|_| None).collect();
+        let skipped =
+            drain_phase(&map_rx, n_maps, TaskKind::Map, &job_name, on_event, &mut map_slots);
+        if skipped || cancel.is_cancelled() {
+            // Either some map output is missing, or queueing the reduce
+            // phase would be pointless (its tasks would all skip).
+            return Err(JobError::Cancelled);
+        }
+
+        // ---- aggregate map side -------------------------------------------
+        let mut counters = Counters::new();
+        let mut aux: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut aux_divergence: Vec<&'static str> = Vec::new();
+        let mut map_meters = Vec::with_capacity(n_maps);
+        // Transpose the task-major spills into reducer-major columns. This
+        // is the ONLY serial work between the two threaded phases — a Vec
+        // move per (task, reducer) pair; the per-key grouping happens
+        // inside each reduce task below.
+        let mut columns: Vec<Vec<Vec<(K, V)>>> =
+            (0..n_reducers).map(|_| Vec::with_capacity(n_maps)).collect();
+        for slot in map_slots {
+            let MapTaskResult { meter, buckets, aux: task_aux } =
+                slot.expect("all map tasks reported");
+            counters.merge(&meter.counters);
+            for (k, v) in task_aux {
+                if let Some(prev) = aux.get(k) {
+                    if *prev != v && !aux_divergence.contains(&k) {
+                        aux_divergence.push(k);
+                    }
+                }
+                let entry = aux.entry(k).or_insert(0);
+                *entry = (*entry).max(v);
+            }
+            for (column, bucket) in columns.iter_mut().zip(buckets) {
+                column.push(bucket);
+            }
+            map_meters.push(meter);
+        }
+
+        // ---- enqueue + drain the reduce phase -----------------------------
+        // Each reduce task merges its own column of spill buckets on the
+        // shared pool; outputs come back indexed by task id, so the
+        // concatenation below is byte-identical to a sequential driver loop.
+        let (tx, reduce_rx) = mpsc::channel();
+        for (task_id, column) in columns.into_iter().enumerate() {
+            let tx = tx.clone();
+            let cancel = cancel.clone();
+            let abort = abort.clone();
+            let reducer = Arc::clone(&reducer);
+            let job = Arc::clone(&job_name);
+            pool.spawn(move || {
+                if cancel.is_cancelled() || abort.is_cancelled() {
+                    let _ = tx.send(TaskMsg::Skipped);
+                    return;
+                }
+                let _ = tx.send(TaskMsg::Started(task_id));
+                let run = || run_reduce_task(task_id, column, &*reducer, Arc::clone(&job));
+                match catch_unwind(AssertUnwindSafe(run)) {
+                    Ok(result) => {
+                        let _ = tx.send(TaskMsg::Finished(task_id, Box::new(result)));
+                    }
+                    Err(payload) => {
+                        let _ = tx.send(TaskMsg::Panicked(payload));
+                    }
+                }
+            });
+        }
+        drop(tx);
+        let mut reduce_slots: Vec<Option<(Vec<O>, TaskMeter)>> =
+            (0..n_reducers).map(|_| None).collect();
+        let skipped = drain_phase(
+            &reduce_rx,
+            n_reducers,
+            TaskKind::Reduce,
+            &job_name,
+            on_event,
+            &mut reduce_slots,
+        );
+        if skipped {
+            return Err(JobError::Cancelled);
+        }
+
+        // ---- assemble -----------------------------------------------------
+        let mut outputs = Vec::new();
+        let mut reduce_meters = Vec::with_capacity(n_reducers);
+        for slot in reduce_slots {
+            let (task_outputs, meter) = slot.expect("all reduce tasks reported");
+            counters.merge(&meter.counters);
+            outputs.extend(task_outputs);
+            reduce_meters.push(meter);
+        }
+
+        crate::debug!(
+            "job {job_name}: {} map + {} reduce tasks on {} pool workers, {} shuffled tuples, {:.3}s host",
+            map_meters.len(),
+            reduce_meters.len(),
+            pool.workers(),
+            counters.get(keys::COMBINE_OUTPUT_TUPLES),
+            job_start.elapsed().as_secs_f64(),
+        );
+
+        Ok(JobOutput {
+            name: spec_name,
+            outputs,
+            counters,
+            map_meters,
+            reduce_meters,
+            aux,
+            aux_divergence,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task bodies (identical computation to the retired in-place engine)
+// ---------------------------------------------------------------------------
+
+fn run_map_task<K, V>(
+    task_id: usize,
+    split: &InputSplit,
+    factory: &DynMapperFactory<K, V>,
+    combiner: Option<&dyn Combiner<K, V>>,
+    partitioner: &dyn Partitioner<K>,
+    n_reducers: usize,
+    job: &Arc<str>,
+) -> MapTaskResult<K, V>
+where
+    K: Send + Clone + Ord + Hash,
+    V: Send + Clone,
+{
+    let start = Instant::now();
+    let mut mapper = factory(task_id);
+    let mut ctx: Context<K, V> = Context::new();
+    ctx.counters.add(keys::MAP_INPUT_RECORDS, split.len() as u64);
+    // RecordReader loop: the split streams records from its backing
+    // RecordSource (zero-copy for in-memory files; one decoded block at a
+    // time for segment stores, so task memory is bounded by the HDFS block
+    // size rather than the dataset size).
+    split.for_each_record(|offset, record| mapper.map(offset, record, &mut ctx));
+    mapper.cleanup(&mut ctx);
+    // Map-side partitioned spill: route every pair to its reducer's bucket
+    // HERE, on the task's own thread, then combine each bucket locally.
+    // The driver never re-partitions a flat pair stream — it only
+    // concatenates per-reducer buckets, like a real shuffle fetching
+    // per-partition spill files. (A key always lands in one partition, so
+    // partition-then-combine aggregates exactly like combine-then-partition
+    // would.)
+    let mut buckets: Vec<Vec<(K, V)>> = (0..n_reducers).map(|_| Vec::new()).collect();
+    for (k, v) in ctx.take_output() {
+        let p = partitioner.partition(&k, n_reducers);
+        buckets[p].push((k, v));
+    }
+    let mut spilled = 0u64;
+    for bucket in &mut buckets {
+        if let Some(c) = combiner {
+            // Combine stage (map-side): fold values per key locally. Sorts
+            // the bucket as a side effect (deterministic spills).
+            *bucket = combine_pairs(c, std::mem::take(bucket));
+        }
+        // Without a combiner the raw emission order is kept — generic
+        // reducers may be order-sensitive.
+        spilled += bucket.len() as u64;
+    }
+    ctx.counters.add(keys::COMBINE_OUTPUT_TUPLES, spilled);
+    ctx.counters.add(
+        keys::SHUFFLE_SPILL_PARTITIONS,
+        buckets.iter().filter(|b| !b.is_empty()).count() as u64,
+    );
+    MapTaskResult {
+        meter: TaskMeter {
+            task_id,
+            job: Arc::clone(job),
+            counters: ctx.counters,
+            preferred_nodes: split.preferred_nodes.clone(),
+            wall_secs: start.elapsed().as_secs_f64(),
+        },
+        buckets,
+        aux: ctx.aux,
+    }
+}
+
+fn run_reduce_task<K, V, O>(
+    task_id: usize,
+    column: Vec<Vec<(K, V)>>,
+    reducer: &dyn Reducer<K, V, Out = O>,
+    job: Arc<str>,
+) -> (Vec<O>, TaskMeter)
+where
+    K: Ord,
+{
+    let start = Instant::now();
+    // Hash-grouped merge, in map-task order so per-key value order is
+    // deterministic. (A Hadoop-style sort-merge variant was tried and
+    // reverted: sorting flat pair vectors measured ~25% slower end-to-end
+    // than BTreeMap insertion here — §Perf log.)
+    let mut group: BTreeMap<K, Vec<V>> = BTreeMap::new();
+    let mut in_tuples = 0u64;
+    for bucket in column {
+        in_tuples += bucket.len() as u64;
+        for (k, v) in bucket {
+            group.entry(k).or_default().push(v);
+        }
+    }
+    let mut counters = Counters::new();
+    counters.add(keys::REDUCE_INPUT_TUPLES, in_tuples);
+    let mut outputs = Vec::new();
+    for (k, vs) in &group {
+        if let Some(o) = reducer.reduce(k, vs) {
+            outputs.push(o);
+        }
+    }
+    counters.add(keys::REDUCE_OUTPUT_RECORDS, outputs.len() as u64);
+    let meter = TaskMeter {
+        task_id,
+        job,
+        counters,
+        preferred_nodes: Vec::new(),
+        wall_secs: start.elapsed().as_secs_f64(),
+    };
+    (outputs, meter)
+}
+
+/// Group `pairs` by key and fold each group through the combiner,
+/// returning the bucket sorted by key (deterministic spills).
+fn combine_pairs<K: Ord + Clone + Hash, V, C: Combiner<K, V> + ?Sized>(
+    combiner: &C,
+    pairs: Vec<(K, V)>,
+) -> Vec<(K, V)> {
+    let mut grouped: HashMap<K, Vec<V>> = HashMap::with_capacity(pairs.len() / 2 + 1);
+    for (k, v) in pairs {
+        grouped.entry(k).or_default().push(v);
+    }
+    let mut out: Vec<(K, V)> = grouped
+        .into_iter()
+        .map(|(k, mut vs)| {
+            let v = combiner.combine(&k, &mut vs);
+            (k, v)
+        })
+        .collect();
+    // Deterministic downstream order regardless of hash iteration.
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::TransactionDb;
+    use crate::hdfs;
+    use crate::itemset::Itemset;
+    use crate::mapreduce::api::{MinSupportReducer, SumCombiner};
+
+    /// Word-count analog: emit (item, 1) per item — the paper's Job1 mapper.
+    struct ItemMapper;
+    impl Mapper for ItemMapper {
+        type K = u32;
+        type V = u64;
+        fn map(&mut self, _off: usize, record: &Itemset, ctx: &mut Context<u32, u64>) {
+            for &i in record {
+                ctx.write(i, 1);
+            }
+        }
+    }
+
+    fn splits_for(db: &TransactionDb, per_split: usize) -> Vec<InputSplit> {
+        let f = hdfs::put(db, per_split, 4, 3, 1);
+        hdfs::nline_splits(&f, per_split)
+    }
+
+    fn demo_db() -> TransactionDb {
+        TransactionDb::new(
+            "d",
+            4,
+            vec![vec![0, 1], vec![0, 2], vec![0, 1, 3], vec![1], vec![0]],
+        )
+    }
+
+    fn wordcount_job(
+        db: &TransactionDb,
+        n_reducers: usize,
+        min_count: u64,
+    ) -> JobBuilder<u32, u64, (u32, u64)> {
+        JobBuilder::new("wc")
+            .splits(splits_for(db, 2))
+            .mapper(|_| ItemMapper)
+            .combiner(SumCombiner)
+            .reducer(MinSupportReducer { min_count })
+            .reducers(n_reducers)
+    }
+
+    fn run_wordcount(workers: usize, n_reducers: usize, min_count: u64) -> JobOutput<(u32, u64)> {
+        let db = demo_db();
+        Executor::new(workers)
+            .submit(wordcount_job(&db, n_reducers, min_count))
+            .wait()
+            .expect("no cancel token attached")
+    }
+
+    fn sorted(mut v: Vec<(u32, u64)>) -> Vec<(u32, u64)> {
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn wordcount_correct() {
+        let out = run_wordcount(1, 2, 1);
+        assert_eq!(out.name, "wc");
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn min_support_filter_applies() {
+        let out = run_wordcount(1, 2, 3);
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3)]);
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        // Pooled mappers AND pooled reducers must be invisible in the
+        // output, across the workers × n_reducers grid.
+        let baseline = sorted(run_wordcount(1, 1, 1).outputs);
+        for workers in [1, 4] {
+            for n_reducers in [1, 3] {
+                let out = run_wordcount(workers, n_reducers, 1);
+                assert_eq!(out.reduce_meters.len(), n_reducers);
+                assert_eq!(
+                    sorted(out.outputs),
+                    baseline,
+                    "workers={workers} n_reducers={n_reducers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_execution_is_deterministic() {
+        // Not just the same multiset: byte-identical output ORDER, because
+        // spills are pre-sorted and reduce outputs concatenate in task
+        // order regardless of which pool thread ran them.
+        let seq = run_wordcount(1, 3, 1).outputs;
+        for _ in 0..5 {
+            assert_eq!(run_wordcount(4, 3, 1).outputs, seq);
+        }
+    }
+
+    #[test]
+    fn counters_account_for_combine() {
+        let out = run_wordcount(1, 1, 1);
+        assert_eq!(out.counters.get(keys::MAP_INPUT_RECORDS), 5);
+        assert_eq!(out.counters.get(keys::MAP_OUTPUT_TUPLES), 9); // raw item writes
+        // 3 splits: {01,02}->(0:2,1:1,2:1)=3, {013,1}->(0:1,1:2,3:1)=3, {0}->1
+        assert_eq!(out.counters.get(keys::COMBINE_OUTPUT_TUPLES), 7);
+        assert_eq!(out.counters.get(keys::REDUCE_INPUT_TUPLES), 7);
+        assert_eq!(out.counters.get(keys::REDUCE_OUTPUT_RECORDS), 4);
+    }
+
+    #[test]
+    fn spill_partitions_metered() {
+        // 3 map tasks spilling into 2 partitions each: at most 6 non-empty
+        // buckets, at least one per non-empty task.
+        let out = run_wordcount(1, 2, 1);
+        let spills = out.counters.get(keys::SHUFFLE_SPILL_PARTITIONS);
+        assert!((3..=6).contains(&spills), "spills {spills}");
+        // Single reducer: exactly one bucket per task.
+        let out = run_wordcount(1, 1, 1);
+        assert_eq!(out.counters.get(keys::SHUFFLE_SPILL_PARTITIONS), 3);
+    }
+
+    #[test]
+    fn task_meters_present() {
+        let out = run_wordcount(1, 2, 1);
+        assert_eq!(out.map_meters.len(), 3);
+        assert_eq!(out.reduce_meters.len(), 2);
+        assert!(out.map_meters.iter().all(|m| m.wall_secs >= 0.0));
+        assert!(!out.map_meters[0].preferred_nodes.is_empty());
+    }
+
+    #[test]
+    fn job_name_reaches_meters() {
+        let out = run_wordcount(1, 2, 1);
+        assert_eq!(out.name, "wc");
+        assert!(out.map_meters.iter().all(|m| &*m.job == "wc"));
+        assert!(out.reduce_meters.iter().all(|m| &*m.job == "wc"));
+    }
+
+    #[test]
+    fn reducer_count_respected() {
+        let out = run_wordcount(1, 4, 1);
+        assert_eq!(out.reduce_meters.len(), 4);
+        let total: u64 =
+            out.reduce_meters.iter().map(|m| m.counters.get(keys::REDUCE_INPUT_TUPLES)).sum();
+        assert_eq!(total, 7);
+    }
+
+    /// Mapper that reports through the aux side-channel.
+    struct AuxMapper(u64);
+    impl Mapper for AuxMapper {
+        type K = u32;
+        type V = u64;
+        fn map(&mut self, _o: usize, _r: &Itemset, _c: &mut Context<u32, u64>) {}
+        fn cleanup(&mut self, ctx: &mut Context<u32, u64>) {
+            ctx.set_aux(keys::CANDIDATES, self.0);
+        }
+    }
+
+    fn run_aux_job(
+        factory: impl Fn(usize) -> AuxMapper + Send + Sync + 'static,
+    ) -> JobOutput<(u32, u64)> {
+        let db = demo_db();
+        Executor::new(1)
+            .submit(
+                JobBuilder::new("aux")
+                    .splits(splits_for(&db, 2))
+                    .mapper(factory)
+                    .reducer(MinSupportReducer { min_count: 1 }),
+            )
+            .wait()
+            .expect("no cancel token attached")
+    }
+
+    #[test]
+    fn aux_takes_max_across_tasks() {
+        let out = run_aux_job(|task| AuxMapper(10 + task as u64));
+        assert_eq!(out.aux.get(keys::CANDIDATES), Some(&12)); // 3 tasks: 10,11,12
+    }
+
+    #[test]
+    fn divergent_aux_values_are_detected() {
+        // Per-task values 10,11,12: legal for a generic job, but flagged so
+        // an Apriori driver (where all tasks must agree) can assert.
+        let out = run_aux_job(|task| AuxMapper(10 + task as u64));
+        assert_eq!(out.aux_divergence, vec![keys::CANDIDATES]);
+    }
+
+    #[test]
+    fn agreeing_aux_values_are_not_flagged() {
+        let out = run_aux_job(|_| AuxMapper(7));
+        assert_eq!(out.aux.get(keys::CANDIDATES), Some(&7));
+        assert!(out.aux_divergence.is_empty());
+    }
+
+    #[test]
+    fn no_combiner_shuffles_raw_tuples() {
+        let db = demo_db();
+        let out = Executor::new(1)
+            .submit(
+                JobBuilder::new("raw")
+                    .splits(splits_for(&db, 2))
+                    .mapper(|_| ItemMapper)
+                    .reducer(MinSupportReducer { min_count: 1 })
+                    .reducers(2),
+            )
+            .wait()
+            .expect("no cancel token attached");
+        assert_eq!(out.counters.get(keys::COMBINE_OUTPUT_TUPLES), 9); // = raw
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
+    }
+
+    // ---- executor-specific behavior ------------------------------------
+
+    #[test]
+    fn task_events_stream_in_execution_order() {
+        let db = demo_db();
+        let mut events: Vec<(TaskKind, usize, bool, usize)> = Vec::new();
+        let out = Executor::new(2)
+            .submit(wordcount_job(&db, 2, 1))
+            .wait_with(|ev| match ev {
+                TaskEvent::Started { job, kind, task, of } => {
+                    assert_eq!(&*job, "wc");
+                    events.push((kind, task, false, of));
+                }
+                TaskEvent::Finished { kind, task, of, .. } => events.push((kind, task, true, of)),
+            })
+            .expect("no cancel token attached");
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
+        // 3 map tasks and 2 reduce tasks, each started once and finished
+        // once, with correct phase totals.
+        for kind in [TaskKind::Map, TaskKind::Reduce] {
+            let (n, of) = match kind {
+                TaskKind::Map => (3, 3),
+                TaskKind::Reduce => (2, 2),
+            };
+            for task in 0..n {
+                let started = events.iter().position(|e| *e == (kind, task, false, of));
+                let finished = events.iter().position(|e| *e == (kind, task, true, of));
+                let (s, f) = (started.expect("started event"), finished.expect("finished event"));
+                assert!(s < f, "{kind} task {task}: finish before start");
+            }
+        }
+        assert_eq!(events.len(), 2 * (3 + 2));
+        // Phases do not interleave: every map event precedes every reduce
+        // event (the reduce phase is enqueued only after the map barrier).
+        let first_reduce = events.iter().position(|e| e.0 == TaskKind::Reduce).unwrap();
+        assert!(events[..first_reduce].iter().all(|e| e.0 == TaskKind::Map));
+    }
+
+    #[test]
+    fn pre_cancelled_token_skips_every_task() {
+        let db = demo_db();
+        let token = CancelToken::new();
+        token.cancel();
+        let mut saw_event = false;
+        let err = Executor::new(2)
+            .submit(wordcount_job(&db, 2, 1).cancel_token(token))
+            .wait_with(|_| saw_event = true)
+            .expect_err("a pre-cancelled job must not produce output");
+        assert_eq!(err, JobError::Cancelled);
+        assert!(!saw_event, "skipped tasks must not emit events");
+    }
+
+    #[test]
+    fn cancel_during_map_phase_stops_before_reduce() {
+        let db = demo_db();
+        let token = CancelToken::new();
+        let handle = Executor::new(1).submit(wordcount_job(&db, 2, 1).cancel_token(token.clone()));
+        // Cancel from the event stream: by the time the map phase drains,
+        // the token is set, so the reduce tasks (at minimum) are skipped.
+        let err = handle
+            .wait_with(|ev| {
+                if matches!(ev, TaskEvent::Finished { kind: TaskKind::Map, .. }) {
+                    token.cancel();
+                }
+            })
+            .expect_err("cancelled mid-job");
+        assert_eq!(err, JobError::Cancelled);
+    }
+
+    #[test]
+    fn handle_cancel_uses_the_job_token() {
+        let db = demo_db();
+        let handle = Executor::new(1).submit(wordcount_job(&db, 2, 1));
+        handle.cancel();
+        assert!(handle.cancel_token().is_cancelled());
+        // The job may have raced to completion before the cancel landed;
+        // both outcomes are legal, but nothing else.
+        match handle.wait() {
+            Err(JobError::Cancelled) => {}
+            Ok(out) => assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]),
+        }
+    }
+
+    #[test]
+    fn dropping_a_handle_aborts_without_wedging_the_pool() {
+        let db = demo_db();
+        let executor = Executor::new(1);
+        drop(executor.submit(wordcount_job(&db, 2, 1)));
+        // The shared pool keeps serving jobs afterwards.
+        let out = executor.submit(wordcount_job(&db, 2, 1)).wait().expect("second job");
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
+    }
+
+    /// Mapper whose map() panics — the driver must see the panic.
+    struct PanicMapper;
+    impl Mapper for PanicMapper {
+        type K = u32;
+        type V = u64;
+        fn map(&mut self, _o: usize, _r: &Itemset, _c: &mut Context<u32, u64>) {
+            panic!("mapper boom");
+        }
+    }
+
+    #[test]
+    fn task_panics_propagate_to_wait_and_spare_the_pool() {
+        let db = demo_db();
+        let executor = Executor::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            executor
+                .submit(
+                    JobBuilder::new("boom")
+                        .splits(splits_for(&db, 2))
+                        .mapper(|_| PanicMapper)
+                        .reducer(MinSupportReducer { min_count: 1 }),
+                )
+                .wait()
+        }));
+        let payload = result.expect_err("the mapper panic must reach the driver");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "mapper boom");
+        // The worker threads caught the panic: the pool still works.
+        let out = executor.submit(wordcount_job(&db, 2, 1)).wait().expect("pool survives");
+        assert_eq!(sorted(out.outputs), vec![(0, 4), (1, 3), (2, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn one_executor_serves_concurrent_jobs_within_budget() {
+        let db = demo_db();
+        let executor = Executor::new(2);
+        let baseline = sorted(run_wordcount(1, 3, 1).outputs);
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for _ in 0..6 {
+                let executor = &executor;
+                let db = &db;
+                let baseline = &baseline;
+                joins.push(scope.spawn(move || {
+                    let out = executor.submit(wordcount_job(db, 3, 1)).wait().expect("job");
+                    assert_eq!(&sorted(out.outputs), baseline);
+                }));
+            }
+            for join in joins {
+                join.join().expect("concurrent submitter panicked");
+            }
+        });
+        // Six concurrent jobs, ONE bounded pool: never more than 2 tasks
+        // in flight — the old per-job scoped batches would have peaked at
+        // 6 × min(workers, tasks) threads.
+        let hwm = executor.high_water_mark();
+        assert!((1..=2).contains(&hwm), "high water {hwm}");
+    }
+
+    #[test]
+    #[should_panic(expected = "submitted without a mapper")]
+    fn submitting_without_a_mapper_is_a_driver_bug() {
+        let db = demo_db();
+        let job: JobBuilder<u32, u64, (u32, u64)> = JobBuilder::new("half-built")
+            .splits(splits_for(&db, 2))
+            .reducer(MinSupportReducer { min_count: 1 });
+        let _ = Executor::new(1).submit(job);
+    }
+}

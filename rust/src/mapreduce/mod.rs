@@ -1,6 +1,9 @@
 //! A from-scratch MapReduce framework (the paper's substrate): the Hadoop-
-//! style programming API ([`api`]), the execution engine ([`engine`]), and
-//! the counter framework ([`counters`]).
+//! style programming API ([`api`]), the executor-backed execution engine
+//! ([`executor`], Engine v2 — one shared worker pool, `JobBuilder` /
+//! `JobHandle` submission, task-granularity progress and in-job
+//! cancellation), the engine data types and deprecated one-shot shim
+//! ([`engine`]), and the counter framework ([`counters`]).
 //!
 //! Input comes from [`crate::hdfs`] splits; timing comes from
 //! [`crate::cluster`], which converts the engine's per-task meters into
@@ -9,10 +12,14 @@
 pub mod api;
 pub mod counters;
 pub mod engine;
+pub mod executor;
 
 pub use api::{
     Combiner, Context, HashPartitioner, Mapper, MinSupportReducer, Partitioner, Reducer,
     SumCombiner, SumReducer,
 };
 pub use counters::{keys, Counters};
-pub use engine::{run_job, JobOutput, JobSpec, TaskMeter};
+#[allow(deprecated)]
+pub use engine::{run_job, JobSpec};
+pub use engine::{JobOutput, TaskMeter};
+pub use executor::{CancelToken, Executor, JobBuilder, JobError, JobHandle, TaskEvent, TaskKind};

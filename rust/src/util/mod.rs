@@ -1,5 +1,6 @@
 //! Self-contained utility substrates: PRNG, CLI flags, TOML-subset config
-//! parser, scoped thread pool, property-test mini-framework, and logging.
+//! parser, the persistent worker pool, a pinned SipHash-1-3, a
+//! property-test mini-framework, and logging.
 //!
 //! These stand in for `rand`, `clap`, `toml`, `rayon`, `proptest`, and
 //! `env_logger`, none of which are available in the offline build
@@ -10,4 +11,5 @@ pub mod flags;
 pub mod logging;
 pub mod pool;
 pub mod rng;
+pub mod siphash;
 pub mod tomlmini;

@@ -1,58 +1,154 @@
-//! A small scoped thread pool (rayon is not available offline).
+//! A persistent worker pool (rayon is not available offline).
 //!
-//! [`run_batch_scoped`] is the MapReduce engine's task-execution primitive
-//! for both map and reduce tasks: a batch runner for jobs that borrow from
-//! the caller's stack (mapper factories, combiners, reducers and
-//! partitioners all borrow from the driver), built on
-//! [`std::thread::scope`]. An earlier queue-based `ThreadPool` for
-//! `'static` jobs was removed when the engine migrated here — resurrect it
-//! from history if long-lived workers are ever needed.
+//! [`WorkerPool`] is the execution substrate of
+//! [`crate::mapreduce::executor::Executor`]: a fixed set of long-lived
+//! worker threads pulling `'static` tasks from one shared queue. Sizing it
+//! once per session is what keeps N concurrent mining queries inside ONE
+//! host-thread budget instead of N scoped batches oversubscribing the host
+//! (DESIGN.md §9). The pool instruments a concurrently-executing-task
+//! high-water mark so tests can *prove* the budget held.
 //!
-//! On the single-core CI box the simulator usually runs with `workers = 1`
-//! (sequential, zero-overhead path); the pool still gets exercised by tests
-//! so the engine is correct on multi-core machines.
+//! An earlier scoped batch runner for *borrowing* jobs
+//! (`run_batch_scoped`, on [`std::thread::scope`]) was removed when the
+//! engine migrated to the executor's `'static` tasks — resurrect it from
+//! history if stack-borrowing batches are ever needed again, as was done
+//! before it for the original queue-based `ThreadPool`.
+//!
+//! On the single-core CI box the simulator usually runs with `workers = 1`;
+//! multi-worker paths are exercised by tests so the engine is correct on
+//! multi-core machines.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Run a batch of *borrowing* closures to completion on up to `workers`
-/// scoped threads, returning their outputs in job order.
+/// A queued unit of work.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the pool handle and its worker threads.
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    /// Signalled when a task is queued or shutdown begins.
+    available: Condvar,
+    shutdown: AtomicBool,
+    /// Tasks executing right now.
+    active: AtomicUsize,
+    /// Maximum `active` ever observed — the oversubscription proof.
+    high_water: AtomicUsize,
+}
+
+/// A persistent pool of `workers` threads executing `'static` tasks from a
+/// shared FIFO queue.
 ///
-/// Workers pull jobs from a shared cursor — dynamic load balancing, so one
-/// straggler task never idles the remaining workers the way fixed chunking
-/// would.
-///
-/// `workers <= 1` or a single job degrades to the sequential in-place path
-/// (no threads spawned). A panicking job propagates on scope exit.
-pub fn run_batch_scoped<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
-where
-    T: Send,
-    F: FnOnce() -> T + Send,
-{
-    if workers <= 1 || jobs.len() <= 1 {
-        return jobs.into_iter().map(|j| j()).collect();
+/// Workers pull from one shared queue (dynamic load balancing, like the
+/// scoped runner below); tasks from many concurrent submitters interleave
+/// on the same fixed thread set, so total execution concurrency is bounded
+/// by the pool size no matter how many jobs are in flight. Dropping the
+/// pool joins all workers after the queue drains (tasks already queued
+/// still run).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers.max(1)` threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+        });
+        let joins = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mr-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning a pool worker thread")
+            })
+            .collect();
+        Self { shared, workers, joins }
     }
-    let n = jobs.len();
-    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
-    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let cursor = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers.min(n) {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let job = jobs[i].lock().unwrap().take().expect("job claimed twice");
-                let out = job();
-                *slots[i].lock().unwrap() = Some(out);
-            });
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue one task; it runs on some worker thread, FIFO relative to
+    /// other submissions.
+    ///
+    /// A panicking task is caught and DROPPED — the worker thread and the
+    /// queue keep going. Submitters that need the panic (the executor
+    /// does) must catch it inside the task and forward it through their
+    /// own result channel.
+    pub fn spawn(&self, task: impl FnOnce() + Send + 'static) {
+        let mut queue = self.shared.queue.lock().expect("pool queue poisoned");
+        queue.push_back(Box::new(task));
+        drop(queue);
+        self.shared.available.notify_one();
+    }
+
+    /// The maximum number of tasks this pool ever executed concurrently —
+    /// by construction never above [`WorkerPool::workers`]. This is the
+    /// instrument the oversubscription regression test reads.
+    pub fn high_water_mark(&self) -> usize {
+        self.shared.high_water.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            // Set shutdown UNDER the queue lock: a worker's empty-queue /
+            // shutdown check runs with the lock held, and `wait` releases
+            // it only at park time — storing without the lock could land
+            // inside that window, the notification would find no waiter
+            // yet, and the worker would park forever (lost wakeup).
+            let _queue = self.shared.queue.lock().expect("pool queue poisoned");
+            self.shared.shutdown.store(true, Ordering::SeqCst);
         }
-    });
-    slots
-        .into_iter()
-        .map(|s| s.into_inner().unwrap().expect("missing job result"))
-        .collect()
+        self.shared.available.notify_all();
+        for join in self.joins.drain(..) {
+            // Workers contain task panics, so a dead worker is a pool bug;
+            // surface it loudly (unless already unwinding).
+            if join.join().is_err() && !std::thread::panicking() {
+                panic!("a pool worker thread panicked");
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut queue = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(task) = queue.pop_front() {
+                    break task;
+                }
+                // Drain-then-exit: shutdown only once the queue is empty.
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                queue = shared.available.wait(queue).expect("pool queue poisoned");
+            }
+        };
+        let live = shared.active.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.high_water.fetch_max(live, Ordering::SeqCst);
+        // Contain task panics: a panicking task must not kill the shared
+        // worker, leak the `active` count, or strand the queue behind it
+        // (`spawn` documents the drop; the executor forwards panics to its
+        // driver through its own channel before they ever reach here).
+        let _ = catch_unwind(AssertUnwindSafe(task));
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 #[cfg(test)]
@@ -61,52 +157,108 @@ mod tests {
     use std::sync::atomic::AtomicU64;
 
     #[test]
-    fn scoped_batch_borrows_from_caller() {
-        // The whole point of the scoped runner: jobs borrow local data.
-        let data: Vec<u64> = (0..100).collect();
-        let jobs: Vec<_> = data.chunks(7).map(|c| move || c.iter().sum::<u64>()).collect();
-        let out = run_batch_scoped(4, jobs);
-        assert_eq!(out.iter().sum::<u64>(), 4950);
+    fn worker_pool_runs_every_task_once() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..50 {
+            let counter = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.spawn(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..50 {
+            rx.recv().expect("task completion");
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+        assert!((1..=3).contains(&pool.high_water_mark()));
     }
 
     #[test]
-    fn scoped_batch_preserves_order() {
-        let jobs: Vec<_> = (0..32).map(|i| move || i * 3).collect();
-        assert_eq!(run_batch_scoped(4, jobs), (0..32).map(|i| i * 3).collect::<Vec<_>>());
+    fn worker_pool_drains_queue_before_drop_returns() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..20 {
+                let counter = Arc::clone(&counter);
+                pool.spawn(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Dropping joins the workers only after the queue is empty.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
     }
 
     #[test]
-    fn scoped_batch_sequential_and_empty() {
-        let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
-        assert_eq!(run_batch_scoped(1, jobs), vec![1, 2, 3, 4, 5]);
-        let out: Vec<i32> = run_batch_scoped(4, Vec::<fn() -> i32>::new());
-        assert!(out.is_empty());
+    fn worker_pool_bounds_task_concurrency() {
+        // 12 sleeping tasks on 2 workers: at most 2 ever run at once, and
+        // the overlap actually happens (the sleeps force it).
+        let pool = WorkerPool::new(2);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..12 {
+            let live = Arc::clone(&live);
+            let peak = Arc::clone(&peak);
+            let tx = tx.clone();
+            pool.spawn(move || {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                live.fetch_sub(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..12 {
+            rx.recv().expect("task completion");
+        }
+        assert_eq!(peak.load(Ordering::SeqCst), 2);
+        assert_eq!(pool.high_water_mark(), 2);
     }
 
     #[test]
-    fn scoped_batch_runs_each_job_once() {
-        let counter = AtomicU64::new(0);
-        let jobs: Vec<_> = (0..100)
-            .map(|_| {
-                let c = &counter;
-                move || {
-                    c.fetch_add(1, Ordering::SeqCst);
-                }
-            })
-            .collect();
-        run_batch_scoped(3, jobs);
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    fn single_worker_pool_is_serial() {
+        // Panics inside tasks are contained, so record overlap in a flag
+        // and assert on the test thread afterwards.
+        let pool = WorkerPool::new(1);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..8 {
+            let live = Arc::clone(&live);
+            let peak = Arc::clone(&peak);
+            let tx = tx.clone();
+            pool.spawn(move || {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                live.fetch_sub(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..8 {
+            rx.recv().expect("task completion");
+        }
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "overlap on 1 worker");
+        assert_eq!(pool.high_water_mark(), 1);
+        // Zero requested workers clamps to one.
+        assert_eq!(WorkerPool::new(0).workers(), 1);
     }
 
     #[test]
-    fn scoped_batch_more_workers_than_jobs() {
-        let jobs: Vec<_> = (0..2).map(|i| move || i).collect();
-        assert_eq!(run_batch_scoped(16, jobs), vec![0, 1]);
-    }
-
-    #[test]
-    fn scoped_batch_single_job_runs_inline() {
-        let jobs: Vec<_> = vec![|| 42];
-        assert_eq!(run_batch_scoped(8, jobs), vec![42]);
+    fn worker_pool_survives_a_panicking_task() {
+        // A raw `spawn`ed task that panics must not kill the worker, leak
+        // the active count, or strand the tasks queued behind it.
+        let pool = WorkerPool::new(1);
+        pool.spawn(|| panic!("task boom"));
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.spawn(move || {
+            let _ = tx.send(());
+        });
+        rx.recv().expect("the pool still serves tasks after a task panic");
+        assert_eq!(pool.high_water_mark(), 1, "active count leaked past the panic");
     }
 }

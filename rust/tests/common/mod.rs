@@ -1,7 +1,8 @@
 //! Shared helpers for the integration tests: one-shot session runs, the
 //! tests' equivalent of the pre-session `run_with`/`run_on_file` free
-//! functions. (Not a test target itself — cargo only builds top-level
-//! files under `tests/` as test binaries.)
+//! functions (deprecated in 0.2.0, removed in 0.3.0). (Not a test target
+//! itself — cargo only builds top-level files under `tests/` as test
+//! binaries.)
 #![allow(dead_code)] // each test binary uses the subset it needs
 
 use mrapriori::cluster::ClusterConfig;

@@ -1,0 +1,153 @@
+//! Oversubscription and isolation regressions for the executor-backed
+//! session (Engine v2): N simultaneous queries against ONE session with a
+//! 2-worker [`Executor`] must (a) mine byte-identically to the sequential
+//! oracle, (b) keep peak live task concurrency within the shared pool
+//! budget — the old engine gave every query its own scoped thread batch,
+//! so 8 queries × 2 workers peaked at 16 live task threads where the
+//! executor peaks at 2 — and (c) tolerate one query being cancelled
+//! *mid-job* without disturbing the others.
+//!
+//! [`Executor`]: mrapriori::mapreduce::Executor
+
+use mrapriori::apriori::sequential::mine;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{
+    Algorithm, CancelToken, MiningError, MiningRequest, MiningSession, PhaseEvent,
+};
+use mrapriori::dataset::ibm::{generate, IbmParams};
+use mrapriori::dataset::TransactionDb;
+
+fn small_db() -> TransactionDb {
+    generate(&IbmParams {
+        n_txns: 300,
+        n_items: 40,
+        avg_txn_len: 8.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 10,
+        correlation: 0.5,
+        corruption_mean: 0.3,
+        corruption_sd: 0.1,
+        seed: 42,
+        ..Default::default()
+    })
+}
+
+/// One session whose executor pool holds exactly 2 host threads, with
+/// 30-line splits so every job runs 10 map tasks (plenty of scheduling
+/// interleaving to stress).
+fn two_worker_session(db: &TransactionDb) -> MiningSession {
+    let mut cluster = ClusterConfig::paper_cluster();
+    cluster.workers = 2;
+    MiningSession::for_db(db, cluster).split_lines(30).build().expect("valid session")
+}
+
+#[test]
+fn eight_concurrent_queries_stay_inside_the_two_worker_budget() {
+    const QUERIES: usize = 8;
+    let db = small_db();
+    let min_sup = 0.2;
+    let oracle = mine(&db, min_sup).all_frequent();
+    let session = two_worker_session(&db);
+    assert_eq!(session.executor().workers(), 2);
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for q in 0..QUERIES {
+            let session = &session;
+            let oracle = &oracle;
+            joins.push(scope.spawn(move || {
+                let algo = Algorithm::ALL[q % Algorithm::ALL.len()];
+                let out =
+                    session.run(&MiningRequest::new(algo).min_sup(min_sup)).expect("query");
+                assert_eq!(
+                    &out.all_frequent(),
+                    oracle,
+                    "{algo} diverged from the oracle under concurrency"
+                );
+            }));
+        }
+        for join in joins {
+            join.join().expect("query thread panicked");
+        }
+    });
+
+    // The oversubscription proof: all 8 queries' map and reduce tasks ran
+    // through ONE pool, so peak live task concurrency never exceeded the
+    // 2-thread budget (the pool's high-water instrument saw every task).
+    let hwm = session.executor().high_water_mark();
+    assert!(
+        (1..=2).contains(&hwm),
+        "live task high-water mark {hwm} exceeds the 2-worker pool budget"
+    );
+    let stats = session.stats();
+    assert_eq!(stats.queries, QUERIES as u64);
+    assert_eq!(stats.job1_runs, 1, "one min_count => exactly one Job1 under concurrency");
+}
+
+#[test]
+fn cancelling_one_query_mid_job_does_not_disturb_the_others() {
+    let db = small_db();
+    let min_sup = 0.15;
+    let oracle = mine(&db, min_sup).all_frequent();
+    let session = two_worker_session(&db);
+    let token = CancelToken::new();
+
+    std::thread::scope(|scope| {
+        // Three steady queries race the doomed one on the same pool.
+        let steady: Vec<_> = [Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedEtdpc]
+            .into_iter()
+            .map(|algo| {
+                let session = &session;
+                scope.spawn(move || {
+                    session
+                        .run(&MiningRequest::new(algo).min_sup(min_sup))
+                        .expect("steady query")
+                })
+            })
+            .collect();
+
+        let cancelled = {
+            let session = &session;
+            let token = &token;
+            scope.spawn(move || {
+                session.run_streaming(
+                    &MiningRequest::new(Algorithm::Fpc).min_sup(min_sup),
+                    token,
+                    |ev| {
+                        // Fire as soon as a phase-2 task starts executing:
+                        // the cancellation lands INSIDE the running Job2
+                        // (its remaining tasks are skipped), not at a
+                        // phase boundary.
+                        if let PhaseEvent::TaskStarted { phase, .. } = ev {
+                            if phase >= 2 {
+                                token.cancel();
+                            }
+                        }
+                    },
+                )
+            })
+        };
+
+        let err = cancelled
+            .join()
+            .expect("cancelled-query thread panicked")
+            .expect_err("the cancelled query must not produce an outcome");
+        assert_eq!(err, MiningError::Cancelled);
+
+        for join in steady {
+            let out = join.join().expect("steady-query thread panicked");
+            assert_eq!(
+                out.all_frequent(),
+                oracle,
+                "a steady query was disturbed by its neighbor's cancellation"
+            );
+        }
+    });
+
+    // The pool survived the mid-job cancellation: the session keeps
+    // serving queries (with a fresh, un-cancelled token).
+    let out =
+        session.run(&MiningRequest::new(Algorithm::Fpc).min_sup(min_sup)).expect("post-cancel");
+    assert_eq!(out.all_frequent(), oracle);
+    assert!(session.executor().high_water_mark() <= 2);
+}

@@ -82,23 +82,9 @@ fn out_of_domain_min_sup_is_a_typed_error() {
     assert_eq!(out.total_frequent(), 0);
 }
 
-/// The deprecated free functions keep the legacy permissive semantics:
-/// min_sup = 0 still mines observed itemsets (count >= 1) and min_sup > 1
-/// mines to an empty outcome, exactly as before the session redesign.
-#[test]
-#[allow(deprecated)]
-fn legacy_shims_preserve_permissive_min_sup() {
-    use mrapriori::coordinator::run_with;
-    let db = TransactionDb::new("t", 4, vec![vec![0, 1], vec![1, 2], vec![2, 3]]);
-    let cluster = ClusterConfig::paper_cluster();
-    // min_sup = 0 still requires count >= 1 (observed itemsets only).
-    let lo = run_with(Algorithm::Spc, &db, 0.0, &cluster, &opts());
-    assert!(lo.total_frequent() > 0);
-    assert!(lo.levels.iter().flatten().all(|(_, c)| *c >= 1));
-    // min_sup > 1 can never be satisfied.
-    let hi = run_with(Algorithm::Spc, &db, 1.5, &cluster, &opts());
-    assert_eq!(hi.total_frequent(), 0);
-}
+// (The deprecated `run_with` permissive-min_sup shim test lived here until
+// 0.3.0 removed the legacy free functions; out-of-domain supports are now
+// typed errors on every path — see `out_of_domain_min_sup_is_a_typed_error`.)
 
 #[test]
 fn invalid_tunables_are_typed_errors() {

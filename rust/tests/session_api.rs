@@ -1,7 +1,8 @@
 //! The session/query API: cross-query Job1 reuse (the ISSUE 3 acceptance
-//! criterion), phase-event streaming, cooperative cancellation, background
-//! handles, concurrent queries against one session, and byte-identical
-//! equivalence with the pre-redesign free functions.
+//! criterion), phase- and task-event streaming, cooperative cancellation,
+//! background handles, concurrent queries against one session, and
+//! warm-vs-cold session equivalence (the executor redesign must be
+//! invisible in mining output).
 
 use mrapriori::apriori::sequential::mine;
 use mrapriori::cluster::ClusterConfig;
@@ -80,35 +81,45 @@ fn job1_cache_keyed_by_min_count_and_fusion() {
     assert_eq!(session.stats().job1_runs, 3);
 }
 
-/// Session-API results are byte-identical to the pre-redesign `run_with`
-/// output for all seven algorithms (the other half of the acceptance
-/// criterion).
+/// The executor redesign must be invisible in the mining output: a warm
+/// shared session (one pool, cached Job1) and a fresh cold session per
+/// query (fresh pool, fresh Job1 — the pre-session cost model) produce
+/// byte-identical outcomes for all seven algorithms, all matching the
+/// sequential oracle. (This test compared against the deprecated
+/// `run_with` free function until 0.3.0 removed it.)
 #[test]
-#[allow(deprecated)]
-fn session_matches_legacy_free_functions_for_all_algorithms() {
+fn warm_and_cold_sessions_agree_for_all_algorithms() {
     let db = small_db();
     let cluster = ClusterConfig::paper_cluster();
     let opts = RunOptions { split_lines: 50, ..Default::default() };
-    let session = MiningSession::for_db(&db, cluster.clone()).options(&opts).build().unwrap();
+    let shared = MiningSession::for_db(&db, cluster.clone()).options(&opts).build().unwrap();
     for min_sup in [0.3, 0.15] {
+        let oracle = mine(&db, min_sup).all_frequent();
         for algo in Algorithm::ALL {
-            let legacy = mrapriori::coordinator::run_with(algo, &db, min_sup, &cluster, &opts);
-            let new = session.run(&MiningRequest::from_options(algo, min_sup, &opts)).unwrap();
+            let cold = MiningSession::for_db(&db, cluster.clone())
+                .options(&opts)
+                .build()
+                .unwrap()
+                .run(&MiningRequest::from_options(algo, min_sup, &opts))
+                .unwrap();
+            let warm =
+                shared.run(&MiningRequest::from_options(algo, min_sup, &opts)).unwrap();
             assert_eq!(
-                new.all_frequent(),
-                legacy.all_frequent(),
-                "{algo} @ {min_sup}: session output diverged from run_with"
+                warm.all_frequent(),
+                oracle,
+                "{algo} @ {min_sup}: warm session diverged from the oracle"
             );
-            assert_eq!(new.lk_profile(), legacy.lk_profile(), "{algo} @ {min_sup}");
-            assert_eq!(new.n_phases(), legacy.n_phases(), "{algo} @ {min_sup}");
-            assert_eq!(new.min_count, legacy.min_count, "{algo} @ {min_sup}");
+            assert_eq!(cold.all_frequent(), oracle, "{algo} @ {min_sup}: cold session");
+            assert_eq!(warm.lk_profile(), cold.lk_profile(), "{algo} @ {min_sup}");
+            assert_eq!(warm.n_phases(), cold.n_phases(), "{algo} @ {min_sup}");
+            assert_eq!(warm.min_count, cold.min_count, "{algo} @ {min_sup}");
             // Simulated time is metered, not wall-clock, so it is exactly
-            // reproducible across both paths.
+            // reproducible across pools, cache states, and worker counts.
             assert!(
-                (new.total_time - legacy.total_time).abs() < 1e-9,
+                (warm.total_time - cold.total_time).abs() < 1e-9,
                 "{algo} @ {min_sup}: {} vs {}",
-                new.total_time,
-                legacy.total_time
+                warm.total_time,
+                cold.total_time
             );
         }
     }
@@ -131,6 +142,9 @@ fn event_stream_matches_outcome_phases() {
                 PhaseEvent::PhaseFinished { record, from_cache } => {
                     finished.push((record, from_cache))
                 }
+                // Task-granularity events are covered by
+                // `task_events_nest_inside_their_phases`.
+                PhaseEvent::TaskStarted { .. } | PhaseEvent::TaskFinished { .. } => {}
             },
         )
         .unwrap();
@@ -164,6 +178,79 @@ fn event_stream_matches_outcome_phases() {
         .unwrap();
     assert_eq!(cache_flags[0], true, "second query's Job1 must hit the cache");
     assert!(cache_flags[1..].iter().all(|&f| !f), "Job2 phases are never cached");
+}
+
+/// Engine v2 task events: each executing phase brackets its own map and
+/// reduce task events; a cached Job1 streams none (nothing executed).
+#[test]
+fn task_events_nest_inside_their_phases() {
+    let db = small_db();
+    let session = session_for(&db);
+    let mut events = Vec::new();
+    session
+        .run_streaming(
+            &MiningRequest::new(Algorithm::Vfpc).min_sup(0.2),
+            &CancelToken::new(),
+            |ev| events.push(ev),
+        )
+        .unwrap();
+    let mut current: Option<(usize, String)> = None;
+    let mut tasks_in_phase = 0usize;
+    for ev in &events {
+        match ev {
+            PhaseEvent::PhaseStarted { phase, job, .. } => {
+                assert!(current.is_none(), "phases must not overlap");
+                current = Some((*phase, job.clone()));
+                tasks_in_phase = 0;
+            }
+            PhaseEvent::TaskStarted { phase, job, .. }
+            | PhaseEvent::TaskFinished { phase, job, .. } => {
+                let (cur_phase, cur_job) =
+                    current.as_ref().expect("task event outside any phase");
+                assert_eq!(phase, cur_phase, "task event crossed a phase boundary");
+                assert_eq!(&**job, cur_job.as_str(), "task event names the wrong job");
+                tasks_in_phase += 1;
+            }
+            PhaseEvent::PhaseFinished { record, from_cache } => {
+                let (cur_phase, _) = current.take().expect("finish without start");
+                assert_eq!(record.phase, cur_phase);
+                if !from_cache {
+                    // 300 txns / 50-line splits = 6 map tasks, plus the
+                    // paper cluster's 4 reduce tasks, each started+finished.
+                    assert_eq!(
+                        tasks_in_phase, 20,
+                        "phase {cur_phase}: wrong task event count"
+                    );
+                }
+            }
+        }
+    }
+    assert!(current.is_none(), "a phase never finished");
+
+    // A second query at the same support is served Job1 from the cache:
+    // its phase-1 bracket must contain NO task events.
+    let mut events = Vec::new();
+    session
+        .run_streaming(
+            &MiningRequest::new(Algorithm::Spc).min_sup(0.2),
+            &CancelToken::new(),
+            |ev| events.push(ev),
+        )
+        .unwrap();
+    let phase1_tasks = events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e,
+                PhaseEvent::TaskStarted { phase: 1, .. }
+                    | PhaseEvent::TaskFinished { phase: 1, .. }
+            )
+        })
+        .count();
+    assert_eq!(phase1_tasks, 0, "cached Job1 must stream no task events");
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, PhaseEvent::PhaseFinished { from_cache: true, .. })));
 }
 
 #[test]
