@@ -9,6 +9,7 @@
 //!
 //! Run: `cargo run --release --example cluster_whatif`
 
+use mrapriori::cluster::FaultModel;
 use mrapriori::config;
 use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
@@ -64,6 +65,41 @@ fn main() {
     }
 
     println!("per §4.1: DPC needs its α/β retuned per cluster; ETDPC does not.");
+
+    // Same pattern, third axis: what if the cluster misbehaves? One query
+    // per fault scenario — mining output is identical in every cell
+    // (DESIGN.md §6), only the simulated schedule moves.
+    println!("\nfault what-if (Optimized-ETDPC on the paper cluster):");
+    for (label, model) in [
+        ("clean", None),
+        ("5% task failures", Some(FaultModel { fail_prob: 0.05, ..Default::default() })),
+        (
+            "15% stragglers",
+            Some(FaultModel { straggler_prob: 0.15, ..Default::default() }),
+        ),
+        (
+            "15% stragglers + speculation",
+            Some(FaultModel { straggler_prob: 0.15, speculation: true, ..Default::default() }),
+        ),
+    ] {
+        let mut req = MiningRequest::new(Algorithm::OptimizedEtdpc).min_sup(min_sup);
+        if let Some(model) = model {
+            req = req.faults(model);
+        }
+        let out = on_fast_session.run(&req).expect("valid request");
+        let totals = out.fault_totals().unwrap_or_default();
+        println!(
+            "  {label:<30} {:>6.0} s  ({} frequent itemsets; {} attempts, {} failures, {} stragglers, {}/{} spec)",
+            out.faulted_actual_time().unwrap_or(out.actual_time),
+            out.total_frequent(),
+            totals.attempts,
+            totals.failures,
+            totals.stragglers,
+            totals.speculative_launches,
+            totals.speculative_wins,
+        );
+    }
+
     println!("\nfitted config (render/parse round-trip):");
     println!("{}", config::render_cluster(&slow));
 }

@@ -3,99 +3,170 @@
 //!    per-algorithm time saving on every dataset;
 //! 2. PARMA-style approximate mining (ref [14]) vs exact Optimized-VFPC —
 //!    speed/recall trade;
-//! 3. fault/straggler/speculation study on the heaviest phase's task mix.
+//! 3. fault/straggler/speculation robustness through the session API:
+//!    the `FaultScenario` grid end to end, with the output-invariance
+//!    check and a `BENCH_faults.json` telemetry report.
+//!
+//! Run: `cargo bench --bench ablation_extensions`
+//! Quick mode (CI fault telemetry — skips sections 1-2 and shrinks the
+//! fault grid's dataset): `BENCH_QUICK=1 cargo bench --bench ablation_extensions`
 
 use mrapriori::apriori::sampling::{mine_approximate, ParmaParams};
 use mrapriori::apriori::sequential::mine;
+use mrapriori::bench_harness::tables::{self, FaultScenario};
 use mrapriori::bench_harness::timing::{bench, save_report};
-use mrapriori::cluster::{schedule_with_faults, ClusterConfig, FaultModel, SimTask};
-use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{Algorithm, MiningOutcome, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 use std::fmt::Write as _;
 
+fn fault_json(
+    dataset: &str,
+    min_sup: f64,
+    quick: bool,
+    algorithms: &[Algorithm],
+    scenarios: &[FaultScenario],
+    grid: &[Vec<MiningOutcome>],
+) -> String {
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\n  \"bench\": \"ablation_extensions.faults\",\n  \"dataset\": \"{dataset}\",\n  \
+         \"min_sup\": {min_sup},\n  \"quick\": {quick},\n  \"scenarios\": [\n"
+    );
+    for (si, scenario) in scenarios.iter().enumerate() {
+        let _ = write!(s, "    {{\"label\": \"{}\", \"results\": [", scenario.label);
+        for (ai, algo) in algorithms.iter().enumerate() {
+            let out = &grid[si][ai];
+            let totals = out.fault_totals().unwrap_or_default();
+            let _ = write!(
+                s,
+                "{}{{\"algorithm\": \"{}\", \"phases\": {}, \"actual_time\": {:.3}, \
+                 \"faulted_actual_time\": {:.3}, \"attempts\": {}, \"failures\": {}, \
+                 \"stragglers\": {}, \"spec_launches\": {}, \"spec_wins\": {}}}",
+                if ai > 0 { ", " } else { "" },
+                algo.name(),
+                out.n_phases(),
+                out.actual_time,
+                out.faulted_actual_time().unwrap_or(out.actual_time),
+                totals.attempts,
+                totals.failures,
+                totals.stragglers,
+                totals.speculative_launches,
+                totals.speculative_wins,
+            );
+        }
+        let _ = writeln!(s, "]}}{}", if si + 1 < scenarios.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "  ]\n}}");
+    s
+}
+
 fn main() {
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
     let cluster = ClusterConfig::paper_cluster();
     let mut out = String::new();
+    let _ = writeln!(out, "# Extension ablations");
 
-    // 1. Fused pass 1+2.
-    let _ = writeln!(out, "# Extension ablations\n\n## fused pass 1+2 (triangular matrix, ref [6])");
-    for name in registry::NAMES {
-        let db = registry::load(name);
-        let min_sup = registry::reference_min_sup(name).unwrap();
-        // One session; fused and unfused occupy distinct Job1 cache keys.
-        let session = MiningSession::for_db(&db, cluster.clone())
-            .split_lines(registry::split_lines(name))
-            .build()
-            .expect("valid session");
-        let base = MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(min_sup);
-        let plain = session.run(&base).expect("valid request");
-        let fused = session.run(&base.clone().fuse_pass_2(true)).expect("valid request");
-        assert_eq!(plain.all_frequent(), fused.all_frequent(), "{name}: fused diverged");
-        let _ = writeln!(
-            out,
-            "{name:<10} Opt-VFPC: {:.0} s / {} phases -> fused {:.0} s / {} phases ({:+.1}%)",
-            plain.actual_time,
-            plain.n_phases(),
-            fused.actual_time,
-            fused.n_phases(),
-            100.0 * (fused.actual_time / plain.actual_time - 1.0)
-        );
+    if !quick {
+        // 1. Fused pass 1+2.
+        let _ = writeln!(out, "\n## fused pass 1+2 (triangular matrix, ref [6])");
+        for name in registry::NAMES {
+            let db = registry::load(name);
+            let min_sup = registry::reference_min_sup(name).unwrap();
+            // One session; fused and unfused occupy distinct Job1 cache keys.
+            let session = MiningSession::for_db(&db, cluster.clone())
+                .split_lines(registry::split_lines(name))
+                .build()
+                .expect("valid session");
+            let base = MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(min_sup);
+            let plain = session.run(&base).expect("valid request");
+            let fused = session.run(&base.clone().fuse_pass_2(true)).expect("valid request");
+            assert_eq!(plain.all_frequent(), fused.all_frequent(), "{name}: fused diverged");
+            let _ = writeln!(
+                out,
+                "{name:<10} Opt-VFPC: {:.0} s / {} phases -> fused {:.0} s / {} phases ({:+.1}%)",
+                plain.actual_time,
+                plain.n_phases(),
+                fused.actual_time,
+                fused.n_phases(),
+                100.0 * (fused.actual_time / plain.actual_time - 1.0)
+            );
+        }
+
+        // 2. PARMA vs exact.
+        let _ = writeln!(out, "\n## approximate mining (PARMA-style, ref [14]) vs exact");
+        for name in registry::NAMES {
+            let db = registry::load(name);
+            // Moderate support: approximation is meant for the easy regime.
+            let min_sup = registry::reference_min_sup(name).unwrap() + 0.10;
+            let exact = mine(&db, min_sup).all_frequent();
+            let params = ParmaParams::default();
+            let approx = mine_approximate(&db, min_sup, &params);
+            let t_exact = bench(0, 3, || {
+                std::hint::black_box(mine(&db, min_sup));
+            });
+            let t_approx = bench(0, 3, || {
+                std::hint::black_box(mine_approximate(&db, min_sup, &params));
+            });
+            let _ = writeln!(
+                out,
+                "{name:<10} @{min_sup:.2}: recall {:.3}, fpr {:.3}, sample {}x{}; host {:.0} ms exact vs {:.0} ms approx",
+                approx.recall(&exact),
+                approx.false_positive_rate(&exact),
+                approx.n_samples,
+                approx.sample_size,
+                t_exact.median_s * 1e3,
+                t_approx.median_s * 1e3,
+            );
+        }
     }
 
-    // 2. PARMA vs exact.
-    let _ = writeln!(out, "\n## approximate mining (PARMA-style, ref [14]) vs exact");
-    for name in registry::NAMES {
-        let db = registry::load(name);
-        // Moderate support: approximation is meant for the easy regime.
-        let min_sup = registry::reference_min_sup(name).unwrap() + 0.10;
-        let exact = mine(&db, min_sup).all_frequent();
-        let params = ParmaParams::default();
-        let approx = mine_approximate(&db, min_sup, &params);
-        let t_exact = bench(0, 3, || {
-            std::hint::black_box(mine(&db, min_sup));
-        });
-        let t_approx = bench(0, 3, || {
-            std::hint::black_box(mine_approximate(&db, min_sup, &params));
-        });
-        let _ = writeln!(
-            out,
-            "{name:<10} @{min_sup:.2}: recall {:.3}, fpr {:.3}, sample {}x{}; host {:.0} ms exact vs {:.0} ms approx",
-            approx.recall(&exact),
-            approx.false_positive_rate(&exact),
-            approx.n_samples,
-            approx.sample_size,
-            t_exact.median_s * 1e3,
-            t_approx.median_s * 1e3,
-        );
+    // 3. Fault injection & speculative execution, end to end through the
+    //    session API: every phase of every algorithm is re-timed under the
+    //    scenario's model while mining output stays byte-identical.
+    const QUICK_ALGOS: [Algorithm; 3] =
+        [Algorithm::Spc, Algorithm::OptimizedVfpc, Algorithm::OptimizedEtdpc];
+    let all = Algorithm::ALL;
+    let (dataset, algorithms): (&str, &[Algorithm]) =
+        if quick { ("t6i3d2k", &QUICK_ALGOS) } else { ("mushroom", &all) };
+    let db = registry::try_load(dataset).expect("bench dataset is registry-resolvable");
+    let min_sup = registry::reference_min_sup(dataset).unwrap_or(0.05);
+    let session = MiningSession::for_db(&db, cluster.clone())
+        .split_lines(registry::split_lines(dataset))
+        .build()
+        .expect("valid session");
+    let scenarios = FaultScenario::grid(0.05, 0.15);
+    let grid = tables::fault_sweep(&session, algorithms, &scenarios, |algo| {
+        MiningRequest::new(algo).min_sup(min_sup)
+    })
+    .expect("valid fault sweep");
+    // The headline invariant: faults move simulated time, never output.
+    let reference = grid[0][0].all_frequent();
+    for row in &grid {
+        for cell in row {
+            assert_eq!(
+                cell.all_frequent(),
+                reference,
+                "{}: fault model changed mining output",
+                cell.algorithm
+            );
+        }
     }
-
-    // 3. Faults & speculation on a realistic task mix (mushroom pass-8
-    //    compute seconds from the cost model, 9 tasks on the paper cluster).
-    let _ = writeln!(out, "\n## fault injection & speculative execution");
-    let tasks: Vec<SimTask> =
-        (0..9).map(|i| SimTask { compute_secs: 20.0 + i as f64, preferred_nodes: vec![i % 4] }).collect();
-    let slots: Vec<(usize, f64)> = (0..4).flat_map(|n| std::iter::repeat((n, 1.0)).take(4)).collect();
-    let oh = cluster.overhead;
-    for (label, model) in [
-        ("clean", FaultModel::default()),
-        ("5% task failures", FaultModel { fail_prob: 0.05, seed: 3, ..Default::default() }),
-        (
-            "15% stragglers (6x)",
-            FaultModel { straggler_prob: 0.15, seed: 3, ..Default::default() },
-        ),
-        (
-            "15% stragglers + speculation",
-            FaultModel { straggler_prob: 0.15, speculation: true, seed: 3, ..Default::default() },
-        ),
-    ] {
-        let r = schedule_with_faults(&tasks, &slots, &oh, &model);
-        let _ = writeln!(
-            out,
-            "{label:<30} makespan {:>6.1} s  attempts {:>2}  failures {}  stragglers {}  spec launches/wins {}/{}",
-            r.makespan, r.attempts, r.failures, r.stragglers, r.speculative_launches, r.speculative_wins
-        );
-    }
+    let _ = writeln!(
+        out,
+        "\n## fault injection & speculative execution ({dataset} @ {min_sup}, session API)\n"
+    );
+    let _ = write!(out, "{}", tables::fault_markdown(algorithms, &scenarios, &grid));
+    let _ = writeln!(
+        out,
+        "\noutput invariance: every scenario mined identical frequent itemsets ({} of them)",
+        reference.len()
+    );
 
     println!("{out}");
     save_report("ablation_extensions.txt", &out);
+    let json = fault_json(dataset, min_sup, quick, algorithms, &scenarios, &grid);
+    save_report("BENCH_faults.json", &json);
+    print!("{json}");
 }

@@ -2,7 +2,7 @@
 //! run algorithm × min_sup grids and format phase-breakdown tables.
 
 use super::report::{figure_table, Series};
-use crate::cluster::ClusterConfig;
+use crate::cluster::{ClusterConfig, FaultModel};
 use crate::coordinator::{
     Algorithm, MiningError, MiningOutcome, MiningRequest, MiningSession, RunOptions,
 };
@@ -32,7 +32,7 @@ impl<'a> SweepSpec<'a> {
             .unwrap_or_else(|| vec![0.35, 0.30, 0.25, 0.20, 0.15]);
         let opts = RunOptions {
             split_lines: registry::split_lines(name),
-            dpc_alpha: if name == "chess" { 3.0 } else { 2.0 },
+            dpc_alpha: registry::paper_dpc_alpha(name),
             ..Default::default()
         };
         Self {
@@ -282,6 +282,182 @@ pub fn scale_json(algorithms: &[Algorithm], runs: &[ScaleRun]) -> String {
     s
 }
 
+/// One labeled cell column of a fault-robustness grid: a scenario either
+/// runs clean (`model: None`, the baseline) or under a [`FaultModel`].
+pub struct FaultScenario {
+    /// Human-readable column label (e.g. `5% failures`).
+    pub label: String,
+    /// The injection model; `None` is the clean baseline.
+    pub model: Option<FaultModel>,
+}
+
+impl FaultScenario {
+    /// The default robustness grid: clean baseline, task failures alone,
+    /// stragglers alone, and stragglers rescued by speculation — the
+    /// scenario family of the fault ablation and `sweep --faults`.
+    pub fn grid(fail_prob: f64, straggler_prob: f64) -> Vec<FaultScenario> {
+        vec![
+            FaultScenario { label: "clean".into(), model: None },
+            FaultScenario {
+                label: format!("{:.0}% failures", fail_prob * 100.0),
+                model: Some(FaultModel { fail_prob, ..Default::default() }),
+            },
+            FaultScenario {
+                label: format!("{:.0}% stragglers", straggler_prob * 100.0),
+                model: Some(FaultModel { straggler_prob, ..Default::default() }),
+            },
+            FaultScenario {
+                label: "stragglers + speculation".into(),
+                model: Some(FaultModel {
+                    straggler_prob,
+                    speculation: true,
+                    ..Default::default()
+                }),
+            },
+        ]
+    }
+}
+
+/// Run `algorithms` × `scenarios` over one shared session (every cell at
+/// the same support reuses the memoized Job1 scan — fault models do not
+/// split the cache key). Returns the grid indexed `[scenario][algo]`.
+/// `request_for` supplies each algorithm's base request (support, α, ...);
+/// the scenario's fault model is layered on top.
+pub fn fault_sweep(
+    session: &MiningSession,
+    algorithms: &[Algorithm],
+    scenarios: &[FaultScenario],
+    request_for: impl Fn(Algorithm) -> MiningRequest,
+) -> Result<Vec<Vec<MiningOutcome>>, MiningError> {
+    let mut grid = Vec::with_capacity(scenarios.len());
+    for scenario in scenarios {
+        let mut row = Vec::with_capacity(algorithms.len());
+        for &algo in algorithms {
+            let mut req = request_for(algo);
+            if let Some(model) = &scenario.model {
+                req = req.faults(model.clone());
+            }
+            row.push(session.run(&req)?);
+        }
+        grid.push(row);
+    }
+    Ok(grid)
+}
+
+/// Markdown robustness table over a [`fault_sweep`] grid: one row per
+/// algorithm, one actual-time column per scenario (fault columns annotated
+/// with the slowdown vs the clean column), followed by a per-cell
+/// injection-counter table.
+pub fn fault_markdown(
+    algorithms: &[Algorithm],
+    scenarios: &[FaultScenario],
+    grid: &[Vec<MiningOutcome>],
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = write!(s, "| algorithm |");
+    for sc in scenarios {
+        let _ = write!(s, " {} (s) |", sc.label);
+    }
+    let _ = writeln!(s);
+    let _ = write!(s, "|---|");
+    for _ in scenarios {
+        let _ = write!(s, "---:|");
+    }
+    let _ = writeln!(s);
+    for (ai, algo) in algorithms.iter().enumerate() {
+        let _ = write!(s, "| {} |", algo.name());
+        let clean = grid[0][ai].actual_time;
+        for (si, _) in scenarios.iter().enumerate() {
+            let out = &grid[si][ai];
+            match out.faulted_actual_time() {
+                None => {
+                    let _ = write!(s, " {:.1} |", out.actual_time);
+                }
+                Some(faulted) => {
+                    let _ = write!(
+                        s,
+                        " {:.1} ({:+.1}%) |",
+                        faulted,
+                        100.0 * (faulted / clean - 1.0)
+                    );
+                }
+            }
+        }
+        let _ = writeln!(s);
+    }
+    let _ = writeln!(s);
+    let _ = writeln!(
+        s,
+        "| algorithm | scenario | phases | attempts | failures | stragglers | spec launches | spec wins |"
+    );
+    let _ = writeln!(s, "|---|---|---:|---:|---:|---:|---:|---:|");
+    for (ai, algo) in algorithms.iter().enumerate() {
+        for (si, sc) in scenarios.iter().enumerate() {
+            let out = &grid[si][ai];
+            let Some(t) = out.fault_totals() else { continue };
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {} | {} | {} | {} | {} |",
+                algo.name(),
+                sc.label,
+                out.n_phases(),
+                t.attempts,
+                t.failures,
+                t.stragglers,
+                t.speculative_launches,
+                t.speculative_wins,
+            );
+        }
+    }
+    s
+}
+
+/// Per-phase clean→faulted makespan table for fault-model runs (the
+/// `mine --algo all` fault view): each cell shows the phase's clean and
+/// faulted elapsed seconds, with per-run injection counters at the right.
+pub fn fault_phase_table(outcomes: &[&MiningOutcome], title: &str) -> String {
+    use std::fmt::Write as _;
+    let max_phases = outcomes.iter().map(|o| o.n_phases()).max().unwrap_or(0);
+    let mut s = String::new();
+    let _ = writeln!(s, "# {title}");
+    let _ = write!(s, "{:<22}", "Algorithm (phases)");
+    for p in 1..=max_phases {
+        let _ = write!(s, " {:>11}", format!("Phase {p}"));
+    }
+    let _ = writeln!(
+        s,
+        " {:>13} {:>26}",
+        "Total", "attempts/fail/strag/spec"
+    );
+    for o in outcomes {
+        let _ = write!(s, "{:<22}", format!("{} ({})", o.algorithm.name(), o.n_phases()));
+        for p in 0..max_phases {
+            let cell = match o.phases.get(p) {
+                None => "-".to_string(),
+                Some(ph) => match &ph.faults {
+                    None => format!("{:.0}", ph.elapsed),
+                    Some(f) => format!("{:.0}→{:.0}", ph.elapsed, f.elapsed()),
+                },
+            };
+            let _ = write!(s, " {:>11}", cell);
+        }
+        let total = match o.faulted_total_time() {
+            None => format!("{:.0}", o.total_time),
+            Some(faulted) => format!("{:.0}→{:.0}", o.total_time, faulted),
+        };
+        let counters = match o.fault_totals() {
+            None => "-".to_string(),
+            Some(t) => format!(
+                "{}/{}/{}/{}+{}",
+                t.attempts, t.failures, t.stragglers, t.speculative_launches, t.speculative_wins
+            ),
+        };
+        let _ = writeln!(s, " {total:>13} {counters:>26}");
+    }
+    s
+}
+
 /// Candidates-per-phase table (Tables 7-9 layout).
 pub fn candidates_table(outcomes: &[&MiningOutcome], title: &str) -> String {
     use std::fmt::Write as _;
@@ -420,6 +596,44 @@ mod tests {
         let md = scale_markdown(&algorithms, &[run]);
         assert!(md.contains("t6i2d300"));
         std::fs::remove_dir_all(&cache).unwrap();
+    }
+
+    #[test]
+    fn fault_sweep_renders_robustness_tables() {
+        let db = tiny_db();
+        let algorithms = [Algorithm::Spc, Algorithm::OptimizedVfpc];
+        let session = MiningSession::for_db(&db, ClusterConfig::uniform(2, 2))
+            .split_lines(30)
+            .build()
+            .unwrap();
+        let scenarios = FaultScenario::grid(0.05, 0.15);
+        assert_eq!(scenarios.len(), 4);
+        assert!(scenarios[0].model.is_none(), "scenario 0 is the clean baseline");
+        let grid = fault_sweep(&session, &algorithms, &scenarios, |algo| {
+            MiningRequest::new(algo).min_sup(0.3)
+        })
+        .unwrap();
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].len(), 2);
+        // Output invariance across every cell of the grid.
+        let reference = grid[0][0].all_frequent();
+        for row in &grid {
+            for out in row {
+                assert_eq!(out.all_frequent(), reference, "fault model changed the mining");
+            }
+        }
+        // All cells share one Job1 scan (fault models do not split the key).
+        assert_eq!(session.stats().job1_runs, 1);
+        let md = fault_markdown(&algorithms, &scenarios, &grid);
+        assert!(md.contains("| algorithm |"), "{md}");
+        assert!(md.contains("5% failures"), "{md}");
+        assert!(md.contains("stragglers + speculation"), "{md}");
+        assert!(md.contains("| SPC | 5% failures |"), "{md}");
+        let refs: Vec<&MiningOutcome> = grid[1].iter().collect();
+        let t = fault_phase_table(&refs, "tiny faults");
+        assert!(t.contains("Phase 1"), "{t}");
+        assert!(t.contains('→'), "fault cells must show clean→faulted: {t}");
+        assert!(t.contains("attempts/fail/strag/spec"), "{t}");
     }
 
     #[test]

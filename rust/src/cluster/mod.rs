@@ -119,58 +119,129 @@ impl JobTiming {
     }
 }
 
+/// One slot per `map_slots` entry of every node: the map stage's container
+/// pool.
+fn map_slot_list(cluster: &ClusterConfig) -> Vec<(usize, f64)> {
+    cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .flat_map(|(i, n)| std::iter::repeat((i, n.speed)).take(n.map_slots))
+        .collect()
+}
+
+/// One slot per `reduce_slots` entry of every node.
+fn reduce_slot_list(cluster: &ClusterConfig) -> Vec<(usize, f64)> {
+    cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .flat_map(|(i, n)| std::iter::repeat((i, n.speed)).take(n.reduce_slots))
+        .collect()
+}
+
+/// The cost-modeled form of one MapReduce job — per-task simulated compute
+/// seconds (with replica placements) plus the serialized shuffle term.
+/// This is exactly what the schedulers consume; sessions retain one per
+/// phase so alternative timing models (the fault simulator) can re-time a
+/// finished phase without re-executing any mining work.
+#[derive(Debug, Clone, Default)]
+pub struct SimJob {
+    /// Cost-modeled map tasks, in task order.
+    pub map_tasks: Vec<SimTask>,
+    /// Cost-modeled reduce tasks, in task order.
+    pub reduce_tasks: Vec<SimTask>,
+    /// Serialized shuffle seconds (all combine-output tuples cross the
+    /// network).
+    pub shuffle: f64,
+}
+
+impl SimJob {
+    /// Convert metered tasks into their cost-modeled form on `cluster`
+    /// (weights only; scheduling happens in [`SimJob::timing`]).
+    pub fn from_meters(
+        map_meters: &[TaskMeter],
+        reduce_meters: &[TaskMeter],
+        cluster: &ClusterConfig,
+    ) -> Self {
+        let w = &cluster.weights;
+        let map_tasks = map_meters
+            .iter()
+            .map(|m| SimTask {
+                compute_secs: w.map_compute_secs(&m.counters),
+                preferred_nodes: m.preferred_nodes.clone(),
+            })
+            .collect();
+        let shuffle_tuples: u64 = map_meters
+            .iter()
+            .map(|m| m.counters.get(crate::mapreduce::counters::keys::COMBINE_OUTPUT_TUPLES))
+            .sum();
+        let reduce_tasks = reduce_meters
+            .iter()
+            .map(|m| SimTask {
+                compute_secs: w.reduce_compute_secs(&m.counters),
+                preferred_nodes: Vec::new(),
+            })
+            .collect();
+        Self { map_tasks, reduce_tasks, shuffle: shuffle_tuples as f64 * w.shuffle_tuple }
+    }
+
+    /// Clean job timing: list-schedule both stages on `cluster`'s slots.
+    pub fn timing(&self, cluster: &ClusterConfig) -> JobTiming {
+        let oh = &cluster.overhead;
+        let map_sched = schedule(&self.map_tasks, &map_slot_list(cluster), oh);
+        let reduce_sched = schedule(&self.reduce_tasks, &reduce_slot_list(cluster), oh);
+        JobTiming {
+            submit: oh.job_submit,
+            map_makespan: map_sched.makespan,
+            shuffle: self.shuffle,
+            reduce_makespan: reduce_sched.makespan,
+        }
+    }
+
+    /// Fault-injected job timing: run both stages through
+    /// [`schedule_with_faults`], drawing the map and reduce stages of
+    /// phase `stream` from independent deterministic injection streams of
+    /// the model's one seed. Returns the faulted timing (same submit and
+    /// shuffle terms — faults strike task execution, not the driver) plus
+    /// each stage's [`FaultOutcome`]. With zero probabilities and
+    /// speculation off this reproduces [`SimJob::timing`] exactly.
+    pub fn faulted_timing(
+        &self,
+        cluster: &ClusterConfig,
+        model: &FaultModel,
+        stream: u64,
+    ) -> (JobTiming, FaultOutcome, FaultOutcome) {
+        let oh = &cluster.overhead;
+        let map = schedule_with_faults(
+            &self.map_tasks,
+            &map_slot_list(cluster),
+            oh,
+            &model.for_stream(stream, 0),
+        );
+        let reduce = schedule_with_faults(
+            &self.reduce_tasks,
+            &reduce_slot_list(cluster),
+            oh,
+            &model.for_stream(stream, 1),
+        );
+        let timing = JobTiming {
+            submit: oh.job_submit,
+            map_makespan: map.makespan,
+            shuffle: self.shuffle,
+            reduce_makespan: reduce.makespan,
+        };
+        (timing, map, reduce)
+    }
+}
+
 /// Convert metered tasks into simulated job timing on `cluster`.
 pub fn simulate_job(
     map_meters: &[TaskMeter],
     reduce_meters: &[TaskMeter],
     cluster: &ClusterConfig,
 ) -> JobTiming {
-    let w = &cluster.weights;
-    let oh = &cluster.overhead;
-
-    let map_tasks: Vec<SimTask> = map_meters
-        .iter()
-        .map(|m| SimTask {
-            compute_secs: w.map_compute_secs(&m.counters),
-            preferred_nodes: m.preferred_nodes.clone(),
-        })
-        .collect();
-    let map_slots: Vec<(usize, f64)> = cluster
-        .nodes
-        .iter()
-        .enumerate()
-        .flat_map(|(i, n)| std::iter::repeat((i, n.speed)).take(n.map_slots))
-        .collect();
-    let map_sched = schedule(&map_tasks, &map_slots, oh);
-
-    // Shuffle: all combine-output tuples cross the network (serialized model).
-    let shuffle_tuples: u64 = map_meters
-        .iter()
-        .map(|m| m.counters.get(crate::mapreduce::counters::keys::COMBINE_OUTPUT_TUPLES))
-        .sum();
-    let shuffle = shuffle_tuples as f64 * w.shuffle_tuple;
-
-    let reduce_tasks: Vec<SimTask> = reduce_meters
-        .iter()
-        .map(|m| SimTask {
-            compute_secs: w.reduce_compute_secs(&m.counters),
-            preferred_nodes: Vec::new(),
-        })
-        .collect();
-    let reduce_slots: Vec<(usize, f64)> = cluster
-        .nodes
-        .iter()
-        .enumerate()
-        .flat_map(|(i, n)| std::iter::repeat((i, n.speed)).take(n.reduce_slots))
-        .collect();
-    let reduce_sched = schedule(&reduce_tasks, &reduce_slots, oh);
-
-    JobTiming {
-        submit: oh.job_submit,
-        map_makespan: map_sched.makespan,
-        shuffle,
-        reduce_makespan: reduce_sched.makespan,
-    }
+    SimJob::from_meters(map_meters, reduce_meters, cluster).timing(cluster)
 }
 
 #[cfg(test)]
@@ -239,5 +310,58 @@ mod tests {
         let a = simulate_job(&[meter(0, 1_000, vec![])], &[], &c);
         let b = simulate_job(&[meter(0, 100_000, vec![])], &[], &c);
         assert!(b.shuffle > 50.0 * a.shuffle);
+    }
+
+    #[test]
+    fn faulted_timing_zero_prob_equals_clean() {
+        let tasks: Vec<TaskMeter> =
+            (0..10).map(|i| meter(500_000 + i as u64 * 40_000, 20, vec![i % 4])).collect();
+        let reduce = vec![reduce_meter(50), reduce_meter(80)];
+        let c = ClusterConfig::paper_cluster();
+        let sim = SimJob::from_meters(&tasks, &reduce, &c);
+        let clean = sim.timing(&c);
+        let (faulted, map, red) = sim.faulted_timing(&c, &FaultModel::default(), 3);
+        assert_eq!(clean.elapsed().to_bits(), faulted.elapsed().to_bits());
+        assert_eq!(map.attempts, 10);
+        assert_eq!(red.attempts, 2);
+        assert!(!map.job_failed && !red.job_failed);
+    }
+
+    #[test]
+    fn faulted_timing_injects_and_streams_are_independent() {
+        let tasks: Vec<TaskMeter> =
+            (0..12).map(|i| meter(600_000 + i as u64 * 90_000, 20, vec![i % 4])).collect();
+        let reduce = vec![reduce_meter(500)];
+        let c = ClusterConfig::paper_cluster();
+        let sim = SimJob::from_meters(&tasks, &reduce, &c);
+        let clean = sim.timing(&c);
+        let model = FaultModel { fail_prob: 0.4, max_attempts: 8, seed: 2, ..Default::default() };
+        let (t1, m1, _) = sim.faulted_timing(&c, &model, 1);
+        let (t1b, m1b, _) = sim.faulted_timing(&c, &model, 1);
+        // Deterministic per (seed, stream).
+        assert_eq!(t1.elapsed().to_bits(), t1b.elapsed().to_bits());
+        assert_eq!(m1, m1b);
+        // Distinct phase streams draw distinct injections (same knobs,
+        // different attempt fates): across several streams the outcomes
+        // cannot all coincide.
+        let mut distinct = std::collections::HashSet::new();
+        for stream in 1..=6u64 {
+            let (t, m, _) = sim.faulted_timing(&c, &model, stream);
+            // Submit and shuffle are driver-side terms, untouched by faults.
+            assert_eq!(t.submit, clean.submit);
+            assert_eq!(t.shuffle, clean.shuffle);
+            distinct.insert((m.failures, t.map_makespan.to_bits()));
+        }
+        assert!(distinct.len() > 1, "phase streams replayed one injection sequence");
+    }
+
+    #[test]
+    fn simulate_job_is_sim_job_timing() {
+        let tasks = vec![meter(1_000_000, 30, vec![0]), meter(2_000_000, 40, vec![1])];
+        let reduce = vec![reduce_meter(70)];
+        let c = ClusterConfig::paper_cluster();
+        let direct = simulate_job(&tasks, &reduce, &c);
+        let via_sim = SimJob::from_meters(&tasks, &reduce, &c).timing(&c);
+        assert_eq!(direct.elapsed().to_bits(), via_sim.elapsed().to_bits());
     }
 }

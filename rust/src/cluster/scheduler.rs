@@ -43,6 +43,57 @@ pub struct ScheduleOutcome {
     pub makespan: f64,
 }
 
+/// One placement decision of [`pick_slot`]: where an attempt would run and
+/// what it would cost there.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Placement {
+    /// Chosen slot index.
+    pub slot: usize,
+    /// Start time (the slot's free time, clamped to "now").
+    pub start: f64,
+    /// Clean attempt duration on that slot (startup + compute + locality).
+    pub dur: f64,
+    /// Projected finish time (`start + dur`).
+    pub finish: f64,
+    /// Whether the placement is data-local.
+    pub local: bool,
+}
+
+/// THE placement rule of this simulator: the slot that *finishes* `task`
+/// earliest once it becomes runnable at `now`, accounting for node speed,
+/// startup cost, and the non-locality penalty, with exact-tie preference
+/// for data-local slots. Shared by [`schedule`] and
+/// [`super::faults::schedule_with_faults`] so the two schedulers cannot
+/// drift: with no faults injected they perform bit-identical arithmetic.
+pub(crate) fn pick_slot(
+    task: &SimTask,
+    slots: &[(usize, f64)],
+    free_at: &[f64],
+    now: f64,
+    overhead: &OverheadParams,
+) -> Placement {
+    let mut best: Option<Placement> = None;
+    for (i, &(node, speed)) in slots.iter().enumerate() {
+        let local = task.preferred_nodes.is_empty() || task.preferred_nodes.contains(&node);
+        let start = free_at[i].max(now);
+        let mut dur = overhead.task_start + task.compute_secs / speed;
+        if !local {
+            dur += overhead.nonlocal_penalty;
+        }
+        let finish = start + dur;
+        let better = match best {
+            None => true,
+            Some(Placement { finish: bf, local: bl, .. }) => {
+                finish < bf - 1e-12 || ((finish - bf).abs() <= 1e-12 && local && !bl)
+            }
+        };
+        if better {
+            best = Some(Placement { slot: i, start, dur, finish, local });
+        }
+    }
+    best.expect("pick_slot requires at least one slot")
+}
+
 /// Schedule `tasks` onto `slots` (pairs of `(node_id, node_speed)`, one entry
 /// per slot). Returns per-task placements and the makespan.
 pub fn schedule(
@@ -59,31 +110,16 @@ pub fn schedule(
     let mut makespan = 0.0f64;
 
     for task in tasks {
-        // Pick the slot minimizing finish time; ties -> prefer data-local.
-        let mut best: Option<(usize, f64, f64, bool)> = None; // (slot, start, finish, local)
-        for (i, &(node, speed)) in slots.iter().enumerate() {
-            let local =
-                task.preferred_nodes.is_empty() || task.preferred_nodes.contains(&node);
-            let start = free_at[i];
-            let mut dur = overhead.task_start + task.compute_secs / speed;
-            if !local {
-                dur += overhead.nonlocal_penalty;
-            }
-            let finish = start + dur;
-            let better = match best {
-                None => true,
-                Some((_, _, bf, bl)) => {
-                    finish < bf - 1e-12 || ((finish - bf).abs() <= 1e-12 && local && !bl)
-                }
-            };
-            if better {
-                best = Some((i, start, finish, local));
-            }
-        }
-        let (slot, start, finish, local) = best.unwrap();
-        free_at[slot] = finish;
-        makespan = makespan.max(finish);
-        assignments.push(Assignment { node: slots[slot].0, slot, start, finish, local });
+        let p = pick_slot(task, slots, &free_at, 0.0, overhead);
+        free_at[p.slot] = p.finish;
+        makespan = makespan.max(p.finish);
+        assignments.push(Assignment {
+            node: slots[p.slot].0,
+            slot: p.slot,
+            start: p.start,
+            finish: p.finish,
+            local: p.local,
+        });
     }
     ScheduleOutcome { assignments, makespan }
 }

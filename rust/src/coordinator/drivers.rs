@@ -14,7 +14,11 @@ pub struct PhaseObservation {
     pub candidates: u64,
     /// Passes the phase combined (`npass` — relevant for dynamic policies).
     pub npass: usize,
-    /// Simulated elapsed seconds of the phase.
+    /// Simulated elapsed seconds of the phase. When the query carries a
+    /// [`FaultModel`](crate::cluster::FaultModel) this is the *faulted*
+    /// elapsed time — time-driven controllers (DPC/ETDPC) adapt to the
+    /// cluster conditions they would actually observe, which is exactly
+    /// the robustness question the fault scenarios probe.
     pub elapsed: f64,
 }
 

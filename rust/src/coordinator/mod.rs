@@ -13,7 +13,7 @@ pub use session::{
 };
 
 use crate::apriori::sequential::Level;
-use crate::cluster::{ClusterConfig, JobTiming};
+use crate::cluster::{ClusterConfig, FaultModel, FaultOutcome, JobTiming};
 use crate::itemset::Itemset;
 use crate::mapreduce::counters::Counters;
 use drivers::{
@@ -172,6 +172,47 @@ impl Default for RunOptions {
     }
 }
 
+/// Fault-injected re-timing of one phase, carried by [`PhaseRecord`] when
+/// the query ran under a [`FaultModel`]: the same cost-modeled tasks
+/// scheduled through the fault simulator, so every record holds both the
+/// clean makespan ([`PhaseRecord::elapsed`]) and the faulted one — mining
+/// output itself is untouched by construction (the output-invariance
+/// contract, DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct PhaseFaults {
+    /// Faulted timing breakdown (same submit/shuffle terms as the clean
+    /// [`PhaseRecord::timing`]; map/reduce makespans re-scheduled under
+    /// injection).
+    pub timing: JobTiming,
+    /// Map-stage injection outcome.
+    pub map: FaultOutcome,
+    /// Reduce-stage injection outcome.
+    pub reduce: FaultOutcome,
+}
+
+impl PhaseFaults {
+    /// The phase's faulted elapsed seconds (the counterpart of
+    /// [`PhaseRecord::elapsed`]).
+    pub fn elapsed(&self) -> f64 {
+        self.timing.elapsed()
+    }
+
+    /// Merged map + reduce injection counters of the phase; the returned
+    /// outcome's `makespan` is the phase's faulted elapsed time.
+    pub fn totals(&self) -> FaultOutcome {
+        FaultOutcome {
+            makespan: self.elapsed(),
+            attempts: self.map.attempts + self.reduce.attempts,
+            failures: self.map.failures + self.reduce.failures,
+            stragglers: self.map.stragglers + self.reduce.stragglers,
+            speculative_launches: self.map.speculative_launches
+                + self.reduce.speculative_launches,
+            speculative_wins: self.map.speculative_wins + self.reduce.speculative_wins,
+            job_failed: self.map.job_failed || self.reduce.job_failed,
+        }
+    }
+}
+
 /// Metrics of one MapReduce phase (one row slice of Tables 3-5 / 10-12).
 #[derive(Debug, Clone)]
 pub struct PhaseRecord {
@@ -196,6 +237,9 @@ pub struct PhaseRecord {
     pub wall: f64,
     /// Merged job counters.
     pub counters: Counters,
+    /// Fault-injected re-timing of the phase — `Some` iff the query
+    /// carried a [`FaultModel`] (`MiningRequest::faults`).
+    pub faults: Option<PhaseFaults>,
 }
 
 /// Result of one full mining run.
@@ -219,6 +263,10 @@ pub struct MiningOutcome {
     pub actual_time: f64,
     /// Real host wall-clock for the whole run.
     pub wall_time: f64,
+    /// The fault model the run carried, if any — when `Some`, every phase
+    /// record holds a [`PhaseFaults`] and the `faulted_*` accessors return
+    /// values.
+    pub fault_model: Option<FaultModel>,
 }
 
 impl MiningOutcome {
@@ -243,6 +291,32 @@ impl MiningOutcome {
             self.levels.iter().flat_map(|l| l.iter().cloned()).collect();
         out.sort();
         out
+    }
+
+    /// Sum of per-phase *faulted* elapsed times — the fault-model
+    /// counterpart of [`MiningOutcome::total_time`]. `None` when the run
+    /// carried no fault model.
+    pub fn faulted_total_time(&self) -> Option<f64> {
+        self.fault_model.as_ref()?;
+        Some(self.phases.iter().filter_map(|p| p.faults.as_ref()).map(|f| f.elapsed()).sum())
+    }
+
+    /// Faulted counterpart of [`MiningOutcome::actual_time`]: the faulted
+    /// total plus the same per-phase driver gaps the clean run paid.
+    pub fn faulted_actual_time(&self) -> Option<f64> {
+        Some(self.faulted_total_time()? + (self.actual_time - self.total_time))
+    }
+
+    /// Run-level fault aggregate: every phase's merged map + reduce
+    /// injection counters accumulated (the returned `makespan` is the
+    /// faulted total time). `None` when the run carried no fault model.
+    pub fn fault_totals(&self) -> Option<FaultOutcome> {
+        self.fault_model.as_ref()?;
+        let mut totals = FaultOutcome::default();
+        for faults in self.phases.iter().filter_map(|p| p.faults.as_ref()) {
+            totals.accumulate(&faults.totals());
+        }
+        Some(totals)
     }
 }
 

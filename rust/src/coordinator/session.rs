@@ -32,10 +32,11 @@
 use super::drivers::PhaseObservation;
 use super::mappers::{self, GenMode, Job2Mapper, OneItemsetMapper};
 use super::{
-    controller_for, debug_assert_aux_agreement, Algorithm, MiningOutcome, PhaseRecord, RunOptions,
+    controller_for, debug_assert_aux_agreement, Algorithm, MiningOutcome, PhaseFaults,
+    PhaseRecord, RunOptions,
 };
 use crate::apriori::sequential::Level;
-use crate::cluster::{simulate_job, ClusterConfig};
+use crate::cluster::{ClusterConfig, FaultModel, SimJob};
 use crate::dataset::{registry, TransactionDb};
 use crate::hdfs::{self, HdfsFile, InputSplit};
 use crate::itemset::Trie;
@@ -75,6 +76,10 @@ pub enum MiningError {
     /// The cluster cannot execute jobs (no DataNodes, zero reducers, or
     /// zero host workers).
     InvalidCluster(&'static str),
+    /// The request's [`FaultModel`] is out of domain (probability outside
+    /// `[0, 1]`, multiplier below 1, or a zero attempt budget); carries
+    /// the specific violation.
+    InvalidFaultModel(&'static str),
     /// The run was cancelled through its [`CancelToken`] before finishing.
     Cancelled,
 }
@@ -97,6 +102,7 @@ impl std::fmt::Display for MiningError {
                 write!(f, "dpc_beta must be finite and >= 0, got {v}")
             }
             MiningError::InvalidCluster(why) => write!(f, "invalid cluster config: {why}"),
+            MiningError::InvalidFaultModel(why) => write!(f, "invalid fault model: {why}"),
             MiningError::Cancelled => write!(f, "mining run cancelled"),
         }
     }
@@ -128,6 +134,7 @@ pub struct MiningRequest {
     dpc_beta: f64,
     fuse_pass_2: bool,
     gen_mode: GenMode,
+    faults: Option<FaultModel>,
 }
 
 impl MiningRequest {
@@ -142,6 +149,7 @@ impl MiningRequest {
             dpc_beta: d.dpc_beta,
             fuse_pass_2: d.fuse_pass_2,
             gen_mode: d.gen_mode,
+            faults: None,
         }
     }
 
@@ -156,6 +164,7 @@ impl MiningRequest {
             dpc_beta: opts.dpc_beta,
             fuse_pass_2: opts.fuse_pass_2,
             gen_mode: opts.gen_mode,
+            faults: None,
         }
     }
 
@@ -196,6 +205,18 @@ impl MiningRequest {
         self
     }
 
+    /// Run the query under a [`FaultModel`]: every phase is additionally
+    /// re-timed through the fault simulator, so each [`PhaseRecord`]
+    /// carries clean *and* faulted makespans plus the injection counters
+    /// ([`PhaseFaults`]), and time-driven controllers (DPC/ETDPC) observe
+    /// the faulted times — the environment they would actually live in.
+    /// Frequent-itemset output is byte-identical with or without a model:
+    /// faults only move simulated time (DESIGN.md §6).
+    pub fn faults(mut self, model: FaultModel) -> Self {
+        self.faults = Some(model);
+        self
+    }
+
     /// Which algorithm this request runs.
     pub fn algorithm(&self) -> Algorithm {
         self.algorithm
@@ -204,6 +225,11 @@ impl MiningRequest {
     /// The request's fractional minimum support.
     pub fn min_sup_value(&self) -> f64 {
         self.min_sup
+    }
+
+    /// The request's fault model, if one was set.
+    pub fn fault_model(&self) -> Option<&FaultModel> {
+        self.faults.as_ref()
     }
 
     /// Check every tunable's domain, the library-level validation layer.
@@ -219,6 +245,9 @@ impl MiningRequest {
         }
         if !self.dpc_beta.is_finite() || self.dpc_beta < 0.0 {
             return Err(MiningError::InvalidDpcBeta(self.dpc_beta));
+        }
+        if let Some(model) = &self.faults {
+            model.validate().map_err(MiningError::InvalidFaultModel)?;
         }
         Ok(())
     }
@@ -320,11 +349,14 @@ pub struct SessionStats {
 }
 
 /// Job1's reusable result: frequent 1-itemsets (plus 2-itemsets when the
-/// pass-1/2 fusion ran) and the phase metrics row.
+/// pass-1/2 fusion ran), the phase metrics row, and the cost-modeled task
+/// form (so per-query fault models can re-time the cached scan without
+/// re-executing it).
 struct Job1Data {
     l1: Level,
     l2: Level,
     record: PhaseRecord,
+    sim: SimJob,
 }
 
 struct SessionCore {
@@ -722,7 +754,8 @@ impl SessionCore {
             .wait_with(|ev| sink(task_event(1, ev)))
             .expect("job1 carries no cancel token, so it cannot be cancelled");
         debug_assert_aux_agreement(&out);
-        let timing = simulate_job(&out.map_meters, &out.reduce_meters, &self.cluster);
+        let sim = SimJob::from_meters(&out.map_meters, &out.reduce_meters, &self.cluster);
+        let timing = sim.timing(&self.cluster);
         let mut l1: Level = Vec::new();
         let mut l2: Level = Vec::new();
         for (set, count) in out.outputs {
@@ -743,8 +776,23 @@ impl SessionCore {
             timing,
             wall: wall.elapsed().as_secs_f64(),
             counters: out.counters,
+            faults: None,
         };
-        Job1Data { l1, l2, record }
+        Job1Data { l1, l2, record, sim }
+    }
+
+    /// Re-time one phase's cost-modeled tasks under the query's fault
+    /// model, if any. `phase` doubles as the injection stream, so every
+    /// phase of a run draws independent faults from the one user seed.
+    fn phase_faults(
+        &self,
+        sim: &SimJob,
+        model: Option<&FaultModel>,
+        phase: usize,
+    ) -> Option<PhaseFaults> {
+        let model = model?;
+        let (timing, map, reduce) = sim.faulted_timing(&self.cluster, model, phase as u64);
+        Some(PhaseFaults { timing, map, reduce })
     }
 
     fn outcome(
@@ -767,6 +815,7 @@ impl SessionCore {
             total_time,
             actual_time,
             wall_time: run_start.elapsed().as_secs_f64(),
+            fault_model: req.faults.clone(),
         }
     }
 
@@ -797,13 +846,22 @@ impl SessionCore {
         });
         let (slot, from_cache) = self.job1(min_count, req.fuse_pass_2, sink);
         let job1 = slot.get().expect("job1 slot initialized");
-        phases.push(job1.record.clone());
-        sink(PhaseEvent::PhaseFinished { record: job1.record.clone(), from_cache });
+        // The cached record is fault-free; the fault re-timing is computed
+        // per query from the cached cost-modeled tasks, so queries with
+        // different fault models still share one Job1 execution.
+        let mut record = job1.record.clone();
+        record.faults = self.phase_faults(&job1.sim, req.faults.as_ref(), 1);
+        // Time-driven controllers (DPC/ETDPC, Algorithm 4 line 3) observe
+        // the time of the environment the query models: faulted when a
+        // fault model is active, clean otherwise.
+        let job1_elapsed = record.faults.as_ref().map_or(record.elapsed, |f| f.elapsed());
+        phases.push(record.clone());
+        sink(PhaseEvent::PhaseFinished { record, from_cache });
 
         let mut controller = controller_for(algo, req.fpc_n, req.dpc_alpha, req.dpc_beta);
         // DPC/ETDPC initialize their elapsed-time feedback from Job1
         // (Algorithm 4 line 3) — without changing their initial α.
-        controller.init_job1(phases[0].elapsed);
+        controller.init_job1(job1_elapsed);
 
         if job1.l1.is_empty() {
             return Ok(self.outcome(req, min_count, levels, phases, run_start));
@@ -859,11 +917,16 @@ impl SessionCore {
                 .wait_with(|ev| sink(task_event(phase_no, ev)))
                 .map_err(|_cancelled| MiningError::Cancelled)?;
             debug_assert_aux_agreement(&out);
-            let timing = simulate_job(&out.map_meters, &out.reduce_meters, &self.cluster);
+            let sim = SimJob::from_meters(&out.map_meters, &out.reduce_meters, &self.cluster);
+            let timing = sim.timing(&self.cluster);
             let candidates = out.aux.get(keys::CANDIDATES).copied().unwrap_or(0);
             let npass = out.aux.get(keys::NPASS).copied().unwrap_or(0) as usize;
 
             let elapsed = timing.elapsed();
+            let faults = self.phase_faults(&sim, req.faults.as_ref(), phase_no);
+            // Time-driven controllers observe the faulted elapsed time when
+            // a fault model is active (see init_job1 above).
+            let observed_elapsed = faults.as_ref().map_or(elapsed, |f| f.elapsed());
             let record = PhaseRecord {
                 phase: phases.len() + 1,
                 job: out.name,
@@ -874,10 +937,11 @@ impl SessionCore {
                 timing,
                 wall: phase_wall.elapsed().as_secs_f64(),
                 counters: out.counters,
+                faults,
             };
             sink(PhaseEvent::PhaseFinished { record: record.clone(), from_cache: false });
             phases.push(record);
-            controller.observe(PhaseObservation { candidates, npass, elapsed });
+            controller.observe(PhaseObservation { candidates, npass, elapsed: observed_elapsed });
 
             if npass == 0 {
                 break; // no candidates could be generated at all

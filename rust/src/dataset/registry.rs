@@ -107,6 +107,17 @@ pub fn reference_min_sup(name: &str) -> Option<f64> {
     }
 }
 
+/// The paper's per-dataset DPC fast-phase α (§5.2): 3.0 on chess, 2.0
+/// everywhere else. THE one copy of the rule — the figure sweeps, the
+/// fault grid, and the CLI defaults all call this, so they cannot drift.
+pub fn paper_dpc_alpha(name: &str) -> f64 {
+    if name == "chess" {
+        3.0
+    } else {
+        2.0
+    }
+}
+
 /// The min_sup sweep used in the paper's Figs 2-4 (x-axes, high -> low).
 pub fn figure_min_sups(name: &str) -> Option<Vec<f64>> {
     match name {

@@ -2,8 +2,8 @@
 //! benchmark sweeps, and cost-model calibration.
 
 use anyhow::{bail, Result};
-use mrapriori::bench_harness::tables::{self, ScaleRun, SweepSpec};
-use mrapriori::cluster::ClusterConfig;
+use mrapriori::bench_harness::tables::{self, FaultScenario, ScaleRun, SweepSpec};
+use mrapriori::cluster::{ClusterConfig, FaultModel};
 use mrapriori::coordinator::{
     mappers::GenMode, Algorithm, CancelToken, MiningError, MiningOutcome, MiningRequest,
     MiningSession, PhaseEvent, RunOptions,
@@ -117,6 +117,25 @@ fn load_db(p: &mrapriori::util::flags::Parsed) -> Result<mrapriori::dataset::Tra
 /// The `--cache-dir` for generated/imported segment stores.
 fn cache_dir(p: &mrapriori::util::flags::Parsed) -> PathBuf {
     PathBuf::from(p.get("cache-dir").unwrap_or(DEFAULT_CACHE))
+}
+
+/// Build the [`FaultModel`] of the `--fail-prob`/`--straggler-prob`/
+/// `--speculation` flags; `None` when no fault flag was given (the clean
+/// path stays the default). Domain validation happens at the session
+/// layer, as a typed [`MiningError`].
+fn fault_model_from_flags(p: &mrapriori::util::flags::Parsed) -> Result<Option<FaultModel>> {
+    let fail_prob = p.f64("fail-prob")?;
+    let straggler_prob = p.f64("straggler-prob")?;
+    let speculation = p.bool("speculation");
+    if fail_prob.is_none() && straggler_prob.is_none() && !speculation {
+        return Ok(None);
+    }
+    Ok(Some(FaultModel {
+        fail_prob: fail_prob.unwrap_or(0.0),
+        straggler_prob: straggler_prob.unwrap_or(0.0),
+        speculation,
+        ..Default::default()
+    }))
 }
 
 /// Run one query, streaming live phase-finished lines to stderr when
@@ -235,6 +254,9 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         .opt("workers", "host threads for real execution")
         .opt_default("gen-mode", "per-record", "per-record|per-task generation cost")
         .flag("fuse-12", "fuse passes 1+2 via triangular matrix (ref [6])")
+        .opt("fail-prob", "fault model: per-attempt failure probability")
+        .opt("straggler-prob", "fault model: per-attempt straggler probability")
+        .flag("speculation", "fault model: speculative backup attempts")
         .flag("streamed", "mine through the on-disk segment store (out-of-core)")
         .opt("cache-dir", "segment-store cache directory")
         .flag("verbose", "debug logging + live phase events")
@@ -273,6 +295,7 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         "per-record" => GenMode::PerRecord,
         other => bail!("unknown --gen-mode {other:?}; expected per-record or per-task"),
     };
+    let fault_model = fault_model_from_flags(&p)?;
     // Validate the user-provided query tunables before dataset work too:
     // the defaults are always valid, so a probe request carrying exactly
     // the explicit flag values checks everything the user typed.
@@ -289,6 +312,9 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         }
         if let Some(beta) = p.f64("dpc-beta")? {
             probe = probe.dpc_beta(beta);
+        }
+        if let Some(model) = &fault_model {
+            probe = probe.faults(model.clone());
         }
         probe.validate()?;
     }
@@ -323,13 +349,7 @@ fn cmd_mine(args: &[String]) -> Result<()> {
             .gen_mode(gen_mode)
             .dpc_alpha(match p.f64("dpc-alpha")? {
                 Some(alpha) => alpha,
-                None => {
-                    if name == "chess" {
-                        3.0
-                    } else {
-                        2.0
-                    }
-                }
+                None => registry::paper_dpc_alpha(&name),
             })
             .fuse_pass_2(p.bool("fuse-12"));
         if let Some(n) = p.usize("fpc-n")? {
@@ -337,6 +357,9 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         }
         if let Some(beta) = p.f64("dpc-beta")? {
             req = req.dpc_beta(beta);
+        }
+        if let Some(model) = &fault_model {
+            req = req.faults(model.clone());
         }
         Ok(req)
     };
@@ -354,15 +377,20 @@ fn cmd_mine(args: &[String]) -> Result<()> {
             min_sup,
             if streamed { " [streamed]" } else { "" }
         );
+        let faulted_col = if fault_model.is_some() { " faulted(s)" } else { "" };
         println!(
-            "{:<18} {:>7} {:>11} {:>10} {:>10} {:>9}",
+            "{:<18} {:>7} {:>11} {:>10} {:>10}{faulted_col} {:>9}",
             "algorithm", "phases", "candidates", "total(s)", "actual(s)", "frequent"
         );
         for algo in Algorithm::ALL {
             let req = request_for(algo)?;
             let out = run_with_live_events(&session, &req, p.bool("verbose"), Some(algo.name()))?;
+            let faulted_cell = match out.faulted_actual_time() {
+                Some(t) => format!(" {t:>10.0}"),
+                None => String::new(),
+            };
             println!(
-                "{:<18} {:>7} {:>11} {:>10.0} {:>10.0} {:>9}",
+                "{:<18} {:>7} {:>11} {:>10.0} {:>10.0}{faulted_cell} {:>9}",
                 algo.name(),
                 out.n_phases(),
                 out.phases.iter().map(|ph| ph.candidates).sum::<u64>(),
@@ -374,13 +402,27 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         }
         let refs: Vec<&MiningOutcome> = outcomes.iter().collect();
         println!();
-        println!(
-            "{}",
-            tables::phase_time_table(
-                &refs,
-                &format!("{name} @ min_sup {min_sup}: per-phase elapsed time (s)")
-            )
-        );
+        if fault_model.is_some() {
+            // The fault view: every phase's clean→faulted makespan plus the
+            // run's injection counters.
+            println!(
+                "{}",
+                tables::fault_phase_table(
+                    &refs,
+                    &format!(
+                        "{name} @ min_sup {min_sup}: per-phase makespan, clean→faulted (s)"
+                    )
+                )
+            );
+        } else {
+            println!(
+                "{}",
+                tables::phase_time_table(
+                    &refs,
+                    &format!("{name} @ min_sup {min_sup}: per-phase elapsed time (s)")
+                )
+            );
+        }
         let st = session.stats();
         println!(
             "session: {} queries served; Job1 executed {} time(s), {} served from cache",
@@ -400,8 +442,14 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         out.min_count,
         if streamed { " [streamed]" } else { "" }
     );
+    // Header fault columns use the same widths as the data rows' cells.
+    let faulted_col = if out.fault_model.is_some() {
+        format!(" {:>10} {:>26}", "faulted(s)", "attempts/fail/strag/spec")
+    } else {
+        String::new()
+    };
     println!(
-        "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}  {}",
+        "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}{faulted_col}  {}",
         "phase", "passes", "k-range", "candidates", "elapsed(s)", "wall(s)", "job"
     );
     for ph in &out.phases {
@@ -410,8 +458,23 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         } else {
             format!("{}-{}", ph.first_pass, ph.first_pass + ph.n_passes - 1)
         };
+        let fault_cells = match &ph.faults {
+            None => String::new(),
+            Some(f) => {
+                let t = f.totals();
+                format!(
+                    " {:>10.1} {:>26}",
+                    f.elapsed(),
+                    format!(
+                        "{}/{}/{}/{}+{}",
+                        t.attempts, t.failures, t.stragglers, t.speculative_launches,
+                        t.speculative_wins
+                    )
+                )
+            }
+        };
         println!(
-            "{:>5} {:>6} {:>7} {:>11} {:>12.1} {:>10.3}  {}",
+            "{:>5} {:>6} {:>7} {:>11} {:>12.1} {:>10.3}{fault_cells}  {}",
             ph.phase, ph.n_passes, k_range, ph.candidates, ph.elapsed, ph.wall, ph.job
         );
     }
@@ -419,6 +482,23 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         "total {:.1} s simulated, actual {:.1} s, wall {:.3} s host",
         out.total_time, out.actual_time, out.wall_time
     );
+    if let (Some(faulted_total), Some(faulted_actual), Some(t)) =
+        (out.faulted_total_time(), out.faulted_actual_time(), out.fault_totals())
+    {
+        println!(
+            "faulted total {:.1} s ({:+.1}%), actual {:.1} s — {} attempts, {} failures, \
+             {} stragglers, {}/{} speculative launches/wins{}",
+            faulted_total,
+            100.0 * (faulted_total / out.total_time - 1.0),
+            faulted_actual,
+            t.attempts,
+            t.failures,
+            t.stragglers,
+            t.speculative_launches,
+            t.speculative_wins,
+            if t.job_failed { " [some simulated phase EXHAUSTED its retries]" } else { "" }
+        );
+    }
     println!("frequent itemsets: {} across {} levels", out.total_frequent(), out.levels.len());
     println!("|L_k| profile: {:?}", out.lk_profile());
     if p.bool("verbose") {
@@ -558,12 +638,15 @@ fn cmd_lk(args: &[String]) -> Result<()> {
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
-    let set = FlagSet::new("sweep", "figure sweep on one dataset, or a scale grid")
-        .opt("dataset", "registry name or file path (figure-sweep mode)")
+    let set = FlagSet::new("sweep", "figure sweep on one dataset, a scale grid, or a fault grid")
+        .opt("dataset", "registry name or file path (figure-sweep / fault-grid mode)")
         .opt("min-sups", "comma-separated min_sup list (default: paper sweep)")
         .opt("datasets", "comma-separated names -> algorithm x dataset scale grid")
         .opt("algos", "grid algorithms, comma-separated (default: spc,opt-etdpc)")
         .opt("min-sup", "single min_sup for every grid cell (default: per-dataset)")
+        .flag("faults", "clean-vs-faulted robustness grid for all seven algorithms")
+        .opt("fail-prob", "fault grid: failure probability (default 0.05)")
+        .opt("straggler-prob", "fault grid: straggler probability (default 0.15)")
         .flag("in-memory", "grid mode: materialize datasets instead of streaming")
         .opt("cache-dir", "segment-store cache directory")
         .opt("json-out", "grid mode: write the scale table as JSON here")
@@ -578,7 +661,13 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         return Ok(());
     }
     if p.has("datasets") {
+        if p.bool("faults") {
+            bail!("--faults runs on one dataset; use --dataset, not --datasets");
+        }
         return scale_sweep(&p);
+    }
+    if p.bool("faults") {
+        return fault_grid(&p);
     }
     let db = load_db(&p)?;
     let mut spec = SweepSpec::paper(&db);
@@ -589,6 +678,41 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let result = tables::sweep(&spec)?;
     println!("{}", tables::figure_a(&result, &db.name));
     println!("{}", tables::figure_b(&result, &db.name));
+    Ok(())
+}
+
+/// `sweep --faults`: the clean-vs-faulted robustness grid — all seven
+/// algorithms on one dataset and one session, each mined under the default
+/// fault-scenario family (clean, failures, stragglers, stragglers +
+/// speculation), rendered as markdown time + injection-counter tables.
+/// Frequent-itemset output is identical in every cell (faults only move
+/// simulated time), so the grid isolates scheduling robustness.
+fn fault_grid(p: &mrapriori::util::flags::Parsed) -> Result<()> {
+    let cluster = common_cluster(p)?;
+    let db = load_db(p)?;
+    let min_sup = p
+        .f64("min-sup")?
+        .or_else(|| registry::reference_min_sup(&db.name))
+        .unwrap_or(0.25);
+    let dpc_alpha = registry::paper_dpc_alpha(&db.name);
+    let scenarios = FaultScenario::grid(
+        p.f64("fail-prob")?.unwrap_or(0.05),
+        p.f64("straggler-prob")?.unwrap_or(0.15),
+    );
+    for scenario in &scenarios {
+        if let Some(model) = &scenario.model {
+            model.validate().map_err(MiningError::InvalidFaultModel)?;
+        }
+    }
+    let session = MiningSession::for_db(&db, cluster)
+        .split_lines(registry::split_lines(&db.name))
+        .build()?;
+    let algos = Algorithm::ALL;
+    let grid = tables::fault_sweep(&session, &algos, &scenarios, |algo| {
+        MiningRequest::new(algo).min_sup(min_sup).dpc_alpha(dpc_alpha)
+    })?;
+    println!("fault robustness on {} @ min_sup {min_sup:.2} (actual s):\n", db.name);
+    print!("{}", tables::fault_markdown(&algos, &scenarios, &grid));
     Ok(())
 }
 
@@ -647,7 +771,7 @@ fn scale_sweep(p: &mrapriori::util::flags::Parsed) -> Result<()> {
                 session.run(
                     &MiningRequest::new(algo)
                         .min_sup(min_sup)
-                        .dpc_alpha(if dataset == "chess" { 3.0 } else { 2.0 }),
+                        .dpc_alpha(registry::paper_dpc_alpha(&dataset)),
                 )
             })
             .collect::<Result<_, _>>()?;

@@ -82,6 +82,83 @@ fn mine_algo_all_shares_one_session() {
 }
 
 #[test]
+fn mine_fault_flags_keep_output_and_print_fault_columns() {
+    let base = ["mine", "--dataset", "chess", "--algo", "spc", "--min-sup", "0.9"];
+    let (clean, stderr, ok) = run(&base);
+    assert!(ok, "stderr: {stderr}");
+    let mut faulted_args = base.to_vec();
+    faulted_args.extend(["--fail-prob", "0.05", "--straggler-prob", "0.15", "--speculation"]);
+    let (faulted, stderr, ok) = run(&faulted_args);
+    assert!(ok, "stderr: {stderr}");
+    // The mining result lines are byte-identical: faults only move
+    // simulated time.
+    let result_lines = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("frequent itemsets:") || l.starts_with("|L_k|"))
+            .map(String::from)
+            .collect()
+    };
+    assert_eq!(result_lines(&clean), result_lines(&faulted), "fault flags changed the mining");
+    assert!(!result_lines(&clean).is_empty());
+    // The fault view appears only under the flags.
+    assert!(faulted.contains("faulted(s)"), "{faulted}");
+    assert!(faulted.contains("faulted total"), "{faulted}");
+    assert!(faulted.contains("speculative launches/wins"), "{faulted}");
+    assert!(!clean.contains("faulted"), "{clean}");
+}
+
+#[test]
+fn mine_algo_all_with_faults_prints_clean_vs_faulted_phase_table() {
+    let (stdout, stderr, ok) = run(&[
+        "mine",
+        "--dataset",
+        "chess",
+        "--algo",
+        "all",
+        "--min-sup",
+        "0.9",
+        "--fail-prob",
+        "0.05",
+        "--straggler-prob",
+        "0.15",
+        "--speculation",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("clean→faulted"), "{stdout}");
+    assert!(stdout.contains("attempts/fail/strag/spec"), "{stdout}");
+    assert!(stdout.contains('→'), "{stdout}");
+    assert!(stdout.contains("faulted(s)"), "{stdout}");
+    // Still one shared session underneath.
+    assert!(stdout.contains("Job1 executed 1 time(s), 6 served from cache"), "{stdout}");
+}
+
+#[test]
+fn mine_invalid_fault_prob_is_a_clean_error() {
+    let (_, stderr, ok) = run(&[
+        "mine", "--dataset", "chess", "--algo", "spc", "--min-sup", "0.9", "--fail-prob", "1.5",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("invalid fault model"), "{stderr}");
+    assert!(stderr.contains("fail_prob"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
+fn sweep_faults_emits_robustness_tables() {
+    let (stdout, stderr, ok) =
+        run(&["sweep", "--dataset", "chess", "--min-sup", "0.9", "--faults"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("fault robustness on chess"), "{stdout}");
+    assert!(stdout.contains("| algorithm |"), "{stdout}");
+    assert!(stdout.contains("5% failures"), "{stdout}");
+    assert!(stdout.contains("stragglers + speculation"), "{stdout}");
+    // All seven algorithms appear as rows.
+    for name in ["SPC", "FPC", "DPC", "VFPC", "ETDPC", "Optimized-VFPC", "Optimized-ETDPC"] {
+        assert!(stdout.contains(&format!("| {name} |")), "missing {name}: {stdout}");
+    }
+}
+
+#[test]
 fn mine_invalid_min_sup_is_a_clean_one_line_error() {
     let (_, stderr, ok) =
         run(&["mine", "--dataset", "chess", "--algo", "spc", "--min-sup", "1.5"]);

@@ -1,0 +1,258 @@
+//! Fault-aware mining end to end through the session API (ISSUE 5): the
+//! output-invariance contract (faults only move simulated time — frequent
+//! itemsets are byte-identical with or without a model), per-phase
+//! clean + faulted records, run-level aggregation, Job1 cache sharing
+//! across fault models, per-seed determinism, and the typed validation
+//! error.
+
+use mrapriori::apriori::sequential::mine;
+use mrapriori::cluster::{ClusterConfig, FaultModel};
+use mrapriori::coordinator::{
+    Algorithm, CancelToken, MiningError, MiningRequest, MiningSession, PhaseEvent,
+};
+use mrapriori::dataset::ibm::{generate, IbmParams};
+use mrapriori::dataset::TransactionDb;
+
+fn small_db() -> TransactionDb {
+    generate(&IbmParams {
+        n_txns: 300,
+        n_items: 40,
+        avg_txn_len: 8.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 10,
+        correlation: 0.5,
+        corruption_mean: 0.3,
+        corruption_sd: 0.1,
+        seed: 42,
+        ..Default::default()
+    })
+}
+
+fn session_for(db: &TransactionDb) -> MiningSession {
+    MiningSession::for_db(db, ClusterConfig::paper_cluster())
+        .split_lines(50)
+        .build()
+        .expect("valid session")
+}
+
+fn storm() -> FaultModel {
+    FaultModel {
+        fail_prob: 0.05,
+        straggler_prob: 0.15,
+        speculation: true,
+        ..Default::default()
+    }
+}
+
+/// The acceptance criterion: for every algorithm, a query under a fault
+/// model mines byte-identical frequent itemsets to the clean query, while
+/// its phase records carry both makespans plus injection counters.
+#[test]
+fn fault_model_never_changes_mining_output() {
+    let db = small_db();
+    let oracle = mine(&db, 0.2).all_frequent();
+    let session = session_for(&db);
+    for algo in Algorithm::ALL {
+        let clean = session.run(&MiningRequest::new(algo).min_sup(0.2)).unwrap();
+        let faulted =
+            session.run(&MiningRequest::new(algo).min_sup(0.2).faults(storm())).unwrap();
+        assert_eq!(faulted.all_frequent(), oracle, "{algo}: faults changed the output");
+        assert_eq!(clean.all_frequent(), oracle, "{algo}");
+        assert_eq!(faulted.lk_profile(), clean.lk_profile(), "{algo}");
+        assert_eq!(faulted.min_count, clean.min_count, "{algo}");
+
+        // Clean runs carry no fault data; faulted runs carry it everywhere.
+        assert!(clean.fault_model.is_none());
+        assert!(clean.phases.iter().all(|p| p.faults.is_none()), "{algo}");
+        assert!(clean.faulted_total_time().is_none());
+        assert!(clean.fault_totals().is_none());
+        assert_eq!(faulted.fault_model, Some(storm()), "{algo}");
+        assert!(faulted.phases.iter().all(|p| p.faults.is_some()), "{algo}");
+
+        // Per-phase coherence: the faulted record shares the clean run's
+        // driver-side terms and reports at least one attempt per task.
+        for p in &faulted.phases {
+            let f = p.faults.as_ref().unwrap();
+            assert_eq!(f.timing.submit, p.timing.submit, "{algo} phase {}", p.phase);
+            assert_eq!(f.timing.shuffle, p.timing.shuffle, "{algo} phase {}", p.phase);
+            let totals = f.totals();
+            assert!(totals.attempts > 0, "{algo} phase {}", p.phase);
+            assert!(totals.attempts >= totals.failures, "{algo} phase {}", p.phase);
+        }
+
+        // Run-level aggregation is the per-phase sum.
+        let total = faulted.faulted_total_time().expect("fault run has a faulted total");
+        let by_hand: f64 =
+            faulted.phases.iter().map(|p| p.faults.as_ref().unwrap().elapsed()).sum();
+        assert!((total - by_hand).abs() < 1e-9, "{algo}");
+        let actual = faulted.faulted_actual_time().unwrap();
+        assert!(
+            (actual - total - (faulted.actual_time - faulted.total_time)).abs() < 1e-9,
+            "{algo}: faulted actual must add the same driver gaps"
+        );
+        let totals = faulted.fault_totals().unwrap();
+        assert!((totals.makespan - total).abs() < 1e-9, "{algo}");
+    }
+}
+
+/// A zero-probability, no-speculation model is observably the clean
+/// schedule: same elapsed time per phase, bit for bit.
+#[test]
+fn zero_probability_model_matches_clean_timing() {
+    let db = small_db();
+    let session = session_for(&db);
+    let clean = session.run(&MiningRequest::new(Algorithm::Vfpc).min_sup(0.2)).unwrap();
+    let zero = session
+        .run(&MiningRequest::new(Algorithm::Vfpc).min_sup(0.2).faults(FaultModel::default()))
+        .unwrap();
+    assert_eq!(zero.n_phases(), clean.n_phases());
+    for (z, c) in zero.phases.iter().zip(&clean.phases) {
+        let f = z.faults.as_ref().expect("zero-prob run still records fault data");
+        assert_eq!(f.elapsed().to_bits(), c.elapsed.to_bits(), "phase {}", z.phase);
+        let totals = f.totals();
+        assert_eq!(totals.failures, 0);
+        assert_eq!(totals.stragglers, 0);
+        assert_eq!(totals.speculative_launches, 0);
+    }
+    assert_eq!(
+        zero.faulted_total_time().unwrap().to_bits(),
+        clean.total_time.to_bits(),
+        "zero-probability faults must reproduce the list scheduler exactly"
+    );
+}
+
+/// Queries with different fault models (or none) share one Job1 scan: the
+/// fault re-timing is computed per query from the cached cost-modeled
+/// tasks, never by re-executing the job.
+#[test]
+fn job1_cache_is_shared_across_fault_models() {
+    let db = small_db();
+    let session = session_for(&db);
+    let clean = session.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.2)).unwrap();
+    let faulted = session
+        .run(&MiningRequest::new(Algorithm::Spc).min_sup(0.2).faults(storm()))
+        .unwrap();
+    let stats = session.stats();
+    assert_eq!(stats.job1_runs, 1, "fault models must not split the Job1 cache key");
+    assert_eq!(stats.job1_cache_hits, 1);
+    // Same cached measurement underneath...
+    assert_eq!(clean.phases[0].elapsed, faulted.phases[0].elapsed);
+    assert_eq!(clean.phases[0].counters, faulted.phases[0].counters);
+    // ... with the fault view layered on only where requested.
+    assert!(clean.phases[0].faults.is_none());
+    assert!(faulted.phases[0].faults.is_some());
+}
+
+/// Deterministic per (request, seed): repeating a faulted query reproduces
+/// every number; changing the seed re-draws the injection.
+#[test]
+fn fault_runs_are_deterministic_per_seed() {
+    let db = small_db();
+    let session = session_for(&db);
+    let req = |seed: u64| {
+        MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(0.2).faults(FaultModel {
+            fail_prob: 0.2,
+            straggler_prob: 0.2,
+            speculation: true,
+            seed,
+            ..Default::default()
+        })
+    };
+    let a = session.run(&req(9)).unwrap();
+    let b = session.run(&req(9)).unwrap();
+    assert_eq!(
+        a.faulted_total_time().unwrap().to_bits(),
+        b.faulted_total_time().unwrap().to_bits()
+    );
+    assert_eq!(a.fault_totals().unwrap(), b.fault_totals().unwrap());
+    // Across a handful of seeds the injections cannot all coincide.
+    let distinct: std::collections::HashSet<u64> = (0..6)
+        .map(|seed| session.run(&req(seed)).unwrap().faulted_total_time().unwrap().to_bits())
+        .collect();
+    assert!(distinct.len() > 1, "every seed produced one identical injection");
+    // And none of it ever touches the mined output.
+    assert_eq!(a.all_frequent(), b.all_frequent());
+    assert_eq!(a.all_frequent(), mine(&db, 0.2).all_frequent());
+}
+
+/// The phase-event stream carries the same fault-annotated records that
+/// land in the outcome.
+#[test]
+fn event_stream_carries_fault_records() {
+    let db = small_db();
+    let session = session_for(&db);
+    let mut streamed = Vec::new();
+    let out = session
+        .run_streaming(
+            &MiningRequest::new(Algorithm::Etdpc).min_sup(0.2).faults(storm()),
+            &CancelToken::new(),
+            |ev| {
+                if let PhaseEvent::PhaseFinished { record, .. } = ev {
+                    streamed.push(record);
+                }
+            },
+        )
+        .unwrap();
+    assert_eq!(streamed.len(), out.n_phases());
+    for (ev, ph) in streamed.iter().zip(&out.phases) {
+        let (a, b) = (ev.faults.as_ref().unwrap(), ph.faults.as_ref().unwrap());
+        assert_eq!(a.elapsed().to_bits(), b.elapsed().to_bits(), "phase {}", ph.phase);
+        assert_eq!(a.totals(), b.totals(), "phase {}", ph.phase);
+    }
+}
+
+/// Out-of-domain fault knobs are typed errors at submission, like every
+/// other tunable.
+#[test]
+fn invalid_fault_models_are_typed_errors() {
+    let db = small_db();
+    let session = session_for(&db);
+    for (model, why) in [
+        (FaultModel { fail_prob: 1.5, ..Default::default() }, "fail_prob"),
+        (FaultModel { straggler_prob: -0.1, ..Default::default() }, "straggler_prob"),
+        (FaultModel { straggler_factor: 0.0, ..Default::default() }, "straggler_factor"),
+        (FaultModel { max_attempts: 0, ..Default::default() }, "max_attempts"),
+        (FaultModel { spec_threshold: f64::NAN, ..Default::default() }, "spec_threshold"),
+    ] {
+        let err = session
+            .run(&MiningRequest::new(Algorithm::Spc).min_sup(0.2).faults(model))
+            .expect_err("out-of-domain fault model must be rejected");
+        match &err {
+            MiningError::InvalidFaultModel(msg) => {
+                assert!(msg.contains(why), "{err}: expected a {why} violation")
+            }
+            other => panic!("expected InvalidFaultModel, got {other}"),
+        }
+        assert!(err.to_string().contains("invalid fault model"), "{err}");
+    }
+    // The session keeps serving after rejected requests.
+    session.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.2)).unwrap();
+}
+
+/// Background handles work under fault models too, and an injected run can
+/// still be cancelled between phases.
+#[test]
+fn submit_and_cancel_work_with_faults() {
+    let db = small_db();
+    let session = session_for(&db);
+    let handle = session
+        .submit(MiningRequest::new(Algorithm::Vfpc).min_sup(0.2).faults(storm()))
+        .unwrap();
+    let out = handle.join().expect("faulted background run succeeds");
+    assert_eq!(out.all_frequent(), mine(&db, 0.2).all_frequent());
+    assert!(out.faulted_total_time().is_some());
+
+    let token = CancelToken::new();
+    let err = session
+        .run_streaming(
+            &MiningRequest::new(Algorithm::Spc).min_sup(0.15).faults(storm()),
+            &token,
+            |ev| {
+                if matches!(ev, PhaseEvent::PhaseFinished { .. }) {
+                    token.cancel();
+                }
+            },
+        )
+        .expect_err("cancelled faulted run must not produce an outcome");
+    assert_eq!(err, MiningError::Cancelled);
+}
