@@ -543,6 +543,9 @@ impl MiningSession {
         let token = CancelToken::new();
         let thread_token = token.clone();
         let (tx, rx) = mpsc::channel();
+        // lint:allow(raw-thread-spawn): RunHandle's miner thread is
+        // long-lived and joins at handle scope; parking it in the fixed
+        // worker pool would deadlock nested submits (DESIGN.md §10).
         let join = std::thread::Builder::new()
             .name(format!("mine-{}", algorithm.name().to_ascii_lowercase()))
             .spawn(move || {
@@ -733,6 +736,8 @@ impl SessionCore {
         fused: bool,
         sink: &mut dyn FnMut(PhaseEvent),
     ) -> Job1Data {
+        // lint:allow(wall-clock-in-sim): host-side meter for the phase
+        // record's `wall` field, kept apart from simulated time (§2).
         let wall = Instant::now();
         let n_items = self.file.n_items;
         let job = if fused {
@@ -829,6 +834,8 @@ impl SessionCore {
         sink: &mut dyn FnMut(PhaseEvent),
     ) -> Result<MiningOutcome, MiningError> {
         self.queries.fetch_add(1, Ordering::SeqCst);
+        // lint:allow(wall-clock-in-sim): host-side meter for the
+        // outcome's `wall_time` field, not simulated time (§2).
         let run_start = Instant::now();
         let algo = req.algorithm;
         let min_count = self.file.min_count(req.min_sup);
@@ -887,6 +894,8 @@ impl SessionCore {
             }
             check(token)?;
             let policy = controller.next_policy(l_prev.len() as u64);
+            // lint:allow(wall-clock-in-sim): host-side meter for the phase
+            // record's `wall` field, not simulated time (§2).
             let phase_wall = Instant::now();
             let phase_no = phases.len() + 1;
             sink(PhaseEvent::PhaseStarted {

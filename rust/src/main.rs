@@ -167,11 +167,20 @@ fn run_with_live_events(
 /// file's canonical path only (stable across edits, so re-imports replace
 /// in place and the cache holds at most one copy per source file), while a
 /// `.fingerprint` sidecar records size + mtime to detect staleness.
+///
+/// The digest is SipHash-1-3 under the crate's pinned zero key
+/// (`util::siphash`), fed the canonical path's lossy-UTF-8 bytes directly
+/// rather than via `Path::hash` — the latter's byte feed is a std
+/// implementation detail, so dir names would silently change across
+/// toolchains. Slots minted by older builds under `DefaultHasher`-derived
+/// names are simply orphaned in the cache: nothing reads or deletes them,
+/// and the fingerprint sidecar repopulates the new slot on first use.
 fn import_cache_entry(cache: &Path, path: &Path) -> (PathBuf, PathBuf, String) {
-    use std::hash::{Hash, Hasher as _};
+    use std::hash::Hasher as _;
     let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset");
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    path.canonicalize().unwrap_or_else(|_| path.to_path_buf()).hash(&mut h);
+    let canon = path.canonicalize().unwrap_or_else(|_| path.to_path_buf());
+    let mut h = mrapriori::util::siphash::SipHasher13::new();
+    h.write(canon.to_string_lossy().as_bytes());
     let dir = cache.join(format!("import-{stem}-{:016x}", h.finish()));
     let fingerprint = std::fs::metadata(path)
         .map(|m| format!("{} {:?}", m.len(), m.modified().ok()))
@@ -802,4 +811,41 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
     let report = mrapriori::bench_harness::calibrate::run_calibration(p.bool("emit"));
     println!("{report}");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The cache dir name is part of the on-disk contract: it must come
+    /// out of the pinned SipHash-1-3, not whatever hasher std ships, or
+    /// every toolchain bump would orphan the whole import cache. The
+    /// fixture path does not exist, so `canonicalize` falls back to the
+    /// path as given and the digest is reproducible anywhere.
+    #[test]
+    fn import_cache_dir_name_is_pinned() {
+        let cache = Path::new("target/dataset-cache");
+        let src = Path::new("pallas-lint-fixture/web_docs.dat");
+        let (dir, fp, _fingerprint) = import_cache_entry(cache, src);
+        assert_eq!(
+            dir,
+            Path::new("target/dataset-cache/import-web_docs-af1ea4c3e824dbd8")
+        );
+        assert_eq!(
+            fp,
+            Path::new("target/dataset-cache/import-web_docs-af1ea4c3e824dbd8.fingerprint")
+        );
+    }
+
+    /// Same source path, different spellings that canonicalize apart must
+    /// key different slots; the same spelling keys the same slot.
+    #[test]
+    fn import_cache_dir_is_deterministic_per_path() {
+        let cache = Path::new("c");
+        let a = import_cache_entry(cache, Path::new("x/one.dat"));
+        let b = import_cache_entry(cache, Path::new("x/one.dat"));
+        let c = import_cache_entry(cache, Path::new("y/one.dat"));
+        assert_eq!(a.0, b.0);
+        assert_ne!(a.0, c.0, "distinct paths must not collide on slot");
+    }
 }

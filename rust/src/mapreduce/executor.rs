@@ -327,6 +327,8 @@ impl Executor {
         let job_name: Arc<str> = Arc::from(name.as_str());
         let cancel = cancel.unwrap_or_default();
         let abort = CancelToken::new();
+        // lint:allow(wall-clock-in-sim): host-side meter for the job
+        // report's wall seconds, not simulated time (DESIGN.md §2).
         let job_start = Instant::now();
 
         // ---- enqueue the map (+ combine + partition) phase ----------------
@@ -726,6 +728,8 @@ where
     K: Send + Clone + Ord + Hash,
     V: Send + Clone,
 {
+    // lint:allow(wall-clock-in-sim): per-task meter feeding
+    // TaskMeter::wall_secs, not simulated time (DESIGN.md §2).
     let start = Instant::now();
     let mut mapper = factory(task_id);
     let mut ctx: Context<K, V> = Context::new();
@@ -786,6 +790,8 @@ fn run_reduce_task<K, V, O>(
 where
     K: Ord,
 {
+    // lint:allow(wall-clock-in-sim): per-task meter feeding
+    // TaskMeter::wall_secs, not simulated time (DESIGN.md §2).
     let start = Instant::now();
     // Hash-grouped merge, in map-task order so per-key value order is
     // deterministic. (A Hadoop-style sort-merge variant was tried and

@@ -1,0 +1,101 @@
+//! The grandfather baseline: a checked-in ratchet of pre-existing
+//! findings, counted per `(rule, file)`.
+//!
+//! Keying on counts rather than line numbers or line text makes the
+//! baseline stable under reformatting and unrelated edits in the same
+//! file — moving a grandfathered `unwrap` around does not churn the file,
+//! but *adding* one pushes the count over its baselined value and fails
+//! the lint. Deleting one leaves the entry "stale", reported as a warning
+//! until the baseline is regenerated (the ratchet only tightens; see
+//! DESIGN.md §10 for the lifecycle).
+
+use std::collections::BTreeMap;
+
+use crate::Finding;
+
+/// Baseline key: `(rule, repo-relative path)`.
+pub type Key = (String, String);
+
+/// Multiset view of a finding list: occurrences per `(rule, path)`.
+pub fn counts(findings: &[Finding]) -> BTreeMap<Key, usize> {
+    let mut map: BTreeMap<Key, usize> = BTreeMap::new();
+    for f in findings {
+        *map.entry((f.rule.to_string(), f.path.clone())).or_insert(0) += 1;
+    }
+    map
+}
+
+/// Parse a baseline file. Blank lines and `#` comments are ignored; every
+/// other line is `rule<TAB>path<TAB>count`.
+pub fn parse(text: &str) -> Result<BTreeMap<Key, usize>, String> {
+    let mut map = BTreeMap::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let (Some(rule), Some(path), Some(count)) = (parts.next(), parts.next(), parts.next())
+        else {
+            return Err(format!("baseline line {}: expected rule<TAB>path<TAB>count", no + 1));
+        };
+        let count: usize = count
+            .parse()
+            .map_err(|_| format!("baseline line {}: bad count {count:?}", no + 1))?;
+        if map.insert((rule.to_string(), path.to_string()), count).is_some() {
+            return Err(format!("baseline line {}: duplicate key {rule} {path}", no + 1));
+        }
+    }
+    Ok(map)
+}
+
+/// Render a baseline map in the checked-in format (sorted, commented).
+pub fn render(map: &BTreeMap<Key, usize>) -> String {
+    let mut out = String::from(
+        "# pallas-lint baseline: grandfathered findings, one `rule<TAB>path<TAB>count` per line.\n\
+         # A count above its baselined value fails the lint; below it is reported stale.\n\
+         # Regenerate (after removing findings, never to admit new ones):\n\
+         #   cargo run -p pallas-lint -- --update-baseline\n",
+    );
+    for ((rule, path), count) in map {
+        out.push_str(&format!("{rule}\t{path}\t{count}\n"));
+    }
+    out
+}
+
+/// What changed relative to the baseline.
+pub struct Drift {
+    /// Findings in `(rule, path)` groups whose count exceeds the baseline
+    /// — the enforcement failure. Every finding of an over-budget group is
+    /// listed (the linter cannot know which occurrence is "the new one").
+    pub new: Vec<Finding>,
+    /// `(key, baselined, actual)` for entries above the live count — the
+    /// ratchet can tighten.
+    pub stale: Vec<(Key, usize, usize)>,
+}
+
+/// Compare live findings against a baseline.
+pub fn compare(findings: &[Finding], base: &BTreeMap<Key, usize>) -> Drift {
+    let live = counts(findings);
+    let mut new = Vec::new();
+    for (key, &n) in &live {
+        let budget = base.get(key).copied().unwrap_or(0);
+        if n > budget {
+            new.extend(
+                findings
+                    .iter()
+                    .filter(|f| f.rule == key.0 && f.path == key.1)
+                    .cloned(),
+            );
+        }
+    }
+    let mut stale = Vec::new();
+    for (key, &budget) in base {
+        let n = live.get(key).copied().unwrap_or(0);
+        if n < budget {
+            stale.push((key.clone(), budget, n));
+        }
+    }
+    new.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Drift { new, stale }
+}

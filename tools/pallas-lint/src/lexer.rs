@@ -1,0 +1,228 @@
+//! A minimal Rust lexer that separates code from comments and blanks out
+//! string/char-literal contents.
+//!
+//! The rules in [`crate::rules`] are line-oriented substring matchers; run
+//! naively over raw source they would fire on prose ("... used to use
+//! `DefaultHasher` ..." in a doc comment) and on data (a format string
+//! mentioning `panic!`). [`mask`] therefore splits every source line into
+//! two parallel views with identical line numbering:
+//!
+//! * **code** — source text with comments removed and the *contents* of
+//!   string, raw-string, byte-string and char literals blanked to spaces
+//!   (delimiters kept, so brace counting still sees the code shape);
+//! * **comments** — comment text only, which is where
+//!   `lint:allow(<rule>): <reason>` suppressions live.
+//!
+//! Text inside string literals lands in *neither* view: a directive quoted
+//! in a string (as in this linter's own tests) is inert.
+//!
+//! Handled syntax: `//`/`///`/`//!` line comments, nested `/* */` block
+//! comments, `"…"` and `b"…"` strings with escapes, `r"…"`/`r#"…"#`-style
+//! raw (byte) strings with any hash count, and char/byte-char literals
+//! including `'\''`/`'"'` — crucially distinguished from lifetimes
+//! (`'static`) so a lifetime does not swallow code to the next quote.
+
+/// Parallel per-line views of one source file; both vectors have exactly
+/// as many entries as the input has lines.
+#[derive(Debug)]
+pub struct Masked {
+    /// Code with comments removed and literal contents blanked.
+    pub code: Vec<String>,
+    /// Comment text only; everything else blanked.
+    pub comments: Vec<String>,
+}
+
+/// Where a character is emitted: the code view, the comment view, or
+/// neither (string-literal contents).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Sink {
+    Code,
+    Comment,
+    Neither,
+}
+
+/// Append `c` to the view selected by `sink`, blanks to the others.
+/// Newlines go to both so line numbering stays aligned.
+fn put(code: &mut String, com: &mut String, c: char, sink: Sink) {
+    if c == '\n' {
+        code.push('\n');
+        com.push('\n');
+        return;
+    }
+    code.push(if sink == Sink::Code { c } else { ' ' });
+    com.push(if sink == Sink::Comment { c } else { ' ' });
+}
+
+/// True for characters that can continue an identifier — used to decide
+/// whether `r`/`b` starts a literal prefix or is just part of a name.
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into its [`Masked`] views.
+pub fn mask(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(n);
+    let mut com = String::with_capacity(n);
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        let c1 = chars.get(i + 1).copied();
+        // ---- line comment ------------------------------------------------
+        if c == '/' && c1 == Some('/') {
+            while i < n && chars[i] != '\n' {
+                put(&mut code, &mut com, chars[i], Sink::Comment);
+                i += 1;
+            }
+            continue;
+        }
+        // ---- block comment (Rust block comments nest) --------------------
+        if c == '/' && c1 == Some('*') {
+            let mut depth = 0usize;
+            while i < n {
+                let c = chars[i];
+                let c1 = chars.get(i + 1).copied();
+                if c == '/' && c1 == Some('*') {
+                    depth += 1;
+                    put(&mut code, &mut com, '/', Sink::Comment);
+                    put(&mut code, &mut com, '*', Sink::Comment);
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && c1 == Some('/') {
+                    depth -= 1;
+                    put(&mut code, &mut com, '*', Sink::Comment);
+                    put(&mut code, &mut com, '/', Sink::Comment);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                    continue;
+                }
+                put(&mut code, &mut com, c, Sink::Comment);
+                i += 1;
+            }
+            continue;
+        }
+        let prev_ident = i > 0 && is_ident(chars[i - 1]);
+        // ---- raw strings: r"…", r#"…"#, br"…", br#"…"# --------------------
+        if !prev_ident && (c == 'r' || (c == 'b' && c1 == Some('r'))) {
+            let body = if c == 'r' { i + 1 } else { i + 2 };
+            let mut j = body;
+            while chars.get(j) == Some(&'#') {
+                j += 1;
+            }
+            if chars.get(j) == Some(&'"') {
+                let hashes = j - body;
+                for k in i..=j {
+                    put(&mut code, &mut com, chars[k], Sink::Code);
+                }
+                i = j + 1;
+                while i < n {
+                    let ends = chars[i] == '"'
+                        && i + hashes < n
+                        && chars[i + 1..=i + hashes].iter().all(|&h| h == '#');
+                    if ends {
+                        for k in i..=i + hashes {
+                            put(&mut code, &mut com, chars[k], Sink::Code);
+                        }
+                        i += 1 + hashes;
+                        break;
+                    }
+                    put(&mut code, &mut com, chars[i], Sink::Neither);
+                    i += 1;
+                }
+                continue;
+            }
+            // No raw literal after all ("r" / "br" was an identifier or
+            // something else): fall through to the generic handling below.
+        }
+        // ---- plain and byte strings: "…", b"…" ---------------------------
+        if c == '"' || (!prev_ident && c == 'b' && c1 == Some('"')) {
+            if c == 'b' {
+                put(&mut code, &mut com, 'b', Sink::Code);
+                i += 1;
+            }
+            put(&mut code, &mut com, '"', Sink::Code);
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    put(&mut code, &mut com, '\\', Sink::Neither);
+                    if i + 1 < n {
+                        put(&mut code, &mut com, chars[i + 1], Sink::Neither);
+                    }
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    put(&mut code, &mut com, '"', Sink::Code);
+                    i += 1;
+                    break;
+                }
+                put(&mut code, &mut com, chars[i], Sink::Neither);
+                i += 1;
+            }
+            continue;
+        }
+        // ---- char/byte-char literals vs lifetimes ------------------------
+        if c == '\'' || (!prev_ident && c == 'b' && c1 == Some('\'')) {
+            let q = if c == 'b' { i + 1 } else { i };
+            // `'\…'` is always a char literal; `'x'` needs the closing
+            // quote two ahead; anything else (`'static`, `'a>`) is a
+            // lifetime and only the quote itself is consumed.
+            let is_char = match chars.get(q + 1) {
+                Some('\\') => true,
+                Some(_) => chars.get(q + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char {
+                if c == 'b' {
+                    put(&mut code, &mut com, 'b', Sink::Code);
+                }
+                put(&mut code, &mut com, '\'', Sink::Code);
+                i = q + 1;
+                while i < n {
+                    if chars[i] == '\\' {
+                        put(&mut code, &mut com, '\\', Sink::Neither);
+                        if i + 1 < n {
+                            put(&mut code, &mut com, chars[i + 1], Sink::Neither);
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '\'' {
+                        put(&mut code, &mut com, '\'', Sink::Code);
+                        i += 1;
+                        break;
+                    }
+                    if chars[i] == '\n' {
+                        // Unterminated literal; bail back to code mode.
+                        put(&mut code, &mut com, '\n', Sink::Code);
+                        i += 1;
+                        break;
+                    }
+                    put(&mut code, &mut com, chars[i], Sink::Neither);
+                    i += 1;
+                }
+                continue;
+            }
+            // Lifetime (or a lone `b`): emit as code, one char at a time.
+            put(&mut code, &mut com, c, Sink::Code);
+            i += 1;
+            continue;
+        }
+        put(&mut code, &mut com, c, Sink::Code);
+        i += 1;
+    }
+    let split = |s: &str| -> Vec<String> { s.split('\n').map(str::to_string).collect() };
+    let mut code_lines = split(&code);
+    let mut com_lines = split(&com);
+    // `split('\n')` yields one trailing empty entry when the file ends in a
+    // newline; drop it so indices map 1:1 onto `str::lines` numbering.
+    if src.ends_with('\n') {
+        code_lines.pop();
+        com_lines.pop();
+    }
+    Masked { code: code_lines, comments: com_lines }
+}

@@ -1,0 +1,105 @@
+//! # pallas-lint
+//!
+//! An in-repo static checker for the determinism and concurrency
+//! invariants the mrapriori tree promises (DESIGN.md §10): byte-identical
+//! mining output across worker counts, streaming modes, fault models and
+//! toolchains, with all parallelism under one shared pool budget and a
+//! strict metered-vs-simulated-time split.
+//!
+//! The pipeline: [`lexer::mask`] strips comments and literal contents so
+//! rules never fire on prose; [`rules::check_file`] runs five line-level
+//! checks with `// lint:allow(<rule>): <reason>` suppressions;
+//! [`baseline`] ratchets pre-existing findings per `(rule, file)` so new
+//! code is held to the bar without rewriting ~100 grandfathered call
+//! sites in one diff.
+//!
+//! Zero dependencies by design: the linter must build in the same offline
+//! environment as the crate it checks, and sits in tier-1 CI
+//! (`cargo run -p pallas-lint`).
+
+#![warn(missing_docs)]
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a specific source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule identifier (see [`rules::RULES`]).
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Trimmed source excerpt (at most 90 characters).
+    pub excerpt: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.path, self.line, self.rule, self.excerpt)
+    }
+}
+
+/// Lint one file's source text against every rule.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    rules::check_file(rel, src)
+}
+
+/// The directories scanned under the repo root. `vendor/` (third-party
+/// stand-ins) and `python/` (not Rust) are deliberately absent.
+const SCAN_ROOTS: [&str; 5] = ["rust/src", "rust/tests", "rust/benches", "examples", "tools"];
+
+/// Collect every `.rs` file in scope under `root`, repo-relative with `/`
+/// separators, sorted for deterministic reports. Skips `target/` build
+/// output and `fixtures/` (the linter's own deliberately-violating test
+/// data), plus hidden directories.
+pub fn scan_files(root: &Path) -> std::io::Result<Vec<String>> {
+    fn walk(dir: &Path, rel: &str, out: &mut Vec<String>) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let sub = if rel.is_empty() { name.to_string() } else { format!("{rel}/{name}") };
+            let path = entry.path();
+            if path.is_dir() {
+                if name.starts_with('.') || name == "target" || name == "fixtures" {
+                    continue;
+                }
+                walk(&path, &sub, out)?;
+            } else if name.ends_with(".rs") {
+                out.push(sub);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for scan_root in SCAN_ROOTS {
+        let dir = root.join(scan_root);
+        if dir.is_dir() {
+            walk(&dir, scan_root, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every in-scope file under `root`; findings are ordered by
+/// `(path, line, rule)`.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for rel in scan_files(root)? {
+        let src = std::fs::read_to_string(root.join(&rel))?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(findings)
+}
+
+/// The default baseline location, relative to the repo root.
+pub fn default_baseline(root: &Path) -> PathBuf {
+    root.join("tools/pallas-lint/baseline.txt")
+}

@@ -1,0 +1,129 @@
+//! CLI for the invariant checker. Run from anywhere in the workspace:
+//!
+//! ```text
+//! cargo run -p pallas-lint                      # enforce against baseline
+//! cargo run -p pallas-lint -- --list            # every finding, baselined or not
+//! cargo run -p pallas-lint -- --update-baseline # regenerate the ratchet
+//! cargo run -p pallas-lint -- --print-baseline  # regenerated baseline to stdout
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings above the baseline, 2 usage or I/O
+//! error. Stale baseline entries (count above the live tree) warn without
+//! failing, so deleting grandfathered code never blocks a build — CI
+//! uploads the regenerated-baseline diff as an artifact instead.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_lint::{baseline, default_baseline, lint_tree, rules};
+
+fn usage() -> String {
+    let mut s = String::from(
+        "pallas-lint: determinism & concurrency invariant checker\n\n\
+         USAGE: pallas-lint [--root <dir>] [--baseline <file>]\n\
+         \x20                [--list | --print-baseline | --update-baseline]\n\nRULES:\n",
+    );
+    for r in &rules::RULES {
+        s.push_str(&format!("  {:<22} {}\n", r.name, r.summary));
+    }
+    s
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut baseline_path: Option<PathBuf> = None;
+    let mut list = false;
+    let mut print_baseline = false;
+    let mut update_baseline = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--baseline" => baseline_path = args.next().map(PathBuf::from),
+            "--list" => list = true,
+            "--print-baseline" => print_baseline = true,
+            "--update-baseline" => update_baseline = true,
+            "--help" | "-h" => {
+                print!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pallas-lint: unknown argument {other:?}\n\n{}", usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // Default root: two levels above this crate's manifest — the repo.
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+    });
+    let baseline_path = baseline_path.unwrap_or_else(|| default_baseline(&root));
+
+    let findings = match lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pallas-lint: scanning {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if list {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!("{} finding(s) total (baselined included)", findings.len());
+        return ExitCode::SUCCESS;
+    }
+    if print_baseline {
+        print!("{}", baseline::render(&baseline::counts(&findings)));
+        return ExitCode::SUCCESS;
+    }
+    if update_baseline {
+        let text = baseline::render(&baseline::counts(&findings));
+        if let Err(e) = std::fs::write(&baseline_path, text) {
+            eprintln!("pallas-lint: writing {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "pallas-lint: wrote {} ({} finding(s) grandfathered)",
+            baseline_path.display(),
+            findings.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let base = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => match baseline::parse(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("pallas-lint: {}: {e}", baseline_path.display());
+                return ExitCode::from(2);
+            }
+        },
+        // No baseline yet: everything is a new finding.
+        Err(_) => Default::default(),
+    };
+    let drift = baseline::compare(&findings, &base);
+    for ((rule, path), budget, actual) in &drift.stale {
+        eprintln!(
+            "pallas-lint: stale baseline entry: {rule} {path} baselined {budget}, live {actual} \
+             (regenerate with --update-baseline to ratchet down)"
+        );
+    }
+    if drift.new.is_empty() {
+        println!(
+            "pallas-lint: clean — {} finding(s), all within the baseline",
+            findings.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for f in &drift.new {
+        println!("{f}");
+    }
+    eprintln!(
+        "pallas-lint: {} finding(s) above the baseline. Fix them, or suppress a deliberate \
+         one with `// lint:allow(<rule>): <reason>` (see DESIGN.md §10).",
+        drift.new.len()
+    );
+    ExitCode::FAILURE
+}

@@ -1,0 +1,267 @@
+//! The rule engine: five line-oriented checks over [`crate::lexer::Masked`]
+//! views, each encoding an invariant this repo has already shipped a bug
+//! against (or nearly did). DESIGN.md §10 documents the incident behind
+//! every rule and the etiquette for suppressing one.
+//!
+//! Scopes. Rules see three kinds of source:
+//!
+//! * **library** — files under `rust/src/`, minus each file's trailing
+//!   `#[cfg(test)]` region (every test module in this tree is file-final;
+//!   the region heuristic is "first line containing `#[cfg(test)]` to end
+//!   of file");
+//! * **test-ish** — `rust/tests/`, `rust/benches/`, `examples/`, and the
+//!   in-file test regions;
+//! * **everything** — both of the above plus `tools/`.
+//!
+//! Suppressions. `// lint:allow(<rule>): <reason>` on a line suppresses
+//! that rule on the same line; written as a standalone comment line it
+//! suppresses the next line that contains any code. Reasons are part of
+//! the contract — a suppression without one should not survive review.
+
+use crate::lexer::{mask, Masked};
+use crate::Finding;
+
+/// Static description of one rule, for `--help`/docs listings.
+pub struct RuleInfo {
+    /// Rule identifier, as used in `lint:allow(...)` and the baseline.
+    pub name: &'static str,
+    /// One-line summary of the invariant the rule protects.
+    pub summary: &'static str,
+}
+
+/// Every rule this linter knows, in reporting order.
+pub const RULES: [RuleInfo; 5] = [
+    RuleInfo {
+        name: "unspecified-hasher",
+        summary: "DefaultHasher/RandomState outside util::siphash — unspecified \
+                  algorithms change across toolchains (the PR 4 partitioner bug class)",
+    },
+    RuleInfo {
+        name: "wall-clock-in-sim",
+        summary: "Instant::now/SystemTime outside the metered-timing allowlist — \
+                  host time must never feed simulated results (DESIGN.md §2)",
+    },
+    RuleInfo {
+        name: "raw-thread-spawn",
+        summary: "std::thread::spawn/Builder outside util::pool — parallelism must \
+                  stay under the shared WorkerPool budget (DESIGN.md §9)",
+    },
+    RuleInfo {
+        name: "guard-across-notify",
+        summary: "notify_all/notify_one/send while a Mutex guard bound on an \
+                  earlier line is still live (the PR 4 lost-wakeup class)",
+    },
+    RuleInfo {
+        name: "unwrap-in-library",
+        summary: "unwrap/expect/panic! in non-test library code — grandfathered \
+                  via the baseline; new code returns typed errors instead",
+    },
+];
+
+/// True when `b` can continue an identifier (ASCII view; multi-byte chars
+/// never continue the ASCII identifiers our patterns name).
+fn ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Whether `line` contains `pat` with identifier boundaries respected on
+/// whichever ends of `pat` are themselves identifier characters (so
+/// `panic!` does not match `debug_panic!`, but `.expect(` needs no
+/// boundary after its parenthesis).
+fn has_pat(line: &str, pat: &str) -> bool {
+    let need_before = ident_byte(pat.as_bytes()[0]);
+    let need_after = ident_byte(*pat.as_bytes().last().expect("non-empty pattern"));
+    for (pos, _) in line.match_indices(pat) {
+        let before_ok = pos == 0 || !ident_byte(line.as_bytes()[pos - 1]);
+        let end = pos + pat.len();
+        let after_ok = end >= line.len() || !ident_byte(line.as_bytes()[end]);
+        if (!need_before || before_ok) && (!need_after || after_ok) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Parse every `lint:allow(<rule>)` directive in the comment view into
+/// `(rule, suppressed 0-based line)` pairs. A directive on a line with
+/// code applies to that line; on a comment-only line it applies to the
+/// next line containing code.
+fn allows(masked: &Masked) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, comment) in masked.comments.iter().enumerate() {
+        let mut rest: &str = comment;
+        while let Some(p) = rest.find("lint:allow(") {
+            rest = &rest[p + "lint:allow(".len()..];
+            let Some(close) = rest.find(')') else { break };
+            let rule = rest[..close].trim().to_string();
+            rest = &rest[close + 1..];
+            if rule.is_empty() {
+                continue;
+            }
+            let target = if masked.code[idx].trim().is_empty() {
+                // Standalone comment: attach to the next code-bearing line.
+                (idx + 1..masked.code.len()).find(|&j| !masked.code[j].trim().is_empty())
+            } else {
+                Some(idx)
+            };
+            if let Some(t) = target {
+                out.push((rule.clone(), t));
+            }
+        }
+    }
+    out
+}
+
+/// First occurrence of the keyword `let ` (identifier boundary on the
+/// left, so `booklet ` never matches).
+fn find_let(l: &str) -> Option<usize> {
+    l.match_indices("let ")
+        .map(|(pos, _)| pos)
+        .find(|&pos| pos == 0 || !ident_byte(l.as_bytes()[pos - 1]))
+}
+
+/// A live `let <name> = …lock()…` binding tracked by the
+/// `guard-across-notify` heuristic.
+struct Guard {
+    /// The bound name when it is a plain identifier (enables
+    /// `drop(<name>)` release); `None` for patterns like `Ok(g)`.
+    name: Option<String>,
+    /// Brace depth at the binding site; the guard dies when the running
+    /// depth falls below it.
+    depth: i64,
+}
+
+/// Check one file. `rel` is the repo-relative path with `/` separators —
+/// rule scoping is path-based, so callers must not pass absolute paths.
+pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
+    let masked = mask(src);
+    let raw: Vec<&str> = src.lines().collect();
+    let lines = &masked.code;
+    let in_library = rel.starts_with("rust/src/");
+    let test_file = rel.starts_with("rust/tests/")
+        || rel.starts_with("rust/benches/")
+        || rel.starts_with("examples/");
+    // Trailing-test-module heuristic: everything from the first
+    // `#[cfg(test)]` to end of file is test code (holds tree-wide; a
+    // mid-file test module would over-exempt what follows it, which is the
+    // conservative failure mode for rules that skip tests).
+    let test_from = lines
+        .iter()
+        .position(|l| l.contains("#[cfg(test)]"))
+        .unwrap_or(usize::MAX);
+    let is_test = |i: usize| test_file || i >= test_from;
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut push = |rule: &'static str, line_idx: usize| {
+        let excerpt: String = raw.get(line_idx).map_or("", |l| l.trim()).chars().take(90).collect();
+        findings.push(Finding {
+            rule,
+            path: rel.to_string(),
+            line: line_idx + 1,
+            excerpt,
+        });
+    };
+
+    // ---- unspecified-hasher: everywhere but the pinned implementation ----
+    if rel != "rust/src/util/siphash.rs" {
+        for (i, l) in lines.iter().enumerate() {
+            if has_pat(l, "DefaultHasher") || has_pat(l, "RandomState") {
+                push("unspecified-hasher", i);
+            }
+        }
+    }
+
+    // ---- wall-clock-in-sim: library code minus the metering layer --------
+    if in_library && !rel.starts_with("rust/src/bench_harness/") {
+        for (i, l) in lines.iter().enumerate() {
+            if !is_test(i) && (has_pat(l, "Instant::now") || has_pat(l, "SystemTime")) {
+                push("wall-clock-in-sim", i);
+            }
+        }
+    }
+
+    // ---- raw-thread-spawn: library code minus the pool itself ------------
+    if in_library && rel != "rust/src/util/pool.rs" {
+        for (i, l) in lines.iter().enumerate() {
+            if !is_test(i) && (has_pat(l, "thread::spawn") || has_pat(l, "thread::Builder")) {
+                push("raw-thread-spawn", i);
+            }
+        }
+    }
+
+    // ---- guard-across-notify: a scope heuristic over library code --------
+    if in_library {
+        let mut depth: i64 = 0;
+        let mut guards: Vec<Guard> = Vec::new();
+        for (i, l) in lines.iter().enumerate() {
+            if is_test(i) {
+                break; // test modules are file-final
+            }
+            // 1. `drop(<name>)` releases that guard wherever it appears.
+            guards.retain(|g| match &g.name {
+                Some(nm) => !l.contains(&format!("drop({nm})")),
+                None => true,
+            });
+            let opens = l.matches('{').count() as i64;
+            let closes = l.matches('}').count() as i64;
+            // 2. Bind: `let <name> = …lock()` on one line. The binding
+            //    depth counts only braces left of the lock call, so a
+            //    `{ let g = m.lock(); }` one-liner scopes correctly.
+            if let Some(lockpos) = l.find(".lock()") {
+                if let Some(letpos) = find_let(l) {
+                    if letpos < lockpos {
+                        if let Some(eqoff) = l[letpos..lockpos].find('=') {
+                            let raw_name = l[letpos + 4..letpos + eqoff].trim();
+                            let raw_name = raw_name.strip_prefix("mut ").unwrap_or(raw_name).trim();
+                            let plain = !raw_name.is_empty()
+                                && raw_name.bytes().all(ident_byte)
+                                && !raw_name.as_bytes()[0].is_ascii_digit();
+                            if raw_name != "_" {
+                                let before = &l[..lockpos];
+                                let bind_depth = depth + before.matches('{').count() as i64
+                                    - before.matches('}').count() as i64;
+                                guards.push(Guard {
+                                    name: plain.then(|| raw_name.to_string()),
+                                    depth: bind_depth,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            // 3. Waking or sending while any tracked guard is live is the
+            //    PR 4 lost-wakeup shape: the waiter can observe the
+            //    notification before the state change commits.
+            let notifies = l.contains(".notify_all(")
+                || l.contains(".notify_one(")
+                || l.contains(".send(");
+            if notifies && !guards.is_empty() {
+                push("guard-across-notify", i);
+            }
+            // 4. Scope release at end of line.
+            depth += opens - closes;
+            guards.retain(|g| g.depth <= depth);
+        }
+    }
+
+    // ---- unwrap-in-library: ratcheted via the baseline -------------------
+    if in_library {
+        for (i, l) in lines.iter().enumerate() {
+            if !is_test(i)
+                && (l.contains(".unwrap()") || l.contains(".expect(") || has_pat(l, "panic!"))
+            {
+                push("unwrap-in-library", i);
+            }
+        }
+    }
+
+    // ---- apply suppressions ---------------------------------------------
+    let allowed = allows(&masked);
+    findings.retain(|f| {
+        !allowed
+            .iter()
+            .any(|(rule, line)| rule == f.rule && *line == f.line - 1)
+    });
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}

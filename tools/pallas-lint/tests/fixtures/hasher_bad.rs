@@ -1,0 +1,16 @@
+// Fixture: unspecified-hasher must fire on both std names in code.
+use std::collections::hash_map::{DefaultHasher, RandomState};
+use std::hash::{BuildHasher, Hasher};
+
+pub fn digest(bytes: &[u8]) -> u64 {
+    let mut h = DefaultHasher::new();
+    h.write(bytes);
+    h.finish()
+}
+
+pub fn keyed(bytes: &[u8]) -> u64 {
+    let s = RandomState::new();
+    let mut h = s.build_hasher();
+    h.write(bytes);
+    h.finish()
+}

@@ -1,0 +1,14 @@
+// Fixture: the pinned hasher is fine, and prose/data mentions of
+// DefaultHasher must not fire: the lexer masks comments and strings.
+// (This comment says DefaultHasher and RandomState on purpose.)
+use crate::util::siphash::SipHasher13;
+use std::hash::Hasher;
+
+/// Doc comment mentioning DefaultHasher, also masked.
+pub fn digest(bytes: &[u8]) -> u64 {
+    let mut h = SipHasher13::new();
+    h.write(bytes);
+    let _msg = "replaced DefaultHasher with a pinned RandomState-free hasher";
+    let _raw = r#"DefaultHasher in a raw string"#;
+    h.finish()
+}

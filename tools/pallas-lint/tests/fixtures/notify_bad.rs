@@ -1,0 +1,19 @@
+// Fixture: waking or sending while a lock guard is provably live — the
+// lost-wakeup / locked-send shapes the heuristic exists for.
+use std::sync::{Condvar, Mutex};
+
+pub fn notify_under_lock(m: &Mutex<bool>, cv: &Condvar) {
+    let mut flag = m.lock().unwrap();
+    *flag = true;
+    cv.notify_all();
+}
+
+pub fn send_under_lock(m: &Mutex<Vec<u32>>, tx: &std::sync::mpsc::Sender<u32>) {
+    let queue = m.lock().unwrap();
+    tx.send(queue.len() as u32).unwrap();
+}
+
+pub fn one_liner(m: &Mutex<bool>, cv: &Condvar) {
+    let g = m.lock().unwrap(); cv.notify_one();
+    drop(g);
+}

@@ -1,0 +1,22 @@
+// Fixture: the three sanctioned shapes — drop-then-notify, scope-then-
+// notify, and sending with no guard in sight.
+use std::sync::{Condvar, Mutex};
+
+pub fn drop_then_notify(m: &Mutex<bool>, cv: &Condvar) {
+    let mut flag = m.lock().unwrap();
+    *flag = true;
+    drop(flag);
+    cv.notify_all();
+}
+
+pub fn scope_then_notify(m: &Mutex<bool>, cv: &Condvar) {
+    {
+        let mut flag = m.lock().unwrap();
+        *flag = true;
+    }
+    cv.notify_all();
+}
+
+pub fn unlocked_send(tx: &std::sync::mpsc::Sender<u32>) {
+    tx.send(7).unwrap();
+}

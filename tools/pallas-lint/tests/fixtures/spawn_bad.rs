@@ -1,0 +1,8 @@
+// Fixture: raw thread creation outside the pool must fire, for both the
+// free function and the Builder route.
+pub fn scatter(n: usize) {
+    for _ in 0..n {
+        std::thread::spawn(|| {});
+    }
+    let _ = std::thread::Builder::new().name("rogue".into()).spawn(|| {});
+}

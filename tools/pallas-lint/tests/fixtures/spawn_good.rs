@@ -1,0 +1,9 @@
+// Fixture: parallelism through the shared pool is the sanctioned shape;
+// `thread::sleep` and the word `spawn` as a method name are not flagged.
+use crate::util::pool::WorkerPool;
+
+pub fn fan_out(pool: &WorkerPool, n: usize) {
+    for _ in 0..n {
+        pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+    }
+}

@@ -1,0 +1,13 @@
+// Fixture: panicking shortcuts in library code. `unwrap_or` variants and
+// `expect_err` must NOT fire — only the panicking three.
+pub fn brittle(input: Option<u32>, text: &str) -> u32 {
+    let n = input.unwrap();
+    let m: u32 = text.parse().expect("a number");
+    if n + m == 0 {
+        panic!("zero");
+    }
+    let _soft = input.unwrap_or(0);
+    let _soft2 = input.unwrap_or_else(|| 1);
+    let _soft3: Result<u32, u32> = Err(3);
+    n + m
+}

@@ -1,0 +1,20 @@
+// Fixture: the same panicking shortcuts are fine inside the trailing
+// test module — tests are supposed to assert hard.
+pub fn solid(input: Option<u32>) -> Option<u32> {
+    input.map(|n| n + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asserts_hard() {
+        assert_eq!(solid(Some(1)).unwrap(), 2);
+        let n: u32 = "7".parse().expect("a number");
+        assert_eq!(n, 7);
+        if false {
+            panic!("unreached");
+        }
+    }
+}

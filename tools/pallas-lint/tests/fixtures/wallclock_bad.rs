@@ -1,0 +1,8 @@
+// Fixture: wall-clock reads in library code must fire.
+use std::time::{Instant, SystemTime};
+
+pub fn simulated_phase_time() -> f64 {
+    let t0 = Instant::now();
+    let _stamp = SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

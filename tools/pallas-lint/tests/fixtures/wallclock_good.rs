@@ -1,0 +1,14 @@
+// Fixture: a deliberate wall-clock meter carries an allow with a reason,
+// in both the standalone-line and same-line forms.
+use std::time::Instant;
+
+pub fn metered() -> f64 {
+    // lint:allow(wall-clock-in-sim): task meter — reported, never fed to the simulation
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn metered_inline() -> f64 {
+    let t0 = Instant::now(); // lint:allow(wall-clock-in-sim): same-line meter
+    t0.elapsed().as_secs_f64()
+}

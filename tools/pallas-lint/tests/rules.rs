@@ -1,0 +1,233 @@
+//! Fixture-based rule tests: one good/bad source pair per rule, plus
+//! lexer masking, allow-comment honoring, and baseline round-trips.
+
+use std::collections::BTreeMap;
+
+use pallas_lint::{baseline, lexer, lint_source, rules, Finding};
+
+/// Lint a fixture file under a fake repo-relative path (rule scoping is
+/// path-based, so the path is part of the test).
+fn lint_fixture(rel: &str, fixture: &str) -> Vec<Finding> {
+    let path = format!("{}/tests/fixtures/{fixture}", env!("CARGO_MANIFEST_DIR"));
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    lint_source(rel, &src)
+}
+
+/// The `(line, …)` pairs of every finding of `rule`.
+fn lines_of<'a>(findings: &'a [Finding], rule: &str) -> Vec<usize> {
+    findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+}
+
+// ---- one bad/good pair per rule -----------------------------------------
+
+#[test]
+fn unspecified_hasher_fires_and_spares_the_pinned_impl() {
+    let bad = lint_fixture("rust/src/fake/hasher.rs", "hasher_bad.rs");
+    assert_eq!(lines_of(&bad, "unspecified-hasher"), vec![2, 6, 12]);
+
+    let good = lint_fixture("rust/src/fake/hasher.rs", "hasher_good.rs");
+    assert_eq!(lines_of(&good, "unspecified-hasher"), Vec::<usize>::new());
+
+    // The same bad source inside util::siphash itself is exempt.
+    let in_impl = lint_fixture("rust/src/util/siphash.rs", "hasher_bad.rs");
+    assert_eq!(lines_of(&in_impl, "unspecified-hasher"), Vec::<usize>::new());
+}
+
+#[test]
+fn wall_clock_fires_in_library_and_spares_the_metering_layer() {
+    let bad = lint_fixture("rust/src/cluster/fake.rs", "wallclock_bad.rs");
+    assert_eq!(lines_of(&bad, "wall-clock-in-sim"), vec![2, 5, 6]);
+
+    let good = lint_fixture("rust/src/cluster/fake.rs", "wallclock_good.rs");
+    assert_eq!(lines_of(&good, "wall-clock-in-sim"), Vec::<usize>::new());
+
+    // bench_harness is the sanctioned home of host timing.
+    let harness = lint_fixture("rust/src/bench_harness/fake.rs", "wallclock_bad.rs");
+    assert_eq!(lines_of(&harness, "wall-clock-in-sim"), Vec::<usize>::new());
+
+    // Benches and tests measure wall time legitimately.
+    let bench = lint_fixture("rust/benches/fake.rs", "wallclock_bad.rs");
+    assert_eq!(lines_of(&bench, "wall-clock-in-sim"), Vec::<usize>::new());
+}
+
+#[test]
+fn raw_thread_spawn_fires_outside_the_pool() {
+    let bad = lint_fixture("rust/src/coordinator/fake.rs", "spawn_bad.rs");
+    assert_eq!(lines_of(&bad, "raw-thread-spawn"), vec![5, 7]);
+
+    let good = lint_fixture("rust/src/coordinator/fake.rs", "spawn_good.rs");
+    assert_eq!(lines_of(&good, "raw-thread-spawn"), Vec::<usize>::new());
+
+    // The pool is where threads are allowed to be born.
+    let in_pool = lint_fixture("rust/src/util/pool.rs", "spawn_bad.rs");
+    assert_eq!(lines_of(&in_pool, "raw-thread-spawn"), Vec::<usize>::new());
+}
+
+#[test]
+fn guard_across_notify_fires_on_the_lost_wakeup_shapes() {
+    let bad = lint_fixture("rust/src/util/fake.rs", "notify_bad.rs");
+    assert_eq!(lines_of(&bad, "guard-across-notify"), vec![8, 13, 17]);
+
+    let good = lint_fixture("rust/src/util/fake.rs", "notify_good.rs");
+    assert_eq!(lines_of(&good, "guard-across-notify"), Vec::<usize>::new());
+}
+
+#[test]
+fn unwrap_fires_in_library_code_only() {
+    let bad = lint_fixture("rust/src/dataset/fake.rs", "unwrap_bad.rs");
+    assert_eq!(lines_of(&bad, "unwrap-in-library"), vec![4, 5, 7]);
+
+    let good = lint_fixture("rust/src/dataset/fake.rs", "unwrap_good.rs");
+    assert_eq!(lines_of(&good, "unwrap-in-library"), Vec::<usize>::new());
+
+    // The identical panicking code is exempt in integration tests…
+    let in_tests = lint_fixture("rust/tests/fake.rs", "unwrap_bad.rs");
+    assert_eq!(lines_of(&in_tests, "unwrap-in-library"), Vec::<usize>::new());
+    // …and outside the library tree entirely.
+    let in_tools = lint_fixture("tools/fake/src/main.rs", "unwrap_bad.rs");
+    assert_eq!(lines_of(&in_tools, "unwrap-in-library"), Vec::<usize>::new());
+}
+
+// ---- suppression comments ------------------------------------------------
+
+#[test]
+fn allow_comments_suppress_same_line_and_next_code_line() {
+    // wallclock_good.rs carries both forms over otherwise-flagged lines.
+    let good = lint_fixture("rust/src/cluster/fake.rs", "wallclock_good.rs");
+    assert!(good.is_empty(), "allow comments should suppress: {good:?}");
+
+    // An allow for a DIFFERENT rule must not suppress.
+    let src = "fn f() {\n\
+               // lint:allow(raw-thread-spawn): wrong rule on purpose\n\
+               let t = std::time::Instant::now();\n\
+               }\n";
+    let f = lint_source("rust/src/fake.rs", src);
+    assert_eq!(lines_of(&f, "wall-clock-in-sim"), vec![3]);
+}
+
+#[test]
+fn allow_directives_inside_strings_are_inert() {
+    let src = "fn f() {\n\
+               let _doc = \"lint:allow(wall-clock-in-sim): quoted, not real\";\n\
+               let t = std::time::Instant::now();\n\
+               }\n";
+    let f = lint_source("rust/src/fake.rs", src);
+    assert_eq!(lines_of(&f, "wall-clock-in-sim"), vec![3]);
+}
+
+// ---- lexer masking -------------------------------------------------------
+
+#[test]
+fn lexer_masks_comments_strings_and_char_literals() {
+    let src = "let a = \"DefaultHasher\"; // DefaultHasher in comment\n\
+               let b = r#\"DefaultHasher raw\"#;\n\
+               /* block DefaultHasher */ let c = 'x';\n\
+               let lifetime: &'static str = \"ok\";\n";
+    let m = lexer::mask(src);
+    assert_eq!(m.code.len(), 4);
+    for l in &m.code {
+        assert!(!l.contains("DefaultHasher"), "leaked into code view: {l:?}");
+    }
+    // Comments land in the comment view, strings in neither.
+    assert!(m.comments[0].contains("DefaultHasher in comment"));
+    assert!(m.comments.iter().all(|l| !l.contains("raw")));
+    // Delimiters and code shape survive masking.
+    assert!(m.code[0].contains("let a = \""));
+    assert!(m.code[3].contains("&'static str"));
+}
+
+#[test]
+fn lexer_distinguishes_lifetimes_from_char_literals() {
+    // A lifetime must not open a "char literal" that swallows the
+    // DefaultHasher reference on the same line.
+    let src = "fn f<'a>(x: &'a u32) { let h = DefaultHasher::new(); }\n\
+               let quote = '\"'; let h2 = DefaultHasher::new();\n";
+    let f = lint_source("rust/src/fake.rs", src);
+    assert_eq!(lines_of(&f, "unspecified-hasher"), vec![1, 2]);
+}
+
+#[test]
+fn lexer_handles_nested_block_comments() {
+    let src = "/* outer /* inner */ still comment DefaultHasher */\n\
+               let h = DefaultHasher::new();\n";
+    let f = lint_source("rust/src/fake.rs", src);
+    assert_eq!(lines_of(&f, "unspecified-hasher"), vec![2]);
+}
+
+// ---- baseline ------------------------------------------------------------
+
+fn finding(rule: &'static str, path: &str, line: usize) -> Finding {
+    Finding { rule, path: path.to_string(), line, excerpt: String::new() }
+}
+
+#[test]
+fn baseline_render_parse_round_trip() {
+    let findings = vec![
+        finding("unwrap-in-library", "rust/src/a.rs", 3),
+        finding("unwrap-in-library", "rust/src/a.rs", 9),
+        finding("wall-clock-in-sim", "rust/src/b.rs", 1),
+    ];
+    let map = baseline::counts(&findings);
+    let parsed = baseline::parse(&baseline::render(&map)).expect("round-trip");
+    assert_eq!(parsed, map);
+    assert_eq!(parsed[&("unwrap-in-library".into(), "rust/src/a.rs".into())], 2);
+}
+
+#[test]
+fn baseline_compare_reports_additions_and_staleness() {
+    let old = vec![
+        finding("unwrap-in-library", "rust/src/a.rs", 3),
+        finding("unwrap-in-library", "rust/src/a.rs", 9),
+    ];
+    let base = baseline::counts(&old);
+
+    // Same counts: clean.
+    let drift = baseline::compare(&old, &base);
+    assert!(drift.new.is_empty() && drift.stale.is_empty());
+
+    // One more unwrap in the same file: the whole group is reported.
+    let mut grown = old.clone();
+    grown.push(finding("unwrap-in-library", "rust/src/a.rs", 40));
+    let drift = baseline::compare(&grown, &base);
+    assert_eq!(drift.new.len(), 3);
+    assert!(drift.stale.is_empty());
+
+    // One removed: stale entry, nothing new. Regenerating ratchets down.
+    let shrunk = vec![finding("unwrap-in-library", "rust/src/a.rs", 3)];
+    let drift = baseline::compare(&shrunk, &base);
+    assert!(drift.new.is_empty());
+    assert_eq!(
+        drift.stale,
+        vec![(("unwrap-in-library".to_string(), "rust/src/a.rs".to_string()), 2, 1)]
+    );
+    let regenerated = baseline::counts(&shrunk);
+    let drift = baseline::compare(&shrunk, &regenerated);
+    assert!(drift.new.is_empty() && drift.stale.is_empty());
+
+    // A brand-new rule/file key with no baseline entry is always new.
+    let fresh = vec![finding("raw-thread-spawn", "rust/src/c.rs", 2)];
+    let drift = baseline::compare(&fresh, &BTreeMap::new());
+    assert_eq!(drift.new.len(), 1);
+}
+
+#[test]
+fn baseline_parse_rejects_garbage() {
+    assert!(baseline::parse("not a baseline line").is_err());
+    assert!(baseline::parse("rule\tpath\tNaN").is_err());
+    assert!(baseline::parse("r\tp\t1\nr\tp\t2\n").is_err(), "duplicate keys");
+    assert!(baseline::parse("# comment only\n\n").expect("comments ok").is_empty());
+}
+
+// ---- rule registry -------------------------------------------------------
+
+#[test]
+fn every_rule_is_documented_and_distinct() {
+    let mut names: Vec<&str> = rules::RULES.iter().map(|r| r.name).collect();
+    assert_eq!(names.len(), 5);
+    names.sort();
+    names.dedup();
+    assert_eq!(names.len(), 5, "duplicate rule names");
+    for r in &rules::RULES {
+        assert!(!r.summary.is_empty());
+    }
+}

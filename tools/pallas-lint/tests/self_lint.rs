@@ -1,0 +1,54 @@
+//! The linter's reason to exist: the repo itself must be clean against
+//! the checked-in baseline. This is the same check tier-1 CI enforces via
+//! `cargo run -p pallas-lint`; running it as a test means `cargo test`
+//! alone catches a violation before CI does.
+
+use std::path::Path;
+
+use pallas_lint::{baseline, default_baseline, lint_tree};
+
+#[test]
+fn repo_is_clean_against_checked_in_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let findings = lint_tree(&root).expect("scanning the repo");
+    let baseline_path = default_baseline(&root);
+    let text = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", baseline_path.display()));
+    let base = baseline::parse(&text).expect("checked-in baseline parses");
+
+    let drift = baseline::compare(&findings, &base);
+    // Staleness (an entry above the live count) is a warning, not a
+    // failure: deleting grandfathered code must never break the build.
+    // The CLI and the CI artifact surface it for the next ratchet-down.
+    for (key, budget, actual) in &drift.stale {
+        eprintln!("stale baseline entry: {key:?} baselined {budget}, live {actual}");
+    }
+    assert!(
+        drift.new.is_empty(),
+        "new lint findings above the baseline (fix, or suppress with a reasoned \
+         `// lint:allow(<rule>): <reason>` — see DESIGN.md §10):\n{}",
+        drift
+            .new
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn grandfathered_rules_match_known_magnitudes() {
+    // The baseline exists for exactly one rule today: unwrap-in-library.
+    // The determinism/concurrency rules must be CLEAN — a baseline entry
+    // appearing for one of them means a real invariant violation was
+    // grandfathered instead of fixed, which defeats the tool.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let findings = lint_tree(&root).expect("scanning the repo");
+    for f in &findings {
+        assert_eq!(
+            f.rule, "unwrap-in-library",
+            "only unwrap-in-library findings may exist in-tree (suppress deliberate \
+             cases inline with a reason): {f}"
+        );
+    }
+}
