@@ -56,8 +56,16 @@ fn main() {
         let on_slow = on_slow_session.run(&req).expect("valid request");
         let same = plan(&on_fast) == plan(&on_slow);
         println!("{}:", algo.name());
-        println!("  fast cluster plan (passes/phase): {:?}  -> {:.0} s", plan(&on_fast), on_fast.actual_time);
-        println!("  slow cluster plan (passes/phase): {:?}  -> {:.0} s", plan(&on_slow), on_slow.actual_time);
+        println!(
+            "  fast cluster plan (passes/phase): {:?}  -> {:.0} s",
+            plan(&on_fast),
+            on_fast.actual_time
+        );
+        println!(
+            "  slow cluster plan (passes/phase): {:?}  -> {:.0} s",
+            plan(&on_slow),
+            on_slow.actual_time
+        );
         println!(
             "  combining plan {} across cluster speeds\n",
             if same { "UNCHANGED" } else { "CHANGED" }

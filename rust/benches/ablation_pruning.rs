@@ -57,7 +57,9 @@ fn main() {
             "{:<12} {:>14} {:>14} {:>10}",
             "component", "VFPC (agg s)", "Opt-VFPC", "delta"
         );
-        for ((label, p), (_, o)) in breakdown(&pc, &cluster).into_iter().zip(breakdown(&oc, &cluster)) {
+        for ((label, p), (_, o)) in
+            breakdown(&pc, &cluster).into_iter().zip(breakdown(&oc, &cluster))
+        {
             let _ = writeln!(out, "{label:<12} {p:>14.1} {o:>14.1} {:>+10.1}", o - p);
         }
         let pcand: u64 = plain.phases.iter().map(|p| p.candidates).sum();

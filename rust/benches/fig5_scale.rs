@@ -61,7 +61,11 @@ fn main() {
 
     // ---- beyond the paper: Quest-family entries, streamed from disk -----
     let quest: Vec<String> = match std::env::var("FIG5_QUEST") {
-        Ok(list) => list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        Ok(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
         // Default to the 100K-class entries; the 1M entries run with
         // FIG5_QUEST=t10i4d1m,t40i10d1m (several minutes each).
         Err(_) => vec!["t10i4d100k".into(), "t40i10d100k".into()],
@@ -73,7 +77,12 @@ fn main() {
         match quest_scale_run(name, &quest_algos, &cluster, cache) {
             Ok(run) => {
                 for o in &run.outcomes {
-                    eprintln!("  {} {}: {:.0} s simulated", o.algorithm.name(), name, o.actual_time);
+                    eprintln!(
+                        "  {} {}: {:.0} s simulated",
+                        o.algorithm.name(),
+                        name,
+                        o.actual_time
+                    );
                 }
                 runs.push(run);
             }

@@ -9,7 +9,10 @@ use mrapriori::dataset::registry;
 const PAPER: [(&str, &[usize]); 3] = [
     ("c20d10k", &[38, 319, 1349, 3545, 6352, 8163, 7615, 5230, 2607, 918, 217, 31, 3]),
     ("chess", &[29, 307, 1716, 5992, 13927, 22442, 25713, 21111, 12329, 5027, 1384, 240, 19]),
-    ("mushroom", &[48, 530, 2510, 6751, 12372, 17008, 18745, 16887, 12290, 7052, 3094, 1001, 224, 31, 2]),
+    (
+        "mushroom",
+        &[48, 530, 2510, 6751, 12372, 17008, 18745, 16887, 12290, 7052, 3094, 1001, 224, 31, 2],
+    ),
 ];
 
 fn main() {

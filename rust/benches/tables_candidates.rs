@@ -36,7 +36,9 @@ fn main() {
         let refs: Vec<_> = runs.iter().collect();
         let t = candidates_table(
             &refs,
-            &format!("Table {table_no}: candidates per MapReduce phase, {name} @ min_sup {min_sup}"),
+            &format!(
+                "Table {table_no}: candidates per MapReduce phase, {name} @ min_sup {min_sup}"
+            ),
         );
         println!("{t}");
         all.push_str(&t);

@@ -100,7 +100,8 @@ pub fn run_calibration(emit: bool) -> String {
     let _ = writeln!(s, "shape correlation (pearson): {:.3}", cal.correlation);
     if emit {
         apply_scale(&mut cluster, cal.scale);
-        let _ = writeln!(s, "\n# fitted cluster config:\n{}", crate::config::render_cluster(&cluster));
+        let _ =
+            writeln!(s, "\n# fitted cluster config:\n{}", crate::config::render_cluster(&cluster));
     }
     s
 }

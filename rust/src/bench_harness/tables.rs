@@ -117,8 +117,17 @@ fn render_figure(result: &SweepResult, dataset: &str, sub: &str, algos: &[Algori
 /// time spread over the passes each phase combined, plus Total and Actual.
 pub fn phase_time_table(outcomes: &[&MiningOutcome], title: &str) -> String {
     use std::fmt::Write as _;
-    let max_pass =
-        outcomes.iter().map(|o| o.phases.iter().map(|p| p.first_pass + p.n_passes.max(1) - 1).max().unwrap_or(1)).max().unwrap_or(1);
+    let max_pass = outcomes
+        .iter()
+        .map(|o| {
+            o.phases
+                .iter()
+                .map(|p| p.first_pass + p.n_passes.max(1) - 1)
+                .max()
+                .unwrap_or(1)
+        })
+        .max()
+        .unwrap_or(1);
     let mut s = String::new();
     let _ = writeln!(s, "# {title}");
     let _ = write!(s, "{:<22}", "Algorithm (phases)");
@@ -135,7 +144,11 @@ pub fn phase_time_table(outcomes: &[&MiningOutcome], title: &str) -> String {
             // mirroring the paper's merged cells.
             let first = ph.first_pass - 1;
             cells[first] = format!("{:.0}", ph.elapsed);
-            for c in cells.iter_mut().take(ph.first_pass + ph.n_passes.max(1) - 1).skip(ph.first_pass) {
+            for c in cells
+                .iter_mut()
+                .take(ph.first_pass + ph.n_passes.max(1) - 1)
+                .skip(ph.first_pass)
+            {
                 *c = "·".into();
             }
         }
@@ -150,7 +163,8 @@ pub fn phase_time_table(outcomes: &[&MiningOutcome], title: &str) -> String {
     let _ = writeln!(s);
     for o in outcomes {
         let jobs: Vec<&str> = o.phases.iter().map(|p| p.job.as_str()).collect();
-        let _ = writeln!(s, "{:<22} {}", format!("  {} jobs:", o.algorithm.name()), jobs.join(" | "));
+        let _ =
+            writeln!(s, "{:<22} {}", format!("  {} jobs:", o.algorithm.name()), jobs.join(" | "));
     }
     s
 }
@@ -461,8 +475,17 @@ pub fn fault_phase_table(outcomes: &[&MiningOutcome], title: &str) -> String {
 /// Candidates-per-phase table (Tables 7-9 layout).
 pub fn candidates_table(outcomes: &[&MiningOutcome], title: &str) -> String {
     use std::fmt::Write as _;
-    let max_pass =
-        outcomes.iter().map(|o| o.phases.iter().map(|p| p.first_pass + p.n_passes.max(1) - 1).max().unwrap_or(1)).max().unwrap_or(1);
+    let max_pass = outcomes
+        .iter()
+        .map(|o| {
+            o.phases
+                .iter()
+                .map(|p| p.first_pass + p.n_passes.max(1) - 1)
+                .max()
+                .unwrap_or(1)
+        })
+        .max()
+        .unwrap_or(1);
     let mut s = String::new();
     let _ = writeln!(s, "# {title}");
     let _ = write!(s, "{:<22}", "Algorithm");
@@ -476,7 +499,11 @@ pub fn candidates_table(outcomes: &[&MiningOutcome], title: &str) -> String {
         for ph in o.phases.iter().skip(1) {
             let first = ph.first_pass;
             cells[first] = format!("{}", ph.candidates);
-            for c in cells.iter_mut().take(ph.first_pass + ph.n_passes.max(1)).skip(ph.first_pass + 1) {
+            for c in cells
+                .iter_mut()
+                .take(ph.first_pass + ph.n_passes.max(1))
+                .skip(ph.first_pass + 1)
+            {
                 *c = "·".into();
             }
         }

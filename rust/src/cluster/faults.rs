@@ -221,7 +221,8 @@ impl Sim<'_> {
         }
         self.free_at[p.slot] = finish;
         self.inflight[task] += 1;
-        self.heap.push(Attempt { finish, start: p.start, task, speculative, fails, id: self.next_id });
+        self.heap
+            .push(Attempt { finish, start: p.start, task, speculative, fails, id: self.next_id });
         self.next_id += 1;
     }
 

@@ -253,13 +253,25 @@ mod tests {
         let mut counters = Counters::new();
         counters.add(keys::SUBSET_VISITS, visits);
         counters.add(keys::COMBINE_OUTPUT_TUPLES, combine_out);
-        TaskMeter { task_id: 0, job: "test".into(), counters, preferred_nodes: nodes, wall_secs: 0.0 }
+        TaskMeter {
+            task_id: 0,
+            job: "test".into(),
+            counters,
+            preferred_nodes: nodes,
+            wall_secs: 0.0,
+        }
     }
 
     fn reduce_meter(tuples: u64) -> TaskMeter {
         let mut counters = Counters::new();
         counters.add(keys::REDUCE_INPUT_TUPLES, tuples);
-        TaskMeter { task_id: 0, job: "test".into(), counters, preferred_nodes: vec![], wall_secs: 0.0 }
+        TaskMeter {
+            task_id: 0,
+            job: "test".into(),
+            counters,
+            preferred_nodes: vec![],
+            wall_secs: 0.0,
+        }
     }
 
     #[test]

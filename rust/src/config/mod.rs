@@ -133,7 +133,11 @@ pub fn render_cluster(cfg: &ClusterConfig) -> String {
     let _ = writeln!(s, "[cluster]");
     let uniform = cfg.nodes.iter().all(|n| (n.speed - 1.0).abs() < 1e-12);
     let _ = writeln!(s, "data_nodes = {}", cfg.nodes.len());
-    let _ = writeln!(s, "map_slots_per_node = {}", cfg.nodes.first().map(|n| n.map_slots).unwrap_or(4));
+    let _ = writeln!(
+        s,
+        "map_slots_per_node = {}",
+        cfg.nodes.first().map(|n| n.map_slots).unwrap_or(4)
+    );
     if !uniform {
         let speeds: Vec<String> = cfg.nodes.iter().map(|n| format!("{}", n.speed)).collect();
         let _ = writeln!(s, "node_speeds = [{}]", speeds.join(", "));

@@ -342,8 +342,12 @@ mod tests {
         let l2 = l_of(2, &[&[1, 2], &[1, 3], &[1, 4], &[2, 3], &[3, 4]]);
         let txns: &[&[u32]] = &[&[1, 2, 3], &[1, 3, 4], &[1, 2, 3, 4]];
 
-        let mut plain =
-            Job2Mapper::standalone(Arc::clone(&l2), PassPolicy::Fixed(2), false, GenMode::PerRecord);
+        let mut plain = Job2Mapper::standalone(
+            Arc::clone(&l2),
+            PassPolicy::Fixed(2),
+            false,
+            GenMode::PerRecord,
+        );
         let mut ctx_p = run_mapper(&mut plain, txns);
         let mut opt = Job2Mapper::standalone(l2, PassPolicy::Fixed(2), true, GenMode::PerRecord);
         let mut ctx_o = run_mapper(&mut opt, txns);
@@ -364,9 +368,14 @@ mod tests {
     fn gen_mode_changes_charged_cost_not_output() {
         let l1 = l_of(1, &[&[1], &[2], &[3]]);
         let txns: &[&[u32]] = &[&[1, 2, 3], &[1, 2], &[2, 3]];
-        let mut per_rec =
-            Job2Mapper::standalone(Arc::clone(&l1), PassPolicy::Fixed(2), false, GenMode::PerRecord);
-        let mut per_task = Job2Mapper::standalone(l1, PassPolicy::Fixed(2), false, GenMode::PerTask);
+        let mut per_rec = Job2Mapper::standalone(
+            Arc::clone(&l1),
+            PassPolicy::Fixed(2),
+            false,
+            GenMode::PerRecord,
+        );
+        let mut per_task =
+            Job2Mapper::standalone(l1, PassPolicy::Fixed(2), false, GenMode::PerTask);
         let mut ctx_r = run_mapper(&mut per_rec, txns);
         let mut ctx_t = run_mapper(&mut per_task, txns);
         assert_eq!(

@@ -284,7 +284,10 @@ mod tests {
             assert!(quest_params(bad).is_none(), "{bad:?} must not parse");
         }
         // Distinct entries get distinct seeds.
-        assert_ne!(quest_params("t10i4d100k").unwrap().seed, quest_params("t40i10d100k").unwrap().seed);
+        assert_ne!(
+            quest_params("t10i4d100k").unwrap().seed,
+            quest_params("t40i10d100k").unwrap().seed
+        );
         for name in QUEST_NAMES {
             assert!(quest_params(name).is_some(), "{name}");
             assert!(reference_min_sup(name).is_some(), "{name}");

@@ -101,8 +101,16 @@ where
     M::V: 'static,
     O: Send + 'static,
 {
-    let JobSpec { name, splits, mapper_factory, combiner, reducer, partitioner, n_reducers, workers } =
-        spec;
+    let JobSpec {
+        name,
+        splits,
+        mapper_factory,
+        combiner,
+        reducer,
+        partitioner,
+        n_reducers,
+        workers,
+    } = spec;
     let mut job: JobBuilder<M::K, M::V, O> = JobBuilder::new(name)
         .splits(splits)
         .mapper(move |task| mapper_factory(task))

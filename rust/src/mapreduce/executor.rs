@@ -317,8 +317,16 @@ impl Executor {
         V: Send + Clone + 'static,
         O: Send + 'static,
     {
-        let JobBuilder { name, splits, mapper_factory, combiner, reducer, partitioner, n_reducers, cancel } =
-            job;
+        let JobBuilder {
+            name,
+            splits,
+            mapper_factory,
+            combiner,
+            reducer,
+            partitioner,
+            n_reducers,
+            cancel,
+        } = job;
         let mapper_factory = mapper_factory
             .unwrap_or_else(|| panic!("job {name:?} submitted without a mapper"));
         let reducer =

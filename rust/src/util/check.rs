@@ -179,8 +179,14 @@ impl Gen for DbGen {
     fn shrink(&self, item: &SmallDb) -> Vec<SmallDb> {
         let mut out = Vec::new();
         if item.txns.len() > 1 {
-            out.push(SmallDb { universe: item.universe, txns: item.txns[..item.txns.len() / 2].to_vec() });
-            out.push(SmallDb { universe: item.universe, txns: item.txns[item.txns.len() / 2..].to_vec() });
+            out.push(SmallDb {
+                universe: item.universe,
+                txns: item.txns[..item.txns.len() / 2].to_vec(),
+            });
+            out.push(SmallDb {
+                universe: item.universe,
+                txns: item.txns[item.txns.len() / 2..].to_vec(),
+            });
             let mut popped = item.txns.clone();
             popped.pop();
             out.push(SmallDb { universe: item.universe, txns: popped });

@@ -100,7 +100,11 @@ impl FlagSet {
         let _ = writeln!(s, "{} — {}", self.command, self.about);
         let _ = writeln!(s, "\nFlags:");
         for spec in &self.specs {
-            let arg = if spec.takes_value { format!("--{} <v>", spec.name) } else { format!("--{}", spec.name) };
+            let arg = if spec.takes_value {
+                format!("--{} <v>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
             let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
             let _ = writeln!(s, "  {arg:<26} {}{def}", spec.help);
         }
@@ -129,7 +133,9 @@ impl FlagSet {
                         Some(v) => v,
                         None => {
                             i += 1;
-                            args.get(i).cloned().ok_or_else(|| FlagError::MissingValue(name.clone()))?
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| FlagError::MissingValue(name.clone()))?
                         }
                     }
                 } else {
@@ -185,7 +191,11 @@ impl Parsed {
         self.get(name).ok_or_else(|| FlagError::MissingRequired(name.to_string()))
     }
 
-    fn parse_as<T: std::str::FromStr>(&self, name: &str, ty: &'static str) -> Result<Option<T>, FlagError> {
+    fn parse_as<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        ty: &'static str,
+    ) -> Result<Option<T>, FlagError> {
         match self.get(name) {
             None => Ok(None),
             Some(raw) => raw.parse::<T>().map(Some).map_err(|_| FlagError::BadValue {

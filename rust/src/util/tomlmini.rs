@@ -120,7 +120,8 @@ impl Doc {
                 return Err(ParseError { line: lineno, msg: "empty key".into() });
             }
             let value = parse_value(value.trim(), lineno)?;
-            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let path =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
             if entries.insert(path.clone(), value).is_some() {
                 return Err(ParseError { line: lineno, msg: format!("duplicate key {path:?}") });
             }
