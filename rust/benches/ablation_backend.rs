@@ -1,94 +1,196 @@
-//! Ablation: counting backends — the paper's trie `subset()` walk vs the
-//! AOT-compiled XLA bit-matrix executable (JAX/Pallas authored) vs the
-//! native u64-bitset reference. Host wall-time on real candidate sets from
-//! each registry dataset.
+//! Ablation: Job2 counting backends, measured where they actually run —
+//! the session hot path. For c20d10k and t10i4d100k (the paper's dense
+//! and sparse reference shapes), mine with SPC once per backend (trie
+//! subset walk, vertical TID-bitmap, dense triangular, `auto`) and
+//! compare per-phase simulated seconds; SPC keeps every Job2 phase
+//! single-pass so each phase row is one backend's counting cost. All
+//! backends are asserted byte-identical before any number is reported
+//! (DESIGN.md §11). Emits `BENCH_backends.json` under
+//! `target/paper_results/` — the committed repo-root copy is the
+//! reviewable baseline the advisory `backend-bench` CI job diffs against.
+//!
+//! Run: `cargo bench --bench ablation_backend`
+//! Quick mode (CI telemetry): `BENCH_QUICK=1 cargo bench --bench ablation_backend`
 
-use mrapriori::apriori::gen::apriori_gen;
-use mrapriori::apriori::sequential::mine;
-use mrapriori::bench_harness::timing::{bench, save_report};
+use mrapriori::bench_harness::timing::save_report;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{
+    Algorithm, CountingBackend, MiningOutcome, MiningRequest, MiningSession,
+};
 use mrapriori::dataset::registry;
-use mrapriori::itemset::{Itemset, Trie};
-use mrapriori::runtime::counting::{count_bitset_reference, XlaCounter};
-use mrapriori::runtime::pjrt::{artifacts_dir, ArtifactSpec, PjrtRuntime};
+use mrapriori::hdfs;
 use std::fmt::Write as _;
 
-fn main() {
-    let mut out = String::new();
-    let _ = writeln!(out, "# Ablation: counting backend (trie vs XLA vs bitset)\n");
-    let xla = match PjrtRuntime::load(&artifacts_dir(), ArtifactSpec::DEFAULT) {
-        Ok(rt) => Some(XlaCounter::new(rt)),
-        Err(e) => {
-            let _ = writeln!(out, "XLA backend unavailable ({e}); run `make artifacts`.\n");
-            None
-        }
-    };
+/// One dataset's four backend runs, plus the request metadata the report
+/// needs to stay self-describing.
+struct DatasetRuns {
+    dataset: String,
+    n_txns: usize,
+    min_sup: f64,
+    runs: Vec<(CountingBackend, MiningOutcome)>,
+}
 
-    for name in registry::NAMES {
-        let db = registry::load(name);
-        // Take L2 -> C3 as the benchmark candidate set (biggest early pass).
-        let min_sup = registry::reference_min_sup(name).unwrap();
-        let r = mine(&db, min_sup);
-        let l2: Vec<Itemset> = r.levels[1].iter().map(|(s, _)| s.clone()).collect();
-        let l2_trie = Trie::from_itemsets(2, l2.iter());
-        let (c3, _) = apriori_gen(&l2_trie);
-        let cands = c3.itemsets();
-        let _ = writeln!(
-            out,
-            "## {name}: {} candidates x {} transactions (width {})",
-            cands.len(),
-            db.len(),
-            db.n_items
-        );
+fn mine_all_backends(
+    session: &MiningSession,
+    min_sup: f64,
+) -> Vec<(CountingBackend, MiningOutcome)> {
+    CountingBackend::ALL
+        .into_iter()
+        .map(|b| {
+            let out = session
+                .run(&MiningRequest::new(Algorithm::Spc).min_sup(min_sup).backend(b))
+                .expect("valid request");
+            (b, out)
+        })
+        .collect()
+}
 
-        // Trie walk (the paper's backend).
-        let mut trie = c3.clone();
-        let trie_stats = bench(1, 5, || {
-            trie.clear_counts();
-            for t in &db.txns {
-                std::hint::black_box(trie.count_transaction(t));
-            }
-        });
-        let pairs = (cands.len() * db.len()) as f64;
-        let _ = writeln!(
-            out,
-            "trie    {trie_stats}  ({:.1} M cand-txn pairs/s)",
-            trie_stats.per_sec(pairs) / 1e6
-        );
-
-        // Native u64 bitset.
-        let bitset_stats = bench(1, 5, || {
-            std::hint::black_box(count_bitset_reference(&cands, &db.txns, db.n_items.max(64)));
-        });
-        let _ = writeln!(
-            out,
-            "bitset  {bitset_stats}  ({:.1} M pairs/s)",
-            bitset_stats.per_sec(pairs) / 1e6
-        );
-
-        // XLA (interpret-lowered Pallas kernel via PJRT).
-        if let Some(counter) = &xla {
-            let xla_stats = bench(1, 3, || {
-                std::hint::black_box(counter.count(&cands, &db.txns).unwrap());
-            });
-            let _ = writeln!(
-                out,
-                "xla     {xla_stats}  ({:.1} M pairs/s)",
-                xla_stats.per_sec(pairs) / 1e6
-            );
-            // Cross-check equality.
-            let by_xla = counter.count(&cands, &db.txns).unwrap();
-            let by_bits = count_bitset_reference(&cands, &db.txns, 256);
-            assert_eq!(by_xla, by_bits, "{name}: backend mismatch");
-            let _ = writeln!(out, "numerics: xla == bitset == trie verified");
-        }
-        let _ = writeln!(out);
-    }
-    let _ = writeln!(
+fn json_runs(d: &DatasetRuns, out: &mut String) {
+    let _ = write!(
         out,
-        "note: the XLA path runs the Pallas kernel interpret-lowered on the CPU\n\
-         PJRT client — its wallclock is NOT a TPU estimate (see DESIGN.md\n\
-         §Hardware-Adaptation for the VMEM/MXU reasoning)."
+        "    {{\"dataset\": \"{}\", \"n_txns\": {}, \"min_sup\": {}, \"algorithm\": \"SPC\", \
+         \"backends\": [\n",
+        d.dataset, d.n_txns, d.min_sup
     );
-    println!("{out}");
-    save_report("ablation_backend.txt", &out);
+    for (i, (b, o)) in d.runs.iter().enumerate() {
+        let _ = write!(
+            out,
+            "      {{\"backend\": \"{}\", \"total_time\": {:.3}, \"actual_time\": {:.3}, \
+             \"wall_time\": {:.3}, \"phases\": [",
+            b.name(),
+            o.total_time,
+            o.actual_time,
+            o.wall_time
+        );
+        for (pi, p) in o.phases.iter().enumerate() {
+            let _ = write!(
+                out,
+                "{}{{\"job\": \"{}\", \"backend\": \"{}\", \"candidates\": {}, \
+                 \"elapsed\": {:.3}}}",
+                if pi > 0 { ", " } else { "" },
+                p.job,
+                p.backend_label(),
+                p.candidates,
+                p.elapsed
+            );
+        }
+        let _ = write!(out, "]}}{}\n", if i + 1 < d.runs.len() { "," } else { "" });
+    }
+    let _ = write!(out, "    ]}}");
+}
+
+fn main() {
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
+    let cluster = ClusterConfig::paper_cluster();
+    let mut datasets: Vec<DatasetRuns> = Vec::new();
+    let mut table = String::new();
+    let _ = writeln!(table, "# Ablation: Job2 counting backends on the session hot path\n");
+
+    // Dense reference shape: the paper's c20d10k at its reference support.
+    {
+        let db = registry::c20d10k();
+        let min_sup = if quick { 0.20 } else { registry::reference_min_sup("c20d10k").unwrap() };
+        let session = MiningSession::for_db(&db, cluster.clone())
+            .split_lines(registry::split_lines("c20d10k"))
+            .build()
+            .expect("valid session");
+        datasets.push(DatasetRuns {
+            dataset: db.name.clone(),
+            n_txns: db.len(),
+            min_sup,
+            runs: mine_all_backends(&session, min_sup),
+        });
+    }
+
+    // Sparse reference shape: Quest t10i4d100k, streamed from the segment
+    // store exactly as `sweep --datasets` mines it.
+    {
+        let name = "t10i4d100k";
+        let min_sup =
+            if quick { 0.02 } else { registry::reference_min_sup(name).unwrap_or(0.01) };
+        let cache = std::path::Path::new("target/dataset-cache");
+        let src = registry::quest_store(name, cache).expect("quest store");
+        let file = hdfs::put_segmented(
+            std::sync::Arc::new(src),
+            cluster.nodes.len(),
+            hdfs::DEFAULT_REPLICATION,
+            mrapriori::coordinator::RunOptions::default().seed,
+        );
+        let n_txns = file.len();
+        let session =
+            MiningSession::builder(file, cluster.clone()).build().expect("valid session");
+        datasets.push(DatasetRuns {
+            dataset: name.to_string(),
+            n_txns,
+            min_sup,
+            runs: mine_all_backends(&session, min_sup),
+        });
+    }
+
+    for d in &datasets {
+        // Output invariance first: numbers from diverging runs are noise.
+        let reference = d.runs[0].1.all_frequent();
+        for (b, o) in &d.runs[1..] {
+            assert_eq!(o.all_frequent(), reference, "{}: {b} diverges from trie", d.dataset);
+        }
+        let _ = writeln!(
+            table,
+            "## {} ({} txns, min_sup {}): {} frequent itemsets",
+            d.dataset,
+            d.n_txns,
+            d.min_sup,
+            d.runs[0].1.total_frequent()
+        );
+        let _ = writeln!(
+            table,
+            "{:<12} {:>12} {:>12} {:>10}   per-phase simulated s",
+            "backend", "simulated(s)", "actual(s)", "wall(s)"
+        );
+        for (b, o) in &d.runs {
+            let phases: Vec<String> = o
+                .phases
+                .iter()
+                .map(|p| format!("{}[{}]={:.1}", p.job, p.backend_label(), p.elapsed))
+                .collect();
+            let _ = writeln!(
+                table,
+                "{:<12} {:>12.1} {:>12.1} {:>10.3}   {}",
+                b.name(),
+                o.total_time,
+                o.actual_time,
+                o.wall_time,
+                phases.join(" ")
+            );
+        }
+        // Headline: best per-phase bitmap-vs-trie simulated speedup.
+        let trie = &d.runs[0].1;
+        let bitmap = &d.runs[1].1;
+        let best = trie
+            .phases
+            .iter()
+            .zip(&bitmap.phases)
+            .filter(|(t, _)| t.job.starts_with("job2"))
+            .map(|(t, b)| (t.job.clone(), t.elapsed / b.elapsed))
+            .max_by(|a, b| a.1.total_cmp(&b.1));
+        if let Some((job, x)) = best {
+            let _ = writeln!(table, "bitmap vs trie: best pass {job} at {x:.1}x\n");
+        }
+    }
+
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\n  \"bench\": \"counting_backends\",\n  \"quick\": {quick},\n  \
+         \"algorithm\": \"SPC\",\n  \"datasets\": [\n"
+    );
+    for (i, d) in datasets.iter().enumerate() {
+        json_runs(d, &mut json);
+        let _ = write!(json, "{}\n", if i + 1 < datasets.len() { "," } else { "" });
+    }
+    let _ = write!(json, "  ]\n}}\n");
+
+    println!("{table}");
+    save_report("ablation_backend.txt", &table);
+    save_report("BENCH_backends.json", &json);
+    print!("{json}");
 }

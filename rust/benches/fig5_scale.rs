@@ -10,7 +10,7 @@ use mrapriori::bench_harness::report::{figure_csv, figure_table, Series};
 use mrapriori::bench_harness::tables::{quest_scale_run, scale_json, scale_markdown, ScaleRun};
 use mrapriori::bench_harness::timing::save_report;
 use mrapriori::cluster::ClusterConfig;
-use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
+use mrapriori::coordinator::{Algorithm, CountingBackend, MiningRequest, MiningSession};
 use mrapriori::dataset::registry;
 
 fn main() {
@@ -74,7 +74,7 @@ fn main() {
     let quest_algos = [Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedEtdpc];
     let mut runs: Vec<ScaleRun> = Vec::new();
     for name in &quest {
-        match quest_scale_run(name, &quest_algos, &cluster, cache) {
+        match quest_scale_run(name, &quest_algos, CountingBackend::Auto, &cluster, cache) {
             Ok(run) => {
                 for o in &run.outcomes {
                     eprintln!(

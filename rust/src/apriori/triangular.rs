@@ -8,7 +8,7 @@
 use crate::itemset::{Item, Itemset};
 
 /// Dense upper-triangular pair counter over `n` items, plus item counts.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TriangularCounter {
     n: usize,
     item_counts: Vec<u64>,
@@ -186,6 +186,47 @@ mod tests {
                 }
             }
             true
+        });
+    }
+
+    #[test]
+    fn prop_merge_commutative_and_associative() {
+        // Split a random DB into three chunks, count each independently
+        // (three map tasks), and check the reduce-side merge is insensitive
+        // to order and grouping — the property the fused job and the
+        // triangular backend's combiner both rely on.
+        let gen = DbGen { universe: 10, max_txns: 24, max_width: 6 };
+        forall(904, 60, &gen, |sdb| {
+            let third = (sdb.txns.len() / 3).max(1);
+            let mut parts = vec![TriangularCounter::new(sdb.universe); 3];
+            for (i, t) in sdb.txns.iter().enumerate() {
+                parts[(i / third).min(2)].add_transaction(t);
+            }
+            let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+            let merged = |xs: &[&TriangularCounter]| {
+                let mut acc = xs[0].clone();
+                for x in &xs[1..] {
+                    acc.merge(x);
+                }
+                acc
+            };
+            // Commutativity: a ⊕ b == b ⊕ a.
+            if merged(&[a, b]) != merged(&[b, a]) {
+                return false;
+            }
+            // Associativity: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c).
+            let left = {
+                let mut ab = merged(&[a, b]);
+                ab.merge(c);
+                ab
+            };
+            let right = {
+                let bc = merged(&[b, c]);
+                let mut acc = a.clone();
+                acc.merge(&bc);
+                acc
+            };
+            left == right
         });
     }
 

@@ -4,7 +4,8 @@
 use super::report::{figure_table, Series};
 use crate::cluster::{ClusterConfig, FaultModel};
 use crate::coordinator::{
-    Algorithm, MiningError, MiningOutcome, MiningRequest, MiningSession, RunOptions,
+    Algorithm, CountingBackend, MiningError, MiningOutcome, MiningRequest, MiningSession,
+    RunOptions,
 };
 use crate::dataset::{registry, TransactionDb};
 use crate::hdfs;
@@ -159,10 +160,17 @@ pub fn phase_time_table(outcomes: &[&MiningOutcome], title: &str) -> String {
     }
     // Attribute each row's phases to the MapReduce jobs that ran them (the
     // executor threads the JobBuilder name through its task meters into
-    // PhaseRecord).
+    // PhaseRecord), tagged with each phase's resolved counting backend.
     let _ = writeln!(s);
     for o in outcomes {
-        let jobs: Vec<&str> = o.phases.iter().map(|p| p.job.as_str()).collect();
+        let jobs: Vec<String> = o
+            .phases
+            .iter()
+            .map(|p| match p.backend_label().as_str() {
+                "-" => p.job.clone(),
+                backend => format!("{} [{backend}]", p.job),
+            })
+            .collect();
         let _ =
             writeln!(s, "{:<22} {}", format!("  {} jobs:", o.algorithm.name()), jobs.join(" | "));
     }
@@ -178,6 +186,10 @@ pub struct ScaleRun {
     pub n_txns: usize,
     /// Fractional minimum support used for this row.
     pub min_sup: f64,
+    /// Counting backend every cell of this row was mined with (as
+    /// *requested* — `auto` resolves per pass; the per-phase picks live on
+    /// each outcome's [`crate::coordinator::PhaseRecord::backends`]).
+    pub backend: CountingBackend,
     /// One outcome per algorithm, parallel to the grid's algorithm list.
     pub outcomes: Vec<MiningOutcome>,
 }
@@ -190,6 +202,7 @@ pub struct ScaleRun {
 pub fn quest_scale_run(
     name: &str,
     algorithms: &[Algorithm],
+    backend: CountingBackend,
     cluster: &ClusterConfig,
     cache: &std::path::Path,
 ) -> anyhow::Result<ScaleRun> {
@@ -209,12 +222,14 @@ pub fn quest_scale_run(
     let session = MiningSession::builder(file, cluster.clone()).build()?;
     let mut outcomes = Vec::with_capacity(algorithms.len());
     for &algo in algorithms {
-        outcomes.push(session.run(&MiningRequest::new(algo).min_sup(min_sup))?);
+        outcomes
+            .push(session.run(&MiningRequest::new(algo).min_sup(min_sup).backend(backend))?);
     }
     Ok(ScaleRun {
         dataset: session.file().name.clone(),
         n_txns: session.file().len(),
         min_sup,
+        backend,
         outcomes,
     })
 }
@@ -237,18 +252,25 @@ fn json_escape(s: &str) -> String {
 pub fn scale_markdown(algorithms: &[Algorithm], runs: &[ScaleRun]) -> String {
     use std::fmt::Write as _;
     let mut s = String::new();
-    let _ = write!(s, "| dataset | transactions | min_sup |");
+    let _ = write!(s, "| dataset | transactions | min_sup | backend |");
     for a in algorithms {
         let _ = write!(s, " {} (s) |", a.name());
     }
     let _ = writeln!(s);
-    let _ = write!(s, "|---|---:|---:|");
+    let _ = write!(s, "|---|---:|---:|---|");
     for _ in algorithms {
         let _ = write!(s, "---:|");
     }
     let _ = writeln!(s);
     for run in runs {
-        let _ = write!(s, "| {} | {} | {:.4} |", run.dataset, run.n_txns, run.min_sup);
+        let _ = write!(
+            s,
+            "| {} | {} | {:.4} | {} |",
+            run.dataset,
+            run.n_txns,
+            run.min_sup,
+            run.backend.name()
+        );
         for o in &run.outcomes {
             let _ = write!(s, " {:.1} |", o.actual_time);
         }
@@ -270,10 +292,12 @@ pub fn scale_json(algorithms: &[Algorithm], runs: &[ScaleRun]) -> String {
     for (ri, run) in runs.iter().enumerate() {
         let _ = write!(
             s,
-            "    {{\"dataset\": \"{}\", \"n_txns\": {}, \"min_sup\": {}, \"results\": [",
+            "    {{\"dataset\": \"{}\", \"n_txns\": {}, \"min_sup\": {}, \"backend\": \"{}\", \
+             \"results\": [",
             json_escape(&run.dataset),
             run.n_txns,
             run.min_sup,
+            run.backend.name(),
         );
         for (i, o) in run.outcomes.iter().enumerate() {
             let _ = write!(
@@ -589,16 +613,19 @@ mod tests {
             dataset: db.name.clone(),
             n_txns: db.len(),
             min_sup: 0.3,
+            backend: CountingBackend::Trie,
             outcomes,
         }];
         let md = scale_markdown(&algorithms, &runs);
         assert!(md.contains("| dataset |"));
+        assert!(md.contains("| backend |"));
         assert!(md.contains("SPC (s)"));
         assert!(md.contains("Optimized-ETDPC (s)"));
-        assert!(md.contains(&format!("| {} | 120 | 0.3000 |", db.name)));
+        assert!(md.contains(&format!("| {} | 120 | 0.3000 | trie |", db.name)));
         let json = scale_json(&algorithms, &runs);
         assert!(json.contains("\"algorithms\": [\"SPC\", \"Optimized-ETDPC\"]"));
         assert!(json.contains("\"n_txns\": 120"));
+        assert!(json.contains("\"backend\": \"trie\""));
         assert!(json.contains("\"frequent\":"));
         // Balanced braces/brackets (cheap well-formedness check).
         for (open, close) in [('{', '}'), ('[', ']')] {
@@ -613,10 +640,16 @@ mod tests {
         let cache = std::env::temp_dir().join("mrapriori_tables_quest_cache");
         let _ = std::fs::remove_dir_all(&cache);
         let algorithms = vec![Algorithm::Spc];
-        let run =
-            quest_scale_run("t6i2d300", &algorithms, &ClusterConfig::uniform(2, 2), &cache)
-                .unwrap();
+        let run = quest_scale_run(
+            "t6i2d300",
+            &algorithms,
+            CountingBackend::Bitmap,
+            &ClusterConfig::uniform(2, 2),
+            &cache,
+        )
+        .unwrap();
         assert_eq!(run.dataset, "t6i2d300");
+        assert_eq!(run.backend, CountingBackend::Bitmap);
         assert_eq!(run.n_txns, 300);
         assert_eq!(run.outcomes.len(), 1);
         assert!(run.outcomes[0].total_frequent() > 0);

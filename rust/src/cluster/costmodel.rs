@@ -24,6 +24,14 @@ pub struct CostWeights {
     pub cand_built: f64,
     /// Per trie-node visit during subset() counting.
     pub subset_visit: f64,
+    /// Per u64-word operation of the TID-bitmap backend (build OR, or
+    /// AND+popcount). A word op touches 64 transaction slots at once, so it
+    /// is priced well below a per-candidate trie visit but above a plain
+    /// arithmetic op (memory traffic dominates).
+    pub bitmap_word: f64,
+    /// Per O(1) increment of the dense triangular pair matrix (fused
+    /// pass-1/2 job and the `triangular` k=2 backend).
+    pub triangle_update: f64,
     /// Per tuple leaving the combiner (sort/spill).
     pub combine_tuple: f64,
     /// Per tuple crossing the network in shuffle.
@@ -42,6 +50,8 @@ impl Default for CostWeights {
             prune_check: 1.5e-6,
             cand_built: 2.5e-7,
             subset_visit: 4.75e-6,
+            bitmap_word: 7.5e-7,
+            triangle_update: 2.5e-7,
             combine_tuple: 1.0e-5,
             shuffle_tuple: 5.0e-6,
             reduce_tuple: 1.0e-5,
@@ -58,6 +68,8 @@ impl CostWeights {
             + self.prune_check * c.get(keys::PRUNE_CHECKS) as f64
             + self.cand_built * c.get(keys::CANDS_BUILT) as f64
             + self.subset_visit * c.get(keys::SUBSET_VISITS) as f64
+            + self.bitmap_word * c.get(keys::BITMAP_WORD_OPS) as f64
+            + self.triangle_update * c.get(keys::TRIANGLE_UPDATES) as f64
             + self.combine_tuple * c.get(keys::COMBINE_OUTPUT_TUPLES) as f64
     }
 
@@ -114,6 +126,8 @@ mod tests {
             keys::PRUNE_CHECKS,
             keys::CANDS_BUILT,
             keys::SUBSET_VISITS,
+            keys::BITMAP_WORD_OPS,
+            keys::TRIANGLE_UPDATES,
             keys::COMBINE_OUTPUT_TUPLES,
         ] {
             let mut c = Counters::new();

@@ -119,6 +119,8 @@ pub fn cluster_from_doc(doc: &Doc) -> Result<ClusterConfig, ConfigError> {
     set_weight("weights.prune_check", &mut w.prune_check)?;
     set_weight("weights.cand_built", &mut w.cand_built)?;
     set_weight("weights.subset_visit", &mut w.subset_visit)?;
+    set_weight("weights.bitmap_word", &mut w.bitmap_word)?;
+    set_weight("weights.triangle_update", &mut w.triangle_update)?;
     set_weight("weights.combine_tuple", &mut w.combine_tuple)?;
     set_weight("weights.shuffle_tuple", &mut w.shuffle_tuple)?;
     set_weight("weights.reduce_tuple", &mut w.reduce_tuple)?;
@@ -158,6 +160,8 @@ pub fn render_cluster(cfg: &ClusterConfig) -> String {
     let _ = writeln!(s, "prune_check = {:e}", w.prune_check);
     let _ = writeln!(s, "cand_built = {:e}", w.cand_built);
     let _ = writeln!(s, "subset_visit = {:e}", w.subset_visit);
+    let _ = writeln!(s, "bitmap_word = {:e}", w.bitmap_word);
+    let _ = writeln!(s, "triangle_update = {:e}", w.triangle_update);
     let _ = writeln!(s, "combine_tuple = {:e}", w.combine_tuple);
     let _ = writeln!(s, "shuffle_tuple = {:e}", w.shuffle_tuple);
     let _ = writeln!(s, "reduce_tuple = {:e}", w.reduce_tuple);
@@ -196,6 +200,7 @@ job_submit = 7.5
 
 [weights]
 subset_visit = 1e-7
+bitmap_word = 2e-7
 "#;
         let cfg = cluster_from_doc(&Doc::parse(text).unwrap()).unwrap();
         assert_eq!(cfg.nodes.len(), 2);
@@ -204,8 +209,10 @@ subset_visit = 1e-7
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.overhead.job_submit, 7.5);
         assert_eq!(cfg.weights.subset_visit, 1e-7);
-        // Untouched weight keeps its default.
+        assert_eq!(cfg.weights.bitmap_word, 2e-7);
+        // Untouched weights keep their defaults.
         assert_eq!(cfg.weights.join_pair, CostWeights::default().join_pair);
+        assert_eq!(cfg.weights.triangle_update, CostWeights::default().triangle_update);
     }
 
     #[test]

@@ -16,10 +16,16 @@
 //! ablation (`cargo bench --bench ablation_pruning`).
 
 use crate::apriori::gen::{apriori_gen, non_apriori_gen, GenStats};
+use crate::apriori::triangular::TriangularCounter;
+use crate::cluster::CostWeights;
+use crate::dataset::stats::DensityProfile;
+use crate::itemset::bitmap::BitVec64;
 use crate::itemset::{Itemset, Trie};
 use crate::mapreduce::api::{Context, Mapper};
 use crate::mapreduce::counters::keys;
 use std::sync::Arc;
+
+pub use crate::runtime::counting::{CountingBackend, ParseBackendError};
 
 /// Algorithm 1: emits `(item, 1)` per item of each transaction.
 pub struct OneItemsetMapper;
@@ -32,6 +38,8 @@ impl Mapper for OneItemsetMapper {
         for &item in record {
             ctx.write(vec![item], 1);
         }
+        // Width bookkeeping for the dataset density profile (`auto` pick).
+        ctx.counters.add(keys::RECORD_ITEMS, record.len() as u64);
     }
 }
 
@@ -60,8 +68,10 @@ impl Mapper for FusedOneTwoMapper {
         let w = record.len() as u64;
         let updates = w + w * (w - 1) / 2;
         self.raw_writes += updates;
-        // Each triangle update is one O(1) counting op for the cost model.
-        ctx.counters.add(keys::SUBSET_VISITS, updates);
+        // Each triangle update is one O(1) counting op for the cost model —
+        // the same key (and weight) the `triangular` Job2 backend charges.
+        ctx.counters.add(keys::TRIANGLE_UPDATES, updates);
+        ctx.counters.add(keys::RECORD_ITEMS, w);
     }
 
     fn cleanup(&mut self, ctx: &mut Context<Itemset, u64>) {
@@ -96,6 +106,102 @@ pub enum GenMode {
     PerTask,
 }
 
+/// Largest dense universe the triangular backend accepts: the per-task
+/// triangle holds |I|²/2 u64 cells, so 2048 items ≈ 16 MiB per map task —
+/// beyond that the dense matrix loses to both other backends anyway.
+pub const TRIANGULAR_MAX_ITEMS: usize = 2048;
+
+/// Word-block size of the bitmap backend's cache-blocked candidate sweep:
+/// 512 words = 4 KiB per TID row per block, so a candidate's k rows plus
+/// its accumulator stay L1/L2-resident while the block is swept.
+const BITMAP_WORDS_PER_BLOCK: usize = 512;
+
+/// Inputs of the per-pass backend resolution (DESIGN.md §11): the dataset's
+/// density profile and the cluster's cost weights. `auto` estimates each
+/// applicable backend's map-side counting compute for a pass from candidate
+/// count × dataset density and picks the cheapest — the same linear model
+/// that later prices the counters the chosen backend actually charges.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendContext {
+    /// Dataset shape (N, |I|, avg width, density).
+    pub profile: DensityProfile,
+    /// The cluster's cost-model weights.
+    pub weights: CostWeights,
+}
+
+impl BackendContext {
+    /// Whether the dense triangular matrix applies to a pass: pairs only,
+    /// and a universe small enough for the per-task triangle.
+    pub fn triangular_applies(&self, k: usize) -> bool {
+        k == 2 && self.profile.n_items <= TRIANGULAR_MAX_ITEMS
+    }
+
+    /// Estimated map-side counting seconds for one pass of `n_cands`
+    /// k-itemset candidates over the whole dataset (`backend` must be
+    /// resolved, not `Auto`). Estimates, not measurements — each backend's
+    /// dominant counter priced by the cluster's weights:
+    ///
+    /// * trie: visits ≈ N · |C| · Σ_{j=1..k} density^j (a depth-j node is
+    ///   reached when its j-prefix is contained in the transaction, which
+    ///   for an average transaction happens with probability ≈ density^j);
+    /// * bitmap: N·w̄ build word-ORs + |C| · k · ⌈N/64⌉ AND+popcount words;
+    /// * triangular: N · (w̄ + w̄(w̄−1)/2) matrix increments.
+    pub fn estimate_secs(&self, backend: CountingBackend, k: usize, n_cands: u64) -> f64 {
+        let n = self.profile.n_txns as f64;
+        let w = self.profile.avg_width;
+        let d = self.profile.density.clamp(0.0, 1.0);
+        match backend {
+            CountingBackend::Trie => {
+                let depth_sum: f64 = (1..=k as u32).map(|j| d.powi(j as i32)).sum();
+                self.weights.subset_visit * n * n_cands as f64 * depth_sum
+            }
+            CountingBackend::Bitmap => {
+                let words = (n / 64.0).ceil();
+                self.weights.bitmap_word * (n * w + n_cands as f64 * k as f64 * words)
+            }
+            CountingBackend::Triangular => {
+                self.weights.triangle_update * n * (w + w * (w - 1.0).max(0.0) / 2.0)
+            }
+            CountingBackend::Auto => unreachable!("estimate_secs takes resolved backends"),
+        }
+    }
+
+    /// Resolve the requested backend for one pass trie of level `k` with
+    /// `n_cands` candidates. Never returns `Auto`; `Triangular` falls back
+    /// to the trie walk where the dense matrix does not apply.
+    pub fn resolve(&self, requested: CountingBackend, k: usize, n_cands: u64) -> CountingBackend {
+        match requested {
+            CountingBackend::Trie => CountingBackend::Trie,
+            CountingBackend::Bitmap => CountingBackend::Bitmap,
+            CountingBackend::Triangular => {
+                if self.triangular_applies(k) {
+                    CountingBackend::Triangular
+                } else {
+                    CountingBackend::Trie
+                }
+            }
+            CountingBackend::Auto => {
+                let mut choices = vec![CountingBackend::Trie, CountingBackend::Bitmap];
+                if self.triangular_applies(k) {
+                    choices.push(CountingBackend::Triangular);
+                }
+                // Deterministic argmin: strict < keeps the earlier choice
+                // on ties, so the pick is stable across platforms.
+                let mut best = choices[0];
+                let mut best_cost = self.estimate_secs(best, k, n_cands);
+                for &b in &choices[1..] {
+                    let cost = self.estimate_secs(b, k, n_cands);
+                    if cost < best_cost {
+                        best = b;
+                        best_cost = cost;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
 /// The phase's candidate-generation result, per Algorithms 2–5. Built once
 /// per *job* by [`PhasePlan::build`] and shared read-only by every map task
 /// of that job — the distributed-cache pattern: the paper's Hadoop mappers
@@ -105,6 +211,10 @@ pub enum GenMode {
 pub struct PhasePlan {
     /// One candidate trie per combined pass, levels k, k+1, ...
     pub tries: Vec<Trie>,
+    /// The resolved counting backend per pass trie (parallel to `tries`,
+    /// never `Auto`). [`PhasePlan::build`] defaults every pass to the trie
+    /// walk; [`PhasePlan::resolve_backends`] applies a request's choice.
+    pub backends: Vec<CountingBackend>,
     /// Metered generation work for ONE invocation of the in-map generation.
     pub gen_once: GenStats,
     /// Total candidates generated in this phase (paper's `candidateCount`).
@@ -153,35 +263,88 @@ impl PhasePlan {
                 }
             }
         }
-        PhasePlan { tries, gen_once, candidate_count, npass }
+        let backends = vec![CountingBackend::Trie; tries.len()];
+        PhasePlan { tries, backends, gen_once, candidate_count, npass }
+    }
+
+    /// Resolve `requested` into a concrete backend for every pass of this
+    /// plan (see [`BackendContext::resolve`]); called once per job by the
+    /// session driver, before the plan is shared across map tasks — so
+    /// every task counts the same way and the aux agreement holds.
+    pub fn resolve_backends(&mut self, requested: CountingBackend, ctx: &BackendContext) {
+        self.backends =
+            self.tries.iter().map(|t| ctx.resolve(requested, t.level(), t.len() as u64)).collect();
     }
 }
 
-/// Job2 mapper for every algorithm variant.
+/// One pass's counting strategy inside a [`Job2Mapper`] — the per-task
+/// state behind the [`CountingBackend`] the plan resolved for that pass.
+enum PassCounter {
+    /// Trie subset walk: per-node count buffer, filled record by record.
+    Trie {
+        /// External per-task count buffer (`count_transaction_into`).
+        counts: Vec<u64>,
+    },
+    /// Vertical TID-bitmap: nothing per pass — all bitmap passes share the
+    /// mapper's TID-list index and count at cleanup.
+    Bitmap,
+    /// Dense triangular pair matrix, filled record by record.
+    Triangular(Box<TriangularCounter>),
+}
+
+/// Job2 mapper for every algorithm variant, counting each pass with the
+/// backend its [`PhasePlan`] resolved. Whatever the backend, the mapper
+/// emits the SAME `(candidate, count)` tuples in the SAME trie iteration
+/// order through the same combining write path — the output-invariance
+/// contract (DESIGN.md §11): backends may only move measured work
+/// (`subset_visits` vs `bitmap_word_ops` vs `triangle_updates`), never
+/// mined output.
 pub struct Job2Mapper {
     plan: Arc<PhasePlan>,
     gen_mode: GenMode,
-    /// Per-task support counters, one buffer per pass trie.
-    counts: Vec<Vec<u64>>,
+    /// Per-task counting state, one per pass trie.
+    passes: Vec<PassCounter>,
+    /// Per-item TID-lists over this split's record indices (raw words;
+    /// wrapped as [`BitVec64`] at cleanup) — `Some` iff any pass counts
+    /// via the bitmap backend.
+    tid_rows: Option<Vec<Vec<u64>>>,
     scratch: Vec<(u32, usize, usize)>,
     records: u64,
 }
 
 impl Job2Mapper {
-    /// Mapper executing `plan`, with one count buffer per pass trie.
-    pub fn new(plan: Arc<PhasePlan>, gen_mode: GenMode) -> Self {
-        let counts = plan.tries.iter().map(|t| vec![0u64; t.node_count()]).collect();
-        Self { plan, gen_mode, counts, scratch: Vec::new(), records: 0 }
+    /// Mapper executing `plan` over the dense universe `0..n_items`, with
+    /// per-pass counting state sized by the plan's resolved backends.
+    pub fn new(plan: Arc<PhasePlan>, gen_mode: GenMode, n_items: usize) -> Self {
+        let passes = plan
+            .tries
+            .iter()
+            .zip(&plan.backends)
+            .map(|(t, b)| match b {
+                CountingBackend::Trie => PassCounter::Trie { counts: vec![0u64; t.node_count()] },
+                CountingBackend::Bitmap => PassCounter::Bitmap,
+                CountingBackend::Triangular => {
+                    debug_assert_eq!(t.level(), 2, "triangular backend is k=2 only");
+                    PassCounter::Triangular(Box::new(TriangularCounter::new(n_items)))
+                }
+                CountingBackend::Auto => unreachable!("plans carry resolved backends"),
+            })
+            .collect::<Vec<_>>();
+        let tid_rows = passes
+            .iter()
+            .any(|p| matches!(p, PassCounter::Bitmap))
+            .then(|| vec![Vec::new(); n_items]);
+        Self { plan, gen_mode, passes, tid_rows, scratch: Vec::new(), records: 0 }
     }
 
-    /// Convenience used by tests: build the plan inline.
+    /// Convenience used by tests: build the plan inline (trie backend).
     pub fn standalone(
         l_prev: Arc<Trie>,
         policy: PassPolicy,
         optimized: bool,
         gen_mode: GenMode,
     ) -> Self {
-        Self::new(Arc::new(PhasePlan::build(&l_prev, policy, optimized)), gen_mode)
+        Self::new(Arc::new(PhasePlan::build(&l_prev, policy, optimized)), gen_mode, 0)
     }
 }
 
@@ -190,13 +353,43 @@ impl Mapper for Job2Mapper {
     type V = u64;
 
     fn map(&mut self, _offset: usize, record: &Itemset, ctx: &mut Context<Itemset, u64>) {
+        // This record's index within the split = its TID-list bit.
+        let idx = self.records as usize;
         self.records += 1;
-        let mut visits = 0u64;
-        for (trie, counts) in self.plan.tries.iter().zip(&mut self.counts) {
-            let (v, _hits) = trie.count_transaction_into(record, counts, &mut self.scratch);
-            visits += v;
+        if let Some(rows) = &mut self.tid_rows {
+            let (word, bit) = (idx / 64, idx % 64);
+            for &item in record {
+                let row = &mut rows[item as usize];
+                if row.len() <= word {
+                    row.resize(word + 1, 0);
+                }
+                row[word] |= 1u64 << bit;
+            }
+            // One word-OR per item occurrence (the TID-list build cost).
+            ctx.counters.add(keys::BITMAP_WORD_OPS, record.len() as u64);
         }
-        ctx.counters.add(keys::SUBSET_VISITS, visits);
+        let mut visits = 0u64;
+        let mut triangle = 0u64;
+        for (pass, trie) in self.passes.iter_mut().zip(&self.plan.tries) {
+            match pass {
+                PassCounter::Trie { counts } => {
+                    let (v, _hits) = trie.count_transaction_into(record, counts, &mut self.scratch);
+                    visits += v;
+                }
+                PassCounter::Bitmap => {}
+                PassCounter::Triangular(counter) => {
+                    counter.add_transaction(record);
+                    let w = record.len() as u64;
+                    triangle += w + w * (w - 1) / 2;
+                }
+            }
+        }
+        if visits > 0 {
+            ctx.counters.add(keys::SUBSET_VISITS, visits);
+        }
+        if triangle > 0 {
+            ctx.counters.add(keys::TRIANGLE_UPDATES, triangle);
+        }
     }
 
     fn cleanup(&mut self, ctx: &mut Context<Itemset, u64>) {
@@ -211,13 +404,63 @@ impl Mapper for Job2Mapper {
         ctx.counters.add(keys::PRUNE_CHECKS, self.plan.gen_once.prune_checks * times);
         ctx.counters.add(keys::CANDS_BUILT, self.plan.gen_once.kept * times);
 
-        // Emit locally-aggregated candidate counts (in-mapper combining: the
-        // per-task counter buffers play the Combiner's role; `raw` restores
-        // the faithful write(c, 1)-per-hit tuple count for the cost model).
-        for (trie, counts) in self.plan.tries.iter().zip(&self.counts) {
-            for (set, count) in trie.iter_with_counts(counts) {
-                if count > 0 {
-                    ctx.write_combined(set, count, count);
+        // Seal the TID-list index (shared by every bitmap pass): row width
+        // = records seen by THIS task, so candidate intersections count
+        // exactly this split's transactions.
+        let width = self.records as usize;
+        let tid: Option<Vec<BitVec64>> = self
+            .tid_rows
+            .take()
+            .map(|rows| rows.into_iter().map(|w| BitVec64::from_words(w, width)).collect());
+
+        // Emit locally-aggregated candidate counts (in-mapper combining:
+        // the per-task counting state plays the Combiner's role; `raw`
+        // restores the faithful write(c, 1)-per-hit tuple count for the
+        // cost model). Every backend walks the SAME trie order and the
+        // same `count > 0` filter — byte-identical output by construction.
+        for (pass, trie) in self.passes.iter().zip(&self.plan.tries) {
+            match pass {
+                PassCounter::Trie { counts } => {
+                    for (set, count) in trie.iter_with_counts(counts) {
+                        if count > 0 {
+                            ctx.write_combined(set, count, count);
+                        }
+                    }
+                }
+                PassCounter::Bitmap => {
+                    let rows = tid.as_ref().expect("bitmap pass implies TID rows");
+                    let sets = trie.itemsets();
+                    let mut counts = vec![0u64; sets.len()];
+                    let words = width.div_ceil(64);
+                    let mut word_ops = 0u64;
+                    let mut cand_rows: Vec<&BitVec64> = Vec::new();
+                    // Cache-blocked sweep: all candidates consume one block
+                    // of TID words before the next block is touched.
+                    let mut lo = 0usize;
+                    while lo < words {
+                        let hi = (lo + BITMAP_WORDS_PER_BLOCK).min(words);
+                        for (set, slot) in sets.iter().zip(&mut counts) {
+                            cand_rows.clear();
+                            cand_rows.extend(set.iter().map(|&i| &rows[i as usize]));
+                            *slot += BitVec64::intersect_count_words(&cand_rows, lo, hi);
+                            word_ops += ((hi - lo) * set.len()) as u64;
+                        }
+                        lo = hi;
+                    }
+                    ctx.counters.add(keys::BITMAP_WORD_OPS, word_ops);
+                    for (set, count) in sets.into_iter().zip(counts) {
+                        if count > 0 {
+                            ctx.write_combined(set, count, count);
+                        }
+                    }
+                }
+                PassCounter::Triangular(counter) => {
+                    for set in trie.itemsets() {
+                        let count = counter.pair_count(set[0], set[1]);
+                        if count > 0 {
+                            ctx.write_combined(set, count, count);
+                        }
+                    }
                 }
             }
         }
@@ -408,5 +651,118 @@ mod tests {
         m.map(0, &vec![3, 5, 9], &mut ctx);
         let out = ctx.take_output();
         assert_eq!(out, vec![(vec![3], 1), (vec![5], 1), (vec![9], 1)]);
+    }
+
+    // ---- counting-backend strategy layer ----------------------------------
+
+    fn test_ctx(n_items: usize) -> BackendContext {
+        BackendContext {
+            profile: DensityProfile::from_counts(100, n_items, 300),
+            weights: CostWeights::default(),
+        }
+    }
+
+    fn mapper_with_backend(
+        l_prev: &Arc<Trie>,
+        policy: PassPolicy,
+        backend: CountingBackend,
+        n_items: usize,
+    ) -> Job2Mapper {
+        let mut plan = PhasePlan::build(l_prev, policy, false);
+        plan.resolve_backends(backend, &test_ctx(n_items));
+        Job2Mapper::new(Arc::new(plan), GenMode::PerRecord, n_items)
+    }
+
+    #[test]
+    fn backends_emit_identical_tuples_in_identical_order() {
+        let l1 = l_of(1, &[&[1], &[2], &[3], &[5]]);
+        let txns: &[&[u32]] = &[&[1, 2, 3, 5], &[1, 2], &[2, 3, 5], &[1], &[1, 2, 5]];
+        let mut outputs = Vec::new();
+        for backend in [CountingBackend::Trie, CountingBackend::Bitmap, CountingBackend::Triangular]
+        {
+            // Fixed(2): pass 1 is k=2 (triangular-eligible), pass 2 is k=3
+            // (falls back to trie under the triangular request).
+            let mut m = mapper_with_backend(&l1, PassPolicy::Fixed(2), backend, 6);
+            let mut ctx = run_mapper(&mut m, txns);
+            // UNsorted: emission order itself must match the trie walk.
+            outputs.push((backend, ctx.take_output()));
+        }
+        let (_, trie_out) = &outputs[0];
+        assert!(!trie_out.is_empty());
+        for (backend, out) in &outputs[1..] {
+            assert_eq!(out, trie_out, "{backend} output diverges from trie walk");
+        }
+    }
+
+    #[test]
+    fn triangular_resolves_to_trie_beyond_pairs() {
+        let l1 = l_of(1, &[&[1], &[2], &[3]]);
+        let mut plan = PhasePlan::build(&l1, PassPolicy::Fixed(2), false);
+        plan.resolve_backends(CountingBackend::Triangular, &test_ctx(4));
+        assert_eq!(plan.backends, vec![CountingBackend::Triangular, CountingBackend::Trie]);
+        // Oversized universe: even the k=2 pass falls back.
+        let mut plan = PhasePlan::build(&l1, PassPolicy::Fixed(1), false);
+        let ctx = BackendContext {
+            profile: DensityProfile::from_counts(100, TRIANGULAR_MAX_ITEMS + 1, 300),
+            weights: CostWeights::default(),
+        };
+        plan.resolve_backends(CountingBackend::Triangular, &ctx);
+        assert_eq!(plan.backends, vec![CountingBackend::Trie]);
+    }
+
+    #[test]
+    fn auto_always_resolves_and_is_deterministic() {
+        let l1 = l_of(1, &[&[1], &[2], &[3], &[4]]);
+        let mut plan = PhasePlan::build(&l1, PassPolicy::Dynamic { ct: 1000 }, false);
+        plan.resolve_backends(CountingBackend::Auto, &test_ctx(5));
+        assert!(!plan.backends.is_empty());
+        assert!(plan.backends.iter().all(|b| *b != CountingBackend::Auto));
+        let mut again = PhasePlan::build(&l1, PassPolicy::Dynamic { ct: 1000 }, false);
+        again.resolve_backends(CountingBackend::Auto, &test_ctx(5));
+        assert_eq!(plan.backends, again.backends);
+    }
+
+    #[test]
+    fn backend_cost_keys_metered() {
+        let l1 = l_of(1, &[&[1], &[2], &[3]]);
+        let txns: &[&[u32]] = &[&[1, 2, 3], &[1, 2]];
+        let mut m = mapper_with_backend(&l1, PassPolicy::Fixed(1), CountingBackend::Bitmap, 4);
+        let ctx = run_mapper(&mut m, txns);
+        assert!(ctx.counters.get(keys::BITMAP_WORD_OPS) > 0);
+        assert_eq!(ctx.counters.get(keys::SUBSET_VISITS), 0);
+        let mut m = mapper_with_backend(&l1, PassPolicy::Fixed(1), CountingBackend::Triangular, 4);
+        let ctx = run_mapper(&mut m, txns);
+        assert!(ctx.counters.get(keys::TRIANGLE_UPDATES) > 0);
+        assert_eq!(ctx.counters.get(keys::BITMAP_WORD_OPS), 0);
+    }
+
+    #[test]
+    fn bitmap_counts_exact_across_word_boundaries() {
+        // 70 records: TID rows span a word boundary (64) and a ragged tail.
+        let l1 = l_of(1, &[&[0], &[1]]);
+        let txns: Vec<Vec<u32>> =
+            (0..70u32).map(|i| if i % 3 == 0 { vec![0, 1] } else { vec![0] }).collect();
+        let refs: Vec<&[u32]> = txns.iter().map(|t| t.as_slice()).collect();
+        let mut m = mapper_with_backend(&l1, PassPolicy::Fixed(1), CountingBackend::Bitmap, 2);
+        let mut ctx = run_mapper(&mut m, &refs);
+        // {0,1} appears in records 0, 3, 6, ..., 69 -> 24 of 70.
+        assert_eq!(ctx.take_output(), vec![(vec![0, 1], 24)]);
+    }
+
+    #[test]
+    fn auto_estimates_favor_bitmap_on_many_candidates() {
+        // Dense candidate space: the bitmap's 64-way word parallelism beats
+        // per-candidate trie visits. Tiny candidate count on a huge sparse
+        // dataset: the build cost dominates and the trie walk stays.
+        let ctx = test_ctx(100);
+        let many = ctx.resolve(CountingBackend::Auto, 3, 50_000);
+        assert_eq!(many, CountingBackend::Bitmap);
+        // At k=2 on a small dense universe the triangle is cheaper still.
+        assert_eq!(ctx.resolve(CountingBackend::Auto, 2, 50_000), CountingBackend::Triangular);
+        let sparse = BackendContext {
+            profile: DensityProfile::from_counts(1_000_000, 10_000, 2_000_000),
+            weights: CostWeights::default(),
+        };
+        assert_eq!(sparse.resolve(CountingBackend::Auto, 5, 1), CountingBackend::Trie);
     }
 }

@@ -7,6 +7,7 @@ pub mod drivers;
 pub mod mappers;
 pub mod session;
 
+pub use mappers::{BackendContext, CountingBackend, ParseBackendError, TRIANGULAR_MAX_ITEMS};
 pub use session::{
     CancelToken, MiningError, MiningRequest, MiningSession, PhaseEvent, RunHandle,
     SessionBuilder, SessionStats, TaskKind,
@@ -229,6 +230,10 @@ pub struct PhaseRecord {
     pub n_passes: usize,
     /// Candidates generated in this phase (Tables 7-9; 0 for Job1).
     pub candidates: u64,
+    /// Resolved counting backend per pass of the phase, in pass order
+    /// (never [`CountingBackend::Auto`] — resolution happened on the
+    /// driver). Empty for an unfused Job1, `[Triangular]` for a fused one.
+    pub backends: Vec<CountingBackend>,
     /// Simulated elapsed seconds (a Tables 3-5 / 10-12 cell).
     pub elapsed: f64,
     /// Simulated timing breakdown.
@@ -240,6 +245,20 @@ pub struct PhaseRecord {
     /// Fault-injected re-timing of the phase — `Some` iff the query
     /// carried a [`FaultModel`] (`MiningRequest::faults`).
     pub faults: Option<PhaseFaults>,
+}
+
+impl PhaseRecord {
+    /// Compact display label for the phase's counting backends: `-` when
+    /// none were recorded (unfused Job1), the backend name when every pass
+    /// used the same one, else the per-pass names joined with `+`
+    /// (e.g. `triangular+trie`).
+    pub fn backend_label(&self) -> String {
+        match self.backends.as_slice() {
+            [] => "-".to_string(),
+            [first, rest @ ..] if rest.iter().all(|b| b == first) => first.name().to_string(),
+            all => all.iter().map(CountingBackend::name).collect::<Vec<_>>().join("+"),
+        }
+    }
 }
 
 /// Result of one full mining run.

@@ -30,13 +30,14 @@
 //! were removed in 0.3.0 (see DESIGN.md §8).
 
 use super::drivers::PhaseObservation;
-use super::mappers::{self, GenMode, Job2Mapper, OneItemsetMapper};
+use super::mappers::{self, CountingBackend, GenMode, Job2Mapper, OneItemsetMapper};
 use super::{
     controller_for, debug_assert_aux_agreement, Algorithm, MiningOutcome, PhaseFaults,
     PhaseRecord, RunOptions,
 };
 use crate::apriori::sequential::Level;
 use crate::cluster::{ClusterConfig, FaultModel, SimJob};
+use crate::dataset::stats::DensityProfile;
 use crate::dataset::{registry, TransactionDb};
 use crate::hdfs::{self, HdfsFile, InputSplit};
 use crate::itemset::Trie;
@@ -80,6 +81,12 @@ pub enum MiningError {
     /// `[0, 1]`, multiplier below 1, or a zero attempt budget); carries
     /// the specific violation.
     InvalidFaultModel(&'static str),
+    /// The requested [`CountingBackend`] cannot run on the session's
+    /// dataset (the dense triangular matrix is capped at
+    /// [`mappers::TRIANGULAR_MAX_ITEMS`] items); carries the violation.
+    /// `auto` never errors — inapplicable backends simply drop out of its
+    /// per-pass pick.
+    InvalidBackend(&'static str),
     /// The run was cancelled through its [`CancelToken`] before finishing.
     Cancelled,
 }
@@ -103,6 +110,7 @@ impl std::fmt::Display for MiningError {
             }
             MiningError::InvalidCluster(why) => write!(f, "invalid cluster config: {why}"),
             MiningError::InvalidFaultModel(why) => write!(f, "invalid fault model: {why}"),
+            MiningError::InvalidBackend(why) => write!(f, "invalid counting backend: {why}"),
             MiningError::Cancelled => write!(f, "mining run cancelled"),
         }
     }
@@ -135,6 +143,7 @@ pub struct MiningRequest {
     fuse_pass_2: bool,
     gen_mode: GenMode,
     faults: Option<FaultModel>,
+    backend: CountingBackend,
 }
 
 impl MiningRequest {
@@ -150,6 +159,7 @@ impl MiningRequest {
             fuse_pass_2: d.fuse_pass_2,
             gen_mode: d.gen_mode,
             faults: None,
+            backend: CountingBackend::default(),
         }
     }
 
@@ -165,6 +175,7 @@ impl MiningRequest {
             fuse_pass_2: opts.fuse_pass_2,
             gen_mode: opts.gen_mode,
             faults: None,
+            backend: CountingBackend::default(),
         }
     }
 
@@ -217,9 +228,24 @@ impl MiningRequest {
         self
     }
 
+    /// Count candidates with the given [`CountingBackend`] in every Job2
+    /// pass: the default trie subset-walk, vertical TID bitmaps, the dense
+    /// triangular matrix (k = 2 only), or a per-pass `auto` pick driven by
+    /// the cluster cost model. All backends mine byte-identical output;
+    /// only the simulated counting cost moves (DESIGN.md §11).
+    pub fn backend(mut self, backend: CountingBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
     /// Which algorithm this request runs.
     pub fn algorithm(&self) -> Algorithm {
         self.algorithm
+    }
+
+    /// The request's Job2 counting backend.
+    pub fn counting_backend(&self) -> CountingBackend {
+        self.backend
     }
 
     /// The request's fractional minimum support.
@@ -777,6 +803,7 @@ impl SessionCore {
             first_pass: 1,
             n_passes: if fused { 2 } else { 1 },
             candidates: 0,
+            backends: if fused { vec![CountingBackend::Triangular] } else { Vec::new() },
             elapsed: timing.elapsed(),
             timing,
             wall: wall.elapsed().as_secs_f64(),
@@ -833,6 +860,14 @@ impl SessionCore {
         token: &CancelToken,
         sink: &mut dyn FnMut(PhaseEvent),
     ) -> Result<MiningOutcome, MiningError> {
+        if req.backend == CountingBackend::Triangular
+            && self.file.n_items > mappers::TRIANGULAR_MAX_ITEMS
+        {
+            return Err(MiningError::InvalidBackend(
+                "triangular is capped at 2048 items for this dataset; \
+                 use trie, bitmap, or auto",
+            ));
+        }
         self.queries.fetch_add(1, Ordering::SeqCst);
         // lint:allow(wall-clock-in-sim): host-side meter for the
         // outcome's `wall_time` field, not simulated time (§2).
@@ -888,6 +923,18 @@ impl SessionCore {
 
         // ---- Job2 phases --------------------------------------------------
         let optimized = algo.optimized();
+        // The auto-pick's dataset shape comes from Job1's counters (no
+        // second scan even for streamed sources, DESIGN.md §11); the same
+        // context prices explicit backend requests for the phase records.
+        let backend_ctx = mappers::BackendContext {
+            profile: DensityProfile::from_counts(
+                self.file.len(),
+                self.file.n_items,
+                job1.record.counters.get(keys::RECORD_ITEMS),
+            ),
+            weights: self.cluster.weights,
+        };
+        let n_items = self.file.n_items;
         loop {
             if l_prev.is_empty() || k > 64 {
                 break;
@@ -907,7 +954,10 @@ impl SessionCore {
             // read-only across tasks (distributed-cache pattern); the
             // faithful per-record generation *cost* is still charged by the
             // mapper.
-            let plan = Arc::new(mappers::PhasePlan::build(&l_prev, policy, optimized));
+            let mut plan = mappers::PhasePlan::build(&l_prev, policy, optimized);
+            plan.resolve_backends(req.backend, &backend_ctx);
+            let pass_backends = plan.backends.clone();
+            let plan = Arc::new(plan);
             let gen_mode = req.gen_mode;
             // Job2 carries the query's token: the executor checks it
             // between tasks, so cancellation lands mid-job, not just at
@@ -917,7 +967,7 @@ impl SessionCore {
                 .submit(
                     JobBuilder::new(format!("job2-k{k}"))
                         .splits(self.splits.clone())
-                        .mapper(move |_| Job2Mapper::new(Arc::clone(&plan), gen_mode))
+                        .mapper(move |_| Job2Mapper::new(Arc::clone(&plan), gen_mode, n_items))
                         .combiner(SumCombiner)
                         .reducer(MinSupportReducer { min_count })
                         .reducers(self.cluster.n_reducers)
@@ -942,6 +992,7 @@ impl SessionCore {
                 first_pass: k,
                 n_passes: npass,
                 candidates,
+                backends: pass_backends,
                 elapsed,
                 timing,
                 wall: phase_wall.elapsed().as_secs_f64(),

@@ -24,6 +24,45 @@ pub struct Summary {
     pub top_items: Vec<(u32, f64)>,
 }
 
+/// The slice of a dataset's shape the counting-backend auto-pick consumes
+/// (DESIGN.md §11): transaction count, universe size, and how full the
+/// N × |I| grid is. Unlike [`Summary`] it needs no materialized
+/// [`TransactionDb`] — sessions over streamed [`crate::hdfs::RecordSource`]
+/// backends derive it from Job1's counters via [`DensityProfile::from_counts`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DensityProfile {
+    /// Transaction count (N).
+    pub n_txns: usize,
+    /// Item-universe size |I|.
+    pub n_items: usize,
+    /// Mean transaction width (w).
+    pub avg_width: f64,
+    /// Fraction of the N × |I| grid that is set (w / |I|).
+    pub density: f64,
+}
+
+impl DensityProfile {
+    /// Profile from aggregate counts: `total_items` is the summed
+    /// transaction width over all N transactions (the Job1
+    /// `record_items` counter), so no second dataset scan is needed.
+    pub fn from_counts(n_txns: usize, n_items: usize, total_items: u64) -> Self {
+        let avg_width = total_items as f64 / n_txns.max(1) as f64;
+        Self { n_txns, n_items, avg_width, density: avg_width / n_items.max(1) as f64 }
+    }
+}
+
+impl Summary {
+    /// The summary's [`DensityProfile`] slice.
+    pub fn profile(&self) -> DensityProfile {
+        DensityProfile {
+            n_txns: self.n_txns,
+            n_items: self.n_items,
+            avg_width: self.avg_width,
+            density: self.density,
+        }
+    }
+}
+
 /// Compute a [`Summary`] in one scan.
 pub fn summarize(db: &TransactionDb) -> Summary {
     let mut freq = vec![0usize; db.n_items];
@@ -88,6 +127,20 @@ mod tests {
         assert_eq!(s.top_items[0], (0, 1.0)); // item 0 in all three
         let text = s.to_string();
         assert!(text.contains("transactions : 3"));
+    }
+
+    #[test]
+    fn density_profile_from_counts_matches_summary() {
+        let db = TransactionDb::new("t", 4, vec![vec![0, 1, 2], vec![0], vec![0, 3]]);
+        let total_items: u64 = db.txns.iter().map(|t| t.len() as u64).sum();
+        let from_counts = DensityProfile::from_counts(db.txns.len(), db.n_items, total_items);
+        let from_summary = summarize(&db).profile();
+        assert_eq!(from_counts, from_summary);
+        assert!((from_counts.density - 5.0 / 12.0).abs() < 1e-12);
+        // Degenerate inputs must not divide by zero.
+        let empty = DensityProfile::from_counts(0, 0, 0);
+        assert_eq!(empty.avg_width, 0.0);
+        assert_eq!(empty.density, 0.0);
     }
 
     #[test]

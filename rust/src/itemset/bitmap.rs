@@ -96,6 +96,11 @@ pub struct BitVec64 {
 }
 
 impl BitVec64 {
+    /// Zeroed bitset of `width` bits.
+    pub fn new(width: usize) -> Self {
+        Self { words: vec![0u64; width.div_ceil(64)], width }
+    }
+
     /// Bitset of `set` over `width` items.
     pub fn from_set(set: &[Item], width: usize) -> Self {
         let mut words = vec![0u64; width.div_ceil(64)];
@@ -105,6 +110,33 @@ impl BitVec64 {
             words[i / 64] |= 1u64 << (i % 64);
         }
         Self { words, width }
+    }
+
+    /// Wrap a raw word buffer as a `width`-bit set. Short buffers are
+    /// zero-padded to `width.div_ceil(64)` words; a longer buffer is a
+    /// caller bug (its tail bits would be silently meaningless).
+    pub fn from_words(mut words: Vec<u64>, width: usize) -> Self {
+        let need = width.div_ceil(64);
+        debug_assert!(words.len() <= need, "word buffer longer than width implies");
+        words.resize(need, 0);
+        Self { words, width }
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.width);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Bit width (valid bit indices are `0..width`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The underlying u64 words, least-significant bits first.
+    pub fn words(&self) -> &[u64] {
+        &self.words
     }
 
     /// True iff self ⊆ other.
@@ -122,6 +154,33 @@ impl BitVec64 {
     /// Dot product as containment check helper: |self ∩ other|.
     pub fn intersect_count(&self, other: &BitVec64) -> u32 {
         self.words.iter().zip(&other.words).map(|(a, b)| (a & b).count_ones()).sum()
+    }
+
+    /// Popcount of the multi-way AND of `rows` (all the same width). An
+    /// empty slice intersects nothing: 0. The vertical TID-bitmap backend
+    /// uses this shape — one row per item of a candidate — via the
+    /// word-range form below so it can cache-block across candidates.
+    pub fn intersect_count_many(rows: &[&BitVec64]) -> u64 {
+        let Some(first) = rows.first() else { return 0 };
+        Self::intersect_count_words(rows, 0, first.words.len())
+    }
+
+    /// Popcount of the multi-way AND of `rows` restricted to the word range
+    /// `lo..hi` — the cache-blocked inner kernel: callers sweep one block
+    /// of words across all candidates before moving to the next block, so
+    /// every TID-list row is streamed through cache once per block.
+    pub fn intersect_count_words(rows: &[&BitVec64], lo: usize, hi: usize) -> u64 {
+        let Some((first, rest)) = rows.split_first() else { return 0 };
+        debug_assert!(rows.iter().all(|r| r.width == first.width));
+        let mut count = 0u64;
+        for w in lo..hi {
+            let mut acc = first.words[w];
+            for r in rest {
+                acc &= r.words[w];
+            }
+            count += u64::from(acc.count_ones());
+        }
+        count
     }
 }
 
@@ -169,6 +228,78 @@ mod tests {
         assert!(!b.is_subset_of(&a));
         assert_eq!(a.popcount(), 2);
         assert_eq!(a.intersect_count(&b), 2);
+    }
+
+    #[test]
+    fn bitvec_width_not_multiple_of_64() {
+        // width 70: the last word holds only 6 meaningful bits.
+        let a = BitVec64::from_set(&[0, 63, 64, 69], 70);
+        assert_eq!(a.popcount(), 4);
+        assert_eq!(a.width(), 70);
+        assert_eq!(a.words().len(), 2);
+        let b = BitVec64::from_set(&[63, 69], 70);
+        assert!(b.is_subset_of(&a));
+        assert!(!a.is_subset_of(&b));
+        assert_eq!(a.intersect_count(&b), 2);
+        // width 1 and width 64 boundaries.
+        assert_eq!(BitVec64::from_set(&[0], 1).popcount(), 1);
+        assert_eq!(BitVec64::from_set(&[63], 64).words().len(), 1);
+    }
+
+    #[test]
+    fn bitvec_empty_set_cases() {
+        let empty = BitVec64::new(100);
+        let full = BitVec64::from_set(&[0, 50, 99], 100);
+        assert_eq!(empty.popcount(), 0);
+        assert!(empty.is_subset_of(&full)); // ∅ ⊆ anything
+        assert!(empty.is_subset_of(&empty));
+        assert!(!full.is_subset_of(&empty));
+        assert_eq!(empty.intersect_count(&full), 0);
+        // Zero-width bitsets are degenerate but must not panic.
+        let zero = BitVec64::new(0);
+        assert_eq!(zero.popcount(), 0);
+        assert!(zero.is_subset_of(&BitVec64::new(0)));
+    }
+
+    #[test]
+    fn bitvec_chunk_boundary_bits() {
+        // Bits straddling every word boundary of a 3-word set.
+        let bits = [63usize, 64, 127, 128];
+        let mut v = BitVec64::new(130);
+        for &b in &bits {
+            v.set(b);
+        }
+        assert_eq!(v.popcount(), 4);
+        assert_eq!(v, BitVec64::from_set(&[63, 64, 127, 128], 130));
+        // Intersections restricted to single-word chunks see only the bits
+        // of that word: [63] | [64, 127] | [128].
+        let rows = [&v, &v];
+        assert_eq!(BitVec64::intersect_count_words(&rows, 0, 1), 1);
+        assert_eq!(BitVec64::intersect_count_words(&rows, 1, 2), 2);
+        assert_eq!(BitVec64::intersect_count_words(&rows, 2, 3), 1);
+        assert_eq!(BitVec64::intersect_count_many(&rows), 4);
+    }
+
+    #[test]
+    fn bitvec_intersect_many_matches_pairwise() {
+        let a = BitVec64::from_set(&[1, 5, 64, 65, 127], 128);
+        let b = BitVec64::from_set(&[1, 5, 65, 100], 128);
+        let c = BitVec64::from_set(&[5, 65, 127], 128);
+        // 3-way AND = {5, 65}.
+        assert_eq!(BitVec64::intersect_count_many(&[&a, &b, &c]), 2);
+        // Single row degenerates to popcount; empty slice to 0.
+        assert_eq!(BitVec64::intersect_count_many(&[&a]), u64::from(a.popcount()));
+        assert_eq!(BitVec64::intersect_count_many(&[]), 0);
+    }
+
+    #[test]
+    fn bitvec_from_words_pads_short_buffers() {
+        let v = BitVec64::from_words(vec![1u64 << 63], 130);
+        assert_eq!(v.words().len(), 3);
+        assert_eq!(v.popcount(), 1);
+        let mut w = BitVec64::new(130);
+        w.set(63);
+        assert_eq!(v, w);
     }
 
     #[test]

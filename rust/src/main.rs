@@ -5,8 +5,8 @@ use anyhow::{bail, Result};
 use mrapriori::bench_harness::tables::{self, FaultScenario, ScaleRun, SweepSpec};
 use mrapriori::cluster::{ClusterConfig, FaultModel};
 use mrapriori::coordinator::{
-    mappers::GenMode, Algorithm, CancelToken, MiningError, MiningOutcome, MiningRequest,
-    MiningSession, PhaseEvent, RunOptions,
+    mappers::GenMode, Algorithm, CancelToken, CountingBackend, MiningError, MiningOutcome,
+    MiningRequest, MiningSession, PhaseEvent, RunOptions,
 };
 use mrapriori::dataset::ibm::QuestGen;
 use mrapriori::dataset::{loader, registry, stats};
@@ -151,12 +151,14 @@ fn run_with_live_events(
     }
     session.run_streaming(req, &CancelToken::new(), |ev| {
         if let PhaseEvent::PhaseFinished { record, from_cache } = ev {
+            let backend = record.backend_label();
             eprintln!(
-                "  {}phase {} ({}) finished: {:.1} s simulated{}",
+                "  {}phase {} ({}) finished: {:.1} s simulated{}{}",
                 label.map(|l| format!("[{l}] ")).unwrap_or_default(),
                 record.phase,
                 record.job,
                 record.elapsed,
+                if backend == "-" { String::new() } else { format!(" [{backend}]") },
                 if from_cache { " [job1 cache]" } else { "" }
             );
         }
@@ -262,6 +264,7 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         .opt("data-nodes", "override: uniform cluster of N DataNodes")
         .opt("workers", "host threads for real execution")
         .opt_default("gen-mode", "per-record", "per-record|per-task generation cost")
+        .opt("backend", "Job2 counting backend: trie|bitmap|triangular|auto (default trie)")
         .flag("fuse-12", "fuse passes 1+2 via triangular matrix (ref [6])")
         .opt("fail-prob", "fault model: per-attempt failure probability")
         .opt("straggler-prob", "fault model: per-attempt straggler probability")
@@ -289,6 +292,11 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         // Typed parse via FromStr: the error already names the input and
         // lists the valid spellings; only `all` is CLI-specific.
         Some(algo_flag.parse::<Algorithm>().map_err(|e| anyhow::anyhow!("{e} (or `all`)"))?)
+    };
+    // --backend parses just as early, for the same clean one-line error.
+    let backend = match p.get("backend") {
+        Some(s) => s.parse::<CountingBackend>()?,
+        None => CountingBackend::default(),
     };
     let cluster = common_cluster(&p)?;
     let seed = RunOptions::default().seed;
@@ -356,6 +364,7 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         let mut req = MiningRequest::new(algo)
             .min_sup(min_sup)
             .gen_mode(gen_mode)
+            .backend(backend)
             .dpc_alpha(match p.f64("dpc-alpha")? {
                 Some(alpha) => alpha,
                 None => registry::paper_dpc_alpha(&name),
@@ -458,8 +467,8 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         String::new()
     };
     println!(
-        "{:>5} {:>6} {:>7} {:>11} {:>12} {:>10}{faulted_col}  {}",
-        "phase", "passes", "k-range", "candidates", "elapsed(s)", "wall(s)", "job"
+        "{:>5} {:>6} {:>7} {:>11} {:>10} {:>12} {:>10}{faulted_col}  {}",
+        "phase", "passes", "k-range", "candidates", "backend", "elapsed(s)", "wall(s)", "job"
     );
     for ph in &out.phases {
         let k_range = if ph.n_passes <= 1 {
@@ -483,8 +492,15 @@ fn cmd_mine(args: &[String]) -> Result<()> {
             }
         };
         println!(
-            "{:>5} {:>6} {:>7} {:>11} {:>12.1} {:>10.3}{fault_cells}  {}",
-            ph.phase, ph.n_passes, k_range, ph.candidates, ph.elapsed, ph.wall, ph.job
+            "{:>5} {:>6} {:>7} {:>11} {:>10} {:>12.1} {:>10.3}{fault_cells}  {}",
+            ph.phase,
+            ph.n_passes,
+            k_range,
+            ph.candidates,
+            ph.backend_label(),
+            ph.elapsed,
+            ph.wall,
+            ph.job
         );
     }
     println!(
@@ -519,11 +535,14 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         let w = cluster.weights;
         use mrapriori::mapreduce::keys as K;
         println!(
-            "compute split (s): join={:.0} prune={:.0} cand={:.0} visit={:.0} tuples={:.0}",
+            "compute split (s): join={:.0} prune={:.0} cand={:.0} visit={:.0} bitmap={:.0} \
+             triangle={:.0} tuples={:.0}",
             w.join_pair * total.get(K::JOIN_PAIRS) as f64,
             w.prune_check * total.get(K::PRUNE_CHECKS) as f64,
             w.cand_built * total.get(K::CANDS_BUILT) as f64,
             w.subset_visit * total.get(K::SUBSET_VISITS) as f64,
+            w.bitmap_word * total.get(K::BITMAP_WORD_OPS) as f64,
+            w.triangle_update * total.get(K::TRIANGLE_UPDATES) as f64,
             w.map_tuple * total.get(K::MAP_OUTPUT_TUPLES) as f64,
         );
     }
@@ -652,6 +671,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         .opt("min-sups", "comma-separated min_sup list (default: paper sweep)")
         .opt("datasets", "comma-separated names -> algorithm x dataset scale grid")
         .opt("algos", "grid algorithms, comma-separated (default: spc,opt-etdpc)")
+        .opt("backend", "grid counting backend: trie|bitmap|triangular|auto (default trie)")
         .opt("min-sup", "single min_sup for every grid cell (default: per-dataset)")
         .flag("faults", "clean-vs-faulted robustness grid for all seven algorithms")
         .opt("fail-prob", "fault grid: failure probability (default 0.05)")
@@ -752,6 +772,10 @@ fn scale_sweep(p: &mrapriori::util::flags::Parsed) -> Result<()> {
             .map(|s| s.parse::<Algorithm>().map_err(anyhow::Error::from))
             .collect::<Result<_>>()?,
     };
+    let backend = match p.get("backend") {
+        Some(s) => s.parse::<CountingBackend>()?,
+        None => CountingBackend::default(),
+    };
     let seed = RunOptions::default().seed;
     let mut runs = Vec::with_capacity(names.len());
     for name in names {
@@ -780,11 +804,12 @@ fn scale_sweep(p: &mrapriori::util::flags::Parsed) -> Result<()> {
                 session.run(
                     &MiningRequest::new(algo)
                         .min_sup(min_sup)
+                        .backend(backend)
                         .dpc_alpha(registry::paper_dpc_alpha(&dataset)),
                 )
             })
             .collect::<Result<_, _>>()?;
-        runs.push(ScaleRun { dataset, n_txns, min_sup, outcomes });
+        runs.push(ScaleRun { dataset, n_txns, min_sup, backend, outcomes });
     }
     let md = tables::scale_markdown(&algos, &runs);
     print!("{md}");

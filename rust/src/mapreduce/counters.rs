@@ -27,6 +27,17 @@ pub mod keys {
     pub const CANDS_BUILT: &str = "cands_built";
     /// Trie nodes visited during subset() counting.
     pub const SUBSET_VISITS: &str = "subset_visits";
+    /// u64-word operations in the vertical TID-bitmap backend: one per word
+    /// OR while building the per-item TID-lists, one per word AND+popcount
+    /// while intersecting a candidate's rows.
+    pub const BITMAP_WORD_OPS: &str = "bitmap_word_ops";
+    /// O(1) increments of the dense triangular pair/item matrix (the fused
+    /// pass-1/2 job and the `triangular` k=2 counting backend).
+    pub const TRIANGLE_UPDATES: &str = "triangle_updates";
+    /// Total item occurrences fed to map() (Σ transaction widths) — pure
+    /// bookkeeping (no cost weight) feeding the dataset density profile the
+    /// `auto` backend pick uses.
+    pub const RECORD_ITEMS: &str = "record_items";
     /// Number of candidate itemsets counted in this job (driver bookkeeping).
     pub const CANDIDATES: &str = "candidates";
     /// Number of passes combined by the mapper (driver bookkeeping).

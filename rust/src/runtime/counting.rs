@@ -11,14 +11,103 @@ use crate::itemset::bitmap::BitmapTile;
 use crate::itemset::{Item, Itemset, Trie};
 use anyhow::Result;
 
-/// Strategy for support counting inside a map task.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// Strategy for candidate support counting inside a Job2 map task — the
+/// selectable per-pass backend knob (`MiningRequest::backend`, CLI
+/// `mine --backend`). All backends are byte-identical in mined output
+/// (DESIGN.md §11); they differ only in how the per-split counts are
+/// computed, and therefore in measured work and simulated time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum CountingBackend {
-    /// Recursive trie walk (`subset()` of the paper).
+    /// Recursive trie walk (`subset()` of the paper; the default).
     #[default]
     Trie,
-    /// AOT-compiled XLA executable (JAX/Pallas authored).
-    Xla,
+    /// Vertical TID-bitmap: per-item [`crate::itemset::bitmap::BitVec64`]
+    /// TID-lists built once per split, candidates counted by cache-blocked
+    /// u64 AND+popcount over their items' rows.
+    Bitmap,
+    /// Dense triangular pair matrix (paper ref [6]) — k = 2 passes only;
+    /// other passes of the same request fall back to the trie walk.
+    Triangular,
+    /// Per-pass pick driven by the cluster cost model: estimate each
+    /// applicable backend's map compute from candidate count × dataset
+    /// density and take the cheapest (DESIGN.md §11).
+    Auto,
+}
+
+impl CountingBackend {
+    /// All selectable backends, in CLI presentation order.
+    pub const ALL: [CountingBackend; 4] = [
+        CountingBackend::Trie,
+        CountingBackend::Bitmap,
+        CountingBackend::Triangular,
+        CountingBackend::Auto,
+    ];
+
+    /// The backend's CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CountingBackend::Trie => "trie",
+            CountingBackend::Bitmap => "bitmap",
+            CountingBackend::Triangular => "triangular",
+            CountingBackend::Auto => "auto",
+        }
+    }
+
+    /// Parse a backend name (case- and punctuation-insensitive). The
+    /// trait-based spellings — `s.parse::<CountingBackend>()` or
+    /// `CountingBackend::try_from(s)` — carry a typed
+    /// [`ParseBackendError`]; this is their shared `Option`-shaped core.
+    pub fn parse(s: &str) -> Option<CountingBackend> {
+        let norm = s.to_ascii_lowercase().replace(['-', '_'], "");
+        Some(match norm.as_str() {
+            "trie" => CountingBackend::Trie,
+            "bitmap" | "tidbitmap" => CountingBackend::Bitmap,
+            "triangular" | "triangle" => CountingBackend::Triangular,
+            "auto" => CountingBackend::Auto,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for CountingBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Error of parsing a [`CountingBackend`] name: carries the rejected input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseBackendError(
+    /// The input string that matched no backend name.
+    pub String,
+);
+
+impl std::fmt::Display for ParseBackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown counting backend {:?}; expected one of trie, bitmap, triangular, auto",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseBackendError {}
+
+impl std::str::FromStr for CountingBackend {
+    type Err = ParseBackendError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        CountingBackend::parse(s).ok_or_else(|| ParseBackendError(s.to_string()))
+    }
+}
+
+impl TryFrom<&str> for CountingBackend {
+    type Error = ParseBackendError;
+
+    fn try_from(s: &str) -> Result<Self, Self::Error> {
+        s.parse()
+    }
 }
 
 /// Support counting via the compiled XLA tile executable.
@@ -108,5 +197,20 @@ mod tests {
     #[test]
     fn backend_default_is_trie() {
         assert_eq!(CountingBackend::default(), CountingBackend::Trie);
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in CountingBackend::ALL {
+            assert_eq!(CountingBackend::parse(b.name()), Some(b));
+            assert_eq!(b.name().parse::<CountingBackend>(), Ok(b));
+            assert_eq!(CountingBackend::try_from(b.to_string().as_str()), Ok(b));
+        }
+        assert_eq!(CountingBackend::parse("TID-bitmap"), Some(CountingBackend::Bitmap));
+        assert_eq!(CountingBackend::parse("Triangle"), Some(CountingBackend::Triangular));
+        let err = "nope".parse::<CountingBackend>().expect_err("unknown name must error");
+        assert_eq!(err, ParseBackendError("nope".into()));
+        let msg = err.to_string();
+        assert!(msg.contains("unknown counting backend") && msg.contains("bitmap"), "{msg}");
     }
 }

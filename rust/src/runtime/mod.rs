@@ -14,5 +14,5 @@
 pub mod counting;
 pub mod pjrt;
 
-pub use counting::{CountingBackend, XlaCounter};
+pub use counting::{CountingBackend, ParseBackendError, XlaCounter};
 pub use pjrt::{ArtifactSpec, PjrtRuntime};

@@ -332,6 +332,64 @@ fn generate_segmented_store() {
 }
 
 #[test]
+fn mine_backend_flag_happy_path_per_backend() {
+    let result_lines = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("frequent itemsets:") || l.starts_with("|L_k|"))
+            .map(String::from)
+            .collect()
+    };
+    let mut reference: Option<Vec<String>> = None;
+    for backend in ["trie", "bitmap", "triangular", "auto"] {
+        let (stdout, stderr, ok) = run(&[
+            "mine", "--dataset", "chess", "--algo", "spc", "--min-sup", "0.9", "--backend",
+            backend,
+        ]);
+        assert!(ok, "--backend {backend} stderr: {stderr}");
+        assert!(stdout.contains("frequent itemsets:"), "--backend {backend}: {stdout}");
+        // The phase table attributes each Job2 phase to a resolved backend
+        // name (explicit trie/bitmap show themselves; triangular and auto
+        // resolve per pass, but always to one of the three real names).
+        assert!(
+            ["trie", "bitmap", "triangular"].iter().any(|n| stdout.contains(n)),
+            "--backend {backend} table shows no backend column: {stdout}"
+        );
+        // Byte-identical mining whatever the backend.
+        let lines = result_lines(&stdout);
+        assert!(!lines.is_empty(), "--backend {backend}: {stdout}");
+        match &reference {
+            None => reference = Some(lines),
+            Some(r) => assert_eq!(&lines, r, "--backend {backend} changed the mining"),
+        }
+    }
+}
+
+#[test]
+fn mine_unknown_backend_is_a_clean_one_line_error() {
+    let (_, stderr, ok) = run(&[
+        "mine", "--dataset", "chess", "--algo", "spc", "--min-sup", "0.9", "--backend", "hashmap",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown counting backend"), "{stderr}");
+    assert!(stderr.contains("trie, bitmap, triangular, auto"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
+fn mine_algo_all_shows_per_phase_backend_column() {
+    let (stdout, stderr, ok) = run(&[
+        "mine", "--dataset", "chess", "--algo", "all", "--min-sup", "0.9", "--backend", "bitmap",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("per-phase elapsed time"), "{stdout}");
+    // The phase-attribution lines tag every Job2 job with its backend.
+    assert!(stdout.contains("jobs:"), "{stdout}");
+    assert!(stdout.contains("[bitmap]"), "{stdout}");
+    // Still one shared session underneath.
+    assert!(stdout.contains("Job1 executed 1 time(s), 6 served from cache"), "{stdout}");
+}
+
+#[test]
 fn lk_profile_output() {
     let (stdout, _, ok) = run(&["lk", "--dataset", "mushroom", "--min-sup", "0.5"]);
     assert!(ok);
