@@ -1,0 +1,183 @@
+//! Serve-daemon perf trajectory: end-to-end queries/sec through a real
+//! TCP connection against an in-process `pallas serve` daemon — the cold
+//! first-touch pass (every query executes), the warm repeat pass (every
+//! query answered from the result cache), and a concurrent identical-query
+//! fan-out with coalescing on vs off. Emits `BENCH_serve.json` under
+//! `target/paper_results/`; the committed repo-root baseline is what the
+//! advisory CI job diffs against.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+//! Quick mode (CI telemetry): `BENCH_QUICK=1 cargo bench --bench serve_throughput`
+
+use mrapriori::bench_harness::timing::save_report;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::Algorithm;
+use mrapriori::serve::{ServeConfig, Server};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        Client { reader: BufReader::new(TcpStream::connect(addr).expect("connect")) }
+    }
+
+    /// Send one MINE line and read the full response (header + body
+    /// through the `.` terminator), panicking on an `ERR` answer.
+    fn query(&mut self, line: &str) {
+        let stream = self.reader.get_mut();
+        stream.write_all(line.as_bytes()).expect("send");
+        stream.write_all(b"\n").expect("send");
+        stream.flush().expect("flush");
+        let mut response = String::new();
+        self.reader.read_line(&mut response).expect("header");
+        assert!(response.starts_with("OK\tMINE"), "unexpected response: {response:?}");
+        loop {
+            response.clear();
+            self.reader.read_line(&mut response).expect("body line");
+            assert!(!response.is_empty(), "connection closed mid-body");
+            if response == ".\n" {
+                return;
+            }
+        }
+    }
+}
+
+fn serve(coalesce: bool) -> Server {
+    let mut config = ServeConfig::new(ClusterConfig::paper_cluster());
+    config.query_threads = 4;
+    config.coalesce = coalesce;
+    Server::start(config).expect("bind an ephemeral port")
+}
+
+/// `fanout` clients concurrently issue the SAME query, fresh to the
+/// daemon; returns (wall seconds, executions the registry saw).
+fn identical_fanout(server: &Server, fanout: usize, line: &str) -> (f64, u64) {
+    let before = server.stats().registry.totals.queries;
+    let addr = server.addr();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..fanout)
+            .map(|_| {
+                scope.spawn(move || {
+                    Client::connect(addr).query(line);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("fan-out client");
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, server.stats().registry.totals.queries - before)
+}
+
+fn main() {
+    let dataset = "c20d10k";
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
+    let supports: &[f64] = if quick { &[0.35, 0.30] } else { &[0.35, 0.30, 0.25] };
+    let algorithms: &[Algorithm] = if quick {
+        &[Algorithm::Spc, Algorithm::OptimizedVfpc]
+    } else {
+        &[Algorithm::Spc, Algorithm::Vfpc, Algorithm::OptimizedVfpc]
+    };
+    let lines: Vec<String> = supports
+        .iter()
+        .flat_map(|ms| {
+            algorithms
+                .iter()
+                .map(move |algo| format!("MINE dataset={dataset} algo={algo} min_sup={ms}"))
+        })
+        .collect();
+    let n_queries = lines.len() as f64;
+    const FANOUT: usize = 4;
+
+    let server = serve(true);
+    let mut client = Client::connect(server.addr());
+
+    // Cold pass: every line is new — sessions open, Job1/Job2 execute.
+    let t0 = Instant::now();
+    for line in &lines {
+        client.query(line);
+    }
+    let cold_secs = t0.elapsed().as_secs_f64();
+
+    // Warm pass: the identical lines again — all served from the result
+    // cache, zero new executions (asserted below via the counters).
+    let t0 = Instant::now();
+    for line in &lines {
+        client.query(line);
+    }
+    let warm_secs = t0.elapsed().as_secs_f64();
+    let warm_stats = server.stats();
+    assert_eq!(
+        warm_stats.registry.totals.queries as usize,
+        lines.len(),
+        "warm pass must not execute anything"
+    );
+    assert_eq!(warm_stats.coalesce.cache_hits as usize, lines.len());
+
+    // Identical concurrent fan-out, coalescing ON: one execution, the
+    // rest join it (or read the cache it fills).
+    let fresh = format!("MINE dataset={dataset} algo=spc min_sup=0.4");
+    let (coalesce_secs, coalesce_execs) = identical_fanout(&server, FANOUT, &fresh);
+    let stats = server.stats();
+    server.shutdown();
+    server.wait();
+
+    // Same fan-out with coalescing OFF (and a fresh daemon): concurrent
+    // identical queries race past the cache and execute independently.
+    let direct_server = serve(false);
+    let (direct_secs, direct_execs) = identical_fanout(&direct_server, FANOUT, &fresh);
+    direct_server.shutdown();
+    direct_server.wait();
+
+    let cold_qps = n_queries / cold_secs;
+    let warm_qps = n_queries / warm_secs;
+    let ms = |q: Option<f64>| q.map_or(f64::NAN, |s| s * 1e3);
+    println!(
+        "serve_throughput: {} distinct queries on {dataset} over TCP{}",
+        lines.len(),
+        if quick { " (quick mode)" } else { "" }
+    );
+    println!("  cold pass: {cold_secs:.2} s, {cold_qps:.3} queries/s (all executed)");
+    println!("  warm pass: {warm_secs:.4} s, {warm_qps:.1} queries/s (all cached)");
+    println!("  warm speedup: {:.1}x", cold_secs / warm_secs);
+    println!(
+        "  {FANOUT}-way identical fan-out: coalesce on {coalesce_secs:.2} s \
+         ({coalesce_execs} executions, {} joins), off {direct_secs:.2} s \
+         ({direct_execs} executions)",
+        stats.coalesce.coalesced_joins
+    );
+    println!(
+        "  latency p50 {:.3} ms, p95 {:.3} ms over {} OK responses",
+        ms(stats.latency.p50()),
+        ms(stats.latency.p95()),
+        stats.latency.count()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_throughput\",\n  \"dataset\": \"{dataset}\",\n  \
+         \"quick\": {quick},\n  \"queries\": {},\n  \"cold_secs\": {cold_secs:.6},\n  \
+         \"warm_secs\": {warm_secs:.6},\n  \
+         \"cold_queries_per_sec\": {cold_qps:.6},\n  \"warm_queries_per_sec\": {warm_qps:.6},\n  \
+         \"warm_speedup\": {:.6},\n  \"warm_cache_hits\": {},\n  \
+         \"fanout_clients\": {FANOUT},\n  \"fanout_coalesce_secs\": {coalesce_secs:.6},\n  \
+         \"fanout_coalesce_executions\": {coalesce_execs},\n  \"coalesced_joins\": {},\n  \
+         \"fanout_direct_secs\": {direct_secs:.6},\n  \
+         \"fanout_direct_executions\": {direct_execs},\n  \
+         \"latency_p50_ms\": {:.6},\n  \"latency_p95_ms\": {:.6}\n}}\n",
+        lines.len(),
+        cold_secs / warm_secs,
+        warm_stats.coalesce.cache_hits,
+        stats.coalesce.coalesced_joins,
+        ms(stats.latency.p50()),
+        ms(stats.latency.p95()),
+    );
+    save_report("BENCH_serve.json", &json);
+    print!("{json}");
+}

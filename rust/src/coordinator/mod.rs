@@ -92,6 +92,21 @@ impl Algorithm {
     pub fn optimized(&self) -> bool {
         matches!(self, Algorithm::OptimizedVfpc | Algorithm::OptimizedEtdpc)
     }
+
+    /// This algorithm's position in [`Algorithm::ALL`] — the index of its
+    /// slot in per-algorithm counter arrays
+    /// (`SessionStats::queries_by_algorithm`).
+    pub fn index(&self) -> usize {
+        match self {
+            Algorithm::Spc => 0,
+            Algorithm::Fpc => 1,
+            Algorithm::Dpc => 2,
+            Algorithm::Vfpc => 3,
+            Algorithm::Etdpc => 4,
+            Algorithm::OptimizedVfpc => 5,
+            Algorithm::OptimizedEtdpc => 6,
+        }
+    }
 }
 
 impl std::fmt::Display for Algorithm {

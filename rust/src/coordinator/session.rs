@@ -372,6 +372,22 @@ pub struct SessionStats {
     pub job1_runs: u64,
     /// Queries served from the Job1 cache instead of re-scanning.
     pub job1_cache_hits: u64,
+    /// Times a Job2 phase job actually executed. Job2 is never cached at
+    /// the session layer, so this moves on every query that reaches the
+    /// candidate passes — the counter that proves a `serve` result-cache
+    /// hit re-ran nothing (DESIGN.md §12).
+    pub job2_runs: u64,
+    /// Queries per algorithm, indexed by [`Algorithm::index`] (the order
+    /// of [`Algorithm::ALL`]).
+    pub queries_by_algorithm: [u64; 7],
+}
+
+impl SessionStats {
+    /// Total jobs this session actually executed (Job1 + Job2 phases) —
+    /// the "did any work happen" scalar the serve-layer tests pin.
+    pub fn jobs_executed(&self) -> u64 {
+        self.job1_runs + self.job2_runs
+    }
 }
 
 /// Job1's reusable result: frequent 1-itemsets (plus 2-itemsets when the
@@ -401,6 +417,8 @@ struct SessionCore {
     queries: AtomicU64,
     job1_runs: AtomicU64,
     job1_cache_hits: AtomicU64,
+    job2_runs: AtomicU64,
+    by_algorithm: [AtomicU64; 7],
 }
 
 /// A long-lived mining service over one dataset and one cluster: create it
@@ -613,6 +631,10 @@ impl MiningSession {
             queries: self.core.queries.load(Ordering::SeqCst),
             job1_runs: self.core.job1_runs.load(Ordering::SeqCst),
             job1_cache_hits: self.core.job1_cache_hits.load(Ordering::SeqCst),
+            job2_runs: self.core.job2_runs.load(Ordering::SeqCst),
+            queries_by_algorithm: std::array::from_fn(|i| {
+                self.core.by_algorithm[i].load(Ordering::SeqCst)
+            }),
         }
     }
 }
@@ -718,6 +740,8 @@ impl SessionCore {
             queries: AtomicU64::new(0),
             job1_runs: AtomicU64::new(0),
             job1_cache_hits: AtomicU64::new(0),
+            job2_runs: AtomicU64::new(0),
+            by_algorithm: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
@@ -869,6 +893,7 @@ impl SessionCore {
             ));
         }
         self.queries.fetch_add(1, Ordering::SeqCst);
+        self.by_algorithm[req.algorithm.index()].fetch_add(1, Ordering::SeqCst);
         // lint:allow(wall-clock-in-sim): host-side meter for the
         // outcome's `wall_time` field, not simulated time (§2).
         let run_start = Instant::now();
@@ -975,6 +1000,7 @@ impl SessionCore {
                 )
                 .wait_with(|ev| sink(task_event(phase_no, ev)))
                 .map_err(|_cancelled| MiningError::Cancelled)?;
+            self.job2_runs.fetch_add(1, Ordering::SeqCst);
             debug_assert_aux_agreement(&out);
             let sim = SimJob::from_meters(&out.map_meters, &out.reduce_meters, &self.cluster);
             let timing = sim.timing(&self.cluster);

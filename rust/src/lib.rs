@@ -61,4 +61,5 @@ pub mod hdfs;
 pub mod itemset;
 pub mod mapreduce;
 pub mod runtime;
+pub mod serve;
 pub mod util;

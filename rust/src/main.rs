@@ -35,6 +35,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd {
         "mine" => cmd_mine(rest),
+        "serve" => cmd_serve(rest),
         "inspect" => cmd_inspect(rest),
         "generate" => cmd_generate(rest),
         "sweep" => cmd_sweep(rest),
@@ -54,6 +55,7 @@ fn print_help() {
 
 Commands:
   mine       run one algorithm (or --algo all) on a dataset, print phase breakdown
+  serve      TCP mining daemon: MINE/STATS/PING/SHUTDOWN line protocol
   sweep      paper's Figs 2-4 min_sup sweep, or a scale grid (--datasets)
   lk         print the |L_k| profile (paper Table 6) via the oracle
   inspect    dataset summary statistics (paper Table 2)
@@ -662,6 +664,68 @@ fn cmd_lk(args: &[String]) -> Result<()> {
     let r = mrapriori::apriori::sequential::mine(&db, min_sup);
     println!("{} @ min_sup {:.2}: |L_k| = {:?}", db.name, min_sup, r.lk_profile());
     println!("total {} frequent itemsets, max length {}", r.total_frequent(), r.max_len());
+    Ok(())
+}
+
+/// `serve`: run the TCP mining daemon until a client sends `SHUTDOWN` (or
+/// the process is killed). Binds before printing so the `serving on`
+/// line — which CI and the tests poll for — always carries a live
+/// address, then blocks in [`Server::wait`] draining admitted queries.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use mrapriori::serve::{ServeConfig, Server};
+    let set = FlagSet::new("serve", "TCP mining daemon over the session API (DESIGN.md §12)")
+        .opt("host", "interface to bind (default 127.0.0.1)")
+        .opt("port", "TCP port; 0 picks an ephemeral one (default 0)")
+        .opt("max-sessions", "open dataset sessions before LRU eviction (default 3)")
+        .opt("max-pending", "admission bound on queued queries (default 64)")
+        .opt("quota", "per-connection in-flight query limit (default 4)")
+        .opt("result-cache", "full responses cached; 0 disables (default 32)")
+        .opt("query-threads", "concurrent query executions (default 2)")
+        .flag("no-coalesce", "run identical concurrent queries separately")
+        .opt("workers", "host threads for the one shared executor pool")
+        .opt("cluster-config", "TOML cluster config path")
+        .opt("data-nodes", "uniform cluster of N DataNodes")
+        .flag("verbose", "debug logging")
+        .flag("help", "show usage");
+    let p = set.parse(args)?;
+    if p.bool("help") {
+        println!("{}", set.usage());
+        return Ok(());
+    }
+    if p.bool("verbose") {
+        logging::set_level(Level::Debug);
+    }
+    let mut config = ServeConfig::new(common_cluster(&p)?);
+    if let Some(host) = p.get("host") {
+        config.host = host.to_string();
+    }
+    if let Some(port) = p.usize("port")? {
+        config.port = u16::try_from(port).map_err(|_| anyhow::anyhow!("--port out of range"))?;
+    }
+    if let Some(n) = p.usize("max-sessions")? {
+        config.max_sessions = n;
+    }
+    if let Some(n) = p.usize("max-pending")? {
+        config.max_pending = n;
+    }
+    if let Some(n) = p.usize("quota")? {
+        config.client_quota = n;
+    }
+    if let Some(n) = p.usize("result-cache")? {
+        config.result_cache = n;
+    }
+    if let Some(n) = p.usize("query-threads")? {
+        config.query_threads = n;
+    }
+    config.coalesce = !p.bool("no-coalesce");
+    let server = Server::start(config)?;
+    // Flush explicitly: under a pipe stdout is block-buffered, and the CI
+    // smoke step greps this line to learn the ephemeral port.
+    println!("serving on {}", server.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    server.wait();
+    println!("serve: drained and shut down");
     Ok(())
 }
 

@@ -1,0 +1,333 @@
+//! Query coalescing and result caching for the serve daemon
+//! (DESIGN.md §12).
+//!
+//! [`Coalescer::fetch`] is the single entry point for executing a mining
+//! query: it answers from the result cache when it can, joins an
+//! identical in-flight execution when one exists, and otherwise runs the
+//! query itself and publishes the result to both late joiners and the
+//! cache. The in-flight table reuses the session layer's
+//! `Arc<OnceLock>` exactly-once idiom (each caller offers its own
+//! initializer; the first to arrive runs it, racers block inside
+//! `get_or_init` until the value lands).
+
+use super::{lock, ServeError};
+use crate::serve::protocol::{MineResult, QueryKey};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// How a [`Coalescer::fetch`] call was satisfied — drives the response
+/// header's `cached=`/`coalesced=` flags and the daemon counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fulfillment {
+    /// This call ran the query itself.
+    Executed,
+    /// This call joined an identical in-flight execution.
+    Coalesced,
+    /// This call was answered from the result cache; nothing ran.
+    Cached,
+}
+
+/// Counters of a [`Coalescer`] snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// Fetches that joined an in-flight identical query.
+    pub coalesced_joins: u64,
+    /// Fetches answered from the result cache.
+    pub cache_hits: u64,
+    /// Results evicted from the cache to respect its capacity.
+    pub cache_evictions: u64,
+    /// Results currently cached.
+    pub cache_len: usize,
+    /// The cache's capacity (0 = caching disabled).
+    pub cache_capacity: usize,
+}
+
+type Cell = Arc<OnceLock<Result<Arc<MineResult>, ServeError>>>;
+
+/// Capacity-bounded LRU of full mined responses, most recently used
+/// first. Small by design: entries are whole response bodies, and the
+/// interesting hit pattern (dashboards re-issuing the same handful of
+/// queries) needs few slots.
+struct ResultCache {
+    entries: Vec<(QueryKey, Arc<MineResult>)>,
+    evictions: u64,
+}
+
+impl ResultCache {
+    fn get(&mut self, key: &QueryKey) -> Option<Arc<MineResult>> {
+        let pos = self.entries.iter().position(|(k, _)| k == key)?;
+        let entry = self.entries.remove(pos);
+        let hit = entry.1.clone();
+        self.entries.insert(0, entry);
+        Some(hit)
+    }
+
+    fn put(&mut self, key: QueryKey, value: Arc<MineResult>, capacity: usize) {
+        if capacity == 0 {
+            return;
+        }
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == &key) {
+            self.entries.remove(pos);
+        }
+        self.entries.insert(0, (key, value));
+        while self.entries.len() > capacity {
+            self.entries.pop();
+            self.evictions += 1;
+        }
+    }
+}
+
+/// The daemon's execute-at-most-once layer: an in-flight table keyed by
+/// [`QueryKey`] (coalescing) in front of a bounded LRU of finished
+/// responses (caching). Errors are shared with joiners — everyone waiting
+/// on a failed execution sees the same [`ServeError`] — but never cached:
+/// the next fetch retries.
+pub struct Coalescer {
+    inflight: Mutex<HashMap<QueryKey, Cell>>,
+    cache: Mutex<ResultCache>,
+    capacity: usize,
+    coalesced_joins: AtomicU64,
+    cache_hits: AtomicU64,
+}
+
+impl Coalescer {
+    /// A coalescer whose result cache holds up to `cache_capacity`
+    /// responses (0 disables caching; coalescing is always on).
+    pub fn new(cache_capacity: usize) -> Self {
+        Coalescer {
+            inflight: Mutex::new(HashMap::new()),
+            cache: Mutex::new(ResultCache { entries: Vec::new(), evictions: 0 }),
+            capacity: cache_capacity,
+            coalesced_joins: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Satisfy one query: cache hit, join of an identical in-flight run,
+    /// or a fresh execution of `run` — whichever is cheapest. Blocks until
+    /// the answer exists (joiners block inside the cell's `get_or_init`).
+    pub fn fetch(
+        &self,
+        key: &QueryKey,
+        run: impl FnOnce() -> Result<MineResult, ServeError>,
+    ) -> (Result<Arc<MineResult>, ServeError>, Fulfillment) {
+        if self.capacity > 0 {
+            let mut cache = lock(&self.cache);
+            if let Some(hit) = cache.get(key) {
+                drop(cache);
+                self.cache_hits.fetch_add(1, Ordering::SeqCst);
+                return (Ok(hit), Fulfillment::Cached);
+            }
+        }
+        let cell: Cell = {
+            let mut inflight = lock(&self.inflight);
+            inflight.entry(key.clone()).or_default().clone()
+        };
+        let mut ran = false;
+        let result = cell
+            .get_or_init(|| {
+                ran = true;
+                run().map(Arc::new)
+            })
+            .clone();
+        if !ran {
+            self.coalesced_joins.fetch_add(1, Ordering::SeqCst);
+            return (result, Fulfillment::Coalesced);
+        }
+        // This call executed: publish a success to the cache FIRST, then
+        // retire the in-flight entry (guarded by pointer identity so a
+        // successor cell for the same key, created after this one retired
+        // on another path, is left alone). With caching on, the order
+        // means a fetch can never miss the cache AND the in-flight table
+        // for a query that already ran: every concurrent identical fetch
+        // is a join or a cache hit, deterministically.
+        if let Ok(value) = &result {
+            let mut cache = lock(&self.cache);
+            cache.put(key.clone(), value.clone(), self.capacity);
+        }
+        {
+            let mut inflight = lock(&self.inflight);
+            if inflight.get(key).is_some_and(|cur| Arc::ptr_eq(cur, &cell)) {
+                inflight.remove(key);
+            }
+        }
+        (result, Fulfillment::Executed)
+    }
+
+    /// [`fetch`](Coalescer::fetch) without the in-flight table: cache hit
+    /// or a fresh execution, never a join. The `--no-coalesce` daemon mode
+    /// (and its bench ablation) runs through this path.
+    pub fn fetch_direct(
+        &self,
+        key: &QueryKey,
+        run: impl FnOnce() -> Result<MineResult, ServeError>,
+    ) -> (Result<Arc<MineResult>, ServeError>, Fulfillment) {
+        if self.capacity > 0 {
+            let mut cache = lock(&self.cache);
+            if let Some(hit) = cache.get(key) {
+                drop(cache);
+                self.cache_hits.fetch_add(1, Ordering::SeqCst);
+                return (Ok(hit), Fulfillment::Cached);
+            }
+        }
+        let result = run().map(Arc::new);
+        if let Ok(value) = &result {
+            let mut cache = lock(&self.cache);
+            cache.put(key.clone(), value.clone(), self.capacity);
+        }
+        (result, Fulfillment::Executed)
+    }
+
+    /// Snapshot the coalescer's counters.
+    pub fn stats(&self) -> CoalesceStats {
+        let cache = lock(&self.cache);
+        CoalesceStats {
+            coalesced_joins: self.coalesced_joins.load(Ordering::SeqCst),
+            cache_hits: self.cache_hits.load(Ordering::SeqCst),
+            cache_evictions: cache.evictions,
+            cache_len: cache.entries.len(),
+            cache_capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Algorithm, CountingBackend};
+    use crate::serve::protocol::MineQuery;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+
+    fn query(min_sup: f64) -> MineQuery {
+        MineQuery {
+            dataset: "chess".into(),
+            algorithm: Algorithm::Spc,
+            min_sup,
+            fpc_n: 3,
+            dpc_alpha: 3.0,
+            dpc_beta: 60.0,
+            fuse12: false,
+            backend: CountingBackend::Trie,
+        }
+    }
+
+    fn result(tag: &str) -> MineResult {
+        MineResult {
+            dataset: "chess".into(),
+            algorithm: Algorithm::Spc,
+            min_sup: 0.9,
+            min_count: 2877,
+            itemsets: 1,
+            levels: 1,
+            body: format!("{tag}\t1\n.\n"),
+        }
+    }
+
+    #[test]
+    fn repeat_fetches_hit_the_cache_without_rerunning() {
+        let c = Coalescer::new(4);
+        let runs = AtomicUsize::new(0);
+        let run = || {
+            runs.fetch_add(1, Ordering::SeqCst);
+            Ok(result("a"))
+        };
+        let (first, how) = c.fetch(&query(0.9).key(), run);
+        assert_eq!(how, Fulfillment::Executed);
+        let (second, how) = c.fetch(&query(0.9).key(), || panic!("must not run"));
+        assert_eq!(how, Fulfillment::Cached);
+        assert_eq!(first.unwrap(), second.unwrap());
+        assert_eq!(runs.load(Ordering::SeqCst), 1);
+        let stats = c.stats();
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.cache_len, 1);
+    }
+
+    #[test]
+    fn errors_are_shared_but_never_cached() {
+        let c = Coalescer::new(4);
+        let (r, how) = c.fetch(&query(0.5).key(), || Err(ServeError::Protocol("boom".into())));
+        assert_eq!(how, Fulfillment::Executed);
+        assert!(r.is_err());
+        // The error was not cached: the next fetch runs again and succeeds.
+        let (r, how) = c.fetch(&query(0.5).key(), || Ok(result("retry")));
+        assert_eq!(how, Fulfillment::Executed);
+        assert!(r.is_ok());
+        assert_eq!(c.stats().cache_hits, 0);
+    }
+
+    #[test]
+    fn cache_capacity_evicts_least_recently_used() {
+        let c = Coalescer::new(2);
+        c.fetch(&query(0.1).key(), || Ok(result("a")));
+        c.fetch(&query(0.2).key(), || Ok(result("b")));
+        c.fetch(&query(0.1).key(), || panic!("cached")); // touch a
+        c.fetch(&query(0.3).key(), || Ok(result("c"))); // evicts b
+        let runs = AtomicUsize::new(0);
+        c.fetch(&query(0.2).key(), || {
+            runs.fetch_add(1, Ordering::SeqCst);
+            Ok(result("b2"))
+        });
+        assert_eq!(runs.load(Ordering::SeqCst), 1, "b was evicted, must re-run");
+        let stats = c.stats();
+        assert_eq!(stats.cache_evictions, 2); // b, then a on b2's insert
+        assert_eq!(stats.cache_len, 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching_not_coalescing() {
+        let c = Coalescer::new(0);
+        let runs = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let (_, how) = c.fetch(&query(0.9).key(), || {
+                runs.fetch_add(1, Ordering::SeqCst);
+                Ok(result("a"))
+            });
+            assert_eq!(how, Fulfillment::Executed);
+        }
+        assert_eq!(runs.load(Ordering::SeqCst), 3);
+        assert_eq!(c.stats().cache_len, 0);
+    }
+
+    #[test]
+    fn concurrent_identical_fetches_run_once() {
+        const THREADS: usize = 8;
+        let c = Coalescer::new(0); // cache off: pin the coalescing path
+        let runs = AtomicUsize::new(0);
+        let gate = Barrier::new(THREADS);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    scope.spawn(|| {
+                        gate.wait();
+                        c.fetch(&query(0.9).key(), || {
+                            runs.fetch_add(1, Ordering::SeqCst);
+                            // Hold the cell long enough for racers to pile up.
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            Ok(result("once"))
+                        })
+                    })
+                })
+                .collect();
+            let mut executed = 0;
+            let mut joined = 0;
+            for h in handles {
+                let (r, how) = h.join().expect("no panics");
+                assert_eq!(r.expect("success").body, result("once").body);
+                match how {
+                    Fulfillment::Executed => executed += 1,
+                    Fulfillment::Coalesced => joined += 1,
+                    Fulfillment::Cached => panic!("cache is off"),
+                }
+            }
+            // Racers that arrive while the cell is live join it; stragglers
+            // arriving after it retired re-execute. With the barrier + sleep
+            // the common case is 1 execution, but the invariant we pin is
+            // conservation plus the executed runs matching `runs`.
+            assert_eq!(executed + joined, THREADS);
+            assert_eq!(runs.load(Ordering::SeqCst), executed);
+            assert_eq!(c.stats().coalesced_joins, joined as u64);
+        });
+    }
+}

@@ -1,0 +1,146 @@
+//! `pallas serve` — the multi-tenant mining service daemon over the
+//! session API (DESIGN.md §12).
+//!
+//! The library layers below this one already make *one* caller fast: a
+//! [`MiningSession`](crate::coordinator::MiningSession) binds a dataset
+//! once, memoizes Job1, and multiplexes every query's tasks onto one
+//! executor pool. This module turns that library into a long-running
+//! **service**: a zero-dependency TCP daemon speaking a newline-delimited
+//! line protocol, hosting a [`SessionRegistry`] of lazily opened,
+//! LRU-bounded sessions (one per dataset, all sharing ONE
+//! [`Executor`](crate::mapreduce::executor::Executor) so
+//! `cluster.workers` is a global host budget), with the service-grade
+//! policies the library deliberately does not have:
+//!
+//! * **admission control** — a bounded pending queue; when it is full new
+//!   queries are rejected with a typed `ERR busy:` line instead of piling
+//!   onto the host;
+//! * **fairness** — pending queries are dispatched round-robin *across
+//!   client connections*, so one chatty client cannot starve the rest;
+//! * **per-client quotas** — each connection may hold at most N queries
+//!   in flight (pending + executing);
+//! * **query coalescing** — identical in-flight `(dataset, algorithm,
+//!   tunables)` requests join the one execution already running instead
+//!   of re-mining ([`Coalescer`]);
+//! * **result caching** — a capacity-bounded LRU of full mined responses
+//!   keyed on the canonicalized request ([`QueryKey`]), on top of the
+//!   session layer's Job1 memoization: a repeated query re-runs *zero*
+//!   jobs, observable through the session counters;
+//! * **observability** — a `STATS` verb surfacing session/result-cache
+//!   hit counters, coalesced-join counts, pool high-water marks, and
+//!   per-query latency percentiles from a [`Histogram`](crate::util::hist::Histogram);
+//! * **graceful shutdown** — `SHUTDOWN` drains pending and in-flight
+//!   queries before the process exits; dropping an un-drained [`Server`]
+//!   instead cancels in-flight work through the existing
+//!   [`CancelToken`](crate::coordinator::CancelToken) machinery.
+//!
+//! Protocol sketch (full grammar in DESIGN.md §12):
+//!
+//! ```text
+//! > MINE dataset=c20d10k algo=opt-vfpc min_sup=0.2 backend=auto
+//! < OK\tMINE\tdataset=c20d10k\talgo=Optimized-VFPC\t...\titemsets=385\t...
+//! < 1 5 9\t4021
+//! < ...      (one tab-separated line per frequent itemset)
+//! < .
+//! > STATS
+//! < OK\tSTATS
+//! < result_cache_hits\t17
+//! < ...
+//! < .
+//! > SHUTDOWN
+//! < OK\tBYE
+//! ```
+//!
+//! Locking discipline: serve-layer mutexes guard plain bookkeeping
+//! (queues, caches, counters) whose updates cannot panic halfway through
+//! a query's state machine; a poisoned guard is therefore *recovered*
+//! ([`lock`]) rather than propagated — a mining daemon must keep serving
+//! the other tenants after one request dies. Condition-variable wakeups
+//! follow the pool's protocol: mutate under the lock, release, then
+//! notify (pallas-lint `guard-across-notify`, DESIGN.md §10).
+
+mod coalesce;
+pub mod protocol;
+mod registry;
+mod server;
+mod stats;
+
+pub use coalesce::{CoalesceStats, Coalescer, Fulfillment};
+pub use protocol::{MineParams, MineQuery, MineResult, QueryKey, Request};
+pub use registry::{RegistryStats, SessionRegistry};
+pub use server::{ServeConfig, Server};
+pub use stats::StatsSnapshot;
+
+use crate::coordinator::MiningError;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Typed failure modes of the serve layer — every one renders as a
+/// single `ERR <category>: <message>` protocol line
+/// ([`protocol::format_error`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The request line did not parse; carries the specific violation.
+    Protocol(String),
+    /// The named dataset is not in the dataset registry.
+    UnknownDataset(String),
+    /// The underlying mining query failed (validation or execution).
+    Mining(MiningError),
+    /// The connection already has its quota of queries in flight.
+    Quota {
+        /// Queries this connection currently holds (pending + executing).
+        in_flight: usize,
+        /// The per-connection limit ([`ServeConfig::client_quota`]).
+        limit: usize,
+    },
+    /// The server's pending queue is full (admission control).
+    Busy {
+        /// Pending queries at rejection time.
+        pending: usize,
+        /// The queue bound ([`ServeConfig::max_pending`]).
+        limit: usize,
+    },
+    /// The server is draining and admits no new queries.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Protocol(why) => write!(f, "protocol: {why}"),
+            ServeError::UnknownDataset(name) => {
+                write!(
+                    f,
+                    "dataset: unknown dataset {name:?} (known: {})",
+                    crate::dataset::registry::NAMES.join(", ")
+                )
+            }
+            ServeError::Mining(e) => write!(f, "mining: {e}"),
+            ServeError::Quota { in_flight, limit } => {
+                write!(f, "quota: client has {in_flight} queries in flight (limit {limit})")
+            }
+            ServeError::Busy { pending, limit } => {
+                write!(f, "busy: pending queue is full ({pending}/{limit})")
+            }
+            ServeError::ShuttingDown => write!(f, "shutdown: server is draining"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<MiningError> for ServeError {
+    fn from(e: MiningError) -> Self {
+        ServeError::Mining(e)
+    }
+}
+
+/// Lock a serve-layer mutex, recovering from poisoning: the data under
+/// these locks is simple bookkeeping that is never left half-updated by a
+/// panic inside the critical section (updates are single assignments and
+/// counter bumps), and a multi-tenant daemon must outlive any one
+/// request's death. This deliberately differs from the engine's
+/// `expect`-on-poison stance (where a poisoned lock means a task state
+/// machine is torn and continuing would corrupt results).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

@@ -1,0 +1,456 @@
+//! Wire protocol of the serve daemon: request parsing, canonical query
+//! keys, and response formatting (grammar in DESIGN.md §12).
+//!
+//! Requests are single lines, `VERB [key=value]*`, verbs case-insensitive.
+//! Responses are tab-separated: a one-line header (`OK\t...` or
+//! `ERR\t...`), then for multi-line replies a body terminated by a lone
+//! `.` line — so a client needs nothing beyond "read lines until `.`".
+//!
+//! Formatting is centralized here on purpose: [`format_body`] is the ONE
+//! producer of a mined response body, used both by the daemon and by the
+//! integration tests' in-process oracle, which is what makes the
+//! byte-identity contract ("wire output equals
+//! [`MiningOutcome::all_frequent`]") checkable rather than aspirational.
+
+use super::ServeError;
+use crate::coordinator::{Algorithm, CountingBackend, MiningOutcome, MiningRequest, RunOptions};
+use crate::dataset::registry;
+
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// `MINE key=value...` — run (or coalesce into, or answer from cache)
+    /// a mining query.
+    Mine(MineParams),
+    /// `STATS` — snapshot the daemon's counters.
+    Stats,
+    /// `PING` — liveness probe, answered inline with `OK PONG`.
+    Ping,
+    /// `SHUTDOWN` — drain every admitted query, then exit.
+    Shutdown,
+}
+
+/// Raw tunables of a `MINE` line, before defaults are resolved. Absent
+/// keys stay `None` so resolution can consult the dataset registry
+/// (reference min_sup, paper α) exactly like the CLI does.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MineParams {
+    /// `dataset=` — required.
+    pub dataset: String,
+    /// `algo=` — required; any spelling [`Algorithm::parse`] accepts.
+    pub algorithm: Option<Algorithm>,
+    /// `min_sup=` — fractional support in `(0, 1]`.
+    pub min_sup: Option<f64>,
+    /// `fpc_n=` — FPC's fixed pass count.
+    pub fpc_n: Option<usize>,
+    /// `dpc_alpha=` — DPC's fast-phase α.
+    pub dpc_alpha: Option<f64>,
+    /// `dpc_beta=` — DPC's β threshold (seconds).
+    pub dpc_beta: Option<f64>,
+    /// `fuse12=` — fuse passes 1+2 into one triangular-counted job.
+    pub fuse12: Option<bool>,
+    /// `backend=` — Job2 counting backend.
+    pub backend: Option<CountingBackend>,
+    /// `id=` — opaque client tag, echoed in the response header and in
+    /// errors; NOT part of the coalescing/cache key.
+    pub id: Option<String>,
+}
+
+/// A fully resolved, cache-keyable mining query: `MineParams` after
+/// defaulting against the dataset registry. Two `MINE` lines that resolve
+/// to the same `MineQuery` are the same query for coalescing and result
+/// caching, regardless of which keys were spelled out.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MineQuery {
+    /// Registry name of the dataset to mine.
+    pub dataset: String,
+    /// Algorithm to run.
+    pub algorithm: Algorithm,
+    /// Fractional minimum support.
+    pub min_sup: f64,
+    /// FPC's fixed pass count.
+    pub fpc_n: usize,
+    /// DPC's fast-phase α.
+    pub dpc_alpha: f64,
+    /// DPC's β threshold in seconds.
+    pub dpc_beta: f64,
+    /// Whether passes 1+2 fuse into a single job.
+    pub fuse12: bool,
+    /// Job2 counting backend.
+    pub backend: CountingBackend,
+}
+
+/// Canonical hash key of a [`MineQuery`]: float tunables keyed by their
+/// IEEE-754 bit patterns, so `Eq`/`Hash` are total and two textually
+/// different spellings of the same value (e.g. `0.20` / `0.2`) collide
+/// exactly when their parsed floats do.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct QueryKey {
+    dataset: String,
+    algorithm: Algorithm,
+    min_sup_bits: u64,
+    fpc_n: usize,
+    dpc_alpha_bits: u64,
+    dpc_beta_bits: u64,
+    fuse12: bool,
+    backend: CountingBackend,
+}
+
+impl MineQuery {
+    /// The query's coalescing/result-cache key.
+    pub fn key(&self) -> QueryKey {
+        QueryKey {
+            dataset: self.dataset.clone(),
+            algorithm: self.algorithm,
+            min_sup_bits: self.min_sup.to_bits(),
+            fpc_n: self.fpc_n,
+            dpc_alpha_bits: self.dpc_alpha.to_bits(),
+            dpc_beta_bits: self.dpc_beta.to_bits(),
+            fuse12: self.fuse12,
+            backend: self.backend,
+        }
+    }
+
+    /// The session-API request this query runs as.
+    pub fn request(&self) -> MiningRequest {
+        MiningRequest::new(self.algorithm)
+            .min_sup(self.min_sup)
+            .fpc_n(self.fpc_n)
+            .dpc_alpha(self.dpc_alpha)
+            .dpc_beta(self.dpc_beta)
+            .fuse_pass_2(self.fuse12)
+            .backend(self.backend)
+    }
+}
+
+/// A fully mined response, ready to write: the header fields plus the
+/// pre-formatted body (itemset lines + terminator). This is what the
+/// result cache stores — formatting happens once per *execution*, not per
+/// response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MineResult {
+    /// Dataset the result was mined from.
+    pub dataset: String,
+    /// Algorithm that produced it.
+    pub algorithm: Algorithm,
+    /// Fractional minimum support of the run.
+    pub min_sup: f64,
+    /// Absolute minimum support count.
+    pub min_count: u64,
+    /// Total frequent itemsets (= body lines before the terminator).
+    pub itemsets: usize,
+    /// Number of non-empty levels (max frequent itemset length).
+    pub levels: usize,
+    /// The response body: one line per frequent itemset, then `.` —
+    /// exactly [`format_body`] of the outcome.
+    pub body: String,
+}
+
+impl MineResult {
+    /// Capture a finished [`MiningOutcome`] as a servable result.
+    pub fn from_outcome(out: &MiningOutcome) -> Self {
+        MineResult {
+            dataset: out.dataset.clone(),
+            algorithm: out.algorithm,
+            min_sup: out.min_sup,
+            min_count: out.min_count,
+            itemsets: out.total_frequent(),
+            levels: out.levels.len(),
+            body: format_body(out),
+        }
+    }
+
+    /// The `OK MINE` header line (with trailing newline). `cached` and
+    /// `coalesced` report how the daemon satisfied this particular
+    /// response; `id` echoes the client's tag when one was sent.
+    pub fn header(&self, id: Option<&str>, cached: bool, coalesced: bool) -> String {
+        let mut h = String::from("OK\tMINE");
+        if let Some(id) = id {
+            h.push_str("\tid=");
+            h.push_str(id);
+        }
+        use std::fmt::Write as _;
+        let _ = write!(
+            h,
+            "\tdataset={}\talgo={}\tmin_sup={}\tmin_count={}\titemsets={}\tlevels={}\
+             \tcached={cached}\tcoalesced={coalesced}",
+            self.dataset, self.algorithm, self.min_sup, self.min_count, self.itemsets, self.levels
+        );
+        h.push('\n');
+        h
+    }
+}
+
+/// Format a mining outcome's frequent itemsets as the protocol body: one
+/// `item item ...\tcount` line per itemset in [`MiningOutcome::all_frequent`]
+/// order (sorted), terminated by a lone `.` line. The single source of
+/// truth for the byte-identity contract between the daemon and an
+/// in-process session.
+pub fn format_body(out: &MiningOutcome) -> String {
+    let mut body = String::new();
+    for (itemset, count) in out.all_frequent() {
+        let mut first = true;
+        for item in itemset {
+            if !first {
+                body.push(' ');
+            }
+            first = false;
+            body.push_str(&item.to_string());
+        }
+        body.push('\t');
+        body.push_str(&count.to_string());
+        body.push('\n');
+    }
+    body.push_str(".\n");
+    body
+}
+
+/// Render a [`ServeError`] as its one-line wire form (with trailing
+/// newline), echoing the request's `id` when it carried one.
+pub fn format_error(err: &ServeError, id: Option<&str>) -> String {
+    match id {
+        Some(id) => format!("ERR\tid={id}\t{err}\n"),
+        None => format!("ERR\t{err}\n"),
+    }
+}
+
+impl Request {
+    /// Parse one request line (no trailing newline). Empty and
+    /// whitespace-only lines are a protocol error — the daemon never
+    /// silently skips input.
+    pub fn parse(line: &str) -> Result<Request, ServeError> {
+        let mut tokens = line.split_ascii_whitespace();
+        let verb = tokens
+            .next()
+            .ok_or_else(|| ServeError::Protocol("empty request line".into()))?
+            .to_ascii_uppercase();
+        match verb.as_str() {
+            "MINE" => Ok(Request::Mine(MineParams::parse_tokens(tokens)?)),
+            "STATS" | "PING" | "SHUTDOWN" => {
+                if let Some(extra) = tokens.next() {
+                    return Err(ServeError::Protocol(format!(
+                        "{verb} takes no arguments, got {extra:?}"
+                    )));
+                }
+                Ok(match verb.as_str() {
+                    "STATS" => Request::Stats,
+                    "PING" => Request::Ping,
+                    _ => Request::Shutdown,
+                })
+            }
+            _ => Err(ServeError::Protocol(format!(
+                "unknown verb {verb:?}; expected MINE, STATS, PING or SHUTDOWN"
+            ))),
+        }
+    }
+}
+
+impl MineParams {
+    /// Parse the `key=value` tokens of a `MINE` line. Every key is known,
+    /// appears at most once, and parses in its domain — anything else is a
+    /// [`ServeError::Protocol`] naming the offending token.
+    fn parse_tokens<'a>(tokens: impl Iterator<Item = &'a str>) -> Result<MineParams, ServeError> {
+        fn dup<T>(slot: &Option<T>, key: &str) -> Result<(), ServeError> {
+            if slot.is_some() {
+                return Err(ServeError::Protocol(format!("duplicate key {key:?}")));
+            }
+            Ok(())
+        }
+        fn bad(key: &str, value: &str, what: &str) -> ServeError {
+            ServeError::Protocol(format!("key {key:?}: {value:?} is not {what}"))
+        }
+        let mut p = MineParams::default();
+        for token in tokens {
+            let (key, value) = token.split_once('=').ok_or_else(|| {
+                ServeError::Protocol(format!("expected key=value, got {token:?}"))
+            })?;
+            match key {
+                "dataset" => {
+                    if !p.dataset.is_empty() {
+                        return Err(ServeError::Protocol("duplicate key \"dataset\"".into()));
+                    }
+                    p.dataset = value.to_string();
+                }
+                "algo" => {
+                    dup(&p.algorithm, key)?;
+                    p.algorithm = Some(
+                        Algorithm::parse(value).ok_or_else(|| bad(key, value, "an algorithm"))?,
+                    );
+                }
+                "min_sup" => {
+                    dup(&p.min_sup, key)?;
+                    p.min_sup =
+                        Some(value.parse::<f64>().map_err(|_| bad(key, value, "a number"))?);
+                }
+                "fpc_n" => {
+                    dup(&p.fpc_n, key)?;
+                    p.fpc_n =
+                        Some(value.parse::<usize>().map_err(|_| bad(key, value, "an integer"))?);
+                }
+                "dpc_alpha" => {
+                    dup(&p.dpc_alpha, key)?;
+                    p.dpc_alpha =
+                        Some(value.parse::<f64>().map_err(|_| bad(key, value, "a number"))?);
+                }
+                "dpc_beta" => {
+                    dup(&p.dpc_beta, key)?;
+                    p.dpc_beta =
+                        Some(value.parse::<f64>().map_err(|_| bad(key, value, "a number"))?);
+                }
+                "fuse12" => {
+                    dup(&p.fuse12, key)?;
+                    p.fuse12 = Some(match value {
+                        "true" | "1" => true,
+                        "false" | "0" => false,
+                        _ => return Err(bad(key, value, "a boolean (true/false/1/0)")),
+                    });
+                }
+                "backend" => {
+                    dup(&p.backend, key)?;
+                    p.backend = Some(
+                        CountingBackend::parse(value)
+                            .ok_or_else(|| bad(key, value, "a counting backend"))?,
+                    );
+                }
+                "id" => {
+                    dup(&p.id, key)?;
+                    p.id = Some(value.to_string());
+                }
+                _ => {
+                    return Err(ServeError::Protocol(format!("unknown key {key:?}")));
+                }
+            }
+        }
+        if p.dataset.is_empty() {
+            return Err(ServeError::Protocol("missing required key \"dataset\"".into()));
+        }
+        if p.algorithm.is_none() {
+            return Err(ServeError::Protocol("missing required key \"algo\"".into()));
+        }
+        Ok(p)
+    }
+
+    /// Resolve defaults against the dataset registry — the same rules the
+    /// CLI applies: reference min_sup (0.25 when the registry has none),
+    /// the paper's per-dataset DPC α, [`RunOptions`] defaults otherwise.
+    /// Rejects names the registry cannot build.
+    pub fn resolve(&self) -> Result<MineQuery, ServeError> {
+        let name = self.dataset.to_ascii_lowercase();
+        let known = registry::NAMES.contains(&name.as_str())
+            || registry::quest_params(&name).is_some();
+        if !known {
+            return Err(ServeError::UnknownDataset(self.dataset.clone()));
+        }
+        let algorithm = self
+            .algorithm
+            .ok_or_else(|| ServeError::Protocol("missing required key \"algo\"".into()))?;
+        let d = RunOptions::default();
+        Ok(MineQuery {
+            algorithm,
+            min_sup: self
+                .min_sup
+                .unwrap_or_else(|| registry::reference_min_sup(&name).unwrap_or(0.25)),
+            fpc_n: self.fpc_n.unwrap_or(d.fpc_n),
+            dpc_alpha: self.dpc_alpha.unwrap_or_else(|| registry::paper_dpc_alpha(&name)),
+            dpc_beta: self.dpc_beta.unwrap_or(d.dpc_beta),
+            fuse12: self.fuse12.unwrap_or(d.fuse_pass_2),
+            backend: self.backend.unwrap_or_default(),
+            dataset: name,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mine(line: &str) -> MineParams {
+        match Request::parse(line).expect("parses") {
+            Request::Mine(p) => p,
+            other => panic!("expected MINE, got {other:?}"),
+        }
+    }
+
+    fn err(line: &str) -> String {
+        Request::parse(line).expect_err("must not parse").to_string()
+    }
+
+    #[test]
+    fn verbs_parse_case_insensitively() {
+        assert_eq!(Request::parse("STATS"), Ok(Request::Stats));
+        assert_eq!(Request::parse("stats"), Ok(Request::Stats));
+        assert_eq!(Request::parse("  Ping  "), Ok(Request::Ping));
+        assert_eq!(Request::parse("shutdown"), Ok(Request::Shutdown));
+        assert!(err("").contains("empty request"));
+        assert!(err("FROBNICATE").contains("unknown verb"));
+        assert!(err("STATS now").contains("no arguments"));
+    }
+
+    #[test]
+    fn mine_requires_dataset_and_algo() {
+        assert!(err("MINE").contains("dataset"));
+        assert!(err("MINE dataset=chess").contains("algo"));
+        assert!(err("MINE algo=spc").contains("dataset"));
+        let p = mine("MINE dataset=chess algo=spc");
+        assert_eq!(p.dataset, "chess");
+        assert_eq!(p.algorithm, Some(Algorithm::Spc));
+        assert_eq!(p.min_sup, None);
+    }
+
+    #[test]
+    fn mine_rejects_malformed_tokens() {
+        assert!(err("MINE dataset=chess algo=spc min_sup=lots").contains("min_sup"));
+        assert!(err("MINE dataset=chess algo=spc fuse12=maybe").contains("boolean"));
+        assert!(err("MINE dataset=chess algo=spc backend=gpu").contains("backend"));
+        assert!(err("MINE dataset=chess algo=nope").contains("algorithm"));
+        assert!(err("MINE dataset=chess algo=spc flavor=mint").contains("unknown key"));
+        assert!(err("MINE dataset=chess algo=spc algo=fpc").contains("duplicate"));
+        assert!(err("MINE dataset=chess algo=spc naked").contains("key=value"));
+    }
+
+    #[test]
+    fn resolve_applies_registry_defaults() {
+        let q = mine("MINE dataset=CHESS algo=opt-vfpc").resolve().expect("known dataset");
+        assert_eq!(q.dataset, "chess"); // canonicalized
+        assert_eq!(q.algorithm, Algorithm::OptimizedVfpc);
+        assert_eq!(q.min_sup, registry::reference_min_sup("chess").expect("chess has one"));
+        assert_eq!(q.dpc_alpha, registry::paper_dpc_alpha("chess"));
+        assert_eq!(q.fpc_n, RunOptions::default().fpc_n);
+        assert!(!q.fuse12);
+        assert_eq!(q.backend, CountingBackend::Trie);
+
+        let q = mine("MINE dataset=chess algo=spc min_sup=0.9 fuse12=1 backend=auto")
+            .resolve()
+            .expect("known dataset");
+        assert_eq!(q.min_sup, 0.9);
+        assert!(q.fuse12);
+        assert_eq!(q.backend, CountingBackend::Auto);
+
+        let e = mine("MINE dataset=atlantis algo=spc").resolve().expect_err("unknown");
+        assert!(matches!(e, ServeError::UnknownDataset(ref n) if n == "atlantis"), "{e:?}");
+    }
+
+    #[test]
+    fn query_key_is_spelling_insensitive() {
+        let a = mine("MINE dataset=chess algo=spc min_sup=0.20 id=a").resolve().expect("known");
+        let b = mine("MINE dataset=Chess algo=SPC min_sup=0.2 id=b").resolve().expect("known");
+        assert_eq!(a.key(), b.key());
+        let c = mine("MINE dataset=chess algo=spc min_sup=0.21").resolve().expect("known");
+        assert_ne!(a.key(), c.key());
+        // Defaults spelled out == defaults left implicit.
+        let implicit = mine("MINE dataset=chess algo=dpc").resolve().expect("known");
+        let explicit = mine("MINE dataset=chess algo=dpc min_sup=0.65 dpc_alpha=3 dpc_beta=60")
+            .resolve()
+            .expect("known");
+        assert_eq!(implicit.key(), explicit.key());
+    }
+
+    #[test]
+    fn error_lines_echo_the_request_id() {
+        let e = ServeError::Protocol("x".into());
+        assert_eq!(format_error(&e, None), "ERR\tprotocol: x\n");
+        assert_eq!(format_error(&e, Some("q7")), "ERR\tid=q7\tprotocol: x\n");
+        let quota = ServeError::Quota { in_flight: 2, limit: 2 };
+        assert!(format_error(&quota, None).starts_with("ERR\tquota: "));
+    }
+}

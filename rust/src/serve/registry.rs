@@ -1,0 +1,214 @@
+//! The daemon's session table: one lazily opened
+//! [`MiningSession`] per dataset, LRU-bounded, all sharing ONE
+//! [`Executor`] so the host-thread budget is global (DESIGN.md §12).
+
+use super::{lock, ServeError};
+use crate::cluster::ClusterConfig;
+use crate::coordinator::{MiningSession, SessionStats};
+use crate::dataset::registry;
+use crate::mapreduce::executor::Executor;
+use std::sync::Mutex;
+
+/// Counters and aggregates of a [`SessionRegistry`] snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Names of the currently open sessions, most recently used first.
+    pub open: Vec<String>,
+    /// Sessions ever opened (cold opens, not lookups).
+    pub opened: u64,
+    /// Lookups satisfied by an already-open session.
+    pub hits: u64,
+    /// Sessions evicted to keep the table within its bound.
+    pub evictions: u64,
+    /// Session counters aggregated across every session this registry ever
+    /// opened: the live ones' current stats plus the totals captured from
+    /// evicted ones at eviction time.
+    pub totals: SessionStats,
+}
+
+fn zero_stats() -> SessionStats {
+    SessionStats {
+        queries: 0,
+        job1_runs: 0,
+        job1_cache_hits: 0,
+        job2_runs: 0,
+        queries_by_algorithm: [0; 7],
+    }
+}
+
+fn accumulate(into: &mut SessionStats, s: &SessionStats) {
+    into.queries += s.queries;
+    into.job1_runs += s.job1_runs;
+    into.job1_cache_hits += s.job1_cache_hits;
+    into.job2_runs += s.job2_runs;
+    for (slot, n) in into.queries_by_algorithm.iter_mut().zip(s.queries_by_algorithm) {
+        *slot += n;
+    }
+}
+
+struct RegistryInner {
+    /// Open sessions, most recently used first (LRU = last element).
+    sessions: Vec<(String, MiningSession)>,
+    opened: u64,
+    hits: u64,
+    evictions: u64,
+    /// Stats captured from evicted sessions, so aggregates survive
+    /// eviction instead of silently resetting.
+    retired: SessionStats,
+}
+
+/// An LRU-bounded table of per-dataset [`MiningSession`]s. Sessions open
+/// lazily on first use and close (evict) coldest-first once the bound is
+/// reached; every session is built over the registry's one shared
+/// [`Executor`], so `cluster.workers` caps host threads across ALL
+/// datasets, not per dataset.
+///
+/// Eviction drops only the registry's handle: a query already executing on
+/// the evicted session finishes on its own clone (sessions are
+/// `Arc`-shared), and the evicted session's counters are folded into
+/// [`RegistryStats::totals`] at eviction time. Counter increments a
+/// still-running query makes *after* its session was evicted are not
+/// re-captured — an accepted, bounded under-count on a path that requires
+/// `max_sessions` distinct datasets to race one slow query.
+pub struct SessionRegistry {
+    cluster: ClusterConfig,
+    executor: Executor,
+    max_sessions: usize,
+    inner: Mutex<RegistryInner>,
+}
+
+impl SessionRegistry {
+    /// A registry opening sessions over `cluster`, capped at
+    /// `max_sessions` (clamped to at least 1), every session sharing
+    /// `executor`.
+    pub fn new(cluster: ClusterConfig, executor: Executor, max_sessions: usize) -> Self {
+        SessionRegistry {
+            cluster,
+            executor,
+            max_sessions: max_sessions.max(1),
+            inner: Mutex::new(RegistryInner {
+                sessions: Vec::new(),
+                opened: 0,
+                hits: 0,
+                evictions: 0,
+                retired: zero_stats(),
+            }),
+        }
+    }
+
+    /// The shared executor every session of this registry submits to.
+    pub fn executor(&self) -> &Executor {
+        &self.executor
+    }
+
+    /// The session for `name`, opening (and possibly evicting) as needed.
+    /// A hit moves the session to the front of the LRU order. Opening
+    /// happens under the registry lock: concurrent first-touches of the
+    /// same dataset must open it exactly once, and dataset builds are
+    /// bounded (registry datasets are generated, not downloaded).
+    pub fn get(&self, name: &str) -> Result<MiningSession, ServeError> {
+        let mut inner = lock(&self.inner);
+        if let Some(pos) = inner.sessions.iter().position(|(n, _)| n == name) {
+            let entry = inner.sessions.remove(pos);
+            let session = entry.1.clone();
+            inner.sessions.insert(0, entry);
+            inner.hits += 1;
+            return Ok(session);
+        }
+        let db = registry::try_load(name)
+            .ok_or_else(|| ServeError::UnknownDataset(name.to_string()))?;
+        let session = MiningSession::for_db(&db, self.cluster.clone())
+            .executor(self.executor.clone())
+            .build()?;
+        inner.opened += 1;
+        inner.sessions.insert(0, (name.to_string(), session.clone()));
+        while inner.sessions.len() > self.max_sessions {
+            if let Some((_, evicted)) = inner.sessions.pop() {
+                let stats = evicted.stats();
+                accumulate(&mut inner.retired, &stats);
+                inner.evictions += 1;
+            }
+        }
+        Ok(session)
+    }
+
+    /// Snapshot the registry's counters and the aggregate session stats.
+    pub fn stats(&self) -> RegistryStats {
+        let inner = lock(&self.inner);
+        let mut totals = inner.retired;
+        for (_, session) in &inner.sessions {
+            let stats = session.stats();
+            accumulate(&mut totals, &stats);
+        }
+        RegistryStats {
+            open: inner.sessions.iter().map(|(n, _)| n.clone()).collect(),
+            opened: inner.opened,
+            hits: inner.hits,
+            evictions: inner.evictions,
+            totals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Algorithm, MiningRequest};
+
+    fn registry(max: usize) -> SessionRegistry {
+        let cluster = ClusterConfig::paper_cluster();
+        let executor = Executor::new(4);
+        SessionRegistry::new(cluster, executor, max)
+    }
+
+    #[test]
+    fn lookups_hit_the_open_session() {
+        let reg = registry(4);
+        let a = reg.get("t5i2d200").expect("quest name opens");
+        let b = reg.get("t5i2d200").expect("second lookup");
+        // Same underlying session: counters are shared.
+        a.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.4)).expect("mines");
+        assert_eq!(b.stats().queries, 1);
+        let stats = reg.stats();
+        assert_eq!(stats.opened, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.open, vec!["t5i2d200".to_string()]);
+        assert_eq!(stats.totals.queries, 1);
+    }
+
+    #[test]
+    fn unknown_names_are_typed_errors() {
+        let reg = registry(4);
+        let err = reg.get("atlantis").expect_err("unknown dataset");
+        assert!(matches!(err, ServeError::UnknownDataset(ref n) if n == "atlantis"), "{err:?}");
+    }
+
+    #[test]
+    fn coldest_session_is_evicted_and_its_stats_survive() {
+        let reg = registry(2);
+        let a = reg.get("t5i2d200").expect("open a");
+        a.run(&MiningRequest::new(Algorithm::Spc).min_sup(0.4)).expect("mines");
+        reg.get("t5i2d300").expect("open b");
+        reg.get("t5i2d200").expect("touch a"); // a is now most recent
+        reg.get("t5i2d400").expect("open c evicts b");
+        let stats = reg.stats();
+        assert_eq!(stats.opened, 3);
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.open, vec!["t5i2d400".to_string(), "t5i2d200".to_string()]);
+        // a's query survived the churn in the aggregate.
+        assert_eq!(stats.totals.queries, 1);
+        // Re-opening the evicted dataset is a cold open, not a hit.
+        reg.get("t5i2d300").expect("reopen b");
+        assert_eq!(reg.stats().opened, 4);
+    }
+
+    #[test]
+    fn all_sessions_share_the_one_executor() {
+        let reg = registry(4);
+        let a = reg.get("t5i2d200").expect("open a");
+        let b = reg.get("t5i2d300").expect("open b");
+        assert_eq!(a.executor().workers(), reg.executor().workers());
+        assert_eq!(b.executor().workers(), reg.executor().workers());
+    }
+}

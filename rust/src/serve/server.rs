@@ -1,0 +1,516 @@
+//! The TCP daemon itself: accept loop, per-connection readers, the fair
+//! round-robin dispatcher, and the drain/shutdown state machine
+//! (DESIGN.md §12).
+//!
+//! Thread shape: one accept thread, one reader thread per live
+//! connection, and a fixed pool of `query_threads` worker threads that
+//! execute admitted MINE queries. Readers answer `STATS`/`PING` inline
+//! (they never block on mining) and perform admission control; workers
+//! pull queries round-robin *across connections* so interactive clients
+//! stay responsive next to batchy ones.
+//!
+//! These long-lived service threads deliberately do NOT run inside the
+//! shared `WorkerPool`: parking a blocking `read_line` (or a worker that
+//! itself submits MapReduce jobs to the pool) on pool workers would
+//! deadlock the budget the queries need. pallas-lint scopes its
+//! `raw-thread-spawn` rule accordingly (DESIGN.md §10).
+
+use super::{lock, ServeError};
+use crate::cluster::ClusterConfig;
+use crate::coordinator::CancelToken;
+use crate::mapreduce::executor::Executor;
+use crate::serve::coalesce::{Coalescer, Fulfillment};
+use crate::serve::protocol::{self, MineQuery, MineResult, Request};
+use crate::serve::registry::SessionRegistry;
+use crate::serve::stats::{ServeStats, StatsSnapshot};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Tunables of a [`Server`]; start one with [`Server::start`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Interface to bind (default `127.0.0.1` — the daemon is a local
+    /// service; fronting it publicly is a deliberate act).
+    pub host: String,
+    /// Port to bind; 0 picks an ephemeral port (see [`Server::addr`]).
+    pub port: u16,
+    /// The simulated cluster every session mines on; `cluster.workers`
+    /// sizes the ONE shared executor pool (the global host budget).
+    pub cluster: ClusterConfig,
+    /// Most sessions (datasets) open at once; LRU-evicted beyond this.
+    pub max_sessions: usize,
+    /// Admission bound: most queries queued (not yet executing) across
+    /// all connections before new ones get `ERR busy:`.
+    pub max_pending: usize,
+    /// Most queries one connection may hold in flight (queued +
+    /// executing) before its next gets `ERR quota:`.
+    pub client_quota: usize,
+    /// Result-cache capacity in responses; 0 disables caching.
+    pub result_cache: usize,
+    /// Worker threads executing MINE queries (concurrent queries; their
+    /// map/reduce tasks all still share the executor pool).
+    pub query_threads: usize,
+    /// Coalesce identical concurrent queries into one execution.
+    pub coalesce: bool,
+}
+
+impl ServeConfig {
+    /// Defaults over `cluster`: loopback, ephemeral port, 3 sessions,
+    /// 64 pending, quota 4, 32 cached results, 2 query threads,
+    /// coalescing on.
+    pub fn new(cluster: ClusterConfig) -> Self {
+        ServeConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            cluster,
+            max_sessions: 3,
+            max_pending: 64,
+            client_quota: 4,
+            result_cache: 32,
+            query_threads: 2,
+            coalesce: true,
+        }
+    }
+}
+
+/// One admitted MINE query, parked in its connection's queue.
+struct Job {
+    conn: u64,
+    query: MineQuery,
+    id: Option<String>,
+    writer: SharedWriter,
+    enqueued: Instant,
+}
+
+/// Per-connection dispatcher bookkeeping.
+#[derive(Default)]
+struct ConnState {
+    queue: VecDeque<Job>,
+    /// Queued + executing queries of this connection (the quota basis).
+    in_flight: usize,
+    /// The reader exited; the entry dies once `in_flight` drains.
+    closed: bool,
+}
+
+/// The dispatcher: every mutation happens under one mutex, wakeups via
+/// the companion condvar (notify AFTER the guard drops — DESIGN.md §10).
+#[derive(Default)]
+struct DispatchState {
+    conns: HashMap<u64, ConnState>,
+    /// Round-robin order of connections with non-empty queues. Invariant:
+    /// a conn id appears at most once, and exactly when its queue is
+    /// non-empty.
+    rotation: VecDeque<u64>,
+    pending: usize,
+    pending_high_water: usize,
+    draining: bool,
+}
+
+/// A connection's write half, shared by its reader (inline replies) and
+/// the workers (query responses); the mutex makes each response atomic
+/// on the wire.
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
+struct ServerShared {
+    config: ServeConfig,
+    registry: SessionRegistry,
+    coalescer: Coalescer,
+    stats: ServeStats,
+    state: Mutex<DispatchState>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+    /// Cancels in-flight mining on the non-graceful (drop) path.
+    cancel: CancelToken,
+    addr: SocketAddr,
+    /// Read-half handles of live connections, for shutdown's
+    /// `Shutdown::Read` sweep (writes stay open so drained responses
+    /// still reach their clients).
+    sockets: Mutex<HashMap<u64, TcpStream>>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running serve daemon. [`Server::wait`] blocks until a client issues
+/// `SHUTDOWN` (or [`Server::shutdown`] is called), then joins every
+/// thread — pending and executing queries are drained, not dropped.
+/// Dropping an un-waited `Server` instead cancels in-flight mining
+/// through the shared [`CancelToken`] and then drains: the SIGTERM-safe
+/// path for embedders.
+pub struct Server {
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `config.host:config.port` and start serving. Fails only on
+    /// socket/thread-spawn errors; dataset sessions open lazily per query.
+    pub fn start(config: ServeConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind((config.host.as_str(), config.port))?;
+        let addr = listener.local_addr()?;
+        let executor = Executor::new(config.cluster.workers.max(1));
+        let registry = SessionRegistry::new(config.cluster.clone(), executor, config.max_sessions);
+        let coalescer = Coalescer::new(config.result_cache);
+        let query_threads = config.query_threads.max(1);
+        let shared = Arc::new(ServerShared {
+            config,
+            registry,
+            coalescer,
+            stats: ServeStats::new(),
+            state: Mutex::new(DispatchState::default()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            cancel: CancelToken::new(),
+            addr,
+            sockets: Mutex::new(HashMap::new()),
+            readers: Mutex::new(Vec::new()),
+        });
+        let mut workers = Vec::with_capacity(query_threads);
+        for i in 0..query_threads {
+            let shared_i = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-q{i}"))
+                .spawn(move || worker_loop(&shared_i))?;
+            workers.push(handle);
+        }
+        let shared_a = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || accept_loop(&shared_a, listener))?;
+        Ok(Server { shared, accept: Some(accept), workers })
+    }
+
+    /// The bound address — how a caller learns an ephemeral port.
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Snapshot the daemon's counters (what the `STATS` verb renders).
+    pub fn stats(&self) -> StatsSnapshot {
+        snapshot(&self.shared)
+    }
+
+    /// Begin a graceful drain, exactly as a client `SHUTDOWN` would:
+    /// admission closes, queued and executing queries finish and respond.
+    /// Returns immediately; [`Server::wait`] observes completion.
+    pub fn shutdown(&self) {
+        begin_shutdown(&self.shared, false);
+    }
+
+    /// Block until the daemon has shut down (via client `SHUTDOWN` or
+    /// [`Server::shutdown`]) and every thread has drained and exited.
+    pub fn wait(mut self) {
+        self.join_all();
+    }
+
+    fn join_all(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        let readers = std::mem::take(&mut *lock(&self.shared.readers));
+        for h in readers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    /// The non-graceful path: cancel in-flight mining (queries respond
+    /// `ERR mining: ... cancelled`), close admission, drain, join. A
+    /// server that already [`wait`](Server::wait)ed has nothing left to
+    /// do here.
+    fn drop(&mut self) {
+        if self.accept.is_none() && self.workers.is_empty() {
+            return;
+        }
+        begin_shutdown(&self.shared, true);
+        self.join_all();
+    }
+}
+
+impl std::fmt::Debug for Server {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Server")
+            .field("addr", &self.shared.addr)
+            .field("draining", &self.shared.shutdown.load(Ordering::SeqCst))
+            .finish()
+    }
+}
+
+/// Flip the daemon into draining exactly once; wake everything that
+/// blocks: workers (condvar), readers (read-half shutdown), the accept
+/// loop (a self-connection).
+fn begin_shutdown(shared: &ServerShared, cancel_inflight: bool) {
+    if shared.shutdown.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    if cancel_inflight {
+        shared.cancel.cancel();
+    }
+    {
+        let mut st = lock(&shared.state);
+        st.draining = true;
+    }
+    shared.ready.notify_all();
+    {
+        let socks = lock(&shared.sockets);
+        for s in socks.values() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+    }
+    // Poke the accept loop awake; it observes the flag and exits.
+    let _ = TcpStream::connect(shared.addr);
+}
+
+fn snapshot(shared: &ServerShared) -> StatsSnapshot {
+    let (mine_requests, mine_ok, errors) = shared.stats.counts();
+    let (pending, pending_high_water) = {
+        let st = lock(&shared.state);
+        (st.pending, st.pending_high_water)
+    };
+    StatsSnapshot {
+        registry: shared.registry.stats(),
+        coalesce: shared.coalescer.stats(),
+        mine_requests,
+        mine_ok,
+        errors,
+        pending,
+        pending_high_water,
+        pool_workers: shared.registry.executor().workers(),
+        pool_high_water: shared.registry.executor().high_water_mark(),
+        latency: shared.stats.latency(),
+    }
+}
+
+fn accept_loop(shared: &Arc<ServerShared>, listener: TcpListener) {
+    let mut next_id: u64 = 0;
+    for incoming in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = incoming else { continue };
+        let conn = next_id;
+        next_id += 1;
+        // Register the connection and its read-half handle BEFORE
+        // spawning the reader, then re-check the flag: a shutdown racing
+        // this accept either sees the socket in its sweep or we close it
+        // here — no reader is left blocked forever.
+        if let Ok(read_half) = stream.try_clone() {
+            lock(&shared.sockets).insert(conn, read_half);
+        }
+        {
+            let mut st = lock(&shared.state);
+            st.conns.insert(conn, ConnState::default());
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        let shared_r = Arc::clone(shared);
+        let spawned = std::thread::Builder::new()
+            .name(format!("serve-conn-{conn}"))
+            .spawn(move || reader_loop(&shared_r, conn, stream));
+        match spawned {
+            Ok(handle) => lock(&shared.readers).push(handle),
+            Err(_) => reader_cleanup(shared, conn),
+        }
+    }
+}
+
+/// Write one complete response under the connection's writer lock, so
+/// concurrent responses to one client never interleave. Write errors mean
+/// the client left; the query's work is already done either way.
+fn write_response(writer: &SharedWriter, text: &str) {
+    let mut w = lock(writer);
+    let _ = w.write_all(text.as_bytes());
+    let _ = w.flush();
+}
+
+fn reader_loop(shared: &Arc<ServerShared>, conn: u64, stream: TcpStream) {
+    if let Ok(write_half) = stream.try_clone() {
+        let writer: SharedWriter = Arc::new(Mutex::new(write_half));
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            let trimmed = line.trim_end_matches(['\r', '\n']);
+            match Request::parse(trimmed) {
+                Ok(Request::Ping) => write_response(&writer, "OK\tPONG\n"),
+                Ok(Request::Stats) => write_response(&writer, &snapshot(shared).render()),
+                Ok(Request::Shutdown) => {
+                    write_response(&writer, "OK\tBYE\n");
+                    begin_shutdown(shared, false);
+                }
+                Ok(Request::Mine(params)) => {
+                    shared.stats.record_request();
+                    let id = params.id.clone();
+                    let admitted = params.resolve().and_then(|query| {
+                        let job = Job {
+                            conn,
+                            query,
+                            id: id.clone(),
+                            writer: Arc::clone(&writer),
+                            // lint:allow(wall-clock-in-sim): service latency
+                            // meter — host time feeds STATS percentiles only,
+                            // never simulated results (DESIGN.md §12).
+                            enqueued: Instant::now(),
+                        };
+                        admit(shared, job)
+                    });
+                    if let Err(e) = admitted {
+                        write_response(&writer, &protocol::format_error(&e, id.as_deref()));
+                        shared.stats.record_err();
+                    }
+                }
+                Err(e) => {
+                    write_response(&writer, &protocol::format_error(&e, None));
+                    shared.stats.record_err();
+                }
+            }
+        }
+    }
+    reader_cleanup(shared, conn);
+}
+
+fn reader_cleanup(shared: &ServerShared, conn: u64) {
+    lock(&shared.sockets).remove(&conn);
+    let mut st = lock(&shared.state);
+    let drained = match st.conns.get_mut(&conn) {
+        Some(cs) => {
+            cs.closed = true;
+            cs.in_flight == 0 && cs.queue.is_empty()
+        }
+        None => false,
+    };
+    if drained {
+        st.conns.remove(&conn);
+    }
+}
+
+/// Admission control: draining, queue bound, and per-connection quota, in
+/// that order. On success the job is queued and a worker woken.
+fn admit(shared: &ServerShared, job: Job) -> Result<(), ServeError> {
+    let conn = job.conn;
+    {
+        let mut st = lock(&shared.state);
+        if st.draining {
+            return Err(ServeError::ShuttingDown);
+        }
+        if st.pending >= shared.config.max_pending {
+            return Err(ServeError::Busy {
+                pending: st.pending,
+                limit: shared.config.max_pending,
+            });
+        }
+        let Some(cs) = st.conns.get_mut(&conn) else {
+            return Err(ServeError::ShuttingDown);
+        };
+        if cs.in_flight >= shared.config.client_quota {
+            return Err(ServeError::Quota {
+                in_flight: cs.in_flight,
+                limit: shared.config.client_quota,
+            });
+        }
+        cs.in_flight += 1;
+        let was_empty = cs.queue.is_empty();
+        cs.queue.push_back(job);
+        if was_empty {
+            st.rotation.push_back(conn);
+        }
+        st.pending += 1;
+        st.pending_high_water = st.pending_high_water.max(st.pending);
+    }
+    shared.ready.notify_one();
+    Ok(())
+}
+
+/// Pull the next job fairly: take the head of the rotation's front
+/// connection, and send that connection to the rotation's back if it
+/// still has queued work. `None` once draining and nothing is queued.
+fn next_job(shared: &ServerShared) -> Option<Job> {
+    let mut st = lock(&shared.state);
+    loop {
+        if let Some(conn) = st.rotation.pop_front() {
+            if let Some(cs) = st.conns.get_mut(&conn) {
+                if let Some(job) = cs.queue.pop_front() {
+                    if !cs.queue.is_empty() {
+                        st.rotation.push_back(conn);
+                    }
+                    st.pending -= 1;
+                    return Some(job);
+                }
+            }
+            continue; // stale rotation entry (conn died queue-empty)
+        }
+        if st.draining {
+            return None;
+        }
+        st = shared.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
+}
+
+/// A worker finished a job for `conn`: release its quota slot and reap
+/// the connection if its reader is gone and nothing remains in flight.
+fn finish(shared: &ServerShared, conn: u64) {
+    let mut st = lock(&shared.state);
+    let drained = match st.conns.get_mut(&conn) {
+        Some(cs) => {
+            cs.in_flight -= 1;
+            cs.closed && cs.in_flight == 0 && cs.queue.is_empty()
+        }
+        None => false,
+    };
+    if drained {
+        st.conns.remove(&conn);
+    }
+}
+
+fn worker_loop(shared: &Arc<ServerShared>) {
+    while let Some(job) = next_job(shared) {
+        execute(shared, job);
+    }
+}
+
+/// Execute one admitted query through the coalescer/cache and write its
+/// response. Mining runs under the server-wide [`CancelToken`], so the
+/// drop path can abort it.
+fn execute(shared: &ServerShared, job: Job) {
+    let key = job.query.key();
+    let run = || -> Result<MineResult, ServeError> {
+        let session = shared.registry.get(&job.query.dataset)?;
+        let outcome = session.run_streaming(&job.query.request(), &shared.cancel, |_| {})?;
+        Ok(MineResult::from_outcome(&outcome))
+    };
+    let (result, how) = if shared.config.coalesce {
+        shared.coalescer.fetch(&key, run)
+    } else {
+        shared.coalescer.fetch_direct(&key, run)
+    };
+    match result {
+        Ok(res) => {
+            let mut text = res.header(
+                job.id.as_deref(),
+                how == Fulfillment::Cached,
+                how == Fulfillment::Coalesced,
+            );
+            text.push_str(&res.body);
+            write_response(&job.writer, &text);
+            shared.stats.record_ok(job.enqueued.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            write_response(&job.writer, &protocol::format_error(&e, job.id.as_deref()));
+            shared.stats.record_err();
+        }
+    }
+    finish(shared, job.conn);
+}

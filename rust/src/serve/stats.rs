@@ -1,0 +1,227 @@
+//! The daemon's observability surface: per-request counters, the latency
+//! histogram, and the `STATS` response renderer (DESIGN.md §12).
+
+use super::lock;
+use crate::coordinator::Algorithm;
+use crate::serve::coalesce::CoalesceStats;
+use crate::serve::registry::RegistryStats;
+use crate::util::hist::Histogram;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The server's own request counters and the MINE latency histogram
+/// (queue wait + execution, recorded at response time).
+pub(crate) struct ServeStats {
+    mine_requests: AtomicU64,
+    mine_ok: AtomicU64,
+    errors: AtomicU64,
+    latency: Mutex<Histogram>,
+}
+
+impl ServeStats {
+    pub(crate) fn new() -> Self {
+        ServeStats {
+            mine_requests: AtomicU64::new(0),
+            mine_ok: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latency: Mutex::new(Histogram::new()),
+        }
+    }
+
+    /// A MINE line arrived (admitted or not).
+    pub(crate) fn record_request(&self) {
+        self.mine_requests.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// A MINE query was answered `OK` after `secs` from admission.
+    pub(crate) fn record_ok(&self, secs: f64) {
+        self.mine_ok.fetch_add(1, Ordering::SeqCst);
+        lock(&self.latency).record(secs);
+    }
+
+    /// Any request line was answered with an `ERR` (unparseable line,
+    /// rejected admission, or a failed execution).
+    pub(crate) fn record_err(&self) {
+        self.errors.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.mine_requests.load(Ordering::SeqCst),
+            self.mine_ok.load(Ordering::SeqCst),
+            self.errors.load(Ordering::SeqCst),
+        )
+    }
+
+    pub(crate) fn latency(&self) -> Histogram {
+        lock(&self.latency).clone()
+    }
+}
+
+/// Everything the `STATS` verb reports, gathered atomically enough for
+/// monitoring (each source is snapshotted under its own lock; counters
+/// may be mutually off by an in-flight query).
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    /// Session-table counters and cross-session aggregates.
+    pub registry: RegistryStats,
+    /// Coalescing and result-cache counters.
+    pub coalesce: CoalesceStats,
+    /// MINE lines received (including rejected ones).
+    pub mine_requests: u64,
+    /// MINE queries answered `OK`.
+    pub mine_ok: u64,
+    /// Request lines answered `ERR` — unparseable lines of any verb,
+    /// rejected admissions, and failed executions alike.
+    pub errors: u64,
+    /// Queries currently queued (admitted, not yet executing).
+    pub pending: usize,
+    /// Highest `pending` ever observed.
+    pub pending_high_water: usize,
+    /// The shared executor pool's thread budget.
+    pub pool_workers: usize,
+    /// Most pool workers ever simultaneously busy.
+    pub pool_high_water: usize,
+    /// Admission-to-response latency of every `OK` MINE query.
+    pub latency: Histogram,
+}
+
+impl StatsSnapshot {
+    /// Render the full `STATS` response: `OK STATS` header, one
+    /// `key\tvalue` line per counter in a fixed documented order, `.`
+    /// terminator. Latency percentiles render in milliseconds with 3
+    /// decimals; `-` when nothing has completed yet.
+    pub fn render(&self) -> String {
+        let mut out = String::from("OK\tSTATS\n");
+        let mut line = |key: &str, value: String| {
+            let _ = writeln!(out, "{key}\t{value}");
+        };
+        let open = if self.registry.open.is_empty() {
+            "-".to_string()
+        } else {
+            self.registry.open.join(" ")
+        };
+        line("open_sessions", open);
+        line("sessions_opened", self.registry.opened.to_string());
+        line("session_hits", self.registry.hits.to_string());
+        line("session_evictions", self.registry.evictions.to_string());
+        line("session_queries", self.registry.totals.queries.to_string());
+        line("job1_runs", self.registry.totals.job1_runs.to_string());
+        line("job1_cache_hits", self.registry.totals.job1_cache_hits.to_string());
+        line("job2_runs", self.registry.totals.job2_runs.to_string());
+        for algo in Algorithm::ALL {
+            line(
+                &format!("queries[{}]", algo.name()),
+                self.registry.totals.queries_by_algorithm[algo.index()].to_string(),
+            );
+        }
+        line("result_cache_hits", self.coalesce.cache_hits.to_string());
+        line("result_cache_evictions", self.coalesce.cache_evictions.to_string());
+        line("result_cache_len", self.coalesce.cache_len.to_string());
+        line("result_cache_capacity", self.coalesce.cache_capacity.to_string());
+        line("coalesced_joins", self.coalesce.coalesced_joins.to_string());
+        line("mine_requests", self.mine_requests.to_string());
+        line("mine_ok", self.mine_ok.to_string());
+        line("errors", self.errors.to_string());
+        line("pending", self.pending.to_string());
+        line("pending_high_water", self.pending_high_water.to_string());
+        line("pool_workers", self.pool_workers.to_string());
+        line("pool_high_water", self.pool_high_water.to_string());
+        line("latency_count", self.latency.count().to_string());
+        let ms = |q: Option<f64>| match q {
+            Some(secs) => format!("{:.3}", secs * 1e3),
+            None => "-".to_string(),
+        };
+        line("latency_p50_ms", ms(self.latency.p50()));
+        line("latency_p95_ms", ms(self.latency.p95()));
+        line("latency_p99_ms", ms(self.latency.p99()));
+        out.push_str(".\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SessionStats;
+
+    fn snapshot() -> StatsSnapshot {
+        let mut latency = Histogram::new();
+        latency.record(0.002);
+        latency.record(0.004);
+        StatsSnapshot {
+            registry: RegistryStats {
+                open: vec!["chess".into(), "mushroom".into()],
+                opened: 2,
+                hits: 5,
+                evictions: 1,
+                totals: SessionStats {
+                    queries: 7,
+                    job1_runs: 2,
+                    job1_cache_hits: 5,
+                    job2_runs: 9,
+                    queries_by_algorithm: [1, 0, 0, 2, 0, 4, 0],
+                },
+            },
+            coalesce: CoalesceStats {
+                coalesced_joins: 3,
+                cache_hits: 4,
+                cache_evictions: 0,
+                cache_len: 2,
+                cache_capacity: 16,
+            },
+            mine_requests: 14,
+            mine_ok: 11,
+            errors: 3,
+            pending: 0,
+            pending_high_water: 6,
+            pool_workers: 8,
+            pool_high_water: 8,
+            latency,
+        }
+    }
+
+    #[test]
+    fn render_is_line_oriented_and_terminated() {
+        let s = snapshot().render();
+        assert!(s.starts_with("OK\tSTATS\n"));
+        assert!(s.ends_with("\n.\n"));
+        assert!(s.contains("open_sessions\tchess mushroom\n"));
+        assert!(s.contains("session_hits\t5\n"));
+        assert!(s.contains("job2_runs\t9\n"));
+        assert!(s.contains("queries[SPC]\t1\n"));
+        assert!(s.contains("queries[Optimized-VFPC]\t4\n"));
+        assert!(s.contains("result_cache_hits\t4\n"));
+        assert!(s.contains("coalesced_joins\t3\n"));
+        assert!(s.contains("pool_workers\t8\n"));
+        assert!(s.contains("latency_count\t2\n"));
+        // Every body line is exactly key TAB value.
+        for l in s.lines().skip(1) {
+            if l == "." {
+                break;
+            }
+            assert_eq!(l.split('\t').count(), 2, "malformed line {l:?}");
+        }
+    }
+
+    #[test]
+    fn empty_latency_renders_dashes() {
+        let mut snap = snapshot();
+        snap.latency = Histogram::new();
+        let s = snap.render();
+        assert!(s.contains("latency_p50_ms\t-\n"));
+        assert!(s.contains("latency_count\t0\n"));
+    }
+
+    #[test]
+    fn record_paths_feed_the_counters() {
+        let stats = ServeStats::new();
+        stats.record_request();
+        stats.record_request();
+        stats.record_ok(0.005);
+        stats.record_err();
+        assert_eq!(stats.counts(), (2, 1, 1));
+        assert_eq!(stats.latency().count(), 1);
+    }
+}

@@ -1,0 +1,292 @@
+//! Fixed-bucket streaming latency histogram.
+//!
+//! [`Histogram`] accumulates non-negative duration samples (seconds) into
+//! a fixed array of log-spaced buckets, so recording is O(1), memory is
+//! constant, two histograms [`merge`](Histogram::merge) by adding bucket
+//! counts, and quantiles come out with a bounded *relative* error of one
+//! bucket ratio ([`Histogram::BUCKET_RATIO`], 25%). This is the `serve`
+//! daemon's per-query latency instrument (`STATS` p50/p95/p99, DESIGN.md
+//! §12) and is exported for bench-harness reuse — per-thread histograms
+//! merge into one report without sharing a lock on the hot path.
+//!
+//! The bucket layout is pinned: bucket 0 holds everything below
+//! [`Histogram::MIN_SECS`] (1 µs), buckets grow geometrically by
+//! `BUCKET_RATIO`, and the last bucket absorbs everything past the top
+//! edge (≈ 1.9 h). Quantiles report the *upper edge* of the bucket holding
+//! the requested rank, so they never under-state a latency.
+
+/// Streaming log-bucket histogram of durations in seconds; see the module
+/// docs for the bucket layout and error bound.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; Histogram::BUCKETS],
+    total: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Number of buckets; fixed so histograms always merge shape-to-shape.
+    pub const BUCKETS: usize = 96;
+    /// Lower edge of bucket 1 — samples below land in bucket 0.
+    pub const MIN_SECS: f64 = 1e-6;
+    /// Geometric growth factor between consecutive bucket edges: the
+    /// worst-case relative error of any reported quantile.
+    pub const BUCKET_RATIO: f64 = 1.25;
+
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self { counts: [0; Self::BUCKETS], total: 0 }
+    }
+
+    /// The bucket a sample falls into. Non-finite and non-positive samples
+    /// clamp to bucket 0; samples past the top edge clamp to the last
+    /// bucket.
+    fn bucket(secs: f64) -> usize {
+        if !secs.is_finite() || secs < Self::MIN_SECS {
+            return 0;
+        }
+        // floor(log_ratio(secs / MIN)) + 1: bucket 1 starts at MIN_SECS.
+        let idx = (secs / Self::MIN_SECS).ln() / Self::BUCKET_RATIO.ln();
+        let idx = idx.floor();
+        if idx < 0.0 {
+            0
+        } else {
+            ((idx as usize) + 1).min(Self::BUCKETS - 1)
+        }
+    }
+
+    /// Upper edge (seconds) of `bucket` — what quantiles report. The last
+    /// bucket is unbounded; it reports its lower edge (a floor, so a
+    /// clamped outlier still reads as "at least this").
+    fn upper_edge(bucket: usize) -> f64 {
+        if bucket == 0 {
+            return Self::MIN_SECS;
+        }
+        let exp = if bucket == Self::BUCKETS - 1 { bucket - 1 } else { bucket };
+        Self::MIN_SECS * Self::BUCKET_RATIO.powi(exp as i32)
+    }
+
+    /// Record one duration sample.
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket(secs)] += 1;
+        self.total += 1;
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Add every bucket of `other` into `self` (the parallel-collection
+    /// reduction step).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += *theirs;
+        }
+        self.total += other.total;
+    }
+
+    /// The `q`-quantile (`0.0 < q <= 1.0`) as the upper edge of the bucket
+    /// holding the rank-`ceil(q·n)` sample — an upper bound within one
+    /// [`BUCKET_RATIO`](Self::BUCKET_RATIO) of the exact order statistic.
+    /// `None` when empty or `q` is out of domain.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.total == 0 || !(q > 0.0 && q <= 1.0) {
+            return None;
+        }
+        // ceil without going through floats on the rank itself.
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(Self::upper_edge(i));
+            }
+        }
+        None // unreachable: seen == total >= rank by the loop's end
+    }
+
+    /// Median upper bound (see [`quantile`](Self::quantile)).
+    pub fn p50(&self) -> Option<f64> {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile upper bound.
+    pub fn p95(&self) -> Option<f64> {
+        self.quantile(0.95)
+    }
+
+    /// 99th-percentile upper bound.
+    pub fn p99(&self) -> Option<f64> {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, Gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_histogram_has_no_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), None);
+        assert_eq!(h.quantile(1.0), None);
+    }
+
+    #[test]
+    fn out_of_domain_q_is_none() {
+        let mut h = Histogram::new();
+        h.record(0.5);
+        assert_eq!(h.quantile(0.0), None);
+        assert_eq!(h.quantile(1.5), None);
+        assert_eq!(h.quantile(f64::NAN), None);
+    }
+
+    #[test]
+    fn degenerate_samples_clamp_to_the_edge_buckets() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(1e-9); // below MIN_SECS
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.p50(), Some(Histogram::MIN_SECS));
+        // A sample beyond the top edge lands in (and reports) the last
+        // bucket instead of being dropped.
+        let mut top = Histogram::new();
+        top.record(1e12);
+        assert_eq!(top.count(), 1);
+        let p = top.p50().expect("one sample has a median");
+        assert!(p > 1e3, "top bucket edge should be huge, got {p}");
+    }
+
+    #[test]
+    fn single_sample_quantile_brackets_the_sample() {
+        for &s in &[2e-6, 1e-3, 0.7, 12.0, 900.0] {
+            let mut h = Histogram::new();
+            h.record(s);
+            let p = h.p50().expect("non-empty");
+            assert!(p >= s, "quantile must not under-state: {p} < {s}");
+            assert!(
+                p <= s * Histogram::BUCKET_RATIO * (1.0 + 1e-12),
+                "quantile exceeded one bucket of error: {p} vs {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_recording_the_union() {
+        let samples_a = [1e-5, 3e-4, 0.02, 0.02, 1.5];
+        let samples_b = [2e-6, 0.4, 7.0];
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut union = Histogram::new();
+        for &s in &samples_a {
+            a.record(s);
+            union.record(s);
+        }
+        for &s in &samples_b {
+            b.record(s);
+            union.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a, union);
+        assert_eq!(a.count(), (samples_a.len() + samples_b.len()) as u64);
+    }
+
+    /// Generator of latency-shaped sample vectors: log-uniform in
+    /// (~1 µs, ~1000 s), plus occasional exact-zero samples.
+    struct SamplesGen;
+
+    impl Gen for SamplesGen {
+        type Item = Vec<f64>;
+        fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+            let len = rng.range(1, 400);
+            (0..len)
+                .map(|_| {
+                    if rng.below(20) == 0 {
+                        0.0
+                    } else {
+                        // exp maps uniform [-14, 7] to ~[8e-7, 1.1e3] s.
+                        (rng.next_f64() * 21.0 - 14.0).exp()
+                    }
+                })
+                .collect()
+        }
+        fn shrink(&self, item: &Vec<f64>) -> Vec<Vec<f64>> {
+            let mut out = Vec::new();
+            if item.len() > 1 {
+                out.push(item[..item.len() / 2].to_vec());
+                out.push(item[item.len() / 2..].to_vec());
+            }
+            out
+        }
+    }
+
+    /// The quantile bound property against a sorted reference: for every q,
+    /// the histogram's answer is an upper bound on the exact order
+    /// statistic and within one bucket ratio of it (coarser only for the
+    /// clamped edge buckets, which the generator avoids).
+    #[test]
+    fn quantiles_bound_the_sorted_reference() {
+        forall(0xB0C4, 60, &SamplesGen, |samples| {
+            let mut h = Histogram::new();
+            for &s in samples {
+                h.record(s);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+            for &q in &[0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+                let exact = sorted[rank - 1];
+                let est = h.quantile(q).expect("non-empty");
+                if est < exact {
+                    return false; // never under-state
+                }
+                // Within one bucket of relative error once past the floor
+                // bucket; the floor bucket reports MIN_SECS exactly.
+                let ceiling = (exact * Histogram::BUCKET_RATIO).max(Histogram::MIN_SECS);
+                if est > ceiling * (1.0 + 1e-9) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    /// Merging per-thread histograms must agree with one histogram fed
+    /// everything, for any split of the sample stream.
+    #[test]
+    fn merge_is_union_for_any_split() {
+        forall(0x5EED, 40, &SamplesGen, |samples| {
+            let mut whole = Histogram::new();
+            for &s in samples {
+                whole.record(s);
+            }
+            let mid = samples.len() / 2;
+            let (mut left, mut right) = (Histogram::new(), Histogram::new());
+            for &s in &samples[..mid] {
+                left.record(s);
+            }
+            for &s in &samples[mid..] {
+                right.record(s);
+            }
+            left.merge(&right);
+            left == whole
+        });
+    }
+}

@@ -1,6 +1,6 @@
 //! Self-contained utility substrates: PRNG, CLI flags, TOML-subset config
-//! parser, the persistent worker pool, a pinned SipHash-1-3, a
-//! property-test mini-framework, and logging.
+//! parser, the persistent worker pool, a pinned SipHash-1-3, a streaming
+//! latency histogram, a property-test mini-framework, and logging.
 //!
 //! These stand in for `rand`, `clap`, `toml`, `rayon`, `proptest`, and
 //! `env_logger`, none of which are available in the offline build
@@ -8,6 +8,7 @@
 
 pub mod check;
 pub mod flags;
+pub mod hist;
 pub mod logging;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,366 @@
+//! End-to-end tests of the serve daemon over real TCP connections on an
+//! ephemeral port: wire output byte-identical to an in-process session
+//! (the ISSUE 8 acceptance criterion, checked for all seven algorithms),
+//! warm-cache answers with zero new Job1/Job2 runs, coalescing of
+//! identical concurrent queries, quota and malformed-request rejections,
+//! LRU session eviction observed through `STATS`, and a clean drain on
+//! `SHUTDOWN`.
+//!
+//! Datasets are tiny Quest-family names (generated in memory,
+//! deterministic by seed) so the whole suite stays in tier-1 time.
+
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{Algorithm, MiningRequest, MiningSession};
+use mrapriori::dataset::registry;
+use mrapriori::serve::{protocol, MineResult, ServeConfig, Server, StatsSnapshot};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn config() -> ServeConfig {
+    ServeConfig::new(ClusterConfig::paper_cluster())
+}
+
+fn start(config: ServeConfig) -> Server {
+    Server::start(config).expect("bind an ephemeral port")
+}
+
+/// Spin until `pred` holds on the server's counters (the in-process stats
+/// surface exists precisely so tests can sequence against the daemon's
+/// internal progress without sleeping blind).
+fn wait_for(server: &Server, what: &str, pred: impl Fn(&StatsSnapshot) -> bool) {
+    for _ in 0..2000 {
+        if pred(&server.stats()) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// A test client: one TCP connection speaking the line protocol.
+struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to the daemon");
+        Client { reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, text: &str) {
+        let stream = self.reader.get_mut();
+        stream.write_all(text.as_bytes()).expect("send");
+        stream.write_all(b"\n").expect("send newline");
+        stream.flush().expect("flush");
+    }
+
+    fn line(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("read a response line");
+        line
+    }
+
+    /// Read a multi-line body through its lone-`.` terminator, returning
+    /// the raw bytes (terminator included) for byte-identity checks.
+    fn body(&mut self) -> String {
+        let mut body = String::new();
+        loop {
+            let line = self.line();
+            assert!(!line.is_empty(), "connection closed mid-body");
+            let done = line == ".\n";
+            body.push_str(&line);
+            if done {
+                return body;
+            }
+        }
+    }
+
+    /// Read one `OK MINE` response; returns (header fields, raw body).
+    fn mine_response(&mut self) -> (HashMap<String, String>, String) {
+        let header = self.line();
+        let mut fields = header.trim_end().split('\t');
+        assert_eq!(fields.next(), Some("OK"), "not an OK response: {header:?}");
+        assert_eq!(fields.next(), Some("MINE"), "not a MINE response: {header:?}");
+        let map = fields
+            .map(|f| {
+                let (k, v) = f.split_once('=').expect("header fields are key=value");
+                (k.to_string(), v.to_string())
+            })
+            .collect();
+        (map, self.body())
+    }
+
+    /// Issue `STATS` and parse the body into a key -> value map.
+    fn stats(&mut self) -> HashMap<String, String> {
+        self.send("STATS");
+        assert_eq!(self.line(), "OK\tSTATS\n");
+        let mut map = HashMap::new();
+        loop {
+            let line = self.line();
+            if line == ".\n" {
+                return map;
+            }
+            let (k, v) = line.trim_end().split_once('\t').expect("key\\tvalue stats line");
+            map.insert(k.to_string(), v.to_string());
+        }
+    }
+}
+
+/// The acceptance criterion: what arrives on the wire is byte-identical
+/// to mining the same query on an in-process session, for all seven
+/// algorithms, with the header metadata agreeing field by field.
+#[test]
+fn wire_output_matches_in_process_session_for_all_algorithms() {
+    let name = "t5i2d300";
+    let min_sup = 0.4;
+    let db = registry::try_load(name).expect("quest dataset builds");
+    let oracle = MiningSession::for_db(&db, ClusterConfig::paper_cluster())
+        .build()
+        .expect("oracle session");
+
+    let server = start(config());
+    let mut client = Client::connect(server.addr());
+    for algo in Algorithm::ALL {
+        let reference = oracle
+            .run(&MiningRequest::new(algo).min_sup(min_sup))
+            .expect("oracle mines");
+        client.send(&format!("MINE dataset={name} algo={algo} min_sup={min_sup}"));
+        let (header, body) = client.mine_response();
+        assert_eq!(body, protocol::format_body(&reference), "{algo}: body diverged");
+        assert_eq!(header["dataset"], name, "{algo}");
+        assert_eq!(header["algo"], algo.to_string(), "{algo}");
+        assert_eq!(header["min_count"], reference.min_count.to_string(), "{algo}");
+        assert_eq!(header["itemsets"], reference.total_frequent().to_string(), "{algo}");
+        assert_eq!(header["levels"], reference.lk_profile().len().to_string(), "{algo}");
+        // MineResult::from_outcome must agree with the oracle end to end.
+        let res = MineResult::from_outcome(&reference);
+        assert_eq!(res.body, body, "{algo}: formatting drifted");
+    }
+    client.send("SHUTDOWN");
+    assert_eq!(client.line(), "OK\tBYE\n");
+    server.wait();
+}
+
+/// A warm daemon answers a repeated query from the result cache: the
+/// response says `cached=true` and the session counters are pinned — zero
+/// new Job1 OR Job2 executions for the second answer.
+#[test]
+fn repeated_query_hits_the_result_cache_with_no_new_jobs() {
+    let server = start(config());
+    let mut client = Client::connect(server.addr());
+    let line = "MINE dataset=t5i2d200 algo=opt-vfpc min_sup=0.3";
+
+    client.send(line);
+    let (header, body) = client.mine_response();
+    assert_eq!(header["cached"], "false");
+    let after_first = server.stats();
+    assert_eq!(after_first.registry.totals.queries, 1);
+    assert!(after_first.registry.totals.job2_runs > 0, "a real run executed Job2 passes");
+
+    client.send(line);
+    let (header, body2) = client.mine_response();
+    assert_eq!(header["cached"], "true", "second answer must come from the cache");
+    assert_eq!(header["coalesced"], "false");
+    assert_eq!(body2, body, "cached body must be byte-identical");
+    let after_second = server.stats();
+    assert_eq!(after_second.registry.totals.queries, 1, "no new session query ran");
+    assert_eq!(after_second.registry.totals.job1_runs, after_first.registry.totals.job1_runs);
+    assert_eq!(after_second.registry.totals.job2_runs, after_first.registry.totals.job2_runs);
+    assert_eq!(after_second.coalesce.cache_hits, 1);
+    assert_eq!(after_second.mine_ok, 2);
+
+    // The key is canonical, not textual: a respelled equivalent line
+    // (defaults explicit, different float spelling) is the same query.
+    client.send("MINE dataset=T5I2D200 algo=optimized-vfpc min_sup=0.30 fuse12=0");
+    let (header, body3) = client.mine_response();
+    assert_eq!(header["cached"], "true", "respelled query must hit the same entry");
+    assert_eq!(body3, body);
+    assert_eq!(server.stats().registry.totals.queries, 1);
+
+    server.shutdown();
+    server.wait();
+}
+
+/// Identical concurrent queries coalesce: the session executes once, and
+/// every other request joins that execution or reads the cache it filled
+/// (`coalesced_joins + cache_hits == N - 1`, deterministically).
+#[test]
+fn identical_concurrent_queries_coalesce_into_one_execution() {
+    const CLIENTS: usize = 6;
+    let mut cfg = config();
+    cfg.query_threads = CLIENTS; // every request may execute concurrently
+    let server = start(cfg);
+    let addr = server.addr();
+
+    let bodies: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr);
+                    client.send("MINE dataset=t5i2d200 algo=spc min_sup=0.2");
+                    client.mine_response().1
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    assert!(bodies.windows(2).all(|w| w[0] == w[1]), "all responses must be identical");
+
+    let stats = server.stats();
+    assert_eq!(stats.registry.totals.queries, 1, "exactly one execution for N requests");
+    assert_eq!(stats.registry.totals.job1_runs, 1);
+    assert_eq!(
+        stats.coalesce.coalesced_joins + stats.coalesce.cache_hits,
+        (CLIENTS - 1) as u64,
+        "every non-executing request joined or read the cache"
+    );
+    assert_eq!(stats.mine_ok, CLIENTS as u64);
+
+    server.shutdown();
+    server.wait();
+}
+
+/// Admission control: with the per-connection quota at 1 and the single
+/// query thread held by another connection's query, a client's second
+/// in-flight request is rejected with `ERR quota:` while its first still
+/// completes — and the rejection arrives first.
+#[test]
+fn quota_rejects_excess_in_flight_queries_per_connection() {
+    let mut cfg = config();
+    cfg.query_threads = 1;
+    cfg.client_quota = 1;
+    let server = start(cfg);
+
+    // Occupy the lone query thread, and wait until the blocker was
+    // actually dequeued so client A's queries cannot start.
+    let mut blocker = Client::connect(server.addr());
+    blocker.send("MINE dataset=t5i2d400 algo=spc min_sup=0.05 id=block");
+    // `queries` increments when run_streaming starts, so this observes the
+    // blocker genuinely executing, not merely queued.
+    wait_for(&server, "the blocker to start executing", |s| s.registry.totals.queries == 1);
+
+    // Both lines land in one write: the reader admits id=a, then must
+    // reject id=b at the quota before anything can finish.
+    let mut client = Client::connect(server.addr());
+    client.send(
+        "MINE dataset=t5i2d200 algo=spc min_sup=0.3 id=a\n\
+         MINE dataset=t5i2d200 algo=fpc min_sup=0.3 id=b",
+    );
+    let rejection = client.line();
+    assert!(
+        rejection.starts_with("ERR\tid=b\tquota:"),
+        "expected the quota rejection first, got {rejection:?}"
+    );
+    let (header, _) = client.mine_response();
+    assert_eq!(header["id"], "a", "the admitted query still completes");
+    let (header, _) = blocker.mine_response();
+    assert_eq!(header["id"], "block");
+
+    let stats = server.stats();
+    assert_eq!(stats.mine_requests, 3);
+    assert_eq!(stats.mine_ok, 2);
+    assert_eq!(stats.errors, 1);
+
+    server.shutdown();
+    server.wait();
+}
+
+/// Protocol errors are one-line `ERR` responses on a connection that
+/// stays usable, and unknown datasets are typed `dataset:` errors.
+#[test]
+fn malformed_requests_get_one_line_errors_and_the_connection_survives() {
+    let server = start(config());
+    let mut client = Client::connect(server.addr());
+
+    client.send("PING");
+    assert_eq!(client.line(), "OK\tPONG\n");
+    for (request, expect) in [
+        ("FROBNICATE", "ERR\tprotocol: unknown verb"),
+        ("", "ERR\tprotocol: empty request line"),
+        ("MINE dataset=chess", "ERR\tprotocol: missing required key \"algo\""),
+        ("MINE dataset=chess algo=spc min_sup=lots", "ERR\tprotocol: key \"min_sup\""),
+        ("MINE dataset=chess algo=spc algo=fpc", "ERR\tprotocol: duplicate key"),
+        ("MINE dataset=atlantis algo=spc id=q1", "ERR\tid=q1\tdataset: unknown dataset"),
+        ("STATS verbose", "ERR\tprotocol: STATS takes no arguments"),
+    ] {
+        client.send(request);
+        let line = client.line();
+        assert!(
+            line.starts_with(expect),
+            "request {request:?}: expected a line starting {expect:?}, got {line:?}"
+        );
+    }
+    // The connection still answers after every rejection.
+    client.send("PING");
+    assert_eq!(client.line(), "OK\tPONG\n");
+    let stats = client.stats();
+    assert_eq!(stats["errors"], "7", "every rejected line above was counted");
+    assert_eq!(stats["mine_requests"], "1", "only the atlantis line parsed as a MINE");
+    assert_eq!(stats["mine_ok"], "0");
+
+    server.shutdown();
+    server.wait();
+}
+
+/// The session table is LRU-bounded: a third dataset evicts the coldest
+/// session, visible through the `STATS` verb, and the evicted session's
+/// query counters survive in the aggregates.
+#[test]
+fn session_table_evicts_least_recently_used_dataset() {
+    let mut cfg = config();
+    cfg.max_sessions = 2;
+    let server = start(cfg);
+    let mut client = Client::connect(server.addr());
+
+    for (dataset, algo) in
+        [("t5i2d200", "spc"), ("t5i2d300", "spc"), ("t5i2d200", "fpc"), ("t5i2d400", "spc")]
+    {
+        client.send(&format!("MINE dataset={dataset} algo={algo} min_sup=0.3"));
+        client.mine_response();
+    }
+    let stats = client.stats();
+    assert_eq!(stats["open_sessions"], "t5i2d400 t5i2d200", "MRU order after the churn");
+    assert_eq!(stats["sessions_opened"], "3");
+    assert_eq!(stats["session_hits"], "1", "the t5i2d200 re-touch");
+    assert_eq!(stats["session_evictions"], "1", "t5i2d300 went cold and was evicted");
+    assert_eq!(stats["session_queries"], "4", "the evicted session's query survived");
+    assert_eq!(stats["queries[SPC]"], "3");
+    assert_eq!(stats["queries[FPC]"], "1");
+    assert_eq!(stats["mine_ok"], "4");
+
+    server.shutdown();
+    server.wait();
+}
+
+/// `SHUTDOWN` drains: queries admitted before the shutdown still execute
+/// and respond, `wait` then observes every thread exiting, and admission
+/// after the drain began is refused.
+#[test]
+fn shutdown_drains_admitted_queries_before_exiting() {
+    let mut cfg = config();
+    cfg.query_threads = 1; // serialize, so queries are still queued at shutdown
+    let server = start(cfg);
+    let mut miner = Client::connect(server.addr());
+    miner.send(
+        "MINE dataset=t5i2d200 algo=spc min_sup=0.2 id=q1\n\
+         MINE dataset=t5i2d200 algo=vfpc min_sup=0.2 id=q2",
+    );
+    wait_for(&server, "both queries to be admitted", |s| s.mine_requests == 2);
+
+    let mut killer = Client::connect(server.addr());
+    killer.send("SHUTDOWN");
+    assert_eq!(killer.line(), "OK\tBYE\n");
+
+    // Both pre-shutdown queries complete with full responses.
+    let (header, _) = miner.mine_response();
+    assert_eq!(header["id"], "q1");
+    let (header, body) = miner.mine_response();
+    assert_eq!(header["id"], "q2");
+    assert!(body.ends_with(".\n"));
+
+    // ... and the daemon exits cleanly once drained.
+    server.wait();
+}

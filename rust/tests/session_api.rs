@@ -48,6 +48,13 @@ fn job1_runs_once_across_queries_at_same_support() {
     assert_eq!(stats.queries, 2);
     assert_eq!(stats.job1_runs, 1, "Job1 must execute once for one min_count");
     assert_eq!(stats.job1_cache_hits, 1);
+    // Job2 passes are never cached: every phase past each query's Job1 is
+    // a fresh Job2 execution.
+    assert_eq!(stats.job2_runs, (first.n_phases() + second.n_phases() - 2) as u64);
+    // The per-algorithm breakdown (serve's STATS surface) saw one each.
+    assert_eq!(stats.queries_by_algorithm[Algorithm::Vfpc.index()], 1);
+    assert_eq!(stats.queries_by_algorithm[Algorithm::Spc.index()], 1);
+    assert_eq!(stats.queries_by_algorithm.iter().sum::<u64>(), stats.queries);
 
     // The cached phase is the same measurement: identical job name,
     // simulated timing, and counters in both outcomes' phase records.
@@ -364,6 +371,15 @@ fn concurrent_queries_share_one_job1_and_match_the_oracle() {
     assert_eq!(stats.queries, (THREADS * Algorithm::ALL.len()) as u64);
     assert_eq!(stats.job1_runs, 1, "one min_count => exactly one Job1 execution");
     assert_eq!(stats.job1_cache_hits, stats.queries - 1);
+    // Each thread ran every algorithm exactly once, whatever the
+    // interleaving — the per-algorithm counters must agree.
+    for algo in Algorithm::ALL {
+        assert_eq!(
+            stats.queries_by_algorithm[algo.index()],
+            THREADS as u64,
+            "{algo} query count skewed under concurrency"
+        );
+    }
 }
 
 #[test]

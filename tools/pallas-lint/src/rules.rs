@@ -43,8 +43,9 @@ pub const RULES: [RuleInfo; 5] = [
     },
     RuleInfo {
         name: "raw-thread-spawn",
-        summary: "std::thread::spawn/Builder outside util::pool — parallelism must \
-                  stay under the shared WorkerPool budget (DESIGN.md §9)",
+        summary: "std::thread::spawn/Builder outside util::pool and the serve \
+                  daemon's thread layer — parallelism must stay under the shared \
+                  WorkerPool budget (DESIGN.md §9, §12)",
     },
     RuleInfo {
         name: "guard-across-notify",
@@ -180,8 +181,13 @@ pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
         }
     }
 
-    // ---- raw-thread-spawn: library code minus the pool itself ------------
-    if in_library && rel != "rust/src/util/pool.rs" {
+    // ---- raw-thread-spawn: library code minus the pool itself and the
+    // serve daemon's service threads. The daemon's accept/reader/worker
+    // threads block on socket I/O (or themselves submit jobs to the pool),
+    // so running them ON pool workers would deadlock the very budget the
+    // queries need; mining work still goes through the one shared
+    // Executor (DESIGN.md §10, §12).
+    if in_library && rel != "rust/src/util/pool.rs" && rel != "rust/src/serve/server.rs" {
         for (i, l) in lines.iter().enumerate() {
             if !is_test(i) && (has_pat(l, "thread::spawn") || has_pat(l, "thread::Builder")) {
                 push("raw-thread-spawn", i);

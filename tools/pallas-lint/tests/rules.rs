@@ -61,6 +61,16 @@ fn raw_thread_spawn_fires_outside_the_pool() {
     // The pool is where threads are allowed to be born.
     let in_pool = lint_fixture("rust/src/util/pool.rs", "spawn_bad.rs");
     assert_eq!(lines_of(&in_pool, "raw-thread-spawn"), Vec::<usize>::new());
+
+    // ... and so is the serve daemon's thread layer: its accept/reader/
+    // worker threads block on socket I/O and submit INTO the pool, so
+    // they cannot live on pool workers (DESIGN.md §12).
+    let in_serve = lint_fixture("rust/src/serve/server.rs", "spawn_bad.rs");
+    assert_eq!(lines_of(&in_serve, "raw-thread-spawn"), Vec::<usize>::new());
+
+    // The exemption is exactly server.rs, not the whole serve module.
+    let in_serve_other = lint_fixture("rust/src/serve/registry.rs", "spawn_bad.rs");
+    assert_eq!(lines_of(&in_serve_other, "raw-thread-spawn"), vec![5, 7]);
 }
 
 #[test]
