@@ -1,0 +1,131 @@
+//! Incremental-refresh cost vs cold full re-runs on a growing segment
+//! store (ISSUE 9): seed a store, append `rounds` fixed-size batches, and
+//! answer "what is frequent now" after each batch two ways — a warm
+//! [`FollowSession`] refresh (delta blocks only when the FUP state
+//! suffices) vs a cold session built over a store of the same prefix
+//! (full scan every time). Both must produce byte-identical frequent
+//! itemsets; the report records the wall-clock ratio and how many blocks
+//! the delta path actually rescanned. Emits `BENCH_incremental.json`
+//! under `target/paper_results/`.
+//!
+//! Run: `cargo bench --bench incremental_vs_full`
+//! Quick mode (CI telemetry): `BENCH_QUICK=1 cargo bench --bench incremental_vs_full`
+
+use mrapriori::bench_harness::timing::save_report;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{Algorithm, FollowSession, MiningRequest, MiningSession, RunOptions};
+use mrapriori::dataset::ibm::{generate, IbmParams};
+use mrapriori::hdfs::{self, segment, segment::SegmentWriter};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
+    let (n_txns, rounds) = if quick { (2_000, 3) } else { (6_000, 6) };
+    let chunk = 250usize;
+    let seed_records = n_txns - rounds * chunk;
+    let block = 200usize;
+    let min_sup = 0.2;
+    let db = generate(&IbmParams {
+        n_txns,
+        n_items: 60,
+        avg_txn_len: 10.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 12,
+        correlation: 0.5,
+        corruption_mean: 0.3,
+        corruption_sd: 0.1,
+        seed: 9,
+        ..Default::default()
+    });
+    let cluster = ClusterConfig::paper_cluster();
+    let req = MiningRequest::new(Algorithm::OptimizedVfpc).min_sup(min_sup);
+
+    let base = std::env::temp_dir().join("mrapriori_bench_incremental");
+    let _ = std::fs::remove_dir_all(&base);
+    let live = base.join("live");
+    segment::write_store(&live, &db.name, block, db.n_items, db.txns[..seed_records].iter().cloned())
+        .expect("seed store");
+
+    // Warm path: bootstrap once (untimed — both paths pay one initial full
+    // mine), then time ONLY the per-append refreshes.
+    let mut follow = FollowSession::open(&live, cluster.clone()).expect("open store");
+    follow.refresh(&req).expect("bootstrap");
+    let mut delta_secs = 0.0;
+    let mut delta_outs = Vec::new();
+    let mut upto = seed_records;
+    for _ in 0..rounds {
+        let mut w = SegmentWriter::append(&live, db.n_items, block).expect("reopen for append");
+        for t in &db.txns[upto..upto + chunk] {
+            w.push(t).expect("append record");
+        }
+        w.finish().expect("publish grown store");
+        upto += chunk;
+        let t0 = Instant::now();
+        let out = follow.refresh(&req).expect("refresh").expect("store moved");
+        delta_secs += t0.elapsed().as_secs_f64();
+        delta_outs.push(out);
+    }
+    let stats = follow.stats();
+
+    // Cold path: after each append, a from-scratch session over a store
+    // holding the same prefix — store construction excluded, session
+    // build + full mine included (that IS the cost being avoided).
+    let mut full_secs = 0.0;
+    for (r, delta_out) in delta_outs.iter().enumerate() {
+        let n = seed_records + (r + 1) * chunk;
+        let dir = base.join(format!("cold-{r}"));
+        segment::write_store(&dir, &db.name, block, db.n_items, db.txns[..n].iter().cloned())
+            .expect("cold store");
+        let src = Arc::new(segment::open(&dir).expect("reopen cold store"));
+        let t0 = Instant::now();
+        let file = hdfs::put_segmented(
+            src,
+            cluster.nodes.len(),
+            hdfs::DEFAULT_REPLICATION,
+            RunOptions::default().seed,
+        );
+        let session =
+            MiningSession::builder(file, cluster.clone()).build().expect("cold session");
+        let out = session.run(&req).expect("cold run");
+        full_secs += t0.elapsed().as_secs_f64();
+        assert_eq!(
+            out.all_frequent(),
+            delta_out.all_frequent(),
+            "round {r}: incremental and cold outputs diverged"
+        );
+    }
+
+    let rescanned: usize = delta_outs.iter().map(|o| o.blocks_rescanned).sum();
+    let scanned_full: usize = delta_outs.iter().map(|o| o.total_blocks).sum();
+    let delta_rounds = delta_outs.iter().filter(|o| o.delta).count();
+    let speedup = full_secs / delta_secs.max(1e-9);
+    println!(
+        "incremental_vs_full: {} on a {}-node cluster \
+         ({seed_records} seed + {rounds} x {chunk} appended{})",
+        db.name,
+        cluster.nodes.len(),
+        if quick { ", quick mode" } else { "" }
+    );
+    println!(
+        "  incremental: {delta_secs:.3} s for {rounds} refreshes \
+         ({delta_rounds} delta, {} fallbacks), {rescanned}/{scanned_full} blocks rescanned",
+        stats.full_fallbacks
+    );
+    println!("  cold full:   {full_secs:.3} s for {rounds} re-mines");
+    println!("  speedup: {speedup:.2}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"incremental_vs_full\",\n  \"dataset\": \"{}\",\n  \
+         \"quick\": {quick},\n  \"seed_records\": {seed_records},\n  \
+         \"rounds\": {rounds},\n  \"chunk\": {chunk},\n  \"block_lines\": {block},\n  \
+         \"min_sup\": {min_sup},\n  \"delta_secs\": {delta_secs:.6},\n  \
+         \"full_secs\": {full_secs:.6},\n  \"speedup\": {speedup:.6},\n  \
+         \"delta_rounds\": {delta_rounds},\n  \"full_fallbacks\": {},\n  \
+         \"blocks_rescanned\": {rescanned},\n  \"blocks_scanned_full\": {scanned_full}\n}}\n",
+        db.name, stats.full_fallbacks
+    );
+    save_report("BENCH_incremental.json", &json);
+    print!("{json}");
+    let _ = std::fs::remove_dir_all(&base);
+}

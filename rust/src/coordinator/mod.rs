@@ -7,6 +7,7 @@ pub mod drivers;
 pub mod mappers;
 pub mod session;
 
+pub use crate::incremental::{DeltaMiner, FollowSession, WindowSpec};
 pub use mappers::{BackendContext, CountingBackend, ParseBackendError, TRIANGULAR_MAX_ITEMS};
 pub use session::{
     CancelToken, MiningError, MiningRequest, MiningSession, PhaseEvent, RunHandle,
@@ -354,6 +355,74 @@ impl MiningOutcome {
     }
 }
 
+/// Result of one incremental or windowed refresh
+/// ([`MiningSession::mine_incremental`] / [`MiningSession::mine_window`]):
+/// the full frequent output over the effective record range — byte-identical
+/// to a cold run over the same range — plus the delta bookkeeping
+/// (what changed since the previous refresh, and how much of the store was
+/// actually rescanned to find out). See DESIGN.md §13.
+#[derive(Debug, Clone)]
+pub struct DeltaOutcome {
+    /// Which algorithm the refresh was issued for. On the delta path no
+    /// MapReduce phases run, but fallback/bootstrap runs use exactly this
+    /// algorithm — and every algorithm yields the same frequent output.
+    pub algorithm: Algorithm,
+    /// Name of the mined dataset.
+    pub dataset: String,
+    /// Fractional minimum support of the refresh.
+    pub min_sup: f64,
+    /// Absolute minimum support count over the effective range.
+    pub min_count: u64,
+    /// The record range this outcome covers: `0..n` for grow-mode
+    /// refreshes, the current block-aligned window otherwise.
+    pub coverage: std::ops::Range<usize>,
+    /// `levels[k-1]` = frequent k-itemsets over `coverage` — identical to
+    /// a cold [`MiningSession::run`] over the same records.
+    pub levels: Vec<Level>,
+    /// Itemsets frequent now but not in the previous refresh, with their
+    /// new counts (everything, on a bootstrap refresh).
+    pub added: Vec<(Itemset, u64)>,
+    /// Itemsets frequent in the previous refresh but not anymore.
+    pub removed: Vec<Itemset>,
+    /// Itemsets frequent in both refreshes.
+    pub retained: usize,
+    /// `true` when the refresh was answered from the delta blocks alone;
+    /// `false` on bootstrap and fallback (full re-mine).
+    pub delta: bool,
+    /// Store blocks scanned by this refresh — strictly below
+    /// `total_blocks` whenever `delta` is `true` and the delta was
+    /// smaller than the store.
+    pub blocks_rescanned: usize,
+    /// Store blocks the session's file holds in total.
+    pub total_blocks: usize,
+}
+
+impl DeltaOutcome {
+    /// Total frequent itemsets across all levels.
+    pub fn total_frequent(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// |L_k| per level.
+    pub fn lk_profile(&self) -> Vec<usize> {
+        self.levels.iter().map(|l| l.len()).collect()
+    }
+
+    /// Flattened sorted `(itemset, count)` list (oracle-comparable, same
+    /// shape as [`MiningOutcome::all_frequent`]).
+    pub fn all_frequent(&self) -> Vec<(Itemset, u64)> {
+        let mut out: Vec<(Itemset, u64)> =
+            self.levels.iter().flat_map(|l| l.iter().cloned()).collect();
+        out.sort();
+        out
+    }
+
+    /// Did anything change relative to the previous refresh?
+    pub fn changed(&self) -> bool {
+        !self.added.is_empty() || !self.removed.is_empty()
+    }
+}
+
 /// Every map task of an Apriori job computes its aux values (`npass`,
 /// `candidateCount`) from the same shared [`mappers::PhasePlan`], so the
 /// engine's max-merge is exact. The engine now *detects* divergence instead
@@ -570,5 +639,86 @@ mod tests {
         let out = mine_s(Algorithm::OptimizedEtdpc, &db, 0.999, &cluster, &opts());
         // Nothing (or almost nothing) frequent; must terminate cleanly.
         assert!(out.levels.len() <= 1);
+    }
+
+    #[test]
+    fn incremental_bootstrap_matches_full_run() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let session = MiningSession::for_db(&db, cluster)
+            .options(&opts())
+            .build()
+            .expect("test session");
+        let req = MiningRequest::new(Algorithm::Spc).min_sup(0.2);
+        let full = session.run(&req).expect("full run");
+        let mut miner = DeltaMiner::new();
+        let boot = session.mine_incremental(&req, &mut miner).expect("bootstrap refresh");
+        assert!(!boot.delta, "bootstrap must be a full pass");
+        assert_eq!(boot.all_frequent(), full.all_frequent());
+        assert_eq!(boot.added.len(), boot.total_frequent());
+        assert!(boot.removed.is_empty());
+        // Unchanged store, same support: the second refresh is a pure
+        // delta over zero grown records.
+        let again = session.mine_incremental(&req, &mut miner).expect("idle refresh");
+        assert!(again.delta);
+        assert_eq!(again.blocks_rescanned, 0);
+        assert!(!again.changed());
+        assert_eq!(again.all_frequent(), full.all_frequent());
+        let stats = session.stats();
+        assert_eq!(stats.delta_runs, 2);
+        assert_eq!(stats.full_fallbacks, 0);
+    }
+
+    #[test]
+    fn changed_min_sup_forces_full_fallback() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let session = MiningSession::for_db(&db, cluster)
+            .options(&opts())
+            .build()
+            .expect("test session");
+        let mut miner = DeltaMiner::new();
+        session
+            .mine_incremental(&MiningRequest::new(Algorithm::Spc).min_sup(0.3), &mut miner)
+            .expect("bootstrap refresh");
+        let out = session
+            .mine_incremental(&MiningRequest::new(Algorithm::Spc).min_sup(0.15), &mut miner)
+            .expect("re-supported refresh");
+        assert!(!out.delta, "a changed min_sup cannot reuse the snapshot");
+        assert_eq!(session.stats().full_fallbacks, 1);
+        let oracle = mine(&db, 0.15).all_frequent();
+        assert_eq!(out.all_frequent(), oracle);
+    }
+
+    #[test]
+    fn window_mining_rejects_db_backed_sessions_and_bad_specs() {
+        let db = small_db();
+        let cluster = ClusterConfig::paper_cluster();
+        let session = MiningSession::for_db(&db, cluster)
+            .options(&opts())
+            .build()
+            .expect("test session");
+        let req = MiningRequest::new(Algorithm::Spc).min_sup(0.2);
+        let mut miner = DeltaMiner::new();
+        for (spec, why) in [
+            (WindowSpec { blocks: 0, step: 1 }, "zero-block window"),
+            (WindowSpec { blocks: 3, step: 0 }, "zero step"),
+            (WindowSpec::new(2).step(3), "step wider than window"),
+        ] {
+            assert!(
+                matches!(
+                    session.mine_window(&req, spec, &mut miner),
+                    Err(MiningError::InvalidWindow(_))
+                ),
+                "{why} must be rejected"
+            );
+        }
+        // A well-formed spec still fails on an in-memory session: windows
+        // are defined over store blocks.
+        let err = session
+            .mine_window(&req, WindowSpec::new(2), &mut miner)
+            .expect_err("for_db session must refuse windows");
+        assert!(matches!(err, MiningError::InvalidWindow(_)));
+        assert!(err.to_string().contains("store-backed"), "{err}");
     }
 }

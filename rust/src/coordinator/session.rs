@@ -32,14 +32,15 @@
 use super::drivers::PhaseObservation;
 use super::mappers::{self, CountingBackend, GenMode, Job2Mapper, OneItemsetMapper};
 use super::{
-    controller_for, debug_assert_aux_agreement, Algorithm, MiningOutcome, PhaseFaults,
-    PhaseRecord, RunOptions,
+    controller_for, debug_assert_aux_agreement, Algorithm, DeltaOutcome, MiningOutcome,
+    PhaseFaults, PhaseRecord, RunOptions,
 };
 use crate::apriori::sequential::Level;
 use crate::cluster::{ClusterConfig, FaultModel, SimJob};
 use crate::dataset::stats::DensityProfile;
 use crate::dataset::{registry, TransactionDb};
 use crate::hdfs::{self, HdfsFile, InputSplit};
+use crate::incremental::{DeltaMiner, WindowSpec};
 use crate::itemset::Trie;
 use crate::mapreduce::api::{MinSupportReducer, SumCombiner};
 use crate::mapreduce::counters::keys;
@@ -89,6 +90,11 @@ pub enum MiningError {
     InvalidBackend(&'static str),
     /// The run was cancelled through its [`CancelToken`] before finishing.
     Cancelled,
+    /// A [`WindowSpec`](crate::incremental::WindowSpec) is out of domain
+    /// (zero-block window, zero or over-wide step) or windowed mining was
+    /// asked of a session without block-addressable storage (an in-memory
+    /// `for_db` session); carries the violation.
+    InvalidWindow(&'static str),
 }
 
 impl std::fmt::Display for MiningError {
@@ -112,6 +118,7 @@ impl std::fmt::Display for MiningError {
             MiningError::InvalidFaultModel(why) => write!(f, "invalid fault model: {why}"),
             MiningError::InvalidBackend(why) => write!(f, "invalid counting backend: {why}"),
             MiningError::Cancelled => write!(f, "mining run cancelled"),
+            MiningError::InvalidWindow(why) => write!(f, "invalid mining window: {why}"),
         }
     }
 }
@@ -364,7 +371,7 @@ fn check(token: &CancelToken) -> Result<(), MiningError> {
 // ---------------------------------------------------------------------------
 
 /// Observability counters of one session (see [`MiningSession::stats`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SessionStats {
     /// Queries that started executing (including cancelled ones).
     pub queries: u64,
@@ -377,6 +384,18 @@ pub struct SessionStats {
     /// candidate passes — the counter that proves a `serve` result-cache
     /// hit re-ran nothing (DESIGN.md §12).
     pub job2_runs: u64,
+    /// Delta refreshes answered through [`MiningSession::mine_incremental`]
+    /// or [`MiningSession::mine_window`] (bootstrap, delta and fallback
+    /// paths all count — this is "refresh calls", not "delta hits").
+    pub delta_runs: u64,
+    /// Blocks actually rescanned across all refreshes. On the delta path
+    /// this moves by the delta blocks only; the differential suite pins it
+    /// strictly below the store's block count (DESIGN.md §13).
+    pub blocks_rescanned: u64,
+    /// Refreshes that held a prior snapshot but had to re-mine from
+    /// scratch anyway (promotion cascade, changed `min_sup`, shrunk or
+    /// incompatible coverage).
+    pub full_fallbacks: u64,
     /// Queries per algorithm, indexed by [`Algorithm::index`] (the order
     /// of [`Algorithm::ALL`]).
     pub queries_by_algorithm: [u64; 7],
@@ -387,6 +406,22 @@ impl SessionStats {
     /// the "did any work happen" scalar the serve-layer tests pin.
     pub fn jobs_executed(&self) -> u64 {
         self.job1_runs + self.job2_runs
+    }
+
+    /// Fold `other` into `self` field-by-field — how the serve registry
+    /// and [`FollowSession`](crate::incremental::FollowSession) keep
+    /// totals across retired sessions.
+    pub fn absorb(&mut self, other: &SessionStats) {
+        self.queries += other.queries;
+        self.job1_runs += other.job1_runs;
+        self.job1_cache_hits += other.job1_cache_hits;
+        self.job2_runs += other.job2_runs;
+        self.delta_runs += other.delta_runs;
+        self.blocks_rescanned += other.blocks_rescanned;
+        self.full_fallbacks += other.full_fallbacks;
+        for (into, v) in self.queries_by_algorithm.iter_mut().zip(other.queries_by_algorithm) {
+            *into += v;
+        }
     }
 }
 
@@ -418,7 +453,14 @@ struct SessionCore {
     job1_runs: AtomicU64,
     job1_cache_hits: AtomicU64,
     job2_runs: AtomicU64,
+    delta_runs: AtomicU64,
+    blocks_rescanned: AtomicU64,
+    full_fallbacks: AtomicU64,
     by_algorithm: [AtomicU64; 7],
+    /// Whether the session was built from an in-memory [`TransactionDb`]
+    /// (`for_db`). Such files carry a synthetic block size, so windowed
+    /// mining — which is defined over store blocks — refuses them.
+    from_db: bool,
 }
 
 /// A long-lived mining service over one dataset and one cluster: create it
@@ -510,6 +552,7 @@ impl SessionBuilder<'_> {
         if split_lines == 0 {
             return Err(MiningError::InvalidSplitLines);
         }
+        let from_db = matches!(self.source, SessionSource::Db(_));
         let file = match self.source {
             SessionSource::File(f) => f,
             SessionSource::Db(db) => hdfs::put(
@@ -526,7 +569,7 @@ impl SessionBuilder<'_> {
         let workers = self.cluster.workers;
         let executor = self.executor.unwrap_or_else(|| Executor::new(workers));
         Ok(MiningSession {
-            core: Arc::new(SessionCore::new(file, self.cluster, split_lines, executor)),
+            core: Arc::new(SessionCore::new(file, self.cluster, split_lines, executor, from_db)),
         })
     }
 }
@@ -624,6 +667,53 @@ impl MiningSession {
         &self.core.executor
     }
 
+    /// FUP-style incremental refresh over the whole store: answers "what
+    /// changed since the last refresh" from the delta blocks alone when
+    /// `miner` holds a compatible snapshot (same `min_sup`, same item
+    /// universe, coverage a prefix of this session's records); otherwise —
+    /// bootstrap, promotion cascade, changed support — it falls back to a
+    /// bounded full run through [`MiningSession::run`]. The outcome's
+    /// frequent levels are byte-identical to a cold full run at the same
+    /// support over the same records, for every [`Algorithm`]
+    /// (DESIGN.md §13).
+    pub fn mine_incremental(
+        &self,
+        req: &MiningRequest,
+        miner: &mut DeltaMiner,
+    ) -> Result<DeltaOutcome, MiningError> {
+        crate::incremental::delta::mine_incremental(self, req, miner)
+    }
+
+    /// Block-aligned sliding-window refresh: mine the last `spec.blocks`
+    /// store blocks ending at the greatest filled `spec.step` multiple,
+    /// reusing `miner`'s snapshot via the range-counts delta identity when
+    /// the old and new windows overlap. Requires a store-backed session
+    /// (windows are defined over segment blocks);
+    /// [`MiningError::InvalidWindow`] otherwise (DESIGN.md §13).
+    pub fn mine_window(
+        &self,
+        req: &MiningRequest,
+        spec: WindowSpec,
+        miner: &mut DeltaMiner,
+    ) -> Result<DeltaOutcome, MiningError> {
+        crate::incremental::delta::mine_window(self, req, spec, miner)
+    }
+
+    /// Record one incremental/window refresh against the session counters.
+    pub(crate) fn record_delta(&self, blocks: u64, fallback: bool) {
+        self.core.delta_runs.fetch_add(1, Ordering::SeqCst);
+        self.core.blocks_rescanned.fetch_add(blocks, Ordering::SeqCst);
+        if fallback {
+            self.core.full_fallbacks.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Whether this session was built from an in-memory `TransactionDb`
+    /// (no block-addressable store behind it).
+    pub(crate) fn is_db_backed(&self) -> bool {
+        self.core.from_db
+    }
+
     /// Snapshot of the session's query/cache counters — how a caller (or a
     /// test) proves that cross-query Job1 reuse actually happened.
     pub fn stats(&self) -> SessionStats {
@@ -632,6 +722,9 @@ impl MiningSession {
             job1_runs: self.core.job1_runs.load(Ordering::SeqCst),
             job1_cache_hits: self.core.job1_cache_hits.load(Ordering::SeqCst),
             job2_runs: self.core.job2_runs.load(Ordering::SeqCst),
+            delta_runs: self.core.delta_runs.load(Ordering::SeqCst),
+            blocks_rescanned: self.core.blocks_rescanned.load(Ordering::SeqCst),
+            full_fallbacks: self.core.full_fallbacks.load(Ordering::SeqCst),
             queries_by_algorithm: std::array::from_fn(|i| {
                 self.core.by_algorithm[i].load(Ordering::SeqCst)
             }),
@@ -728,7 +821,13 @@ impl Drop for RunHandle {
 // ---------------------------------------------------------------------------
 
 impl SessionCore {
-    fn new(file: HdfsFile, cluster: ClusterConfig, split_lines: usize, executor: Executor) -> Self {
+    fn new(
+        file: HdfsFile,
+        cluster: ClusterConfig,
+        split_lines: usize,
+        executor: Executor,
+        from_db: bool,
+    ) -> Self {
         let splits = hdfs::nline_splits(&file, split_lines);
         Self {
             file,
@@ -741,7 +840,11 @@ impl SessionCore {
             job1_runs: AtomicU64::new(0),
             job1_cache_hits: AtomicU64::new(0),
             job2_runs: AtomicU64::new(0),
+            delta_runs: AtomicU64::new(0),
+            blocks_rescanned: AtomicU64::new(0),
+            full_fallbacks: AtomicU64::new(0),
             by_algorithm: std::array::from_fn(|_| AtomicU64::new(0)),
+            from_db,
         }
     }
 

@@ -32,6 +32,17 @@ pub enum SegmentError {
     /// A dataset name that cannot name a store (no disk state involved —
     /// used by name-keyed store builders like the registry's quest cache).
     InvalidName(String),
+    /// An append-reopen asked for a store shape that contradicts the
+    /// published manifest. Appends must keep `block_lines` (record offsets
+    /// are block-aligned everywhere) and the declared item universe.
+    AppendMismatch {
+        /// Manifest field that disagreed (`"block_lines"` or `"n_items"`).
+        field: &'static str,
+        /// Value recorded in the published manifest.
+        existing: usize,
+        /// Value the append caller asked for.
+        requested: usize,
+    },
 }
 
 impl std::fmt::Display for SegmentError {
@@ -43,6 +54,11 @@ impl std::fmt::Display for SegmentError {
                 write!(f, "transaction {i} is empty; segment stores cannot hold empty records")
             }
             SegmentError::InvalidName(msg) => write!(f, "invalid dataset name: {msg}"),
+            SegmentError::AppendMismatch { field, existing, requested } => write!(
+                f,
+                "cannot append to segment store: {field} is {existing} in the manifest \
+                 but {requested} was requested"
+            ),
         }
     }
 }
@@ -130,6 +146,69 @@ impl SegmentWriter {
             declared_n_items: None,
             published: false,
         })
+    }
+
+    /// Reopen the published store at `dir` for append: load its manifest,
+    /// carry the existing blocks into a fresh staging directory, and
+    /// continue pushing records after the last one. The publish path is
+    /// the same rename-aside dance as [`SegmentWriter::finish`] — readers
+    /// of the old store stay consistent until the grown store replaces it
+    /// wholesale, and a writer dropped before `finish` leaves the
+    /// published store untouched.
+    ///
+    /// `block_lines` and `n_items` must match the manifest: block-aligned
+    /// record offsets and the dense item universe are part of every
+    /// downstream consumer's contract, so a disagreement is a typed
+    /// [`SegmentError::AppendMismatch`], never a silent rewrite.
+    pub fn append(
+        dir: impl Into<PathBuf>,
+        n_items: usize,
+        block_lines: usize,
+    ) -> Result<Self, SegmentError> {
+        let dest = dir.into();
+        let existing = open(&dest)?;
+        if existing.block_lines != block_lines {
+            return Err(SegmentError::AppendMismatch {
+                field: "block_lines",
+                existing: existing.block_lines,
+                requested: block_lines,
+            });
+        }
+        if existing.n_items != n_items {
+            return Err(SegmentError::AppendMismatch {
+                field: "n_items",
+                existing: existing.n_items,
+                requested: n_items,
+            });
+        }
+        let mut w = Self::create(dest, existing.name.clone(), block_lines)?;
+        w.declare_n_items(n_items);
+        let full_blocks = existing.n_records / block_lines;
+        let partial = existing.n_records % block_lines;
+        for b in 0..full_blocks {
+            // Full blocks are immutable from here on: hard-link them into
+            // staging where the filesystem allows, fall back to a copy.
+            let from = block_path(&existing.dir, b);
+            let to = block_path(&w.dir, b);
+            if std::fs::hard_link(&from, &to).is_err() {
+                std::fs::copy(&from, &to)?;
+            }
+        }
+        if partial > 0 {
+            // The last block is still growing — copy it (never link:
+            // appending through a link would mutate the published store in
+            // place) and reopen the copy in append mode.
+            let to = block_path(&w.dir, full_blocks);
+            std::fs::copy(block_path(&existing.dir, full_blocks), &to)?;
+            let f = std::fs::OpenOptions::new().append(true).open(&to)?;
+            w.writer = Some(BufWriter::new(f));
+            w.in_block = partial;
+            w.n_blocks = full_blocks + 1;
+        } else {
+            w.n_blocks = full_blocks;
+        }
+        w.n_records = existing.n_records;
+        Ok(w)
     }
 
     /// Declare the item-universe size up front (e.g. a generator's
@@ -333,6 +412,27 @@ impl SegmentSource {
         self.peak_resident.load(Ordering::Relaxed)
     }
 
+    /// Monotonic store revision: the manifest's record count. Stores are
+    /// append-only, so a larger revision at the same path means new
+    /// records arrived; [`Self::blocks_since`] enumerates where they live.
+    pub fn manifest_rev(&self) -> usize {
+        self.n_records
+    }
+
+    /// Number of block files in the store (the last one possibly partial).
+    pub fn n_blocks(&self) -> usize {
+        self.n_records.div_ceil(self.block_lines)
+    }
+
+    /// Block indices holding records that did not exist at revision `rev`
+    /// (a prior [`Self::manifest_rev`]). A partial block that grew is
+    /// included, so its pre-`rev` records re-appear in a whole-block scan
+    /// — consumers needing record exactness slice by offset (`rev..len()`)
+    /// and use this range only to account rescanned blocks.
+    pub fn blocks_since(&self, rev: usize) -> Range<usize> {
+        (rev / self.block_lines).min(self.n_blocks())..self.n_blocks()
+    }
+
     /// Decode block `index` into `buf` (clearing it first). Panics with a
     /// readable message on a corrupt store — a segment store is a cache
     /// artifact, so the fix is always "delete the directory and regenerate".
@@ -518,6 +618,89 @@ mod tests {
         assert_eq!(new.len(), 7);
         assert_eq!(new.name(), "v2");
         assert_eq!(open(&dir).unwrap().len(), 7);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn append_continues_partial_block() {
+        let dir = tmp("append-partial");
+        // 13 records at block_lines 5: blocks 5 + 5 + 3 (partial).
+        let src = write_store(&dir, 13, 5);
+        let (n_items, rev) = (src.n_items(), src.manifest_rev());
+        assert_eq!(rev, 13);
+        assert_eq!(src.n_blocks(), 3);
+        let mut w = SegmentWriter::append(&dir, n_items, 5).unwrap();
+        for i in 13..23 {
+            w.push(&vec![i as u32 % 7, 10 + i as u32 % 3]).unwrap();
+        }
+        let grown = w.finish().unwrap();
+        assert_eq!(grown.len(), 23);
+        assert_eq!(grown.name(), "demo");
+        assert_eq!(grown.n_items(), n_items);
+        assert_eq!(grown.n_blocks(), 5);
+        // The grown partial block is re-enumerated; record offsets stay
+        // exact through for_each.
+        assert_eq!(grown.blocks_since(rev), 2..5);
+        assert_eq!(grown.blocks_since(10), 2..5);
+        assert_eq!(grown.blocks_since(0), 0..5);
+        assert_eq!(grown.blocks_since(23), 5..5);
+        let mut got = Vec::new();
+        grown.for_each(0..23, &mut |off, r| got.push((off, r.clone())));
+        for (i, (off, r)) in got.iter().enumerate() {
+            assert_eq!(*off, i);
+            let mut expect = vec![i as u32 % 7, 10 + i as u32 % 3];
+            crate::itemset::canonicalize(&mut expect);
+            assert_eq!(r, &expect, "record {i}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn append_at_block_boundary_starts_fresh_block() {
+        let dir = tmp("append-boundary");
+        let src = write_store(&dir, 10, 5);
+        let mut w = SegmentWriter::append(&dir, src.n_items(), 5).unwrap();
+        w.push(&vec![1u32, 2]).unwrap();
+        let grown = w.finish().unwrap();
+        assert_eq!(grown.len(), 11);
+        assert_eq!(grown.n_blocks(), 3);
+        assert_eq!(grown.blocks_since(10), 2..3);
+        let mut n = 0;
+        grown.for_each(0..11, &mut |_, _| n += 1);
+        assert_eq!(n, 11);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn append_rejects_mismatched_shape() {
+        let dir = tmp("append-mismatch");
+        let src = write_store(&dir, 10, 5);
+        let n_items = src.n_items();
+        assert!(matches!(
+            SegmentWriter::append(&dir, n_items, 4),
+            Err(SegmentError::AppendMismatch { field: "block_lines", existing: 5, requested: 4 })
+        ));
+        assert!(matches!(
+            SegmentWriter::append(&dir, n_items + 1, 5),
+            Err(SegmentError::AppendMismatch { field: "n_items", .. })
+        ));
+        // A rejected (or dropped) append leaves the published store as-is.
+        assert_eq!(open(&dir).unwrap().len(), 10);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dropped_append_leaves_store_untouched() {
+        let dir = tmp("append-drop");
+        let src = write_store(&dir, 7, 5);
+        let mut w = SegmentWriter::append(&dir, src.n_items(), 5).unwrap();
+        w.push(&vec![3u32]).unwrap();
+        drop(w);
+        let still = open(&dir).unwrap();
+        assert_eq!(still.len(), 7);
+        let mut n = 0;
+        still.for_each(0..7, &mut |_, _| n += 1);
+        assert_eq!(n, 7);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

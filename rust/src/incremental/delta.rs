@@ -1,0 +1,267 @@
+//! The [`DeltaMiner`]: FUP-style refresh over a grown store prefix and
+//! block-aligned sliding windows, both answering from the
+//! [`IncrementalState`] whenever the delta blocks alone suffice
+//! (DESIGN.md §13).
+
+use super::state::{
+    apply_counts, blocks_touched, count_range, diff_frequent, mine_range, rebuild_chain,
+    snapshot_tracked, Coverage,
+};
+use super::{IncrementalState, WindowSpec};
+use crate::coordinator::{DeltaOutcome, MiningError, MiningRequest, MiningSession};
+use std::ops::Range;
+
+/// Owner of the [`IncrementalState`] across refreshes. Holds no session —
+/// the caller passes each refresh's session explicitly, so the state can
+/// follow a store across per-revision session rebuilds (the
+/// [`FollowSession`](super::FollowSession) pattern).
+#[derive(Debug, Default)]
+pub struct DeltaMiner {
+    state: Option<IncrementalState>,
+}
+
+impl DeltaMiner {
+    /// A miner with no snapshot yet: the first refresh bootstraps with a
+    /// full run.
+    pub fn new() -> Self {
+        DeltaMiner { state: None }
+    }
+
+    /// The current snapshot, if any refresh completed.
+    pub fn state(&self) -> Option<&IncrementalState> {
+        self.state.as_ref()
+    }
+
+    /// Drop the snapshot: the next refresh bootstraps from scratch.
+    pub fn clear(&mut self) {
+        self.state = None;
+    }
+}
+
+/// Build the outcome for a refresh, diffing against the pre-refresh
+/// frequent output and installing the new state into the miner.
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    miner: &mut DeltaMiner,
+    session: &MiningSession,
+    req: &MiningRequest,
+    prior: Option<&IncrementalState>,
+    next: IncrementalState,
+    min_count: u64,
+    delta: bool,
+    blocks_rescanned: usize,
+    total_blocks: usize,
+) -> DeltaOutcome {
+    let old = prior.map(|s| s.all_frequent()).unwrap_or_default();
+    let new = next.all_frequent();
+    let (added, removed, retained) = diff_frequent(&old, &new);
+    let out = DeltaOutcome {
+        algorithm: req.algorithm(),
+        dataset: session.file().name.clone(),
+        min_sup: next.min_sup,
+        min_count,
+        coverage: next.coverage.clone(),
+        levels: next.frequent.clone(),
+        added,
+        removed,
+        retained,
+        delta,
+        blocks_rescanned,
+        total_blocks,
+    };
+    miner.state = Some(next);
+    out
+}
+
+/// FUP-style incremental refresh over the session's (possibly grown)
+/// store prefix; see [`MiningSession::mine_incremental`] for the contract.
+pub(crate) fn mine_incremental(
+    session: &MiningSession,
+    req: &MiningRequest,
+    miner: &mut DeltaMiner,
+) -> Result<DeltaOutcome, MiningError> {
+    req.validate()?;
+    let file = session.file();
+    let n = file.len();
+    let block_lines = file.block_lines.max(1);
+    let total_blocks = n.div_ceil(block_lines);
+    let min_sup = req.min_sup_value();
+    let min_count = file.min_count(min_sup);
+
+    let prior = miner.state.take();
+    if let Some(state) = &prior {
+        if state.reusable(min_sup, file, Coverage::Grow) && state.coverage.start == 0 {
+            let grown = state.coverage.end..n;
+            let rescanned = blocks_touched(&grown, block_lines);
+            let mut singles = state.singles.clone();
+            let mut tracked = state.tracked.clone();
+            let counts = count_range(file, grown, &tracked);
+            let applied = apply_counts(&mut singles, &mut tracked, &counts, true);
+            if applied {
+                if let Some(levels) = rebuild_chain(&singles, &tracked, min_count) {
+                    let next = IncrementalState {
+                        min_sup,
+                        n_items: file.n_items,
+                        coverage: 0..n,
+                        mode: Coverage::Grow,
+                        singles,
+                        tracked,
+                        frequent: levels,
+                    };
+                    session.record_delta(rescanned as u64, false);
+                    return Ok(finish(
+                        miner,
+                        session,
+                        req,
+                        prior.as_ref(),
+                        next,
+                        min_count,
+                        true,
+                        rescanned,
+                        total_blocks,
+                    ));
+                }
+            }
+        }
+    }
+
+    // Full path: bootstrap (no prior state) or fallback (cascade, changed
+    // min_sup, changed universe) — the ordinary algorithm-aware session
+    // run, then one streaming pass to recount the candidate borders.
+    let out = session.run(req)?;
+    let (singles, tracked) = snapshot_tracked(file, 0..n, &out.levels);
+    let next = IncrementalState {
+        min_sup,
+        n_items: file.n_items,
+        coverage: 0..n,
+        mode: Coverage::Grow,
+        singles,
+        tracked,
+        frequent: out.levels,
+    };
+    session.record_delta(total_blocks as u64, prior.is_some());
+    Ok(finish(
+        miner,
+        session,
+        req,
+        prior.as_ref(),
+        next,
+        min_count,
+        false,
+        total_blocks,
+        total_blocks,
+    ))
+}
+
+/// The current block-aligned window over an `n`-record store: the last
+/// `spec.blocks` blocks ending at the greatest `spec.step` multiple the
+/// store has filled.
+fn window_range(n: usize, block_lines: usize, spec: &WindowSpec) -> Range<usize> {
+    let n_blocks = n.div_ceil(block_lines);
+    let end_block = (n_blocks / spec.step) * spec.step;
+    let start_block = end_block.saturating_sub(spec.blocks);
+    let start = start_block * block_lines;
+    let end = (end_block * block_lines).min(n);
+    start..end.max(start)
+}
+
+/// Sliding-window refresh; see [`MiningSession::mine_window`] for the
+/// contract.
+pub(crate) fn mine_window(
+    session: &MiningSession,
+    req: &MiningRequest,
+    spec: WindowSpec,
+    miner: &mut DeltaMiner,
+) -> Result<DeltaOutcome, MiningError> {
+    req.validate()?;
+    spec.validate()?;
+    if session.is_db_backed() {
+        return Err(MiningError::InvalidWindow(
+            "windowed mining needs a store-backed session (build over a segment store, \
+             not for_db)",
+        ));
+    }
+    let file = session.file();
+    let n = file.len();
+    let block_lines = file.block_lines.max(1);
+    let total_blocks = n.div_ceil(block_lines);
+    let min_sup = req.min_sup_value();
+    let window = window_range(n, block_lines, &spec);
+    // min_count over the window's own record count — exactly what a cold
+    // session over those records would use (HdfsFile::min_count formula).
+    let min_count = ((min_sup * window.len() as f64).ceil() as u64).max(1);
+
+    let prior = miner.state.take();
+    if let Some(state) = &prior {
+        let old = state.coverage.clone();
+        // The delta identity counts(c..d) = counts(a..b) − counts(a..c)
+        // + counts(b..d) needs a ≤ c ≤ b ≤ d.
+        if state.reusable(min_sup, file, Coverage::Window)
+            && old.start <= window.start
+            && window.start <= old.end
+            && old.end <= window.end
+        {
+            let expired = old.start..window.start;
+            let arrived = old.end..window.end;
+            let rescanned =
+                blocks_touched(&expired, block_lines) + blocks_touched(&arrived, block_lines);
+            let mut singles = state.singles.clone();
+            let mut tracked = state.tracked.clone();
+            let sub = count_range(file, expired, &tracked);
+            let add = count_range(file, arrived, &tracked);
+            let applied = apply_counts(&mut singles, &mut tracked, &sub, false)
+                && apply_counts(&mut singles, &mut tracked, &add, true);
+            if applied {
+                if let Some(levels) = rebuild_chain(&singles, &tracked, min_count) {
+                    let next = IncrementalState {
+                        min_sup,
+                        n_items: file.n_items,
+                        coverage: window,
+                        mode: Coverage::Window,
+                        singles,
+                        tracked,
+                        frequent: levels,
+                    };
+                    session.record_delta(rescanned as u64, false);
+                    return Ok(finish(
+                        miner,
+                        session,
+                        req,
+                        prior.as_ref(),
+                        next,
+                        min_count,
+                        true,
+                        rescanned,
+                        total_blocks,
+                    ));
+                }
+            }
+        }
+    }
+
+    // Cold window (bootstrap or fallback): the canonical sequential chain
+    // over the window records only.
+    let rescanned = blocks_touched(&window, block_lines);
+    let (levels, singles, tracked) = mine_range(file, window.clone(), min_count);
+    let next = IncrementalState {
+        min_sup,
+        n_items: file.n_items,
+        coverage: window,
+        mode: Coverage::Window,
+        singles,
+        tracked,
+        frequent: levels,
+    };
+    session.record_delta(rescanned as u64, prior.is_some());
+    Ok(finish(
+        miner,
+        session,
+        req,
+        prior.as_ref(),
+        next,
+        min_count,
+        false,
+        rescanned,
+        total_blocks,
+    ))
+}

@@ -1,0 +1,202 @@
+//! [`FollowSession`]: tail a growing segment store. Reopens the store per
+//! refresh, detects growth via the manifest revision, and rebuilds the
+//! [`MiningSession`] per revision — so the Job1 cache invalidates per
+//! appended block, not per query — while every revision's session shares
+//! ONE [`Executor`] (DESIGN.md §13).
+
+use super::delta::DeltaMiner;
+use super::WindowSpec;
+use crate::cluster::ClusterConfig;
+use crate::coordinator::{DeltaOutcome, MiningError, MiningRequest, MiningSession, RunOptions, SessionStats};
+use crate::hdfs::segment::{self, SegmentError, SegmentSource};
+use crate::hdfs::{self};
+use crate::mapreduce::executor::Executor;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Errors from following a store: the store itself (missing directory,
+/// bad manifest) or the mining layer (invalid request, empty revision).
+#[derive(Debug)]
+pub enum FollowError {
+    /// Opening or reading the segment store failed.
+    Store(SegmentError),
+    /// Building the per-revision session or mining it failed.
+    Mining(MiningError),
+}
+
+impl std::fmt::Display for FollowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FollowError::Store(e) => write!(f, "follow: {e}"),
+            FollowError::Mining(e) => write!(f, "follow: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FollowError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FollowError::Store(e) => Some(e),
+            FollowError::Mining(e) => Some(e),
+        }
+    }
+}
+
+impl From<SegmentError> for FollowError {
+    fn from(e: SegmentError) -> Self {
+        FollowError::Store(e)
+    }
+}
+
+impl From<MiningError> for FollowError {
+    fn from(e: MiningError) -> Self {
+        FollowError::Mining(e)
+    }
+}
+
+/// A warm mining session over a segment store that other writers keep
+/// appending to. [`FollowSession::refresh`] answers "what changed since
+/// the last batch" from the delta blocks alone whenever the
+/// [`DeltaMiner`]'s state allows; [`FollowSession::refresh_window`] does
+/// the same for a block-aligned sliding window.
+///
+/// Session lifecycle: a [`MiningSession`] binds an immutable file
+/// snapshot, so each observed store revision gets a fresh session (and
+/// with it a fresh Job1 cache — invalidated per appended block). All
+/// revisions share one [`Executor`], and retired sessions' counters fold
+/// into [`FollowSession::stats`].
+pub struct FollowSession {
+    dir: PathBuf,
+    cluster: ClusterConfig,
+    seed: u64,
+    executor: Executor,
+    session: MiningSession,
+    grow: DeltaMiner,
+    window: DeltaMiner,
+    rev: usize,
+    retired: SessionStats,
+}
+
+impl FollowSession {
+    /// Open the store at `dir` and bind the first revision's session. The
+    /// store must exist and hold at least one record (an empty dataset
+    /// cannot seed a session; poll externally until the first batch
+    /// lands).
+    pub fn open(dir: impl Into<PathBuf>, cluster: ClusterConfig) -> Result<Self, FollowError> {
+        let dir = dir.into();
+        let src = segment::open(&dir)?;
+        let rev = src.manifest_rev();
+        let seed = RunOptions::default().seed;
+        let file =
+            hdfs::put_segmented(Arc::new(src), cluster.nodes.len(), hdfs::DEFAULT_REPLICATION, seed);
+        let session = MiningSession::builder(file, cluster.clone()).build()?;
+        let executor = session.executor().clone();
+        Ok(FollowSession {
+            dir,
+            cluster,
+            seed,
+            executor,
+            session,
+            grow: DeltaMiner::new(),
+            window: DeltaMiner::new(),
+            rev,
+            retired: SessionStats::default(),
+        })
+    }
+
+    /// The store directory being followed.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The manifest revision (record count) of the bound session.
+    pub fn rev(&self) -> usize {
+        self.rev
+    }
+
+    /// The session bound to the last observed revision.
+    pub fn session(&self) -> &MiningSession {
+        &self.session
+    }
+
+    /// Session counters accumulated across every revision this follower
+    /// has bound (retired revisions' totals plus the current session's).
+    pub fn stats(&self) -> SessionStats {
+        let mut total = self.retired;
+        total.absorb(&self.session.stats());
+        total
+    }
+
+    /// Reopen the store; rebind the session if the revision moved.
+    fn sync(&mut self) -> Result<bool, FollowError> {
+        let src = segment::open(&self.dir)?;
+        if src.manifest_rev() == self.rev {
+            return Ok(false);
+        }
+        self.rebind(src)?;
+        Ok(true)
+    }
+
+    fn rebind(&mut self, src: SegmentSource) -> Result<(), FollowError> {
+        let rev = src.manifest_rev();
+        let file = hdfs::put_segmented(
+            Arc::new(src),
+            self.cluster.nodes.len(),
+            hdfs::DEFAULT_REPLICATION,
+            self.seed,
+        );
+        let session = MiningSession::builder(file, self.cluster.clone())
+            .executor(self.executor.clone())
+            .build()?;
+        self.retired.absorb(&self.session.stats());
+        self.session = session;
+        self.rev = rev;
+        Ok(())
+    }
+
+    /// Incremental refresh over the whole (growing) store: `Ok(None)`
+    /// when the store has not grown since the last refresh, otherwise the
+    /// delta outcome against the new revision. The first call always
+    /// mines (the bootstrap full run that seeds the state).
+    pub fn refresh(&mut self, req: &MiningRequest) -> Result<Option<DeltaOutcome>, FollowError> {
+        let moved = self.sync()?;
+        if !moved && self.grow.state().is_some() {
+            return Ok(None);
+        }
+        let out = self.session.mine_incremental(req, &mut self.grow)?;
+        Ok(Some(out))
+    }
+
+    /// Like [`FollowSession::refresh`] but always answers, even when the
+    /// store has not moved — the unchanged case is a zero-block delta
+    /// (nothing rescanned, chain rebuilt from the held counts). The serve
+    /// layer's `REFRESH` verb uses this: the wire always needs a response.
+    pub fn refresh_always(&mut self, req: &MiningRequest) -> Result<DeltaOutcome, FollowError> {
+        self.sync()?;
+        let out = self.session.mine_incremental(req, &mut self.grow)?;
+        Ok(out)
+    }
+
+    /// Sliding-window refresh. Always mines (an unchanged window is a
+    /// zero-block delta — cheap — and `spec`/`min_sup` may have changed
+    /// since the last call), after rebinding to the latest revision.
+    pub fn refresh_window(
+        &mut self,
+        req: &MiningRequest,
+        spec: WindowSpec,
+    ) -> Result<DeltaOutcome, FollowError> {
+        self.sync()?;
+        let out = self.session.mine_window(req, spec, &mut self.window)?;
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for FollowSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FollowSession")
+            .field("dir", &self.dir)
+            .field("rev", &self.rev)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}

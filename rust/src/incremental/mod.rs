@@ -1,0 +1,87 @@
+//! Incremental and windowed mining over growing segment stores
+//! (DESIGN.md §13).
+//!
+//! A [`DeltaMiner`] snapshots a completed run's per-k frequent itemsets
+//! *with counts* — plus the negative border (candidates that were
+//! generated but fell short of `min_count`) — into an
+//! [`IncrementalState`]. When new records are appended to the backing
+//! store, [`MiningSession::mine_incremental`] rescans **only the delta
+//! records** FUP-style: exact counts for every tracked set are updated
+//! from the new data alone, border sets whose counts now clear the
+//! (grown) `min_count` are promoted, frequent sets that fall below it are
+//! demoted, and the per-k chain is rebuilt from the updated counts. Only
+//! when a promotion *cascades* — a newly frequent set spawns candidates
+//! the state never counted — does the miner fall back to a bounded full
+//! re-run through the ordinary session path.
+//!
+//! [`MiningSession::mine_window`] layers block-aligned sliding windows
+//! ([`WindowSpec`]) on the same state machinery: a slid window subtracts
+//! the expiring blocks' counts and adds the arriving ones, touching only
+//! the blocks that entered or left.
+//!
+//! Correctness contract: for every algorithm, the incremental / windowed
+//! frequent-itemset output is byte-identical to a cold full run over the
+//! same effective record range — pinned by `tests/incremental_mining.rs`.
+//!
+//! [`FollowSession`] packages the polling loop the `mine --follow` CLI
+//! verb and the serve daemon's `REFRESH` verb share: reopen the store,
+//! detect growth via [`manifest_rev`](crate::hdfs::segment::SegmentSource::manifest_rev),
+//! rebuild the session per revision (so the Job1 cache invalidates per
+//! appended block, not per query) while every revision's session shares
+//! one [`Executor`](crate::mapreduce::executor::Executor).
+//!
+//! [`MiningSession::mine_incremental`]: crate::coordinator::MiningSession::mine_incremental
+//! [`MiningSession::mine_window`]: crate::coordinator::MiningSession::mine_window
+
+pub mod delta;
+pub mod follow;
+pub mod state;
+
+pub use delta::DeltaMiner;
+pub use follow::{FollowError, FollowSession};
+pub use state::IncrementalState;
+
+use crate::coordinator::MiningError;
+
+/// A block-aligned sliding window: the mining coverage is the last
+/// `blocks` store blocks, advancing in strides of `step` blocks (the
+/// window's trailing edge stays aligned to a `step` multiple, so every
+/// refresh sees either the same window or one slid by whole steps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Window width, in store blocks (>= 1).
+    pub blocks: usize,
+    /// Slide stride, in store blocks (>= 1, <= `blocks`).
+    pub step: usize,
+}
+
+impl WindowSpec {
+    /// A window of `blocks` blocks sliding one block at a time.
+    pub fn new(blocks: usize) -> Self {
+        WindowSpec { blocks, step: 1 }
+    }
+
+    /// Set the slide stride.
+    pub fn step(mut self, step: usize) -> Self {
+        self.step = step;
+        self
+    }
+
+    /// Check the spec's domain: a window must span at least one block and
+    /// slide by at least one but at most `blocks` (a stride beyond the
+    /// width would skip records unseen by any window).
+    pub fn validate(&self) -> Result<(), MiningError> {
+        if self.blocks == 0 {
+            return Err(MiningError::InvalidWindow("window must span at least one block"));
+        }
+        if self.step == 0 {
+            return Err(MiningError::InvalidWindow("window step must be at least one block"));
+        }
+        if self.step > self.blocks {
+            return Err(MiningError::InvalidWindow(
+                "window step must not exceed the window width",
+            ));
+        }
+        Ok(())
+    }
+}

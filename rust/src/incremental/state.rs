@@ -1,0 +1,407 @@
+//! The [`IncrementalState`] snapshot and the counting passes that keep it
+//! exact: one scan over the delta (or expiring/arriving) records updates
+//! every tracked itemset's count, and the per-k chain is rebuilt from the
+//! updated counts alone (DESIGN.md §13).
+
+use crate::apriori::gen::apriori_gen;
+use crate::apriori::sequential::Level;
+use crate::hdfs::HdfsFile;
+use crate::itemset::{Itemset, Trie};
+use std::ops::Range;
+
+/// What the state's record coverage means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coverage {
+    /// The counts describe the store prefix `0..coverage.end` — the
+    /// grow-only (`mine_incremental`) mode.
+    Grow,
+    /// The counts describe exactly the `coverage` record range — the
+    /// sliding-window (`mine_window`) mode.
+    Window,
+}
+
+/// A completed run's mining state, snapshotted with enough counted
+/// context to absorb appended records without a full re-run:
+///
+/// * the exact count of **every single item** (so `L_1` and its border
+///   are always reconstructible),
+/// * for each `k >= 2`, every candidate `apriori_gen` produced from the
+///   frequent `L_{k-1}` — the frequent sets *and* the negative border —
+///   with exact counts,
+/// * the frequent output itself, kept for added/removed delta reporting.
+///
+/// Counts are exact over [`Self::coverage`]; a refresh that cannot reuse
+/// them (different `min_sup`, different item universe, a shrunk store, or
+/// a promotion cascade) is answered by a full re-run that replaces the
+/// state wholesale.
+#[derive(Debug, Clone)]
+pub struct IncrementalState {
+    /// Fractional minimum support the state was built for (a changed
+    /// `min_sup` re-thresholds the border unpredictably, forcing a full
+    /// fallback).
+    pub min_sup: f64,
+    /// Item-universe size the `singles` table spans.
+    pub n_items: usize,
+    /// Record range of the backing file the counts describe.
+    pub coverage: Range<usize>,
+    /// Whether `coverage` is a store prefix (grow) or a window.
+    pub mode: Coverage,
+    /// Exact count of every item `0..n_items` over `coverage`.
+    pub singles: Vec<u64>,
+    /// `tracked[k - 2]`: every size-`k` candidate generated from the
+    /// frequent `L_{k-1}`, with exact counts — sorted by itemset, the
+    /// frequent sets and the negative border together.
+    pub tracked: Vec<Level>,
+    /// The frequent levels (`frequent[k - 1]` = `L_k`) as of the last
+    /// refresh, for added/removed reporting.
+    pub frequent: Vec<Level>,
+}
+
+impl IncrementalState {
+    /// Whether this state's counts can seed a delta pass for a refresh at
+    /// `min_sup` over `file` in `mode`. Float support compares by bit
+    /// pattern — any rounding difference re-thresholds the border, and a
+    /// spurious fallback is merely slow, never wrong.
+    pub(crate) fn reusable(&self, min_sup: f64, file: &HdfsFile, mode: Coverage) -> bool {
+        self.mode == mode
+            && self.min_sup.to_bits() == min_sup.to_bits()
+            && self.n_items == file.n_items
+            && self.coverage.end <= file.len()
+    }
+
+    /// Flatten the frequent levels into one sorted `(itemset, count)`
+    /// list — the comparison key for added/removed reporting.
+    pub(crate) fn all_frequent(&self) -> Vec<(Itemset, u64)> {
+        flatten(&self.frequent)
+    }
+}
+
+/// Flatten `levels` into one sorted `(itemset, count)` list (the same
+/// shape [`crate::coordinator::MiningOutcome::all_frequent`] returns).
+pub(crate) fn flatten(levels: &[Level]) -> Vec<(Itemset, u64)> {
+    let mut out: Vec<(Itemset, u64)> = levels.iter().flat_map(|l| l.iter().cloned()).collect();
+    out.sort();
+    out
+}
+
+/// Number of store blocks a record range touches.
+pub(crate) fn blocks_touched(range: &Range<usize>, block_lines: usize) -> usize {
+    if range.is_empty() {
+        0
+    } else {
+        (range.end - 1) / block_lines - range.start / block_lines + 1
+    }
+}
+
+/// One scan's worth of counts over a record range: the singles table plus
+/// one scratch trie per tracked level.
+pub(crate) struct RangeCounts {
+    /// Per-item counts over the scanned range.
+    pub singles: Vec<u64>,
+    /// `tries[i]` holds the size-`i + 2` tracked sets with their counts
+    /// over the scanned range.
+    pub tries: Vec<Trie>,
+    /// An item at or beyond `n_items` appeared — the universe grew under
+    /// the state, so its counts cannot be trusted for this range.
+    pub overflow: bool,
+}
+
+/// Count every tracked itemset (and all singles) over `range` of `file`
+/// in ONE streaming pass — the delta scan. Memory is the scratch tries;
+/// the store decodes one block at a time.
+pub(crate) fn count_range(file: &HdfsFile, range: Range<usize>, tracked: &[Level]) -> RangeCounts {
+    let n_items = file.n_items;
+    let mut singles = vec![0u64; n_items];
+    let mut tries: Vec<Trie> = tracked
+        .iter()
+        .enumerate()
+        .map(|(i, lvl)| Trie::from_itemsets(i + 2, lvl.iter().map(|(s, _)| s)))
+        .collect();
+    let mut overflow = false;
+    file.source.for_each(range, &mut |_, txn| {
+        for &item in txn {
+            match singles.get_mut(item as usize) {
+                Some(slot) => *slot += 1,
+                None => overflow = true,
+            }
+        }
+        for t in &mut tries {
+            t.count_transaction(txn);
+        }
+    });
+    RangeCounts { singles, tries, overflow }
+}
+
+/// Merge one range's counts into the state's tables: `add` for arriving
+/// records, subtract for expiring ones. Returns `false` (fall back) on
+/// overflow or on a subtraction underflow — both mean the state and the
+/// store disagree about history, and a full re-run is the safe answer.
+pub(crate) fn apply_counts(
+    singles: &mut [u64],
+    tracked: &mut [Level],
+    counts: &RangeCounts,
+    add: bool,
+) -> bool {
+    if counts.overflow || singles.len() != counts.singles.len() {
+        return false;
+    }
+    for (slot, delta) in singles.iter_mut().zip(&counts.singles) {
+        match if add { slot.checked_add(*delta) } else { slot.checked_sub(*delta) } {
+            Some(v) => *slot = v,
+            None => return false,
+        }
+    }
+    for (lvl, trie) in tracked.iter_mut().zip(&counts.tries) {
+        for (set, count) in lvl.iter_mut() {
+            let delta = trie.count_of(set).unwrap_or(0);
+            match if add { count.checked_add(delta) } else { count.checked_sub(delta) } {
+                Some(v) => *count = v,
+                None => return false,
+            }
+        }
+    }
+    true
+}
+
+/// Rebuild the frequent chain from the state's updated counts, without
+/// touching the data: `L_1` from the singles table, then for each `k` the
+/// candidates `apriori_gen(L_{k-1})` looked up in the tracked counts.
+///
+/// Returns `None` on a **promotion cascade**: a candidate generated from
+/// the new `L_{k-1}` that the state never counted (a promoted border set
+/// opened a join the previous run never formed). Exact counts for such a
+/// set would need a rescan of the whole coverage, so the caller falls
+/// back to a full run.
+pub(crate) fn rebuild_chain(
+    singles: &[u64],
+    tracked: &[Level],
+    min_count: u64,
+) -> Option<Vec<Level>> {
+    let mut levels: Vec<Level> = Vec::new();
+    let l1: Level = singles
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c >= min_count)
+        .map(|(i, &c)| (vec![i as u32], c))
+        .collect();
+    if l1.is_empty() {
+        return Some(levels);
+    }
+    levels.push(l1);
+    loop {
+        let k = levels.len() + 1;
+        let prev = levels.last()?;
+        let prev_trie = Trie::from_itemsets(k - 1, prev.iter().map(|(s, _)| s));
+        let (cand, _) = apriori_gen(&prev_trie);
+        if cand.is_empty() {
+            break;
+        }
+        let Some(track) = tracked.get(k - 2) else {
+            return None; // cascade: the chain outgrew the tracked depth
+        };
+        let mut lk: Level = Vec::new();
+        for set in cand.itemsets() {
+            let pos = track.binary_search_by(|(s, _)| s.as_slice().cmp(set.as_slice())).ok()?;
+            let c = track[pos].1;
+            if c >= min_count {
+                lk.push((set, c));
+            }
+        }
+        if lk.is_empty() {
+            break;
+        }
+        lk.sort();
+        levels.push(lk);
+    }
+    Some(levels)
+}
+
+/// Build the tracked candidate levels for `levels` (each level's
+/// `apriori_gen` closure over its predecessor) and count them — plus all
+/// singles — over `range` in one streaming pass. Shared by the full-run
+/// snapshot and the windowed cold path.
+pub(crate) fn snapshot_tracked(
+    file: &HdfsFile,
+    range: Range<usize>,
+    levels: &[Level],
+) -> (Vec<u64>, Vec<Level>) {
+    let mut cand_tries: Vec<Trie> = Vec::new();
+    for (i, lvl) in levels.iter().enumerate() {
+        let prev_trie = Trie::from_itemsets(i + 1, lvl.iter().map(|(s, _)| s));
+        let (cand, _) = apriori_gen(&prev_trie);
+        if cand.is_empty() {
+            break;
+        }
+        cand_tries.push(cand);
+    }
+    let mut singles = vec![0u64; file.n_items];
+    file.source.for_each(range, &mut |_, txn| {
+        for &item in txn {
+            if let Some(slot) = singles.get_mut(item as usize) {
+                *slot += 1;
+            }
+        }
+        for t in &mut cand_tries {
+            t.count_transaction(txn);
+        }
+    });
+    let tracked = cand_tries
+        .iter()
+        .map(|t| {
+            let mut lvl = t.frequent(0);
+            lvl.sort();
+            lvl
+        })
+        .collect();
+    (singles, tracked)
+}
+
+/// Mine `range` of `file` from scratch with the canonical sequential
+/// chain, producing both the frequent levels and a fresh state snapshot's
+/// tables — the windowed cold path (`min_count` is over the range's own
+/// record count, mirroring [`HdfsFile::min_count`]'s formula).
+pub(crate) fn mine_range(
+    file: &HdfsFile,
+    range: Range<usize>,
+    min_count: u64,
+) -> (Vec<Level>, Vec<u64>, Vec<Level>) {
+    let mut singles = vec![0u64; file.n_items];
+    file.source.for_each(range.clone(), &mut |_, txn| {
+        for &item in txn {
+            if let Some(slot) = singles.get_mut(item as usize) {
+                *slot += 1;
+            }
+        }
+    });
+    let mut levels: Vec<Level> = Vec::new();
+    let mut tracked: Vec<Level> = Vec::new();
+    let l1: Level = singles
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c >= min_count)
+        .map(|(i, &c)| (vec![i as u32], c))
+        .collect();
+    if l1.is_empty() {
+        return (levels, singles, tracked);
+    }
+    levels.push(l1);
+    loop {
+        let k = levels.len() + 1;
+        let Some(prev) = levels.last() else { break };
+        let prev_trie = Trie::from_itemsets(k - 1, prev.iter().map(|(s, _)| s));
+        let (mut cand, _) = apriori_gen(&prev_trie);
+        if cand.is_empty() {
+            break;
+        }
+        file.source.for_each(range.clone(), &mut |_, txn| {
+            cand.count_transaction(txn);
+        });
+        let mut all = cand.frequent(0);
+        all.sort();
+        let mut lk: Level = all.iter().filter(|(_, c)| *c >= min_count).cloned().collect();
+        tracked.push(all);
+        if lk.is_empty() {
+            break;
+        }
+        lk.sort();
+        levels.push(lk);
+    }
+    (levels, singles, tracked)
+}
+
+/// Compare two frequent outputs: `(added, removed, retained)` where added
+/// carries the new counts and removed lists the itemsets that fell out.
+pub(crate) fn diff_frequent(
+    old: &[(Itemset, u64)],
+    new: &[(Itemset, u64)],
+) -> (Vec<(Itemset, u64)>, Vec<Itemset>, usize) {
+    let mut added = Vec::new();
+    let mut removed = Vec::new();
+    let mut retained = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < old.len() || j < new.len() {
+        match (old.get(i), new.get(j)) {
+            (Some((os, _)), Some((ns, nc))) => match os.cmp(ns) {
+                std::cmp::Ordering::Less => {
+                    removed.push(os.clone());
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    added.push((ns.clone(), *nc));
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    retained += 1;
+                    i += 1;
+                    j += 1;
+                }
+            },
+            (Some((os, _)), None) => {
+                removed.push(os.clone());
+                i += 1;
+            }
+            (None, Some((ns, nc))) => {
+                added.push((ns.clone(), *nc));
+                j += 1;
+            }
+            (None, None) => break,
+        }
+    }
+    (added, removed, retained)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_touched_counts_block_spans() {
+        assert_eq!(blocks_touched(&(0..0), 10), 0);
+        assert_eq!(blocks_touched(&(0..10), 10), 1);
+        assert_eq!(blocks_touched(&(0..11), 10), 2);
+        assert_eq!(blocks_touched(&(9..11), 10), 2);
+        assert_eq!(blocks_touched(&(10..20), 10), 1);
+        assert_eq!(blocks_touched(&(25..26), 10), 1);
+    }
+
+    #[test]
+    fn diff_frequent_reports_symmetric_difference() {
+        let old = vec![(vec![1u32], 5u64), (vec![2], 4), (vec![1, 2], 3)];
+        let new = vec![(vec![1u32], 6u64), (vec![3], 4)];
+        let (added, removed, retained) = diff_frequent(&old, &new);
+        assert_eq!(added, vec![(vec![3u32], 4u64)]);
+        assert_eq!(removed, vec![vec![2u32], vec![1, 2]]);
+        assert_eq!(retained, 1);
+    }
+
+    #[test]
+    fn rebuild_chain_promotes_and_demotes_from_counts() {
+        // Singles: items 0,1,2 with counts 6,5,2. Tracked pairs with
+        // counts. min_count 4: L1 = {0},{1}; C2 = {0,1} tracked at 4 →
+        // frequent. min_count 5: {0,1} (count 4) demotes, chain stops.
+        let singles = vec![6u64, 5, 2];
+        let tracked = vec![vec![(vec![0u32, 1], 4u64), (vec![0, 2], 2), (vec![1, 2], 1)]];
+        let levels = rebuild_chain(&singles, &tracked, 4).expect("no cascade");
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[1], vec![(vec![0u32, 1], 4u64)]);
+        let levels = rebuild_chain(&singles, &tracked, 5).expect("no cascade");
+        assert_eq!(levels.len(), 1);
+        assert_eq!(levels[0], vec![(vec![0u32], 6u64), (vec![1], 5)]);
+    }
+
+    #[test]
+    fn rebuild_chain_detects_promotion_cascade() {
+        // min_count 2 promotes item 2 into L1, so C2 holds {0,2},{1,2} —
+        // {1,2} was never tracked below, so the chain must refuse.
+        let singles = vec![6u64, 5, 2];
+        let tracked = vec![vec![(vec![0u32, 1], 4u64), (vec![0, 2], 2)]];
+        assert!(rebuild_chain(&singles, &tracked, 2).is_none());
+    }
+
+    #[test]
+    fn rebuild_chain_refuses_untracked_depth() {
+        // Chain wants C2 but nothing of size 2 was ever tracked.
+        let singles = vec![6u64, 5];
+        assert!(rebuild_chain(&singles, &[], 4).is_none());
+    }
+}

@@ -58,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod hdfs;
+pub mod incremental;
 pub mod itemset;
 pub mod mapreduce;
 pub mod runtime;

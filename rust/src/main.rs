@@ -272,6 +272,11 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         .opt("straggler-prob", "fault model: per-attempt straggler probability")
         .flag("speculation", "fault model: speculative backup attempts")
         .flag("streamed", "mine through the on-disk segment store (out-of-core)")
+        .flag("follow", "tail a growing segment store: delta refresh per append")
+        .opt("window", "sliding window: mine the last N store blocks")
+        .opt("step", "window slide granularity in blocks (default 1)")
+        .opt("poll-ms", "--follow poll interval in milliseconds (default 500)")
+        .opt("follow-rounds", "stop --follow after N polls (default: until killed)")
         .opt("cache-dir", "segment-store cache directory")
         .flag("verbose", "debug logging + live phase events")
         .flag("rules", "derive association rules (conf >= 0.9) at the end")
@@ -336,6 +341,18 @@ fn cmd_mine(args: &[String]) -> Result<()> {
             probe = probe.faults(model.clone());
         }
         probe.validate()?;
+    }
+    if p.bool("follow") || p.usize("window")?.is_some() {
+        let Some(algo) = single_algo else {
+            bail!("--follow/--window need a single algorithm; pick one with --algo");
+        };
+        if p.bool("rules") {
+            bail!("--rules is not supported with --follow/--window");
+        }
+        return mine_live(&p, cluster, gen_mode, backend, fault_model, algo);
+    }
+    if p.usize("step")?.is_some() {
+        bail!("--step needs --window");
     }
     let session = if streamed {
         let file = streamed_file(p.required("dataset")?, &cache_dir(&p), &cluster, seed)?;
@@ -566,6 +583,187 @@ fn cmd_mine(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Resolve a dataset name into the directory of its segment store — the
+/// follow/window entry point. Mirrors [`streamed_file`]'s resolution order
+/// (store directory first: the natural `--follow` target is a store some
+/// other process appends to), but hands back the directory so a
+/// [`FollowSession`](mrapriori::coordinator::FollowSession) can reopen it
+/// per refresh.
+fn store_dir(name: &str, cache: &Path) -> Result<PathBuf> {
+    use anyhow::Context as _;
+    use mrapriori::hdfs::segment;
+    let as_path = Path::new(name);
+    if segment::exists(as_path) {
+        return Ok(as_path.to_path_buf());
+    }
+    if registry::quest_params(name).is_some() {
+        let src = registry::quest_store(name, cache)
+            .with_context(|| format!("building quest store for {name:?}"))?;
+        return Ok(src.dir().to_path_buf());
+    }
+    if let Some(db) = registry::try_load(name) {
+        let dir = cache.join(&db.name);
+        if segment::exists(&dir) {
+            let src = segment::open(&dir)?;
+            if src.len() >= db.len() {
+                // `>=`: a followed store legitimately outgrows the
+                // registry dataset it was seeded from.
+                return Ok(dir);
+            }
+        }
+        segment::write_store(
+            &dir,
+            db.name.as_str(),
+            registry::split_lines(&db.name),
+            db.n_items,
+            db.txns.iter().cloned(),
+        )
+        .with_context(|| format!("writing store for {name:?}"))?;
+        return Ok(dir);
+    }
+    if as_path.exists() {
+        let stem = as_path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset");
+        let (dir, fp_path, fingerprint) = import_cache_entry(cache, as_path);
+        let fresh = !fingerprint.is_empty()
+            && std::fs::read_to_string(&fp_path).is_ok_and(|s| s == fingerprint);
+        if segment::exists(&dir) && fresh {
+            return Ok(dir);
+        }
+        loader::import_segmented(as_path, &dir, registry::split_lines(stem))
+            .with_context(|| format!("importing {name:?} into {dir:?}"))?;
+        std::fs::write(&fp_path, &fingerprint)?;
+        return Ok(dir);
+    }
+    Err(unknown_dataset(name))
+}
+
+/// One line per refresh: revision, path taken (delta vs full), coverage,
+/// and the symmetric difference against the previous refresh.
+fn print_refresh(out: &mrapriori::coordinator::DeltaOutcome, rev: usize) {
+    println!(
+        "rev {rev} [{}] records {}..{}: {} frequent (+{} -{} ={}), rescanned {}/{} blocks",
+        if out.delta { "delta" } else { "full" },
+        out.coverage.start,
+        out.coverage.end,
+        out.total_frequent(),
+        out.added.len(),
+        out.removed.len(),
+        out.retained,
+        out.blocks_rescanned,
+        out.total_blocks
+    );
+}
+
+/// `mine --follow` / `mine --window N [--step S]`: live queries over a
+/// growing segment store through the incremental subsystem (DESIGN.md §13).
+/// `--window` without `--follow` answers once and exits; `--follow` polls
+/// the store and prints one line per refresh that found changes.
+fn mine_live(
+    p: &mrapriori::util::flags::Parsed,
+    cluster: ClusterConfig,
+    gen_mode: GenMode,
+    backend: CountingBackend,
+    fault_model: Option<FaultModel>,
+    algo: Algorithm,
+) -> Result<()> {
+    use mrapriori::coordinator::{FollowSession, WindowSpec};
+    let dir = store_dir(p.required("dataset")?, &cache_dir(p))?;
+    let mut follow = FollowSession::open(&dir, cluster)?;
+    let ds = follow.session().file().name.clone();
+    let min_sup = p.f64("min-sup")?.or_else(|| registry::reference_min_sup(&ds)).unwrap_or(0.25);
+    let mut req = MiningRequest::new(algo)
+        .min_sup(min_sup)
+        .gen_mode(gen_mode)
+        .backend(backend)
+        .dpc_alpha(match p.f64("dpc-alpha")? {
+            Some(alpha) => alpha,
+            None => registry::paper_dpc_alpha(&ds),
+        })
+        .fuse_pass_2(p.bool("fuse-12"));
+    if let Some(n) = p.usize("fpc-n")? {
+        req = req.fpc_n(n);
+    }
+    if let Some(beta) = p.f64("dpc-beta")? {
+        req = req.dpc_beta(beta);
+    }
+    if let Some(model) = &fault_model {
+        req = req.faults(model.clone());
+    }
+    let window = match p.usize("window")? {
+        Some(blocks) => {
+            let spec = WindowSpec::new(blocks).step(p.usize("step")?.unwrap_or(1));
+            spec.validate()?;
+            Some(spec)
+        }
+        None => {
+            if p.usize("step")?.is_some() {
+                bail!("--step needs --window");
+            }
+            None
+        }
+    };
+
+    if let (false, Some(spec)) = (p.bool("follow"), window) {
+        // One-shot window query over the store as it stands.
+        let out = follow.refresh_window(&req, spec)?;
+        println!(
+            "{} on {} @ min_sup {:.2} (min_count {}), window {} blocks step {}",
+            algo.name(),
+            ds,
+            min_sup,
+            out.min_count,
+            spec.blocks,
+            spec.step
+        );
+        print_refresh(&out, follow.rev());
+        println!("|L_k| profile: {:?}", out.lk_profile());
+        return Ok(());
+    }
+
+    let poll = std::time::Duration::from_millis(p.usize("poll-ms")?.unwrap_or(500) as u64);
+    let rounds = p.usize("follow-rounds")?;
+    println!(
+        "following {} (rev {}) @ min_sup {:.2} with {}{}",
+        dir.display(),
+        follow.rev(),
+        min_sup,
+        algo.name(),
+        match &window {
+            Some(s) => format!(", window {} blocks step {}", s.blocks, s.step),
+            None => String::new(),
+        }
+    );
+    let mut round = 0usize;
+    loop {
+        match window {
+            Some(spec) => {
+                let out = follow.refresh_window(&req, spec)?;
+                // Window refreshes always answer; only narrate movement
+                // (the bootstrap round included — everything is "added").
+                if out.changed() || round == 0 {
+                    print_refresh(&out, follow.rev());
+                }
+            }
+            None => {
+                if let Some(out) = follow.refresh(&req)? {
+                    print_refresh(&out, follow.rev());
+                }
+            }
+        }
+        round += 1;
+        if rounds.is_some_and(|r| round >= r) {
+            break;
+        }
+        std::thread::sleep(poll);
+    }
+    let st = follow.stats();
+    println!(
+        "follow: {} refreshes, {} blocks rescanned, {} full fallbacks",
+        st.delta_runs, st.blocks_rescanned, st.full_fallbacks
+    );
+    Ok(())
+}
+
 fn cmd_inspect(args: &[String]) -> Result<()> {
     let set = FlagSet::new("inspect", "dataset summary statistics")
         .opt("dataset", "registry name or file path")
@@ -586,6 +784,8 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         .opt("out", "output path (a directory with --segmented)")
         .opt("scale", "repeat to N transactions (e.g. 200000 for c20d200k)")
         .flag("segmented", "write an on-disk segment store instead of one text file")
+        .flag("append", "with --segmented: append to the existing store at --out")
+        .opt("take", "with --append: append only the first N records")
         .opt("block-lines", "records per segment block (default: the dataset's split size)")
         .flag("help", "show usage");
     let p = set.parse(args)?;
@@ -605,6 +805,41 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         let block = p.usize("block-lines")?.unwrap_or_else(|| registry::split_lines(name));
         if block == 0 {
             bail!("--block-lines must be > 0");
+        }
+        if p.bool("append") {
+            // Grow an existing store in place — the writer republishes the
+            // manifest atomically, so concurrent followers only ever see
+            // complete revisions. Shape mismatches come back as typed
+            // `SegmentError::AppendMismatch`.
+            let existing = segment::open(Path::new(out))?;
+            let block = p.usize("block-lines")?.unwrap_or_else(|| existing.block_lines());
+            let take = p.usize("take")?.unwrap_or(usize::MAX);
+            let before = existing.len();
+            let (n_items, txns): (usize, Box<dyn Iterator<Item = mrapriori::itemset::Itemset>>) =
+                if let Some(qp) = &quest {
+                    (qp.n_items, Box::new(QuestGen::new(qp)))
+                } else if let Some(db) = registry::try_load(name) {
+                    (db.n_items, Box::new(db.txns.into_iter()))
+                } else if Path::new(name).exists() {
+                    let db = loader::load_file(Path::new(name))?;
+                    (db.n_items, Box::new(db.txns.into_iter()))
+                } else {
+                    return Err(unknown_dataset(name));
+                };
+            let mut w = segment::SegmentWriter::append(out, n_items, block)?;
+            let mut appended = 0usize;
+            for t in txns.take(take) {
+                w.push(&t)?;
+                appended += 1;
+            }
+            let src = w.finish()?;
+            println!(
+                "appended {appended} transactions ({before} -> {}) in {} blocks at {out} \
+                 (segment store)",
+                src.len(),
+                src.len().div_ceil(src.block_lines())
+            );
+            return Ok(());
         }
         let src = if let Some(qp) = &quest {
             // Quest names stream straight to disk — never materialized.

@@ -66,12 +66,15 @@ mod server;
 mod stats;
 
 pub use coalesce::{CoalesceStats, Coalescer, Fulfillment};
-pub use protocol::{MineParams, MineQuery, MineResult, QueryKey, Request};
+pub use protocol::{
+    MineParams, MineQuery, MineResult, QueryKey, RefreshParams, RefreshResult, Request,
+};
 pub use registry::{RegistryStats, SessionRegistry};
 pub use server::{ServeConfig, Server};
 pub use stats::StatsSnapshot;
 
 use crate::coordinator::MiningError;
+use crate::incremental::FollowError;
 use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Typed failure modes of the serve layer — every one renders as a
@@ -85,6 +88,8 @@ pub enum ServeError {
     UnknownDataset(String),
     /// The underlying mining query failed (validation or execution).
     Mining(MiningError),
+    /// A `REFRESH`ed segment store could not be opened or read.
+    Store(String),
     /// The connection already has its quota of queries in flight.
     Quota {
         /// Queries this connection currently holds (pending + executing).
@@ -115,6 +120,7 @@ impl std::fmt::Display for ServeError {
                 )
             }
             ServeError::Mining(e) => write!(f, "mining: {e}"),
+            ServeError::Store(why) => write!(f, "store: {why}"),
             ServeError::Quota { in_flight, limit } => {
                 write!(f, "quota: client has {in_flight} queries in flight (limit {limit})")
             }
@@ -131,6 +137,15 @@ impl std::error::Error for ServeError {}
 impl From<MiningError> for ServeError {
     fn from(e: MiningError) -> Self {
         ServeError::Mining(e)
+    }
+}
+
+impl From<FollowError> for ServeError {
+    fn from(e: FollowError) -> Self {
+        match e {
+            FollowError::Store(e) => ServeError::Store(e.to_string()),
+            FollowError::Mining(e) => ServeError::Mining(e),
+        }
     }
 }
 

@@ -13,7 +13,9 @@
 //! [`MiningOutcome::all_frequent`]") checkable rather than aspirational.
 
 use super::ServeError;
-use crate::coordinator::{Algorithm, CountingBackend, MiningOutcome, MiningRequest, RunOptions};
+use crate::coordinator::{
+    Algorithm, CountingBackend, DeltaOutcome, MiningOutcome, MiningRequest, RunOptions,
+};
 use crate::dataset::registry;
 
 /// One parsed request line.
@@ -22,6 +24,9 @@ pub enum Request {
     /// `MINE key=value...` — run (or coalesce into, or answer from cache)
     /// a mining query.
     Mine(MineParams),
+    /// `REFRESH key=value...` — incremental/windowed refresh over a
+    /// growing segment store the daemon follows (DESIGN.md §13).
+    Refresh(RefreshParams),
     /// `STATS` — snapshot the daemon's counters.
     Stats,
     /// `PING` — liveness probe, answered inline with `OK PONG`.
@@ -54,6 +59,218 @@ pub struct MineParams {
     /// `id=` — opaque client tag, echoed in the response header and in
     /// errors; NOT part of the coalescing/cache key.
     pub id: Option<String>,
+}
+
+/// Raw tunables of a `REFRESH` line. The daemon keeps one follow session
+/// per `store` path, so consecutive `REFRESH` lines for the same store
+/// answer from the delta blocks alone whenever the snapshot allows
+/// (DESIGN.md §13). Refresh responses are never cached or coalesced —
+/// their whole point is observing the store's current revision.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RefreshParams {
+    /// `store=` — required; filesystem path of the segment store to
+    /// follow (the daemon serves stores, not registry names, here: a
+    /// growing store is a local artifact some producer appends to).
+    pub store: String,
+    /// `algo=` — algorithm for bootstrap/fallback runs (the delta path is
+    /// algorithm-free). Defaults to Optimized-VFPC.
+    pub algorithm: Option<Algorithm>,
+    /// `min_sup=` — fractional support; defaults like `MINE` (registry
+    /// reference for the store's dataset name, else 0.25).
+    pub min_sup: Option<f64>,
+    /// `window=` — mine only the last N store blocks (sliding window).
+    pub window: Option<usize>,
+    /// `step=` — window slide granularity in blocks (needs `window=`).
+    pub step: Option<usize>,
+    /// `id=` — opaque client tag, echoed in the response header.
+    pub id: Option<String>,
+}
+
+impl RefreshParams {
+    /// Parse the `key=value` tokens of a `REFRESH` line; same strictness
+    /// as [`MineParams`]: known keys, no duplicates, in-domain values.
+    fn parse_tokens<'a>(tokens: impl Iterator<Item = &'a str>) -> Result<RefreshParams, ServeError> {
+        fn dup<T>(slot: &Option<T>, key: &str) -> Result<(), ServeError> {
+            if slot.is_some() {
+                return Err(ServeError::Protocol(format!("duplicate key {key:?}")));
+            }
+            Ok(())
+        }
+        fn bad(key: &str, value: &str, what: &str) -> ServeError {
+            ServeError::Protocol(format!("key {key:?}: {value:?} is not {what}"))
+        }
+        let mut p = RefreshParams::default();
+        for token in tokens {
+            let (key, value) = token.split_once('=').ok_or_else(|| {
+                ServeError::Protocol(format!("expected key=value, got {token:?}"))
+            })?;
+            match key {
+                "store" => {
+                    if !p.store.is_empty() {
+                        return Err(ServeError::Protocol("duplicate key \"store\"".into()));
+                    }
+                    p.store = value.to_string();
+                }
+                "algo" => {
+                    dup(&p.algorithm, key)?;
+                    p.algorithm = Some(
+                        Algorithm::parse(value).ok_or_else(|| bad(key, value, "an algorithm"))?,
+                    );
+                }
+                "min_sup" => {
+                    dup(&p.min_sup, key)?;
+                    p.min_sup =
+                        Some(value.parse::<f64>().map_err(|_| bad(key, value, "a number"))?);
+                }
+                "window" => {
+                    dup(&p.window, key)?;
+                    p.window =
+                        Some(value.parse::<usize>().map_err(|_| bad(key, value, "an integer"))?);
+                }
+                "step" => {
+                    dup(&p.step, key)?;
+                    p.step =
+                        Some(value.parse::<usize>().map_err(|_| bad(key, value, "an integer"))?);
+                }
+                "id" => {
+                    dup(&p.id, key)?;
+                    p.id = Some(value.to_string());
+                }
+                _ => {
+                    return Err(ServeError::Protocol(format!("unknown key {key:?}")));
+                }
+            }
+        }
+        if p.store.is_empty() {
+            return Err(ServeError::Protocol("missing required key \"store\"".into()));
+        }
+        if p.step.is_some() && p.window.is_none() {
+            return Err(ServeError::Protocol("key \"step\" needs \"window\"".into()));
+        }
+        Ok(p)
+    }
+}
+
+/// A refresh response ready to write: header fields plus the change-list
+/// body. Unlike [`MineResult`] this is never cached — every `REFRESH`
+/// reflects the store revision it actually observed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RefreshResult {
+    /// The store path the refresh ran against (as requested).
+    pub store: String,
+    /// Dataset name from the store manifest.
+    pub dataset: String,
+    /// Algorithm the refresh was issued for.
+    pub algorithm: Algorithm,
+    /// Fractional minimum support of the refresh.
+    pub min_sup: f64,
+    /// Absolute minimum support count over the covered range.
+    pub min_count: u64,
+    /// The store's manifest revision (record count) observed.
+    pub rev: usize,
+    /// Whether the delta path answered (vs a bootstrap/fallback full run).
+    pub delta: bool,
+    /// Store blocks this refresh rescanned.
+    pub blocks_rescanned: usize,
+    /// Store blocks in total at the observed revision.
+    pub total_blocks: usize,
+    /// Total frequent itemsets at this revision.
+    pub itemsets: usize,
+    /// Newly frequent itemsets (= `+` body lines).
+    pub added: usize,
+    /// No-longer-frequent itemsets (= `-` body lines).
+    pub removed: usize,
+    /// Itemsets frequent both before and after.
+    pub retained: usize,
+    /// The body: change lines, then `.` — [`format_refresh_body`].
+    pub body: String,
+}
+
+impl RefreshResult {
+    /// Capture a [`DeltaOutcome`] as a servable refresh response.
+    pub fn from_outcome(store: &str, rev: usize, out: &DeltaOutcome) -> Self {
+        RefreshResult {
+            store: store.to_string(),
+            dataset: out.dataset.clone(),
+            algorithm: out.algorithm,
+            min_sup: out.min_sup,
+            min_count: out.min_count,
+            rev,
+            delta: out.delta,
+            blocks_rescanned: out.blocks_rescanned,
+            total_blocks: out.total_blocks,
+            itemsets: out.total_frequent(),
+            added: out.added.len(),
+            removed: out.removed.len(),
+            retained: out.retained,
+            body: format_refresh_body(out),
+        }
+    }
+
+    /// The `OK REFRESH` header line (with trailing newline).
+    pub fn header(&self, id: Option<&str>) -> String {
+        let mut h = String::from("OK\tREFRESH");
+        if let Some(id) = id {
+            h.push_str("\tid=");
+            h.push_str(id);
+        }
+        use std::fmt::Write as _;
+        let _ = write!(
+            h,
+            "\tdataset={}\talgo={}\tmin_sup={}\tmin_count={}\trev={}\tdelta={}\
+             \tblocks_rescanned={}\ttotal_blocks={}\titemsets={}\tadded={}\tremoved={}\
+             \tretained={}",
+            self.dataset,
+            self.algorithm,
+            self.min_sup,
+            self.min_count,
+            self.rev,
+            self.delta,
+            self.blocks_rescanned,
+            self.total_blocks,
+            self.itemsets,
+            self.added,
+            self.removed,
+            self.retained
+        );
+        h.push('\n');
+        h
+    }
+}
+
+/// Format a refresh outcome's change list as the protocol body: one
+/// `+\titem item ...\tcount` line per newly frequent itemset, one
+/// `-\titem item ...` line per dropped itemset (both in sorted order),
+/// terminated by a lone `.` line. Retained itemsets are summarized in the
+/// header only — the delta is the payload.
+pub fn format_refresh_body(out: &DeltaOutcome) -> String {
+    fn push_items(body: &mut String, itemset: &[u32]) {
+        let mut first = true;
+        for item in itemset {
+            if !first {
+                body.push(' ');
+            }
+            first = false;
+            body.push_str(&item.to_string());
+        }
+    }
+    let mut body = String::new();
+    for (itemset, count) in &out.added {
+        body.push('+');
+        body.push('\t');
+        push_items(&mut body, itemset);
+        body.push('\t');
+        body.push_str(&count.to_string());
+        body.push('\n');
+    }
+    for itemset in &out.removed {
+        body.push('-');
+        body.push('\t');
+        push_items(&mut body, itemset);
+        body.push('\n');
+    }
+    body.push_str(".\n");
+    body
 }
 
 /// A fully resolved, cache-keyable mining query: `MineParams` after
@@ -226,6 +443,7 @@ impl Request {
             .to_ascii_uppercase();
         match verb.as_str() {
             "MINE" => Ok(Request::Mine(MineParams::parse_tokens(tokens)?)),
+            "REFRESH" => Ok(Request::Refresh(RefreshParams::parse_tokens(tokens)?)),
             "STATS" | "PING" | "SHUTDOWN" => {
                 if let Some(extra) = tokens.next() {
                     return Err(ServeError::Protocol(format!(
@@ -239,7 +457,7 @@ impl Request {
                 })
             }
             _ => Err(ServeError::Protocol(format!(
-                "unknown verb {verb:?}; expected MINE, STATS, PING or SHUTDOWN"
+                "unknown verb {verb:?}; expected MINE, REFRESH, STATS, PING or SHUTDOWN"
             ))),
         }
     }
@@ -443,6 +661,52 @@ mod tests {
             .resolve()
             .expect("known");
         assert_eq!(implicit.key(), explicit.key());
+    }
+
+    #[test]
+    fn refresh_parses_and_validates() {
+        let r = match Request::parse("REFRESH store=/tmp/s algo=spc window=4 step=2 id=r1")
+            .expect("parses")
+        {
+            Request::Refresh(p) => p,
+            other => panic!("expected REFRESH, got {other:?}"),
+        };
+        assert_eq!(r.store, "/tmp/s");
+        assert_eq!(r.algorithm, Some(Algorithm::Spc));
+        assert_eq!(r.min_sup, None);
+        assert_eq!(r.window, Some(4));
+        assert_eq!(r.step, Some(2));
+        assert_eq!(r.id.as_deref(), Some("r1"));
+        assert!(err("REFRESH").contains("store"));
+        assert!(err("REFRESH store=/tmp/s step=2").contains("window"));
+        assert!(err("REFRESH store=/tmp/s window=two").contains("integer"));
+        assert!(err("REFRESH store=/tmp/s flavor=mint").contains("unknown key"));
+        assert!(err("REFRESH store=/tmp/s store=/tmp/t").contains("duplicate"));
+    }
+
+    #[test]
+    fn refresh_body_lists_the_symmetric_difference() {
+        let out = DeltaOutcome {
+            algorithm: Algorithm::Spc,
+            dataset: "d".into(),
+            min_sup: 0.2,
+            min_count: 3,
+            coverage: 0..10,
+            levels: vec![vec![(vec![1], 5), (vec![2], 4)]],
+            added: vec![(vec![1], 5)],
+            removed: vec![vec![2, 3]],
+            retained: 1,
+            delta: true,
+            blocks_rescanned: 1,
+            total_blocks: 4,
+        };
+        assert_eq!(format_refresh_body(&out), "+\t1\t5\n-\t2 3\n.\n");
+        let res = RefreshResult::from_outcome("/tmp/s", 10, &out);
+        let h = res.header(Some("q1"));
+        assert!(h.starts_with("OK\tREFRESH\tid=q1\tdataset=d\t"), "{h}");
+        assert!(h.contains("\trev=10\t") && h.contains("\tdelta=true\t"), "{h}");
+        assert!(h.contains("\tadded=1\tremoved=1\tretained=1"), "{h}");
+        assert!(h.ends_with('\n'));
     }
 
     #[test]

@@ -26,26 +26,6 @@ pub struct RegistryStats {
     pub totals: SessionStats,
 }
 
-fn zero_stats() -> SessionStats {
-    SessionStats {
-        queries: 0,
-        job1_runs: 0,
-        job1_cache_hits: 0,
-        job2_runs: 0,
-        queries_by_algorithm: [0; 7],
-    }
-}
-
-fn accumulate(into: &mut SessionStats, s: &SessionStats) {
-    into.queries += s.queries;
-    into.job1_runs += s.job1_runs;
-    into.job1_cache_hits += s.job1_cache_hits;
-    into.job2_runs += s.job2_runs;
-    for (slot, n) in into.queries_by_algorithm.iter_mut().zip(s.queries_by_algorithm) {
-        *slot += n;
-    }
-}
-
 struct RegistryInner {
     /// Open sessions, most recently used first (LRU = last element).
     sessions: Vec<(String, MiningSession)>,
@@ -91,7 +71,7 @@ impl SessionRegistry {
                 opened: 0,
                 hits: 0,
                 evictions: 0,
-                retired: zero_stats(),
+                retired: SessionStats::default(),
             }),
         }
     }
@@ -125,7 +105,7 @@ impl SessionRegistry {
         while inner.sessions.len() > self.max_sessions {
             if let Some((_, evicted)) = inner.sessions.pop() {
                 let stats = evicted.stats();
-                accumulate(&mut inner.retired, &stats);
+                inner.retired.absorb(&stats);
                 inner.evictions += 1;
             }
         }
@@ -138,7 +118,7 @@ impl SessionRegistry {
         let mut totals = inner.retired;
         for (_, session) in &inner.sessions {
             let stats = session.stats();
-            accumulate(&mut totals, &stats);
+            totals.absorb(&stats);
         }
         RegistryStats {
             open: inner.sessions.iter().map(|(n, _)| n.clone()).collect(),

@@ -17,15 +17,17 @@
 
 use super::{lock, ServeError};
 use crate::cluster::ClusterConfig;
-use crate::coordinator::CancelToken;
+use crate::coordinator::{Algorithm, CancelToken, FollowSession, MiningRequest, WindowSpec};
+use crate::dataset::registry as dataset_registry;
 use crate::mapreduce::executor::Executor;
 use crate::serve::coalesce::{Coalescer, Fulfillment};
-use crate::serve::protocol::{self, MineQuery, MineResult, Request};
+use crate::serve::protocol::{self, MineQuery, MineResult, RefreshParams, RefreshResult, Request};
 use crate::serve::registry::SessionRegistry;
 use crate::serve::stats::{ServeStats, StatsSnapshot};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
@@ -78,13 +80,21 @@ impl ServeConfig {
     }
 }
 
-/// One admitted MINE query, parked in its connection's queue.
+/// One admitted query (MINE or REFRESH), parked in its connection's queue.
 struct Job {
     conn: u64,
-    query: MineQuery,
+    work: Work,
     id: Option<String>,
     writer: SharedWriter,
     enqueued: Instant,
+}
+
+/// What an admitted job executes: a cache/coalesce-keyed mining query, or
+/// a refresh against a followed segment store (never cached — its point
+/// is observing the store's current revision).
+enum Work {
+    Mine(MineQuery),
+    Refresh(RefreshParams),
 }
 
 /// Per-connection dispatcher bookkeeping.
@@ -132,6 +142,12 @@ struct ServerShared {
     /// still reach their clients).
     sockets: Mutex<HashMap<u64, TcpStream>>,
     readers: Mutex<Vec<JoinHandle<()>>>,
+    /// One follow session per `REFRESH`ed store path, kept warm so
+    /// consecutive refreshes answer from the delta blocks. The outer map
+    /// lock is held only for lookup/insert; the per-store lock is held
+    /// across the refresh itself (refreshes of one store serialize,
+    /// different stores proceed concurrently).
+    follows: Mutex<HashMap<PathBuf, Arc<Mutex<FollowSession>>>>,
 }
 
 /// A running serve daemon. [`Server::wait`] blocks until a client issues
@@ -168,6 +184,7 @@ impl Server {
             addr,
             sockets: Mutex::new(HashMap::new()),
             readers: Mutex::new(Vec::new()),
+            follows: Mutex::new(HashMap::new()),
         });
         let mut workers = Vec::with_capacity(query_threads);
         for i in 0..query_threads {
@@ -275,8 +292,18 @@ fn snapshot(shared: &ServerShared) -> StatsSnapshot {
         let st = lock(&shared.state);
         (st.pending, st.pending_high_water)
     };
+    let mut registry = shared.registry.stats();
+    {
+        // Follow sessions live outside the registry; fold their counters
+        // (delta runs, rescanned blocks, fallbacks, per-revision queries)
+        // into the same totals the `STATS` verb reports.
+        let follows = lock(&shared.follows);
+        for f in follows.values() {
+            registry.totals.absorb(&lock(f).stats());
+        }
+    }
     StatsSnapshot {
-        registry: shared.registry.stats(),
+        registry,
         coalesce: shared.coalescer.stats(),
         mine_requests,
         mine_ok,
@@ -357,7 +384,7 @@ fn reader_loop(shared: &Arc<ServerShared>, conn: u64, stream: TcpStream) {
                     let admitted = params.resolve().and_then(|query| {
                         let job = Job {
                             conn,
-                            query,
+                            work: Work::Mine(query),
                             id: id.clone(),
                             writer: Arc::clone(&writer),
                             // lint:allow(wall-clock-in-sim): service latency
@@ -368,6 +395,24 @@ fn reader_loop(shared: &Arc<ServerShared>, conn: u64, stream: TcpStream) {
                         admit(shared, job)
                     });
                     if let Err(e) = admitted {
+                        write_response(&writer, &protocol::format_error(&e, id.as_deref()));
+                        shared.stats.record_err();
+                    }
+                }
+                Ok(Request::Refresh(params)) => {
+                    shared.stats.record_request();
+                    let id = params.id.clone();
+                    let job = Job {
+                        conn,
+                        work: Work::Refresh(params),
+                        id: id.clone(),
+                        writer: Arc::clone(&writer),
+                        // lint:allow(wall-clock-in-sim): service latency
+                        // meter — host time feeds STATS percentiles only,
+                        // never simulated results (DESIGN.md §12).
+                        enqueued: Instant::now(),
+                    };
+                    if let Err(e) = admit(shared, job) {
                         write_response(&writer, &protocol::format_error(&e, id.as_deref()));
                         shared.stats.record_err();
                     }
@@ -481,14 +526,22 @@ fn worker_loop(shared: &Arc<ServerShared>) {
     }
 }
 
-/// Execute one admitted query through the coalescer/cache and write its
-/// response. Mining runs under the server-wide [`CancelToken`], so the
-/// drop path can abort it.
+/// Execute one admitted job and write its response. Mining runs under
+/// the server-wide [`CancelToken`], so the drop path can abort it.
 fn execute(shared: &ServerShared, job: Job) {
-    let key = job.query.key();
+    match &job.work {
+        Work::Mine(query) => execute_mine(shared, &job, query),
+        Work::Refresh(params) => execute_refresh(shared, &job, params),
+    }
+    finish(shared, job.conn);
+}
+
+/// One MINE query through the coalescer/result cache.
+fn execute_mine(shared: &ServerShared, job: &Job, query: &MineQuery) {
+    let key = query.key();
     let run = || -> Result<MineResult, ServeError> {
-        let session = shared.registry.get(&job.query.dataset)?;
-        let outcome = session.run_streaming(&job.query.request(), &shared.cancel, |_| {})?;
+        let session = shared.registry.get(&query.dataset)?;
+        let outcome = session.run_streaming(&query.request(), &shared.cancel, |_| {})?;
         Ok(MineResult::from_outcome(&outcome))
     };
     let (result, how) = if shared.config.coalesce {
@@ -512,5 +565,65 @@ fn execute(shared: &ServerShared, job: Job) {
             shared.stats.record_err();
         }
     }
-    finish(shared, job.conn);
+}
+
+/// One REFRESH against a followed store — never cached or coalesced (the
+/// whole point is observing the store's current revision).
+fn execute_refresh(shared: &ServerShared, job: &Job, params: &RefreshParams) {
+    match run_refresh(shared, params) {
+        Ok(res) => {
+            let mut text = res.header(job.id.as_deref());
+            text.push_str(&res.body);
+            write_response(&job.writer, &text);
+            shared.stats.record_ok(job.enqueued.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            write_response(&job.writer, &protocol::format_error(&e, job.id.as_deref()));
+            shared.stats.record_err();
+        }
+    }
+}
+
+/// Serve one REFRESH: get-or-open the store's warm [`FollowSession`] from
+/// the `follows` map, then delta-mine the store's current revision
+/// (DESIGN.md §13). Defaults when the request omits them: algorithm
+/// Optimized-VFPC (the delta path is algorithm-free — every algorithm
+/// yields the same frequent sets), `min_sup` from the dataset registry's
+/// reference threshold or 0.25.
+fn run_refresh(shared: &ServerShared, params: &RefreshParams) -> Result<RefreshResult, ServeError> {
+    let path = PathBuf::from(&params.store);
+    let held = lock(&shared.follows).get(&path).map(Arc::clone);
+    let follow = match held {
+        Some(f) => f,
+        None => {
+            // Open OUTSIDE the map lock: opening scans the manifest and
+            // builds a session. A racing open of the same store resolves
+            // to whichever registered first; the loser's copy drops.
+            let opened = FollowSession::open(&path, shared.config.cluster.clone())?;
+            Arc::clone(
+                lock(&shared.follows)
+                    .entry(path)
+                    .or_insert_with(|| Arc::new(Mutex::new(opened))),
+            )
+        }
+    };
+    // Held across the refresh: same-store refreshes serialize (they share
+    // one DeltaMiner state); different stores proceed concurrently.
+    let mut guard = lock(&follow);
+    let dataset = guard.session().file().name.clone();
+    let min_sup = params
+        .min_sup
+        .unwrap_or_else(|| dataset_registry::reference_min_sup(&dataset).unwrap_or(0.25));
+    let algo = params.algorithm.unwrap_or(Algorithm::OptimizedVfpc);
+    let req = MiningRequest::new(algo)
+        .min_sup(min_sup)
+        .dpc_alpha(dataset_registry::paper_dpc_alpha(&dataset));
+    let out = match params.window {
+        Some(blocks) => {
+            let spec = WindowSpec::new(blocks).step(params.step.unwrap_or(1));
+            guard.refresh_window(&req, spec)?
+        }
+        None => guard.refresh_always(&req)?,
+    };
+    Ok(RefreshResult::from_outcome(&params.store, guard.rev(), &out))
 }

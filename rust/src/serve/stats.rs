@@ -110,6 +110,9 @@ impl StatsSnapshot {
         line("job1_runs", self.registry.totals.job1_runs.to_string());
         line("job1_cache_hits", self.registry.totals.job1_cache_hits.to_string());
         line("job2_runs", self.registry.totals.job2_runs.to_string());
+        line("session_delta_runs", self.registry.totals.delta_runs.to_string());
+        line("session_blocks_rescanned", self.registry.totals.blocks_rescanned.to_string());
+        line("session_full_fallbacks", self.registry.totals.full_fallbacks.to_string());
         for algo in Algorithm::ALL {
             line(
                 &format!("queries[{}]", algo.name()),
@@ -161,6 +164,9 @@ mod tests {
                     job1_runs: 2,
                     job1_cache_hits: 5,
                     job2_runs: 9,
+                    delta_runs: 3,
+                    blocks_rescanned: 12,
+                    full_fallbacks: 1,
                     queries_by_algorithm: [1, 0, 0, 2, 0, 4, 0],
                 },
             },
@@ -190,6 +196,9 @@ mod tests {
         assert!(s.contains("open_sessions\tchess mushroom\n"));
         assert!(s.contains("session_hits\t5\n"));
         assert!(s.contains("job2_runs\t9\n"));
+        assert!(s.contains("session_delta_runs\t3\n"));
+        assert!(s.contains("session_blocks_rescanned\t12\n"));
+        assert!(s.contains("session_full_fallbacks\t1\n"));
         assert!(s.contains("queries[SPC]\t1\n"));
         assert!(s.contains("queries[Optimized-VFPC]\t4\n"));
         assert!(s.contains("result_cache_hits\t4\n"));

@@ -1,0 +1,281 @@
+//! The incremental/windowed mining differential suite (ISSUE 9
+//! acceptance; DESIGN.md §13): over randomized append schedules against
+//! on-disk segment stores, every [`DeltaOutcome`] — grow-only refresh,
+//! sliding window, and the min_sup-change fallback — must be
+//! byte-identical to a cold run over the same effective record range,
+//! for all seven algorithms; and the delta path must answer at least one
+//! refresh per algorithm from fewer blocks than the store holds.
+
+use mrapriori::apriori::sequential::mine;
+use mrapriori::cluster::ClusterConfig;
+use mrapriori::coordinator::{Algorithm, FollowSession, MiningRequest, WindowSpec};
+use mrapriori::dataset::ibm::{generate, IbmParams};
+use mrapriori::dataset::TransactionDb;
+use mrapriori::hdfs::segment::{self, SegmentWriter};
+use mrapriori::itemset::Itemset;
+use mrapriori::util::rng::Rng;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+/// Store block granularity: small enough that every schedule spans many
+/// blocks, misaligned appends leave partial blocks, and windows slide.
+const BLOCK: usize = 50;
+
+/// The full transaction pool the schedules draw prefixes from.
+fn pool() -> TransactionDb {
+    generate(&IbmParams {
+        n_txns: 600,
+        n_items: 40,
+        avg_txn_len: 8.0,
+        avg_pattern_len: 4.0,
+        n_patterns: 10,
+        correlation: 0.5,
+        corruption_mean: 0.3,
+        corruption_sd: 0.1,
+        seed: 42,
+        ..Default::default()
+    })
+}
+
+fn tmp_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("mrapriori_incremental").join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn seed_store(dir: &Path, db: &TransactionDb, n: usize) {
+    segment::write_store(dir, &db.name, BLOCK, db.n_items, db.txns[..n].iter().cloned())
+        .expect("seed store");
+}
+
+fn append(dir: &Path, db: &TransactionDb, range: Range<usize>) {
+    let mut w = SegmentWriter::append(dir, db.n_items, BLOCK).expect("reopen for append");
+    for t in &db.txns[range] {
+        w.push(t).expect("append record");
+    }
+    w.finish().expect("publish grown store");
+}
+
+/// What a cold full run over exactly `range` of the pool yields — the
+/// sequential oracle, which every cluster algorithm already matches
+/// (`session_api.rs` / `driver_equivalence.rs`), over the sliced records.
+fn oracle(db: &TransactionDb, range: Range<usize>, min_sup: f64) -> Vec<(Itemset, u64)> {
+    let slice = TransactionDb::new("oracle", db.n_items, db.txns[range].to_vec());
+    mine(&slice, min_sup).all_frequent()
+}
+
+/// Replicate the block-aligned window placement over an `n`-record store
+/// (the trailing edge snaps to a `step` multiple of blocks).
+fn window_of(n: usize, spec: WindowSpec) -> Range<usize> {
+    let n_blocks = n.div_ceil(BLOCK);
+    let end_block = (n_blocks / spec.step) * spec.step;
+    let start_block = end_block.saturating_sub(spec.blocks);
+    let start = start_block * BLOCK;
+    start..(end_block * BLOCK).min(n).max(start)
+}
+
+/// Grow-only schedule with deliberately block-misaligned chunks, for all
+/// seven algorithms: every refresh must match the cold oracle over the
+/// grown prefix, and a refresh of an unmoved store must be answered on
+/// the delta path from strictly fewer blocks than the store holds (here:
+/// zero — nothing changed).
+#[test]
+fn grow_refresh_matches_cold_oracle_for_all_algorithms() {
+    let db = pool();
+    let min_sup = 0.25;
+    let cluster = ClusterConfig::paper_cluster();
+    for algo in Algorithm::ALL {
+        let dir = tmp_store(&format!("grow-{}", algo.name()));
+        seed_store(&dir, &db, 300);
+        let mut follow = FollowSession::open(&dir, cluster.clone()).expect("open store");
+        let req = MiningRequest::new(algo).min_sup(min_sup);
+
+        let boot = follow.refresh(&req).expect("bootstrap").expect("first refresh answers");
+        assert!(!boot.delta, "{algo}: the bootstrap is a full run by definition");
+        assert_eq!(boot.coverage, 0..300);
+        assert_eq!(boot.all_frequent(), oracle(&db, 0..300, min_sup), "{algo}: bootstrap");
+        assert_eq!(boot.added.len(), boot.total_frequent(), "{algo}: everything is new");
+        assert!(boot.removed.is_empty(), "{algo}");
+
+        let mut upto = 300;
+        for chunk in [70, 55, 95] {
+            append(&dir, &db, upto..upto + chunk);
+            upto += chunk;
+            let out = follow.refresh(&req).expect("refresh").expect("store moved");
+            assert_eq!(out.coverage, 0..upto, "{algo} @ {upto}");
+            assert_eq!(out.total_blocks, upto.div_ceil(BLOCK), "{algo} @ {upto}");
+            assert!(out.blocks_rescanned <= out.total_blocks, "{algo} @ {upto}");
+            assert_eq!(
+                out.all_frequent(),
+                oracle(&db, 0..upto, min_sup),
+                "{algo} @ {upto}: incremental output diverged from a cold run"
+            );
+        }
+
+        // Refreshing the unmoved store is a zero-block delta: the held
+        // counts already cover every record, so nothing is rescanned —
+        // the guaranteed `blocks_rescanned < total_blocks` delta path.
+        let still = follow.refresh_always(&req).expect("refresh unmoved store");
+        assert!(still.delta, "{algo}: an unmoved store must not force a full run");
+        assert_eq!(still.blocks_rescanned, 0, "{algo}");
+        assert!(still.blocks_rescanned < still.total_blocks, "{algo}");
+        assert!(!still.changed(), "{algo}: nothing appended, nothing may change");
+        assert_eq!(still.all_frequent(), oracle(&db, 0..upto, min_sup), "{algo}");
+
+        let stats = follow.stats();
+        assert_eq!(stats.delta_runs, 5, "{algo}: bootstrap + 3 appends + 1 no-op");
+        assert!(
+            stats.blocks_rescanned >= still.total_blocks as u64,
+            "{algo}: the bootstrap alone scans the whole store"
+        );
+        std::fs::remove_dir_all(&dir).expect("cleanup");
+    }
+}
+
+/// A seeded-random append schedule (chunk sizes 20..120, so block
+/// alignment varies freely): the refreshed output must stay byte-identical
+/// to the cold oracle at every revision, and an unmoved store must report
+/// "nothing new" through [`FollowSession::refresh`].
+#[test]
+fn randomized_append_schedule_stays_byte_identical() {
+    let db = pool();
+    let min_sup = 0.25;
+    let mut rng = Rng::new(7);
+    let dir = tmp_store("random");
+    seed_store(&dir, &db, 250);
+    let mut follow =
+        FollowSession::open(&dir, ClusterConfig::paper_cluster()).expect("open store");
+    let req = MiningRequest::new(Algorithm::OptimizedEtdpc).min_sup(min_sup);
+    follow.refresh(&req).expect("bootstrap");
+
+    let mut upto = 250;
+    while upto < db.len() {
+        let chunk = rng.range(20, 120).min(db.len() - upto);
+        append(&dir, &db, upto..upto + chunk);
+        upto += chunk;
+        let out = follow.refresh(&req).expect("refresh").expect("store moved");
+        assert_eq!(out.coverage, 0..upto, "after {upto}");
+        assert_eq!(
+            out.all_frequent(),
+            oracle(&db, 0..upto, min_sup),
+            "after {upto} records: incremental output diverged from a cold run"
+        );
+    }
+    assert_eq!(upto, db.len());
+    // The quiet poll: no growth, no answer (the --follow loop's idle tick).
+    assert!(follow.refresh(&req).expect("idle refresh").is_none());
+
+    let stats = follow.stats();
+    assert!(stats.delta_runs >= 2);
+    assert!(stats.full_fallbacks < stats.delta_runs, "at least the bootstrap is not a fallback");
+    std::fs::remove_dir_all(&dir).expect("cleanup");
+}
+
+/// Sliding-window schedule for all seven algorithms: each refresh's
+/// coverage must land exactly where the block-aligned spec says, its
+/// output must match a cold run over those records alone, and refreshing
+/// an unmoved window must be a zero-block delta.
+#[test]
+fn window_refresh_matches_cold_window_for_all_algorithms() {
+    let db = pool();
+    let min_sup = 0.25;
+    let cluster = ClusterConfig::paper_cluster();
+    let spec = WindowSpec::new(4).step(2);
+    for algo in Algorithm::ALL {
+        let dir = tmp_store(&format!("window-{}", algo.name()));
+        seed_store(&dir, &db, 300); // 6 blocks: the window starts mid-store
+        let mut follow = FollowSession::open(&dir, cluster.clone()).expect("open store");
+        let req = MiningRequest::new(algo).min_sup(min_sup);
+
+        let mut upto = 300;
+        for round in 0..3 {
+            let out = follow.refresh_window(&req, spec).expect("window refresh");
+            let expected = window_of(upto, spec);
+            assert_eq!(out.coverage, expected, "{algo} round {round}");
+            assert_eq!(out.total_blocks, upto.div_ceil(BLOCK), "{algo} round {round}");
+            assert_eq!(
+                out.all_frequent(),
+                oracle(&db, expected, min_sup),
+                "{algo} round {round}: window output diverged from a cold run"
+            );
+            if round == 0 {
+                assert!(!out.delta, "{algo}: the first window is a cold bootstrap");
+            }
+            // Slide by exactly one step (2 blocks) per round.
+            append(&dir, &db, upto..upto + 2 * BLOCK);
+            upto += 2 * BLOCK;
+        }
+
+        // Same store, same spec, no growth: the window has not moved, so
+        // the delta identity applies with zero expired/arrived blocks.
+        let grown = follow.refresh_window(&req, spec).expect("grown window");
+        assert_eq!(grown.all_frequent(), oracle(&db, window_of(upto, spec), min_sup), "{algo}");
+        let still = follow.refresh_window(&req, spec).expect("unmoved window");
+        assert!(still.delta, "{algo}: an unmoved window must not force a cold mine");
+        assert_eq!(still.blocks_rescanned, 0, "{algo}");
+        assert!(still.blocks_rescanned < still.total_blocks, "{algo}");
+        assert!(!still.changed(), "{algo}");
+        std::fs::remove_dir_all(&dir).expect("cleanup");
+    }
+}
+
+/// Changing `min_sup` re-thresholds the negative border unpredictably, so
+/// the snapshot must NOT be reused: the refresh falls back to a full run
+/// (and says so in the stats), still matching the cold oracle — and the
+/// replacement snapshot is immediately delta-reusable at the new support.
+#[test]
+fn min_sup_change_forces_full_fallback_then_recovers() {
+    let db = pool();
+    let dir = tmp_store("fallback");
+    seed_store(&dir, &db, 400);
+    let mut follow =
+        FollowSession::open(&dir, ClusterConfig::paper_cluster()).expect("open store");
+
+    let coarse = MiningRequest::new(Algorithm::Spc).min_sup(0.3);
+    follow.refresh(&coarse).expect("bootstrap").expect("first refresh answers");
+    assert_eq!(follow.stats().full_fallbacks, 0, "a bootstrap is not a fallback");
+
+    append(&dir, &db, 400..450);
+    let fine = MiningRequest::new(Algorithm::Spc).min_sup(0.18);
+    let out = follow.refresh(&fine).expect("refresh").expect("store moved");
+    assert!(!out.delta, "changed min_sup must not answer from the stale border");
+    assert_eq!(out.blocks_rescanned, out.total_blocks, "a fallback rescans everything");
+    assert_eq!(out.all_frequent(), oracle(&db, 0..450, 0.18));
+    assert_eq!(follow.stats().full_fallbacks, 1);
+
+    append(&dir, &db, 450..500);
+    let next = follow.refresh(&fine).expect("refresh").expect("store moved");
+    assert_eq!(next.all_frequent(), oracle(&db, 0..500, 0.18));
+    assert_eq!(next.coverage, 0..500);
+    assert_eq!(
+        follow.stats().full_fallbacks,
+        if next.delta { 1 } else { 2 },
+        "the fallback's snapshot seeds the next refresh at the new support"
+    );
+    std::fs::remove_dir_all(&dir).expect("cleanup");
+}
+
+/// The follower survives a store that grows by a partial block and then
+/// completes it: manifest revisions are record counts, not block counts,
+/// so a 10-record append is growth like any other.
+#[test]
+fn partial_block_appends_refresh_correctly() {
+    let db = pool();
+    let min_sup = 0.25;
+    let dir = tmp_store("partial");
+    seed_store(&dir, &db, 275); // 5 full blocks + one half block
+    let mut follow =
+        FollowSession::open(&dir, ClusterConfig::paper_cluster()).expect("open store");
+    let req = MiningRequest::new(Algorithm::Vfpc).min_sup(min_sup);
+    follow.refresh(&req).expect("bootstrap");
+
+    let mut upto = 275;
+    for chunk in [10, 15, 100] {
+        append(&dir, &db, upto..upto + chunk);
+        upto += chunk;
+        let out = follow.refresh(&req).expect("refresh").expect("store moved");
+        assert_eq!(out.coverage, 0..upto, "after {upto}");
+        assert_eq!(out.all_frequent(), oracle(&db, 0..upto, min_sup), "after {upto}");
+    }
+    std::fs::remove_dir_all(&dir).expect("cleanup");
+}

@@ -1,0 +1,11 @@
+// Fixture: the incremental subsystem is ordinary library code — both the
+// wall-clock and the panicking-shortcut rules must cover it with no
+// carve-outs (delta refreshes never read host time; fallbacks surface as
+// errors, they don't panic).
+use std::time::Instant;
+
+pub fn refresh_latency(prior: Option<u64>) -> f64 {
+    let t0 = Instant::now();
+    let _rev = prior.unwrap();
+    t0.elapsed().as_secs_f64()
+}

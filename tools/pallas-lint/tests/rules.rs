@@ -98,6 +98,24 @@ fn unwrap_fires_in_library_code_only() {
     assert_eq!(lines_of(&in_tools, "unwrap-in-library"), Vec::<usize>::new());
 }
 
+#[test]
+fn incremental_subsystem_is_in_rule_scope_with_no_carve_outs() {
+    // The delta miner is library code like any other: host-time reads and
+    // panicking shortcuts both fire under rust/src/incremental/, and the
+    // subsystem ships with zero baseline entries — new findings there fail
+    // the lint outright.
+    let bad = lint_fixture("rust/src/incremental/delta.rs", "incremental_bad.rs");
+    assert_eq!(lines_of(&bad, "wall-clock-in-sim"), vec![5, 8]);
+    assert_eq!(lines_of(&bad, "unwrap-in-library"), vec![9]);
+
+    // The differential suite and the incremental bench sit outside the
+    // library tree, where both rules are silent by design.
+    let in_tests = lint_fixture("rust/tests/incremental_mining.rs", "incremental_bad.rs");
+    assert!(in_tests.is_empty(), "integration tests are exempt: {in_tests:?}");
+    let in_bench = lint_fixture("rust/benches/incremental_vs_full.rs", "incremental_bad.rs");
+    assert!(in_bench.is_empty(), "benches are exempt: {in_bench:?}");
+}
+
 // ---- suppression comments ------------------------------------------------
 
 #[test]
