@@ -63,9 +63,8 @@ pub fn derive_rules(result: &MineResult, n_txns: usize, min_conf: f64) -> Vec<Ru
     }
     rules.sort_by(|a, b| {
         b.confidence
-            .partial_cmp(&a.confidence)
-            .unwrap()
-            .then(b.support.partial_cmp(&a.support).unwrap())
+            .total_cmp(&a.confidence)
+            .then(b.support.total_cmp(&a.support))
             .then(a.antecedent.cmp(&b.antecedent))
     });
     rules

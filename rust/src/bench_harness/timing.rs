@@ -48,7 +48,7 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let min_s = samples[0];
     let median_s = samples[samples.len() / 2];
     let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;

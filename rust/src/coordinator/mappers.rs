@@ -234,6 +234,8 @@ impl PhasePlan {
             // First pass generates from L_{k-1} with full apriori-gen;
             // later passes generate from the previous pass's *candidates* —
             // with pruning for the plain variants, join-only when optimized.
+            // lint:allow(unwrap-in-library): pass n>0 always has the previous
+            // pass's trie — the loop pushes one per iteration.
             let source = if npass == 0 { l_prev } else { tries.last().unwrap() };
             let (trie, stats) = if npass == 0 || !optimized {
                 apriori_gen(source)
@@ -428,6 +430,8 @@ impl Mapper for Job2Mapper {
                     }
                 }
                 PassCounter::Bitmap => {
+                    // lint:allow(unwrap-in-library): plan construction pairs
+                    // PassCounter::Bitmap with materialized TID rows.
                     let rows = tid.as_ref().expect("bitmap pass implies TID rows");
                     let sets = trie.itemsets();
                     let mut counts = vec![0u64; sets.len()];

@@ -145,6 +145,8 @@ pub fn split_lines(name: &str) -> usize {
 
 /// Build a dataset by name. Panics on unknown names (CLI validates first).
 pub fn load(name: &str) -> TransactionDb {
+    // lint:allow(unwrap-in-library): the panicking convenience wrapper is
+    // this fn's contract; fallible callers use try_load().
     try_load(name).unwrap_or_else(|| panic!("unknown dataset {name:?}; known: {NAMES:?}"))
 }
 

@@ -468,6 +468,8 @@ fn cmd_mine(args: &[String]) -> Result<()> {
         return Ok(());
     }
 
+    // lint:allow(unwrap-in-library): the `--algo all` branch returned above,
+    // so a single algorithm is the only way to reach this line.
     let algo = single_algo.expect("the --algo all branch returned above");
     let req = request_for(algo)?;
     let out = run_with_live_events(&session, &req, p.bool("verbose"), None)?;

@@ -27,6 +27,9 @@ pub fn forall<G: Gen>(seed: u64, iters: usize, gen: &G, prop: impl Fn(&G::Item) 
         let item = gen.generate(&mut rng);
         if !prop(&item) {
             let minimal = shrink_loop(gen, item, &prop);
+            // lint:allow(unwrap-in-library): panicking IS the framework's
+            // failure channel — forall() reports a counterexample the same
+            // way assert! does.
             panic!(
                 "property failed (seed={seed}, iteration={i});\n minimal counterexample: {minimal:?}"
             );

@@ -177,9 +177,12 @@ impl Rng {
     /// Draw an index from a cumulative weight table (binary search).
     /// `cum` must be non-decreasing with `cum.last() > 0`.
     pub fn weighted(&mut self, cum: &[f64]) -> usize {
+        // lint:allow(unwrap-in-library): documented precondition — callers
+        // pass a non-empty cumulative table, and an empty one is a caller
+        // bug worth a loud panic, not a recoverable error.
         let total = *cum.last().expect("weights must be non-empty");
         let x = self.next_f64() * total;
-        match cum.binary_search_by(|w| w.partial_cmp(&x).unwrap()) {
+        match cum.binary_search_by(|w| w.total_cmp(&x)) {
             Ok(i) => (i + 1).min(cum.len() - 1),
             Err(i) => i.min(cum.len() - 1),
         }

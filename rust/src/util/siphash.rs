@@ -125,6 +125,8 @@ impl Hasher for SipHasher13 {
         }
         let mut blocks = msg.chunks_exact(8);
         for block in &mut blocks {
+            // lint:allow(unwrap-in-library): chunks_exact(8) yields exactly
+            // 8-byte slices, so the conversion cannot fail.
             let m = u64::from_le_bytes(block.try_into().expect("8-byte block"));
             self.compress(m);
         }

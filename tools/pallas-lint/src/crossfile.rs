@@ -1,0 +1,236 @@
+//! Phase-2 rules: join the per-file facts from [`crate::facts`] across
+//! the whole tree and emit findings no single-file scan can see.
+//!
+//! Identity resolution is the heart of the join. A mutex or atomic
+//! *field name* declared in exactly **one** library file names the same
+//! object everywhere it is locked or touched — `follows` is the serve
+//! registry's follow map wherever it appears — so its facts from every
+//! file merge under one global identity. A name declared in several
+//! files (or never declared in-tree) is ambiguous, and each file's uses
+//! stay under a file-local identity `path::name`: the analysis then
+//! under-reports rather than fusing two different locks into a phantom
+//! cycle.
+//!
+//! The rules:
+//!
+//! * `lock-order-cycle` — build the directed held-while-acquiring graph
+//!   over resolved mutex identities and flag every acquisition that lies
+//!   on a cycle (including self-loops: `std::sync::Mutex` is not
+//!   reentrant). Two files each locally consistent can still compose
+//!   into an AB/BA deadlock; only this join sees it.
+//! * `atomic-ordering-mix` — one atomic touched with `Relaxed` in some
+//!   places and stronger orderings in others, or with `SeqCst` mixed
+//!   into a weaker protocol, is either a bug or under-documented; a pure
+//!   Acquire/Release/AcqRel protocol is left alone. Additionally,
+//!   `Relaxed` on any atomic whose owning struct also declares a
+//!   `Condvar` is flagged: those fields gate wakeup handshakes (the PR 4
+//!   lost-wakeup class) and need at least Acquire/Release.
+//! * `blocking-in-pool-task` — a blocking call inside a closure shipped
+//!   onto the shared [`WorkerPool`] can consume the pool's own worker
+//!   budget and deadlock it (the PR 8 serve incident class, previously
+//!   enforced only by a comment in `serve/server.rs`).
+//! * `counter-drift` — a `*Stats*` struct's counters and the
+//!   absorb/merge/render/snapshot-style handlers that fold them: a
+//!   handler that touches *almost* every counter has almost certainly
+//!   forgotten the newest one (the exact shape PRs 8–9 kept adding
+//!   surface for). Handlers that touch only a couple of counters are
+//!   accessors, not folds, and are not flagged.
+//!
+//! [`WorkerPool`]: ../../../rust/src/util/pool.rs
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::graph::Digraph;
+use crate::rules::has_pat;
+use crate::{Finding, SourceUnit};
+
+/// Handler-function names that are expected to fold every counter of a
+/// stats struct they mention. Chosen from the tree's own vocabulary
+/// (`SessionStats::absorb`, `StatsSnapshot::render`, `Registry::stats`,
+/// …); a fn outside this set is an accessor and never flagged.
+const HANDLER_VERBS: [&str; 9] =
+    ["absorb", "merge", "render", "snapshot", "stats", "counts", "fold", "retire", "totals"];
+
+/// Resolve field names to identities: globally by bare name when
+/// declared in exactly one file, file-locally (`path::name`) otherwise.
+struct Identities {
+    /// name → declaring files (sorted, deduped).
+    decls: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl Identities {
+    fn build<'a>(names: impl Iterator<Item = (&'a str, &'a str)>) -> Self {
+        let mut decls: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        for (name, rel) in names {
+            decls.entry(name.to_string()).or_default().insert(rel.to_string());
+        }
+        Identities { decls }
+    }
+
+    fn resolve(&self, rel: &str, name: &str) -> String {
+        match self.decls.get(name) {
+            Some(files) if files.len() == 1 => name.to_string(),
+            _ => format!("{rel}::{name}"),
+        }
+    }
+}
+
+fn excerpt_of(unit: &SourceUnit, line: usize) -> String {
+    unit.raw.get(line).map(|l| l.trim().to_string()).unwrap_or_default()
+}
+
+/// Run all four cross-file rules over the analyzed tree. Returned
+/// findings are unsorted and unsuppressed; the caller applies
+/// `lint:allow` filtering and ordering.
+pub fn check(units: &[SourceUnit]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    lock_order_cycle(units, &mut out);
+    atomic_ordering_mix(units, &mut out);
+    blocking_in_pool_task(units, &mut out);
+    counter_drift(units, &mut out);
+    out
+}
+
+fn lock_order_cycle(units: &[SourceUnit], out: &mut Vec<Finding>) {
+    let ids = Identities::build(
+        units
+            .iter()
+            .flat_map(|u| u.facts.mutex_decls.keys().map(move |k| (k.as_str(), u.rel.as_str()))),
+    );
+    let mut g = Digraph::new();
+    // (held-id, acquired-id) → acquisition sites (unit index, line).
+    let mut sites: BTreeMap<(String, String), Vec<(usize, usize)>> = BTreeMap::new();
+    for (ui, u) in units.iter().enumerate() {
+        for e in &u.facts.lock_edges {
+            let held = ids.resolve(&u.rel, &e.held);
+            let acq = ids.resolve(&u.rel, &e.acquired);
+            g.add_edge(&held, &acq);
+            sites.entry((held, acq)).or_default().push((ui, e.line));
+        }
+    }
+    for (held, acq) in g.cyclic_edges() {
+        for &(ui, line) in sites.get(&(held.clone(), acq.clone())).into_iter().flatten() {
+            let u = &units[ui];
+            out.push(Finding {
+                rule: "lock-order-cycle",
+                path: u.rel.clone(),
+                line: line + 1,
+                excerpt: excerpt_of(u, line),
+                detail: format!("locks `{acq}` while holding `{held}`, closing a cycle"),
+            });
+        }
+    }
+}
+
+fn atomic_ordering_mix(units: &[SourceUnit], out: &mut Vec<Finding>) {
+    let ids = Identities::build(units.iter().flat_map(|u| {
+        u.facts.atomic_decls.keys().map(move |k| (k.as_str(), u.rel.as_str()))
+    }));
+    // identity → set of orderings used across the tree.
+    let mut orderings: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    // identity → owning struct declares a Condvar.
+    let mut gates_condvar: BTreeSet<String> = BTreeSet::new();
+    for u in units {
+        for use_ in &u.facts.atomic_uses {
+            let id = ids.resolve(&u.rel, &use_.field);
+            orderings.entry(id).or_default().insert(use_.ordering.clone());
+        }
+        for (name, (_, owner)) in &u.facts.atomic_decls {
+            if let Some(owner) = owner {
+                if u.facts.condvar_structs.contains(owner) {
+                    gates_condvar.insert(ids.resolve(&u.rel, name));
+                }
+            }
+        }
+    }
+    for u in units {
+        for use_ in &u.facts.atomic_uses {
+            let id = ids.resolve(&u.rel, &use_.field);
+            let set = &orderings[&id];
+            let mixed = set.len() > 1 && (set.contains("Relaxed") || set.contains("SeqCst"));
+            let weak_gate = use_.ordering == "Relaxed" && gates_condvar.contains(&id);
+            if !(mixed || weak_gate) {
+                continue;
+            }
+            let detail = if mixed {
+                let all: Vec<&str> = set.iter().map(String::as_str).collect();
+                format!("`{id}` is touched with mixed orderings: {}", all.join("+"))
+            } else {
+                format!("Relaxed on `{id}`, which gates a Condvar handshake")
+            };
+            out.push(Finding {
+                rule: "atomic-ordering-mix",
+                path: u.rel.clone(),
+                line: use_.line + 1,
+                excerpt: excerpt_of(u, use_.line),
+                detail,
+            });
+        }
+    }
+}
+
+fn blocking_in_pool_task(units: &[SourceUnit], out: &mut Vec<Finding>) {
+    for u in units {
+        for b in &u.facts.pool_blocking {
+            out.push(Finding {
+                rule: "blocking-in-pool-task",
+                path: u.rel.clone(),
+                line: b.line + 1,
+                excerpt: excerpt_of(u, b.line),
+                detail: format!("`{}` inside a closure that runs on the shared pool", b.what),
+            });
+        }
+    }
+}
+
+fn counter_drift(units: &[SourceUnit], out: &mut Vec<Finding>) {
+    // Struct name → counter fields; structs declared in several files
+    // are ambiguous and skipped.
+    let mut fields: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    let mut seen_in: BTreeMap<String, usize> = BTreeMap::new();
+    for u in units {
+        for (sname, flds) in &u.facts.stats_structs {
+            *seen_in.entry(sname.clone()).or_insert(0) += 1;
+            fields.insert(sname.clone(), flds.clone());
+        }
+    }
+    fields.retain(|s, flds| seen_in[s] == 1 && flds.len() >= 3);
+
+    for u in units {
+        for f in &u.facts.fns {
+            if !HANDLER_VERBS.contains(&f.name.as_str()) {
+                continue;
+            }
+            let body = u.masked.code[f.start..=f.end.min(u.masked.code.len() - 1)].join("\n");
+            for (sname, flds) in &fields {
+                // Only handlers that even mention the struct (or live in
+                // the file declaring it) are candidates for its fold.
+                let declared_here = u.facts.stats_structs.contains_key(sname);
+                if !declared_here && !has_pat(&body, sname) {
+                    continue;
+                }
+                let missing: Vec<&str> = flds
+                    .iter()
+                    .filter(|fld| !has_pat(&body, fld))
+                    .map(String::as_str)
+                    .collect();
+                let got = flds.len() - missing.len();
+                let thresh = 2.max(flds.len().saturating_sub(2));
+                if got >= thresh && got < flds.len() {
+                    out.push(Finding {
+                        rule: "counter-drift",
+                        path: u.rel.clone(),
+                        line: f.decl_line + 1,
+                        excerpt: excerpt_of(u, f.decl_line),
+                        detail: format!(
+                            "`{}` folds {got}/{} counters of `{sname}`; missing: {}",
+                            f.name,
+                            flds.len(),
+                            missing.join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,754 @@
+//! Phase-1 fact extraction: one pass over a file's masked code view,
+//! producing the per-file facts the cross-file rules (phase 2,
+//! [`crate::crossfile`]) join across the tree.
+//!
+//! Facts are extracted for **library** files only (`rust/src/`, minus the
+//! file-final `#[cfg(test)]` region): the four concurrency rules built on
+//! them guard the shipping runtime, not test scaffolding. Extraction is
+//! line-oriented and deliberately conservative — a fact the heuristics
+//! cannot attribute (a multi-line call split across lines, a receiver too
+//! complex to name) is *dropped*, never guessed, so phase 2 under-reports
+//! rather than inventing cross-file joins.
+//!
+//! The facts:
+//!
+//! * **mutex/atomic field declarations** — `name: Mutex<…>` /
+//!   `name: Atomic…` struct fields and `static NAME: Atomic…` items.
+//!   Declarations are the join key for cross-file identity: a field name
+//!   declared in exactly one file names the same lock/atomic everywhere
+//!   (see [`crate::crossfile`]).
+//! * **lock edges** — for every lock acquisition (`recv.lock()` or the
+//!   serve-style `lock(&recv)` helper) made while a tracked guard is
+//!   live: a directed held-while-acquiring edge. Guard liveness reuses
+//!   the `guard-across-notify` machinery (brace depth + `drop(name)`),
+//!   but a binding only counts as a *guard* when the lock call is the
+//!   whole right-hand side (modulo `.unwrap()`/`.expect(…)`-style
+//!   adapters) — `let v = lock(&m).get(k).cloned();` holds the guard for
+//!   one statement only and must not poison the rest of the function.
+//! * **atomic uses** — every `Ordering::X` argument attributed to the
+//!   atomic method call and receiver field it appears in.
+//! * **pool-task regions** — the argument extents of `pool.spawn(…)` and
+//!   `.mapper(…)` calls (the two ways closures are shipped onto the
+//!   shared [`WorkerPool`](../../../rust/src/util/pool.rs)), plus any
+//!   blocking call inside them.
+//! * **stats structs and handler fns** — counter fields of `*Stats*`
+//!   structs, and the body extent of every named function, for the
+//!   `counter-drift` mention scan.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::Masked;
+
+/// A directed held-while-acquiring edge: the guard of `held` was live on
+/// the line where `acquired` was locked.
+#[derive(Debug, Clone)]
+pub struct LockEdge {
+    /// Field name of the mutex whose guard was held.
+    pub held: String,
+    /// Field name of the mutex being acquired.
+    pub acquired: String,
+    /// 0-based line of the acquisition.
+    pub line: usize,
+}
+
+/// One `Ordering::X` use attributed to an atomic field.
+#[derive(Debug, Clone)]
+pub struct AtomicUse {
+    /// Receiver field (or static) name of the atomic.
+    pub field: String,
+    /// The ordering name (`Relaxed`, `Acquire`, …, `SeqCst`).
+    pub ordering: String,
+    /// 0-based line of the call.
+    pub line: usize,
+}
+
+/// A blocking call inside a pool-task closure region.
+#[derive(Debug, Clone)]
+pub struct PoolBlocking {
+    /// 0-based line of the blocking call.
+    pub line: usize,
+    /// The pattern that matched (e.g. `.recv()`).
+    pub what: &'static str,
+}
+
+/// The body extent of one named function.
+#[derive(Debug, Clone)]
+pub struct FnRegion {
+    /// The function's name.
+    pub name: String,
+    /// 0-based line of the `fn` keyword.
+    pub decl_line: usize,
+    /// 0-based first line of the body (the line carrying its `{`).
+    pub start: usize,
+    /// 0-based last line of the body.
+    pub end: usize,
+}
+
+/// Everything phase 1 learned about one file.
+#[derive(Debug, Default)]
+pub struct FileFacts {
+    /// Mutex-typed struct fields: name → 0-based declaration line.
+    pub mutex_decls: BTreeMap<String, usize>,
+    /// Atomic-typed fields/statics: name → (decl line, owning struct).
+    pub atomic_decls: BTreeMap<String, (usize, Option<String>)>,
+    /// Structs that declare a `Condvar` field (their atomics gate a
+    /// handshake; `Relaxed` on those is a finding).
+    pub condvar_structs: BTreeSet<String>,
+    /// Held-while-acquiring edges observed in this file.
+    pub lock_edges: Vec<LockEdge>,
+    /// `Ordering::X` uses attributed to atomic fields.
+    pub atomic_uses: Vec<AtomicUse>,
+    /// Blocking calls inside pool-task closure regions.
+    pub pool_blocking: Vec<PoolBlocking>,
+    /// `*Stats*` structs: name → counter field names, in declaration order.
+    pub stats_structs: BTreeMap<String, Vec<String>>,
+    /// Named function body extents (innermost wins for nested items).
+    pub fns: Vec<FnRegion>,
+}
+
+/// Atomic methods whose `Ordering` arguments we attribute; anything else
+/// carrying an `Ordering::` token (e.g. `cmp::Ordering` in a `sort_by`)
+/// is ignored.
+const ATOMIC_OPS: [&str; 14] = [
+    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_and", "fetch_or", "fetch_xor",
+    "fetch_max", "fetch_min", "fetch_update", "fetch_nand", "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// The five memory orderings.
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Calls that park the calling thread. Inside a closure that runs ON the
+/// shared pool, any of these can deadlock the pool's own budget
+/// (DESIGN.md §12 — the serve incident class).
+pub(crate) const BLOCKING: [&str; 10] = [
+    ".lock()",
+    ".recv()",
+    ".recv_timeout(",
+    ".wait(",
+    ".join()",
+    "read_line(",
+    "read_exact(",
+    "read_to_end(",
+    "read_to_string(",
+    ".accept()",
+];
+
+fn ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// The last field-name segment of the receiver chain ending at byte
+/// `end` (exclusive): `self.core.by_algorithm[i]` → `by_algorithm`,
+/// `LEVEL` → `LEVEL`. `self` alone yields nothing.
+fn chain_field_before(l: &[u8], end: usize) -> Option<String> {
+    let mut start = end;
+    let mut depth = 0i32;
+    while start > 0 {
+        let b = l[start - 1];
+        if b == b']' {
+            depth += 1;
+            start -= 1;
+        } else if b == b'[' {
+            depth -= 1;
+            start -= 1;
+        } else if depth > 0 {
+            start -= 1;
+        } else if ident(b) || b == b'.' {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    last_field_of(&l[start..end])
+}
+
+/// The last identifier segment of `chain`, with `[…]` index groups
+/// removed and `self` skipped.
+fn last_field_of(chain: &[u8]) -> Option<String> {
+    let mut segs: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    let mut depth = 0i32;
+    for &b in chain {
+        match b {
+            b'[' => depth += 1,
+            b']' => depth -= 1,
+            _ if depth > 0 => {}
+            _ if ident(b) => cur.push(b as char),
+            _ => {
+                if !cur.is_empty() {
+                    segs.push(std::mem::take(&mut cur));
+                }
+            }
+        }
+    }
+    if !cur.is_empty() {
+        segs.push(cur);
+    }
+    segs.into_iter().rev().find(|s| s != "self" && !s.chars().next().is_some_and(|c| c.is_ascii_digit()))
+}
+
+/// The method + receiver field of the innermost call still open at byte
+/// `pos` of `l`: for `x.load(Ordering::SeqCst)` with `pos` at `O`,
+/// returns `("load", Some("x"))`. `None` when no call is open on this
+/// line (conservative: multi-line calls are not attributed).
+fn innermost_call(l: &[u8], pos: usize) -> Option<(String, Option<String>)> {
+    let mut depth = 0i32;
+    let mut i = pos;
+    while i > 0 {
+        let b = l[i - 1];
+        if b == b')' {
+            depth += 1;
+        } else if b == b'(' {
+            if depth == 0 {
+                let j = i - 1;
+                let mut k = j;
+                while k > 0 && ident(l[k - 1]) {
+                    k -= 1;
+                }
+                let method = String::from_utf8_lossy(&l[k..j]).into_owned();
+                let recv = if k > 0 && l[k - 1] == b'.' {
+                    chain_field_before(l, k - 1)
+                } else {
+                    None
+                };
+                return Some((method, recv));
+            }
+            depth -= 1;
+        }
+        i -= 1;
+    }
+    None
+}
+
+/// Whether the tail of a line after a lock call is only guard-preserving
+/// adapters — `.unwrap()`, `.expect(…)`,
+/// `.unwrap_or_else(PoisonError::into_inner)`, `?` — ending the
+/// statement. Anything else (`.get(…)`, a deref, an operator) means the
+/// guard is a statement-scoped temporary, not a binding.
+fn only_adapters(mut rest: &str) -> bool {
+    loop {
+        rest = rest.trim_start();
+        if let Some(r) = rest.strip_prefix(".unwrap()") {
+            rest = r;
+        } else if let Some(r) = rest.strip_prefix(".unwrap_or_else(PoisonError::into_inner)") {
+            rest = r;
+        } else if let Some(r) = rest.strip_prefix(".expect(") {
+            // The argument is a (masked) string literal: skip to the
+            // closing paren, rejecting nested parens.
+            match r.find(')') {
+                Some(close) if !r[..close].contains('(') => rest = &r[close + 1..],
+                _ => return false,
+            }
+        } else if let Some(r) = rest.strip_prefix('?') {
+            rest = r;
+        } else {
+            break;
+        }
+    }
+    let rest = rest.trim();
+    rest.is_empty() || rest == ";"
+}
+
+/// First `let ` keyword position (identifier boundary on the left).
+fn find_let(l: &str) -> Option<usize> {
+    l.match_indices("let ")
+        .map(|(pos, _)| pos)
+        .find(|&pos| pos == 0 || !ident(l.as_bytes()[pos - 1]))
+}
+
+/// Parse a struct-field declaration line: optional `pub`/`pub(…)`, an
+/// identifier, `:`, the type text (trailing comma stripped).
+fn field_decl(line: &str) -> Option<(String, String)> {
+    let mut t = line.trim_start();
+    if let Some(r) = t.strip_prefix("pub") {
+        if let Some(r2) = r.strip_prefix('(') {
+            t = r2.split_once(')')?.1.trim_start();
+        } else if r.starts_with(char::is_whitespace) {
+            t = r.trim_start();
+        }
+        // `pubX…` falls through with t unchanged: not a visibility.
+    }
+    let bytes = t.as_bytes();
+    let mut k = 0;
+    while k < bytes.len() && ident(bytes[k]) {
+        k += 1;
+    }
+    if k == 0 || bytes[0].is_ascii_digit() {
+        return None;
+    }
+    let name = &t[..k];
+    let rest = t[k..].trim_start();
+    let ty = rest.strip_prefix(':')?.trim();
+    let ty = ty.strip_suffix(',').unwrap_or(ty).trim();
+    if ty.is_empty() {
+        return None;
+    }
+    Some((name.to_string(), ty.to_string()))
+}
+
+/// Strip `std::sync::` / `atomic::` qualification prefixes from a type.
+fn unqualify(ty: &str) -> String {
+    ty.replace("std::sync::", "").replace("atomic::", "")
+}
+
+/// Whether `ty` (unqualified) is a countable stats field: an unsigned
+/// counter, an atomic counter, or a fixed array of either.
+fn counter_type(ty: &str) -> bool {
+    let scalar = |t: &str| {
+        matches!(t, "u64" | "usize" | "u32" | "AtomicU64" | "AtomicUsize" | "AtomicU32")
+    };
+    if scalar(ty) {
+        return true;
+    }
+    if let Some(inner) = ty.strip_prefix('[') {
+        if let Some((elem, _)) = inner.split_once(';') {
+            return scalar(elem.trim());
+        }
+    }
+    false
+}
+
+/// The identifier immediately after keyword `kw ` in `l`, if any.
+fn ident_after_kw(l: &str, kw: &str) -> Option<(String, usize)> {
+    let pat = format!("{kw} ");
+    for (pos, _) in l.match_indices(&pat) {
+        if pos > 0 && ident(l.as_bytes()[pos - 1]) {
+            continue;
+        }
+        let rest = &l[pos + pat.len()..];
+        let rest_trim = rest.trim_start();
+        let bytes = rest_trim.as_bytes();
+        let mut k = 0;
+        while k < bytes.len() && ident(bytes[k]) {
+            k += 1;
+        }
+        if k > 0 && !bytes[0].is_ascii_digit() {
+            return Some((rest_trim[..k].to_string(), pos));
+        }
+    }
+    None
+}
+
+/// A live guard: the bound name (for `drop(name)` release), the mutex
+/// field it guards, and the brace depth the binding lives at.
+struct LiveGuard {
+    name: Option<String>,
+    field: String,
+    depth: i64,
+}
+
+/// Extract facts from one file's masked view. Non-library files yield
+/// empty facts; the file-final `#[cfg(test)]` region is skipped.
+pub fn extract(rel: &str, masked: &Masked) -> FileFacts {
+    let mut facts = FileFacts::default();
+    if !rel.starts_with("rust/src/") {
+        return facts;
+    }
+    let code = &masked.code;
+    let test_from =
+        code.iter().position(|l| l.contains("#[cfg(test)]")).unwrap_or(usize::MAX);
+
+    let mut depth: i64 = 0;
+    // (struct name, body depth)
+    let mut struct_stack: Vec<(String, i64)> = Vec::new();
+    // (fn name, decl line, body start line, body depth)
+    let mut fn_stack: Vec<(String, usize, usize, i64)> = Vec::new();
+    let mut guards: Vec<LiveGuard> = Vec::new();
+    let mut pending_struct: Option<String> = None;
+    let mut pending_fn: Option<(String, usize)> = None;
+    // Open pool-task region: unclosed paren count.
+    let mut pool_paren: i64 = 0;
+    let mut in_pool = false;
+
+    for (i, l) in code.iter().enumerate() {
+        if i >= test_from {
+            break;
+        }
+        if let Some((name, _)) = ident_after_kw(l, "struct") {
+            pending_struct = Some(name);
+        }
+        if let Some((name, _)) = ident_after_kw(l, "fn") {
+            pending_fn = Some((name, i));
+        }
+        let opens = l.matches('{').count() as i64;
+        let closes = l.matches('}').count() as i64;
+
+        if pending_struct.is_some() {
+            if l.contains('{') {
+                struct_stack.push((pending_struct.take().expect("checked"), depth + 1));
+            } else if l.contains(';') {
+                pending_struct = None; // unit / tuple struct
+            }
+        }
+        if let Some((name, decl)) = pending_fn.clone() {
+            if l.contains('{') {
+                fn_stack.push((name, decl, i, depth + 1));
+                pending_fn = None;
+            } else if l.contains(';') {
+                pending_fn = None; // trait method signature
+            }
+        }
+
+        // ---- field declarations inside a struct body --------------------
+        if let Some((sname, sdepth)) = struct_stack.last() {
+            if depth >= *sdepth && !l.contains("fn ") {
+                if let Some((fname, ftype)) = field_decl(l) {
+                    let base = unqualify(&ftype);
+                    if base.starts_with("Mutex<") {
+                        facts.mutex_decls.entry(fname.clone()).or_insert(i);
+                    }
+                    if base.starts_with("Condvar") {
+                        facts.condvar_structs.insert(sname.clone());
+                    }
+                    let atomicish = base.starts_with("Atomic")
+                        || base.trim_start_matches('[').trim_start().starts_with("Atomic");
+                    if atomicish {
+                        facts
+                            .atomic_decls
+                            .entry(fname.clone())
+                            .or_insert((i, Some(sname.clone())));
+                    }
+                    if sname.contains("Stats") && counter_type(&base) {
+                        facts.stats_structs.entry(sname.clone()).or_default().push(fname);
+                    }
+                }
+            }
+        }
+        // ---- static atomics ---------------------------------------------
+        if let Some((name, _)) = ident_after_kw(l, "static") {
+            let after = l.split_once(&name).map(|x| x.1).unwrap_or("");
+            if unqualify(after.trim_start().trim_start_matches(':').trim_start())
+                .starts_with("Atomic")
+            {
+                facts.atomic_decls.entry(name).or_insert((i, None));
+            }
+        }
+
+        // ---- lock acquisitions + guard tracking -------------------------
+        guards.retain(|g| match &g.name {
+            Some(nm) => !l.contains(&format!("drop({nm})")),
+            None => true,
+        });
+        let bytes = l.as_bytes();
+        // (field, call start byte, call end byte)
+        let mut acqs: Vec<(String, usize, usize)> = Vec::new();
+        for (pos, _) in l.match_indices(".lock()") {
+            if let Some(field) = chain_field_before(bytes, pos) {
+                acqs.push((field, pos, pos + ".lock()".len()));
+            }
+        }
+        for (pos, _) in l.match_indices("lock(") {
+            // The free-function form only: reject `.lock(` (method,
+            // handled above) and `unlock(`-style suffix matches.
+            if pos > 0 && (ident(bytes[pos - 1]) || bytes[pos - 1] == b'.') {
+                continue;
+            }
+            let mut k = pos + "lock(".len();
+            while k < bytes.len() && (bytes[k] == b'&' || bytes[k] == b' ') {
+                k += 1;
+            }
+            let arg_start = k;
+            let mut bdepth = 0i32;
+            while k < bytes.len() {
+                let b = bytes[k];
+                if b == b'[' {
+                    bdepth += 1;
+                } else if b == b']' {
+                    bdepth -= 1;
+                } else if bdepth == 0 && !(ident(b) || b == b'.') {
+                    break;
+                }
+                k += 1;
+            }
+            let Some(field) = last_field_of(&bytes[arg_start..k]) else { continue };
+            // End of the lock(...) call, for the adapter check.
+            let mut pd = 1i32;
+            let mut e = pos + "lock(".len();
+            while e < bytes.len() && pd > 0 {
+                if bytes[e] == b'(' {
+                    pd += 1;
+                } else if bytes[e] == b')' {
+                    pd -= 1;
+                }
+                e += 1;
+            }
+            acqs.push((field, pos, e));
+        }
+        acqs.sort_by_key(|a| a.1);
+        for (field, _, _) in &acqs {
+            for g in &guards {
+                facts.lock_edges.push(LockEdge {
+                    held: g.field.clone(),
+                    acquired: field.clone(),
+                    line: i,
+                });
+            }
+        }
+        // A binding is a guard only when the lock call IS the right-hand
+        // side (modulo adapters): `let g = recv.lock();`.
+        if let Some(letpos) = find_let(l) {
+            if let Some(eqoff) = l[letpos..].find('=') {
+                let mut name = l[letpos + 4..letpos + eqoff].trim();
+                name = name.strip_prefix("mut ").unwrap_or(name).trim();
+                let plain = !name.is_empty()
+                    && name.bytes().all(ident)
+                    && !name.as_bytes()[0].is_ascii_digit();
+                let mut rhs_start = letpos + eqoff + 1;
+                while rhs_start < bytes.len() && bytes[rhs_start].is_ascii_whitespace() {
+                    rhs_start += 1;
+                }
+                if plain && name != "_" {
+                    for (field, pos, endpos) in &acqs {
+                        // Walk back over the receiver chain to where the
+                        // acquisition expression starts.
+                        let mut cs = *pos;
+                        while cs > 0
+                            && (ident(bytes[cs - 1]) || b".[]&*".contains(&bytes[cs - 1]))
+                        {
+                            cs -= 1;
+                        }
+                        if cs <= rhs_start && rhs_start <= *pos {
+                            if only_adapters(&l[*endpos..]) {
+                                let before = &l[..*pos];
+                                let bind_depth = depth + before.matches('{').count() as i64
+                                    - before.matches('}').count() as i64;
+                                guards.push(LiveGuard {
+                                    name: Some(name.to_string()),
+                                    field: field.clone(),
+                                    depth: bind_depth,
+                                });
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- atomic ordering uses ---------------------------------------
+        for (pos, _) in l.match_indices("Ordering::") {
+            let rest = &l[pos + "Ordering::".len()..];
+            let rb = rest.as_bytes();
+            let mut k = 0;
+            while k < rb.len() && ident(rb[k]) {
+                k += 1;
+            }
+            let oname = &rest[..k];
+            if !ORDERINGS.contains(&oname) {
+                continue;
+            }
+            if let Some((method, Some(recv))) = innermost_call(bytes, pos) {
+                if ATOMIC_OPS.contains(&method.as_str()) {
+                    facts.atomic_uses.push(AtomicUse {
+                        field: recv,
+                        ordering: oname.to_string(),
+                        line: i,
+                    });
+                }
+            }
+        }
+
+        // ---- pool-task closure regions ----------------------------------
+        let scan_blocking = |facts: &mut FileFacts, seg: &str, line: usize| {
+            for pat in BLOCKING {
+                if seg.contains(pat) {
+                    facts.pool_blocking.push(PoolBlocking { line, what: pat });
+                    break;
+                }
+            }
+        };
+        if !in_pool {
+            let trigger = l
+                .match_indices("pool.spawn(")
+                .map(|(p, _)| (p, p + "pool.spawn(".len()))
+                .find(|&(p, _)| p == 0 || !ident(bytes[p - 1]))
+                .or_else(|| {
+                    l.match_indices(".mapper(").map(|(p, _)| (p, p + ".mapper(".len())).next()
+                });
+            if let Some((_, after_paren)) = trigger {
+                pool_paren = 1;
+                let mut endcol = l.len();
+                for (off, b) in l[after_paren..].bytes().enumerate() {
+                    if b == b'(' {
+                        pool_paren += 1;
+                    } else if b == b')' {
+                        pool_paren -= 1;
+                        if pool_paren == 0 {
+                            endcol = after_paren + off;
+                            break;
+                        }
+                    }
+                }
+                scan_blocking(&mut facts, &l[after_paren..endcol], i);
+                in_pool = pool_paren > 0;
+            }
+        } else {
+            let mut endcol = l.len();
+            for (off, b) in l.bytes().enumerate() {
+                if b == b'(' {
+                    pool_paren += 1;
+                } else if b == b')' {
+                    pool_paren -= 1;
+                    if pool_paren == 0 {
+                        endcol = off;
+                        break;
+                    }
+                }
+            }
+            scan_blocking(&mut facts, &l[..endcol], i);
+            in_pool = pool_paren > 0;
+        }
+
+        // ---- scope bookkeeping ------------------------------------------
+        depth += opens - closes;
+        guards.retain(|g| g.depth <= depth);
+        while struct_stack.last().is_some_and(|(_, d)| depth < *d) {
+            struct_stack.pop();
+        }
+        while fn_stack.last().is_some_and(|(_, _, _, d)| depth < *d) {
+            let (name, decl, start, _) = fn_stack.pop().expect("checked");
+            facts.fns.push(FnRegion { name, decl_line: decl, start, end: i });
+        }
+    }
+    let eof = test_from.min(code.len()).saturating_sub(1);
+    while let Some((name, decl, start, _)) = fn_stack.pop() {
+        facts.fns.push(FnRegion { name, decl_line: decl, start, end: eof });
+    }
+    facts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::mask;
+
+    fn facts_of(src: &str) -> FileFacts {
+        extract("rust/src/fake.rs", &mask(src))
+    }
+
+    #[test]
+    fn declarations_are_collected() {
+        let f = facts_of(
+            "pub struct Shared {\n\
+             \x20   queue: Mutex<Vec<u8>>,\n\
+             \x20   ready: Condvar,\n\
+             \x20   done: AtomicBool,\n\
+             }\n\
+             static LEVEL: std::sync::atomic::AtomicU8 = AtomicU8::new(0);\n",
+        );
+        assert_eq!(f.mutex_decls.get("queue"), Some(&1));
+        assert!(f.condvar_structs.contains("Shared"));
+        assert_eq!(f.atomic_decls.get("done").map(|d| d.1.clone()), Some(Some("Shared".into())));
+        assert_eq!(f.atomic_decls.get("LEVEL").map(|d| d.1.clone()), Some(None));
+    }
+
+    #[test]
+    fn held_while_acquiring_makes_an_edge() {
+        let f = facts_of(
+            "fn f(s: &S) {\n\
+             \x20   let a = s.first.lock().unwrap();\n\
+             \x20   let b = s.second.lock().unwrap();\n\
+             }\n",
+        );
+        assert_eq!(f.lock_edges.len(), 1);
+        assert_eq!(f.lock_edges[0].held, "first");
+        assert_eq!(f.lock_edges[0].acquired, "second");
+        assert_eq!(f.lock_edges[0].line, 2);
+    }
+
+    #[test]
+    fn statement_temporaries_are_not_guards() {
+        // The PR 9 serve shape: `let held = lock(&m).get(k).map(clone);`
+        // drops the guard at the semicolon — re-locking later is fine.
+        let f = facts_of(
+            "fn f(s: &S) {\n\
+             \x20   let held = lock(&s.follows).get(&k).map(Arc::clone);\n\
+             \x20   lock(&s.follows).insert(k, v);\n\
+             }\n",
+        );
+        assert!(f.lock_edges.is_empty(), "{:?}", f.lock_edges);
+    }
+
+    #[test]
+    fn drop_and_scope_release_guards() {
+        let f = facts_of(
+            "fn f(s: &S) {\n\
+             \x20   let a = s.first.lock().unwrap();\n\
+             \x20   drop(a);\n\
+             \x20   let b = s.second.lock().unwrap();\n\
+             \x20   { let c = s.third.lock().unwrap(); }\n\
+             \x20   let d = s.fourth.lock().unwrap();\n\
+             }\n",
+        );
+        // b→third (b live at c's bind), b→fourth (c died with its block).
+        let pairs: Vec<(String, String)> =
+            f.lock_edges.iter().map(|e| (e.held.clone(), e.acquired.clone())).collect();
+        assert_eq!(
+            pairs,
+            vec![
+                ("second".to_string(), "third".to_string()),
+                ("second".to_string(), "fourth".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn atomic_uses_attribute_receiver_and_ordering() {
+        let f = facts_of(
+            "fn f(s: &S) {\n\
+             \x20   s.flag.store(true, Ordering::SeqCst);\n\
+             \x20   let v = s.by_algo[i].load(Ordering::Relaxed);\n\
+             \x20   xs.sort_by(|a, b| match a.partial_cmp(b) { Some(Ordering::Less) => 1, _ => 0 });\n\
+             }\n",
+        );
+        let got: Vec<(String, String)> =
+            f.atomic_uses.iter().map(|u| (u.field.clone(), u.ordering.clone())).collect();
+        assert_eq!(
+            got,
+            vec![
+                ("flag".to_string(), "SeqCst".to_string()),
+                ("by_algo".to_string(), "Relaxed".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn pool_regions_catch_blocking_calls() {
+        let f = facts_of(
+            "fn f(&self) {\n\
+             \x20   self.pool.spawn(move || {\n\
+             \x20       let g = self.state.lock().unwrap();\n\
+             \x20       tx.send(1).ok();\n\
+             \x20   });\n\
+             \x20   let fine = rx.recv();\n\
+             }\n",
+        );
+        assert_eq!(f.pool_blocking.len(), 1);
+        assert_eq!(f.pool_blocking[0].line, 2);
+        assert_eq!(f.pool_blocking[0].what, ".lock()");
+    }
+
+    #[test]
+    fn stats_structs_and_fn_regions() {
+        let f = facts_of(
+            "pub struct FooStats {\n\
+             \x20   pub hits: u64,\n\
+             \x20   pub misses: u64,\n\
+             \x20   pub label: String,\n\
+             }\n\
+             impl FooStats {\n\
+             \x20   pub fn absorb(&mut self, o: &FooStats) {\n\
+             \x20       self.hits += o.hits;\n\
+             \x20   }\n\
+             }\n",
+        );
+        assert_eq!(
+            f.stats_structs.get("FooStats"),
+            Some(&vec!["hits".to_string(), "misses".to_string()])
+        );
+        let absorb = f.fns.iter().find(|r| r.name == "absorb").expect("fn region");
+        assert_eq!(absorb.decl_line, 6);
+        assert!(absorb.start <= 6 && absorb.end >= 7);
+    }
+}

@@ -1,0 +1,178 @@
+//! A small directed graph over interned string nodes, with strongly
+//! connected component detection (iterative Tarjan). Used by
+//! [`crate::crossfile`] to find cycles in the held-while-acquiring
+//! lock-order graph: every edge inside a non-trivial SCC (or any
+//! self-loop) participates in a potential deadlock.
+
+use std::collections::BTreeMap;
+
+/// Directed graph over string-named nodes. Nodes are created lazily by
+/// [`Digraph::add_edge`]; duplicate edges are kept (each carries its own
+/// provenance in the caller) but do not change connectivity.
+#[derive(Debug, Default)]
+pub struct Digraph {
+    names: Vec<String>,
+    index: BTreeMap<String, usize>,
+    succ: Vec<Vec<usize>>,
+}
+
+impl Digraph {
+    /// Create an empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn node(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.index.get(name) {
+            return i;
+        }
+        let i = self.names.len();
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), i);
+        self.succ.push(Vec::new());
+        i
+    }
+
+    /// Add the directed edge `from → to`, creating nodes as needed.
+    pub fn add_edge(&mut self, from: &str, to: &str) {
+        let f = self.node(from);
+        let t = self.node(to);
+        self.succ[f].push(t);
+    }
+
+    /// Strongly connected components, each as a sorted list of node
+    /// names. Components are returned in deterministic order.
+    pub fn sccs(&self) -> Vec<Vec<String>> {
+        // Iterative Tarjan: an explicit stack of (node, next-successor
+        // index) frames replaces recursion so pathological graphs cannot
+        // overflow the thread stack.
+        const UNSET: usize = usize::MAX;
+        let n = self.names.len();
+        let mut idx = vec![UNSET; n];
+        let mut low = vec![0usize; n];
+        let mut on_stack = vec![false; n];
+        let mut stack: Vec<usize> = Vec::new();
+        let mut counter = 0usize;
+        let mut out: Vec<Vec<String>> = Vec::new();
+
+        for root in 0..n {
+            if idx[root] != UNSET {
+                continue;
+            }
+            let mut frames: Vec<(usize, usize)> = vec![(root, 0)];
+            while let Some(&(v, next)) = frames.last() {
+                if next == 0 {
+                    idx[v] = counter;
+                    low[v] = counter;
+                    counter += 1;
+                    stack.push(v);
+                    on_stack[v] = true;
+                }
+                if next < self.succ[v].len() {
+                    let w = self.succ[v][next];
+                    frames.last_mut().expect("frame just read").1 += 1;
+                    if idx[w] == UNSET {
+                        frames.push((w, 0));
+                    } else if on_stack[w] {
+                        low[v] = low[v].min(idx[w]);
+                    }
+                    continue;
+                }
+                frames.pop();
+                if let Some(&(p, _)) = frames.last() {
+                    low[p] = low[p].min(low[v]);
+                }
+                if low[v] == idx[v] {
+                    let mut comp = Vec::new();
+                    loop {
+                        let w = stack.pop().expect("tarjan stack underflow");
+                        on_stack[w] = false;
+                        comp.push(self.names[w].clone());
+                        if w == v {
+                            break;
+                        }
+                    }
+                    comp.sort();
+                    out.push(comp);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Node-name pairs `(from, to)` for which the edge lies inside a
+    /// cycle: both endpoints share a non-trivial SCC, or the edge is a
+    /// self-loop (`std::sync::Mutex` is not reentrant, so re-acquiring a
+    /// held lock deadlocks too).
+    pub fn cyclic_edges(&self) -> Vec<(String, String)> {
+        let mut comp_of: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut comp_size: Vec<usize> = Vec::new();
+        for (ci, comp) in self.sccs().iter().enumerate() {
+            comp_size.push(comp.len());
+            for name in comp {
+                // sccs() returns owned names; key by interned index name.
+                let i = self.index[name.as_str()];
+                comp_of.insert(self.names[i].as_str(), ci);
+            }
+        }
+        let mut out = Vec::new();
+        for (f, succs) in self.succ.iter().enumerate() {
+            for &t in succs {
+                let cyclic = f == t
+                    || (comp_of[self.names[f].as_str()] == comp_of[self.names[t].as_str()]
+                        && comp_size[comp_of[self.names[f].as_str()]] > 1);
+                if cyclic {
+                    out.push((self.names[f].clone(), self.names[t].clone()));
+                }
+            }
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acyclic_graph_has_no_cyclic_edges() {
+        let mut g = Digraph::new();
+        g.add_edge("a", "b");
+        g.add_edge("b", "c");
+        g.add_edge("a", "c");
+        assert!(g.cyclic_edges().is_empty());
+    }
+
+    #[test]
+    fn two_cycle_flags_both_edges() {
+        let mut g = Digraph::new();
+        g.add_edge("a", "b");
+        g.add_edge("b", "a");
+        g.add_edge("b", "c");
+        assert_eq!(
+            g.cyclic_edges(),
+            vec![("a".to_string(), "b".to_string()), ("b".to_string(), "a".to_string())]
+        );
+    }
+
+    #[test]
+    fn self_loop_is_a_cycle() {
+        let mut g = Digraph::new();
+        g.add_edge("q", "q");
+        assert_eq!(g.cyclic_edges(), vec![("q".to_string(), "q".to_string())]);
+    }
+
+    #[test]
+    fn three_cycle_through_distinct_components() {
+        let mut g = Digraph::new();
+        g.add_edge("a", "b");
+        g.add_edge("b", "c");
+        g.add_edge("c", "a");
+        g.add_edge("c", "d"); // tail out of the cycle stays clean
+        assert_eq!(g.cyclic_edges().len(), 3);
+        assert!(!g.cyclic_edges().contains(&("c".to_string(), "d".to_string())));
+    }
+}

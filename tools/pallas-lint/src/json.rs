@@ -1,0 +1,326 @@
+//! `--format json`: a dependency-free JSON emitter for findings, plus a
+//! deliberately small parser so the round-trip (emit → parse → annotate)
+//! the CI annotation step performs is covered by tests in-repo rather
+//! than only exercised on the runner.
+
+use std::fmt::Write as _;
+
+use crate::Finding;
+
+/// Escape a string for a JSON string literal (quotes, backslash,
+/// control characters).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn finding_obj(f: &Finding, new: bool) -> String {
+    format!(
+        "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"excerpt\":\"{}\",\"detail\":\"{}\",\"new\":{}}}",
+        escape(f.rule),
+        escape(&f.path),
+        f.line,
+        escape(&f.excerpt),
+        escape(&f.detail),
+        new
+    )
+}
+
+/// Render the full machine-readable report. `new` marks findings over
+/// the baseline budget (the ones that fail the run); `stale_allows` are
+/// suppressions that no longer suppress anything.
+pub fn render(findings: &[(&Finding, bool)], stale_allows: &[Finding]) -> String {
+    let mut out = String::from("{\n  \"version\": 1,\n  \"findings\": [\n");
+    for (i, (f, new)) in findings.iter().enumerate() {
+        let sep = if i + 1 < findings.len() { "," } else { "" };
+        let _ = writeln!(out, "    {}{sep}", finding_obj(f, *new));
+    }
+    out.push_str("  ],\n  \"stale_allows\": [\n");
+    for (i, f) in stale_allows.iter().enumerate() {
+        let sep = if i + 1 < stale_allows.len() { "," } else { "" };
+        let _ = writeln!(out, "    {}{sep}", finding_obj(f, false));
+    }
+    let new_count = findings.iter().filter(|(_, n)| *n).count();
+    let _ = write!(
+        out,
+        "  ],\n  \"summary\": {{\"total\": {}, \"new\": {}, \"stale_allows\": {}}}\n}}\n",
+        findings.len(),
+        new_count,
+        stale_allows.len()
+    );
+    out
+}
+
+/// A parsed JSON value. Only what the report emits: objects, arrays,
+/// strings, integers, booleans, null.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Numbers (integers only in our output; parsed as i64).
+    Num(i64),
+    /// String literal.
+    Str(String),
+    /// Array.
+    Arr(Vec<Value>),
+    /// Object, insertion-ordered.
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Member lookup on objects; `None` elsewhere.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The array items, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document. Errors carry a byte offset and a short
+/// message; the parser accepts exactly the subset [`render`] emits
+/// (no floats, no exponents, no `\uXXXX` surrogate pairs beyond BMP).
+pub fn parse(text: &str) -> Result<Value, String> {
+    let b = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing data at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && (b[*pos] as char).is_ascii_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected `{}` at byte {}", c as char, pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'{') => {
+            *pos += 1;
+            let mut members = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Value::Obj(members));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                let val = parse_value(b, pos)?;
+                members.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Value::Obj(members));
+                    }
+                    _ => return Err(format!("expected `,` or `}}` at byte {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => return Err(format!("expected `,` or `]` at byte {pos}")),
+                }
+            }
+        }
+        Some(b'"') => Ok(Value::Str(parse_string(b, pos)?)),
+        Some(b't') if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Value::Bool(true))
+        }
+        Some(b'f') if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Value::Bool(false))
+        }
+        Some(b'n') if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Value::Null)
+        }
+        Some(c) if c.is_ascii_digit() || *c == b'-' => {
+            let start = *pos;
+            if b[*pos] == b'-' {
+                *pos += 1;
+            }
+            while *pos < b.len() && b[*pos].is_ascii_digit() {
+                *pos += 1;
+            }
+            let text = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+            text.parse::<i64>().map(Value::Num).map_err(|e| e.to_string())
+        }
+        _ => Err(format!("unexpected input at byte {pos}")),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {pos}"));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or_else(|| format!("bad \\u escape at byte {pos}"))?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|e| format!("bad \\u escape: {e}"))?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {pos}")),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Copy the full UTF-8 sequence starting here.
+                let s = std::str::from_utf8(&b[*pos..]).map_err(|e| e.to_string())?;
+                let c = s.chars().next().ok_or("empty string tail")?;
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, line: usize, detail: &str) -> Finding {
+        Finding {
+            rule,
+            path: "rust/src/x.rs".to_string(),
+            line,
+            excerpt: "let g = s.a.lock().unwrap(); // \"quoted\"".to_string(),
+            detail: detail.to_string(),
+        }
+    }
+
+    #[test]
+    fn report_round_trips() {
+        let f1 = finding("lock-order-cycle", 3, "locks `b` while holding `a`, closing a cycle");
+        let f2 = finding("unwrap-in-library", 9, "");
+        let stale = finding("stale-allow", 12, "allow for `unspecified-hasher` suppresses nothing");
+        let text = render(&[(&f1, true), (&f2, false)], std::slice::from_ref(&stale));
+        let doc = parse(&text).expect("parse");
+        let findings = doc.get("findings").and_then(Value::as_arr).expect("findings");
+        assert_eq!(findings.len(), 2);
+        assert_eq!(findings[0].get("rule").and_then(Value::as_str), Some("lock-order-cycle"));
+        assert_eq!(findings[0].get("new"), Some(&Value::Bool(true)));
+        assert_eq!(findings[0].get("line"), Some(&Value::Num(3)));
+        assert_eq!(
+            findings[0].get("excerpt").and_then(Value::as_str),
+            Some("let g = s.a.lock().unwrap(); // \"quoted\"")
+        );
+        assert_eq!(findings[1].get("new"), Some(&Value::Bool(false)));
+        let stales = doc.get("stale_allows").and_then(Value::as_arr).expect("stale");
+        assert_eq!(stales.len(), 1);
+        let summary = doc.get("summary").expect("summary");
+        assert_eq!(summary.get("total"), Some(&Value::Num(2)));
+        assert_eq!(summary.get("new"), Some(&Value::Num(1)));
+        assert_eq!(summary.get("stale_allows"), Some(&Value::Num(1)));
+    }
+
+    #[test]
+    fn escape_handles_controls_and_quotes() {
+        assert_eq!(escape("a\"b\\c\nd\te"), "a\\\"b\\\\c\\nd\\te");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        let doc = parse("{\"k\":\"a\\u0041\\\"\"}").expect("parse");
+        assert_eq!(doc.get("k").and_then(Value::as_str), Some("aA\""));
+    }
+
+    #[test]
+    fn empty_report_parses() {
+        let text = render(&[], &[]);
+        let doc = parse(&text).expect("parse");
+        assert_eq!(doc.get("findings").and_then(Value::as_arr).map(<[Value]>::len), Some(0));
+        assert_eq!(doc.get("summary").and_then(|s| s.get("total")), Some(&Value::Num(0)));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("{\"a\":}").is_err());
+        assert!(parse("[1,2").is_err());
+        assert!(parse("{} trailing").is_err());
+    }
+}

@@ -6,12 +6,19 @@
 //! toolchains, with all parallelism under one shared pool budget and a
 //! strict metered-vs-simulated-time split.
 //!
-//! The pipeline: [`lexer::mask`] strips comments and literal contents so
-//! rules never fire on prose; [`rules::check_file`] runs five line-level
-//! checks with `// lint:allow(<rule>): <reason>` suppressions;
-//! [`baseline`] ratchets pre-existing findings per `(rule, file)` so new
-//! code is held to the bar without rewriting ~100 grandfathered call
-//! sites in one diff.
+//! The pipeline is two-phase. [`lexer::mask`] strips comments and
+//! literal contents so nothing fires on prose; phase 1 runs the five
+//! line-level rules ([`rules`]) and extracts per-file concurrency facts
+//! ([`facts`]); phase 2 joins the facts across the whole tree into the
+//! four cross-file rules ([`crossfile`]) — lock-order cycles, atomic
+//! ordering mixes, blocking calls inside pool tasks, stats-counter
+//! drift. `// lint:allow(<rule>): <reason>` suppresses any rule, and a
+//! suppression that suppresses nothing is itself reported as
+//! `stale-allow`. [`baseline`] ratchets pre-existing `unwrap-in-library`
+//! findings per `(rule, file)` so new code is held to the bar without
+//! rewriting every grandfathered call site in one diff; the cross-file
+//! rules are never baselined. [`json`] renders the machine-readable
+//! report CI turns into PR annotations.
 //!
 //! Zero dependencies by design: the linter must build in the same offline
 //! environment as the crate it checks, and sits in tier-1 CI
@@ -20,6 +27,10 @@
 #![warn(missing_docs)]
 
 pub mod baseline;
+pub mod crossfile;
+pub mod facts;
+pub mod graph;
+pub mod json;
 pub mod lexer;
 pub mod rules;
 
@@ -36,17 +47,124 @@ pub struct Finding {
     pub line: usize,
     /// Trimmed source excerpt (at most 90 characters).
     pub excerpt: String,
+    /// Cross-file context for phase-2 findings (the cycle edge, the
+    /// ordering set, the missing counters); empty for line-level rules.
+    pub detail: String,
 }
 
 impl std::fmt::Display for Finding {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}:{}: {}: {}", self.path, self.line, self.rule, self.excerpt)
+        write!(f, "{}:{}: {}: {}", self.path, self.line, self.rule, self.excerpt)?;
+        if !self.detail.is_empty() {
+            write!(f, " [{}]", self.detail)?;
+        }
+        Ok(())
     }
 }
 
-/// Lint one file's source text against every rule.
+/// One analyzed file: the inputs phase 2 needs, produced once per file
+/// by phase 1.
+pub struct SourceUnit {
+    /// Repo-relative path with `/` separators.
+    pub rel: String,
+    /// Raw source lines (for excerpts).
+    pub raw: Vec<String>,
+    /// Masked view (comments and literal bodies blanked).
+    pub masked: lexer::Masked,
+    /// Extracted concurrency facts.
+    pub facts: facts::FileFacts,
+}
+
+impl SourceUnit {
+    /// Run phase 1 over one file's source text.
+    pub fn analyze(rel: &str, src: &str) -> SourceUnit {
+        let masked = lexer::mask(src);
+        let facts = facts::extract(rel, &masked);
+        SourceUnit {
+            rel: rel.to_string(),
+            raw: src.lines().map(str::to_string).collect(),
+            masked,
+            facts,
+        }
+    }
+}
+
+/// The full result of linting a set of files.
+pub struct TreeLint {
+    /// Post-suppression findings, ordered by `(path, line, rule)`.
+    pub findings: Vec<Finding>,
+    /// `stale-allow` reports: suppressions that suppressed nothing.
+    /// Kept apart from [`TreeLint::findings`] — they are warnings by
+    /// default and never enter the baseline.
+    pub stale_allows: Vec<Finding>,
+}
+
+/// Lint a set of `(repo-relative path, source)` files as one tree: both
+/// phases, suppression, and stale-allow detection. Cross-file joins see
+/// exactly the files given, so single-file callers get phase-2 findings
+/// whose facts resolve within that file alone.
+pub fn lint_files(files: &[(String, String)]) -> TreeLint {
+    let units: Vec<SourceUnit> =
+        files.iter().map(|(rel, src)| SourceUnit::analyze(rel, src)).collect();
+
+    // Phase 1 + phase 2, grouped per file for suppression.
+    let mut per_file: Vec<Vec<Finding>> = units
+        .iter()
+        .map(|u| {
+            let raw: Vec<&str> = u.raw.iter().map(String::as_str).collect();
+            rules::line_findings(&u.rel, &u.masked, &raw)
+        })
+        .collect();
+    for f in crossfile::check(&units) {
+        let ui = units.iter().position(|u| u.rel == f.path).expect("finding from known file");
+        per_file[ui].push(f);
+    }
+
+    let mut findings = Vec::new();
+    let mut stale_allows = Vec::new();
+    for (u, file_findings) in units.iter().zip(per_file.into_iter()) {
+        let allows = rules::allows(&u.masked);
+        for a in &allows {
+            let hits = file_findings
+                .iter()
+                .filter(|f| f.rule == a.rule && f.line - 1 == a.target)
+                .count();
+            if hits == 0 {
+                let known = rules::RULES.iter().any(|r| r.name == a.rule);
+                let detail = if known {
+                    format!("allow(`{}`) suppresses nothing on its target line", a.rule)
+                } else {
+                    format!("allow(`{}`) names a rule this linter does not have", a.rule)
+                };
+                stale_allows.push(Finding {
+                    rule: "stale-allow",
+                    path: u.rel.clone(),
+                    line: a.comment_line + 1,
+                    excerpt: u.raw.get(a.comment_line).map_or(String::new(), |l| {
+                        l.trim().chars().take(90).collect()
+                    }),
+                    detail,
+                });
+            }
+        }
+        findings.extend(file_findings.into_iter().filter(|f| {
+            !allows.iter().any(|a| a.rule == f.rule && a.target == f.line - 1)
+        }));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    stale_allows.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    TreeLint { findings, stale_allows }
+}
+
+/// Lint one file's source text against every rule (both phases, with
+/// cross-file identities resolved within the single file).
 pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
-    rules::check_file(rel, src)
+    lint_source_full(rel, src).findings
+}
+
+/// Like [`lint_source`], but also returning stale-allow reports.
+pub fn lint_source_full(rel: &str, src: &str) -> TreeLint {
+    lint_files(&[(rel.to_string(), src.to_string())])
 }
 
 /// The directories scanned under the repo root. `vendor/` (third-party
@@ -87,16 +205,20 @@ pub fn scan_files(root: &Path) -> std::io::Result<Vec<String>> {
     Ok(out)
 }
 
-/// Lint every in-scope file under `root`; findings are ordered by
-/// `(path, line, rule)`.
+/// Lint every in-scope file under `root`, with cross-file analysis over
+/// the whole set; findings are ordered by `(path, line, rule)`.
 pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
-    let mut findings = Vec::new();
+    Ok(lint_tree_full(root)?.findings)
+}
+
+/// Like [`lint_tree`], but also returning stale-allow reports.
+pub fn lint_tree_full(root: &Path) -> std::io::Result<TreeLint> {
+    let mut files = Vec::new();
     for rel in scan_files(root)? {
         let src = std::fs::read_to_string(root.join(&rel))?;
-        findings.extend(lint_source(&rel, &src));
+        files.push((rel, src));
     }
-    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
-    Ok(findings)
+    Ok(lint_files(&files))
 }
 
 /// The default baseline location, relative to the repo root.

@@ -3,25 +3,30 @@
 //! ```text
 //! cargo run -p pallas-lint                      # enforce against baseline
 //! cargo run -p pallas-lint -- --list            # every finding, baselined or not
+//! cargo run -p pallas-lint -- --rules           # the rule registry
+//! cargo run -p pallas-lint -- --format json     # machine-readable report
+//! cargo run -p pallas-lint -- --strict-allows   # stale suppressions fail too
 //! cargo run -p pallas-lint -- --update-baseline # regenerate the ratchet
 //! cargo run -p pallas-lint -- --print-baseline  # regenerated baseline to stdout
 //! ```
 //!
-//! Exit codes: 0 clean, 1 findings above the baseline, 2 usage or I/O
-//! error. Stale baseline entries (count above the live tree) warn without
-//! failing, so deleting grandfathered code never blocks a build — CI
-//! uploads the regenerated-baseline diff as an artifact instead.
+//! Exit codes: 0 clean, 1 findings above the baseline (or stale allows
+//! under `--strict-allows`), 2 usage or I/O error. Stale baseline
+//! entries (count above the live tree) warn without failing, so deleting
+//! grandfathered code never blocks a build — CI uploads the
+//! regenerated-baseline diff as an artifact instead.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use pallas_lint::{baseline, default_baseline, lint_tree, rules};
+use pallas_lint::{baseline, default_baseline, json, lint_tree_full, rules, Finding};
 
 fn usage() -> String {
     let mut s = String::from(
         "pallas-lint: determinism & concurrency invariant checker\n\n\
-         USAGE: pallas-lint [--root <dir>] [--baseline <file>]\n\
-         \x20                [--list | --print-baseline | --update-baseline]\n\nRULES:\n",
+         USAGE: pallas-lint [--root <dir>] [--baseline <file>] [--format text|json]\n\
+         \x20                [--strict-allows]\n\
+         \x20                [--list | --rules | --print-baseline | --update-baseline]\n\nRULES:\n",
     );
     for r in &rules::RULES {
         s.push_str(&format!("  {:<22} {}\n", r.name, r.summary));
@@ -29,20 +34,39 @@ fn usage() -> String {
     s
 }
 
+fn print_stale_allow_warnings(stale: &[Finding], strict: bool) {
+    for f in stale {
+        eprintln!("pallas-lint: {}: {f}", if strict { "error" } else { "warning" });
+    }
+}
+
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
     let mut baseline_path: Option<PathBuf> = None;
     let mut list = false;
+    let mut list_rules = false;
     let mut print_baseline = false;
     let mut update_baseline = false;
+    let mut strict_allows = false;
+    let mut format_json = false;
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
             "--root" => root = args.next().map(PathBuf::from),
             "--baseline" => baseline_path = args.next().map(PathBuf::from),
             "--list" => list = true,
+            "--rules" => list_rules = true,
             "--print-baseline" => print_baseline = true,
             "--update-baseline" => update_baseline = true,
+            "--strict-allows" => strict_allows = true,
+            "--format" => match args.next().as_deref() {
+                Some("json") => format_json = true,
+                Some("text") => format_json = false,
+                other => {
+                    eprintln!("pallas-lint: --format wants `text` or `json`, got {other:?}");
+                    return ExitCode::from(2);
+                }
+            },
             "--help" | "-h" => {
                 print!("{}", usage());
                 return ExitCode::SUCCESS;
@@ -53,33 +77,48 @@ fn main() -> ExitCode {
             }
         }
     }
+    if list_rules {
+        for r in &rules::RULES {
+            println!("{:<22} {}", r.name, r.summary);
+        }
+        println!("{} rule(s)", rules::RULES.len());
+        return ExitCode::SUCCESS;
+    }
     // Default root: two levels above this crate's manifest — the repo.
     let root = root.unwrap_or_else(|| {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
     });
     let baseline_path = baseline_path.unwrap_or_else(|| default_baseline(&root));
 
-    let findings = match lint_tree(&root) {
-        Ok(f) => f,
+    let tree = match lint_tree_full(&root) {
+        Ok(t) => t,
         Err(e) => {
             eprintln!("pallas-lint: scanning {}: {e}", root.display());
             return ExitCode::from(2);
         }
     };
+    let findings = &tree.findings;
 
     if list {
-        for f in &findings {
-            println!("{f}");
+        if format_json {
+            let rows: Vec<(&Finding, bool)> = findings.iter().map(|f| (f, false)).collect();
+            print!("{}", json::render(&rows, &tree.stale_allows));
+        } else {
+            for f in findings {
+                println!("{f}");
+            }
+            let names: Vec<&str> = rules::RULES.iter().map(|r| r.name).collect();
+            println!("{} finding(s) total (baselined included)", findings.len());
+            println!("{} rule(s) active: {}", names.len(), names.join(", "));
         }
-        println!("{} finding(s) total (baselined included)", findings.len());
         return ExitCode::SUCCESS;
     }
     if print_baseline {
-        print!("{}", baseline::render(&baseline::counts(&findings)));
+        print!("{}", baseline::render(&baseline::counts(findings)));
         return ExitCode::SUCCESS;
     }
     if update_baseline {
-        let text = baseline::render(&baseline::counts(&findings));
+        let text = baseline::render(&baseline::counts(findings));
         if let Err(e) = std::fs::write(&baseline_path, text) {
             eprintln!("pallas-lint: writing {}: {e}", baseline_path.display());
             return ExitCode::from(2);
@@ -103,27 +142,48 @@ fn main() -> ExitCode {
         // No baseline yet: everything is a new finding.
         Err(_) => Default::default(),
     };
-    let drift = baseline::compare(&findings, &base);
+    let drift = baseline::compare(findings, &base);
     for ((rule, path), budget, actual) in &drift.stale {
         eprintln!(
             "pallas-lint: stale baseline entry: {rule} {path} baselined {budget}, live {actual} \
              (regenerate with --update-baseline to ratchet down)"
         );
     }
-    if drift.new.is_empty() {
-        println!(
-            "pallas-lint: clean — {} finding(s), all within the baseline",
-            findings.len()
-        );
+    print_stale_allow_warnings(&tree.stale_allows, strict_allows);
+    let stale_fail = strict_allows && !tree.stale_allows.is_empty();
+
+    if format_json {
+        let rows: Vec<(&Finding, bool)> =
+            findings.iter().map(|f| (f, drift.new.contains(f))).collect();
+        print!("{}", json::render(&rows, &tree.stale_allows));
+    }
+    if drift.new.is_empty() && !stale_fail {
+        if !format_json {
+            println!(
+                "pallas-lint: clean — {} finding(s), all within the baseline",
+                findings.len()
+            );
+        }
         return ExitCode::SUCCESS;
     }
-    for f in &drift.new {
-        println!("{f}");
+    if !format_json {
+        for f in &drift.new {
+            println!("{f}");
+        }
     }
-    eprintln!(
-        "pallas-lint: {} finding(s) above the baseline. Fix them, or suppress a deliberate \
-         one with `// lint:allow(<rule>): <reason>` (see DESIGN.md §10).",
-        drift.new.len()
-    );
+    if !drift.new.is_empty() {
+        eprintln!(
+            "pallas-lint: {} finding(s) above the baseline. Fix them, or suppress a deliberate \
+             one with `// lint:allow(<rule>): <reason>` (see DESIGN.md §10).",
+            drift.new.len()
+        );
+    }
+    if stale_fail {
+        eprintln!(
+            "pallas-lint: {} stale allow(s) under --strict-allows. Delete the suppression \
+             comments, or fix the rule name they target.",
+            tree.stale_allows.len()
+        );
+    }
     ExitCode::FAILURE
 }

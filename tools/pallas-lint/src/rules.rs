@@ -1,7 +1,11 @@
-//! The rule engine: five line-oriented checks over [`crate::lexer::Masked`]
-//! views, each encoding an invariant this repo has already shipped a bug
-//! against (or nearly did). DESIGN.md §10 documents the incident behind
-//! every rule and the etiquette for suppressing one.
+//! The line-oriented rule engine: phase 1 of the analyzer. Five checks
+//! run over [`crate::lexer::Masked`] views of a single file, each
+//! encoding an invariant this repo has already shipped a bug against (or
+//! nearly did). The cross-file rules (phase 2) live in
+//! [`crate::crossfile`] and consume the facts [`crate::facts`] extracts;
+//! this module also owns the shared `lint:allow` suppression parser and
+//! the registry of *all* rules, both phases. DESIGN.md §10 documents the
+//! incident behind every rule and the etiquette for suppressing one.
 //!
 //! Scopes. Rules see three kinds of source:
 //!
@@ -18,7 +22,7 @@
 //! suppresses the next line that contains any code. Reasons are part of
 //! the contract — a suppression without one should not survive review.
 
-use crate::lexer::{mask, Masked};
+use crate::lexer::Masked;
 use crate::Finding;
 
 /// Static description of one rule, for `--help`/docs listings.
@@ -30,7 +34,7 @@ pub struct RuleInfo {
 }
 
 /// Every rule this linter knows, in reporting order.
-pub const RULES: [RuleInfo; 5] = [
+pub const RULES: [RuleInfo; 10] = [
     RuleInfo {
         name: "unspecified-hasher",
         summary: "DefaultHasher/RandomState outside util::siphash — unspecified \
@@ -57,6 +61,36 @@ pub const RULES: [RuleInfo; 5] = [
         summary: "unwrap/expect/panic! in non-test library code — grandfathered \
                   via the baseline; new code returns typed errors instead",
     },
+    RuleInfo {
+        name: "lock-order-cycle",
+        summary: "a lock acquired while holding another closes a cycle in the \
+                  tree-wide held-while-acquiring graph — a potential deadlock \
+                  even when each file alone looks consistent",
+    },
+    RuleInfo {
+        name: "atomic-ordering-mix",
+        summary: "one atomic touched with inconsistent Ordering choices across \
+                  the tree, or Relaxed on a field that gates a Condvar \
+                  handshake (the PR 4 lost-wakeup class)",
+    },
+    RuleInfo {
+        name: "blocking-in-pool-task",
+        summary: "lock()/recv()/wait()/socket reads inside a closure that runs \
+                  ON the shared WorkerPool — can consume the pool's own budget \
+                  and deadlock it (the PR 8 serve incident class)",
+    },
+    RuleInfo {
+        name: "counter-drift",
+        summary: "a Stats-struct counter that an absorb/merge/render/snapshot \
+                  handler forgets while folding all its siblings (the PR 8–9 \
+                  stats-plumbing bug shape)",
+    },
+    RuleInfo {
+        name: "stale-allow",
+        summary: "a lint:allow(<rule>) that no longer suppresses anything — \
+                  warning by default, a failure under --strict-allows; never \
+                  baselined",
+    },
 ];
 
 /// True when `b` can continue an identifier (ASCII view; multi-byte chars
@@ -69,7 +103,7 @@ fn ident_byte(b: u8) -> bool {
 /// whichever ends of `pat` are themselves identifier characters (so
 /// `panic!` does not match `debug_panic!`, but `.expect(` needs no
 /// boundary after its parenthesis).
-fn has_pat(line: &str, pat: &str) -> bool {
+pub(crate) fn has_pat(line: &str, pat: &str) -> bool {
     let need_before = ident_byte(pat.as_bytes()[0]);
     let need_after = ident_byte(*pat.as_bytes().last().expect("non-empty pattern"));
     for (pos, _) in line.match_indices(pat) {
@@ -83,11 +117,31 @@ fn has_pat(line: &str, pat: &str) -> bool {
     false
 }
 
-/// Parse every `lint:allow(<rule>)` directive in the comment view into
-/// `(rule, suppressed 0-based line)` pairs. A directive on a line with
-/// code applies to that line; on a comment-only line it applies to the
-/// next line containing code.
-fn allows(masked: &Masked) -> Vec<(String, usize)> {
+/// One parsed `lint:allow(<rule>)` directive.
+pub(crate) struct Allow {
+    /// The rule name inside the parentheses.
+    pub rule: String,
+    /// 0-based line the suppression applies to.
+    pub target: usize,
+    /// 0-based line the directive itself sits on (for `stale-allow`
+    /// reporting).
+    pub comment_line: usize,
+}
+
+/// Whether `rule` is *syntactically* a rule name: lowercase kebab-case.
+/// Doc prose writes placeholders — `lint:allow(<rule>)`,
+/// `lint:allow(...)` — and those must not parse as directives at all
+/// (they would self-report as stale in the linter's own sources).
+fn plausible_rule_name(rule: &str) -> bool {
+    !rule.is_empty()
+        && rule.as_bytes()[0].is_ascii_lowercase()
+        && rule.bytes().all(|b| b == b'-' || b.is_ascii_lowercase() || b.is_ascii_digit())
+}
+
+/// Parse every `lint:allow(<rule>)` directive in the comment view. A
+/// directive on a line with code applies to that line; on a comment-only
+/// line it applies to the next line containing code.
+pub(crate) fn allows(masked: &Masked) -> Vec<Allow> {
     let mut out = Vec::new();
     for (idx, comment) in masked.comments.iter().enumerate() {
         let mut rest: &str = comment;
@@ -96,7 +150,7 @@ fn allows(masked: &Masked) -> Vec<(String, usize)> {
             let Some(close) = rest.find(')') else { break };
             let rule = rest[..close].trim().to_string();
             rest = &rest[close + 1..];
-            if rule.is_empty() {
+            if !plausible_rule_name(&rule) {
                 continue;
             }
             let target = if masked.code[idx].trim().is_empty() {
@@ -106,7 +160,7 @@ fn allows(masked: &Masked) -> Vec<(String, usize)> {
                 Some(idx)
             };
             if let Some(t) = target {
-                out.push((rule.clone(), t));
+                out.push(Allow { rule: rule.clone(), target: t, comment_line: idx });
             }
         }
     }
@@ -132,11 +186,12 @@ struct Guard {
     depth: i64,
 }
 
-/// Check one file. `rel` is the repo-relative path with `/` separators —
-/// rule scoping is path-based, so callers must not pass absolute paths.
-pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
-    let masked = mask(src);
-    let raw: Vec<&str> = src.lines().collect();
+/// Run the five line-oriented rules over one file, **pre-suppression**:
+/// `lint:allow` filtering happens in [`crate::lint_files`], after the
+/// cross-file findings for the same file are merged in. `rel` is the
+/// repo-relative path with `/` separators — rule scoping is path-based,
+/// so callers must not pass absolute paths.
+pub(crate) fn line_findings(rel: &str, masked: &Masked, raw: &[&str]) -> Vec<Finding> {
     let lines = &masked.code;
     let in_library = rel.starts_with("rust/src/");
     let test_file = rel.starts_with("rust/tests/")
@@ -160,6 +215,7 @@ pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
             path: rel.to_string(),
             line: line_idx + 1,
             excerpt,
+            detail: String::new(),
         });
     };
 
@@ -261,13 +317,5 @@ pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
         }
     }
 
-    // ---- apply suppressions ---------------------------------------------
-    let allowed = allows(&masked);
-    findings.retain(|f| {
-        !allowed
-            .iter()
-            .any(|(rule, line)| rule == f.rule && *line == f.line - 1)
-    });
-    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     findings
 }

@@ -1,0 +1,28 @@
+// Fixture: two atomic-ordering smells. `flag` is stored SeqCst but
+// loaded Relaxed — an inconsistent protocol; `ready` gates a Condvar
+// handshake in the same struct yet is touched with Relaxed.
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+pub struct Core {
+    flag: AtomicU64,
+}
+
+pub struct Gate {
+    ready: AtomicBool,
+    cv: Condvar,
+    slot: Mutex<u32>,
+}
+
+pub fn raise(c: &Core) {
+    c.flag.store(1, Ordering::SeqCst);
+}
+
+pub fn read(c: &Core) -> u64 {
+    c.flag.load(Ordering::Relaxed)
+}
+
+pub fn open(g: &Gate) {
+    g.ready.store(true, Ordering::Relaxed);
+    g.cv.notify_all();
+}

@@ -1,0 +1,32 @@
+// Fixture: consistent orderings. `flag` is SeqCst everywhere; `ready`
+// uses a Release store / Acquire load pair, which is a coherent
+// protocol even though the two orderings differ.
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+pub struct Core {
+    flag: AtomicU64,
+}
+
+pub struct Gate {
+    ready: AtomicBool,
+    cv: Condvar,
+    slot: Mutex<u32>,
+}
+
+pub fn raise(c: &Core) {
+    c.flag.store(1, Ordering::SeqCst);
+}
+
+pub fn read(c: &Core) -> u64 {
+    c.flag.load(Ordering::SeqCst)
+}
+
+pub fn open(g: &Gate) {
+    g.ready.store(true, Ordering::Release);
+    g.cv.notify_all();
+}
+
+pub fn opened(g: &Gate) -> bool {
+    g.ready.load(Ordering::Acquire)
+}

@@ -1,0 +1,16 @@
+// Fixture: `absorb` folds three of MineStats' four counters and
+// forgets `retried` — the drift shape the rule exists for.
+pub struct MineStats {
+    pub started: u64,
+    pub finished: u64,
+    pub failed: u64,
+    pub retried: u64,
+}
+
+impl MineStats {
+    pub fn absorb(&mut self, other: &MineStats) {
+        self.started += other.started;
+        self.finished += other.finished;
+        self.failed += other.failed;
+    }
+}

@@ -1,0 +1,21 @@
+// Fixture: `absorb` folds every counter, and `failed_total` touching a
+// single field is an accessor — below the fold threshold, not drift.
+pub struct MineStats {
+    pub started: u64,
+    pub finished: u64,
+    pub failed: u64,
+    pub retried: u64,
+}
+
+impl MineStats {
+    pub fn absorb(&mut self, other: &MineStats) {
+        self.started += other.started;
+        self.finished += other.finished;
+        self.failed += other.failed;
+        self.retried += other.retried;
+    }
+
+    pub fn failed_total(&self) -> u64 {
+        self.failed
+    }
+}

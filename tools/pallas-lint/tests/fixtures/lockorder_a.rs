@@ -1,0 +1,17 @@
+// Fixture (cross-file pair, 1 of 2): declares both mutexes and takes
+// `reg` before `disp`. Alone this file is cycle-free; joined with
+// lockorder_b.rs (which takes `disp` before `reg`) the global identities
+// close the cycle and phase 2 fires in both files.
+use std::sync::Mutex;
+
+pub struct Center {
+    pub reg: Mutex<u32>,
+    pub disp: Mutex<u32>,
+}
+
+pub fn forward(c: &Center) {
+    let gr = c.reg.lock().unwrap();
+    let gd = c.disp.lock().unwrap();
+    drop(gd);
+    drop(gr);
+}

@@ -1,0 +1,12 @@
+// Fixture (cross-file pair, 2 of 2): takes `disp` before `reg`. The
+// fields are declared in lockorder_a.rs only, so linted alone this
+// file's names stay file-local and no cycle exists; the AB/BA deadlock
+// appears only when both files are analyzed together.
+use crate::lockorder_a::Center;
+
+pub fn backward(c: &Center) {
+    let gd = c.disp.lock().unwrap();
+    let gr = c.reg.lock().unwrap();
+    drop(gr);
+    drop(gd);
+}

@@ -1,0 +1,23 @@
+// Fixture: AB/BA lock-order inversion inside one file. `first` locks
+// `a` then `b`; `second` locks `b` then `a` — the held-while-acquiring
+// graph has the cycle a -> b -> a, so both inner acquisitions fire.
+use std::sync::Mutex;
+
+pub struct Shared {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+pub fn first(s: &Shared) {
+    let ga = s.a.lock().unwrap();
+    let gb = s.b.lock().unwrap();
+    drop(gb);
+    drop(ga);
+}
+
+pub fn second(s: &Shared) {
+    let gb = s.b.lock().unwrap();
+    let ga = s.a.lock().unwrap();
+    drop(ga);
+    drop(gb);
+}

@@ -1,0 +1,30 @@
+// Fixture: consistent lock order. Both paths take `a` before `b`, and
+// `third` re-locks `b` only after dropping its first guard — the graph
+// stays acyclic and nothing fires.
+use std::sync::Mutex;
+
+pub struct Shared {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+pub fn first(s: &Shared) {
+    let ga = s.a.lock().unwrap();
+    let gb = s.b.lock().unwrap();
+    drop(gb);
+    drop(ga);
+}
+
+pub fn second(s: &Shared) {
+    let ga = s.a.lock().unwrap();
+    let gb = s.b.lock().unwrap();
+    drop(gb);
+    drop(ga);
+}
+
+pub fn third(s: &Shared) {
+    let gb = s.b.lock().unwrap();
+    drop(gb);
+    let ga = s.a.lock().unwrap();
+    drop(ga);
+}

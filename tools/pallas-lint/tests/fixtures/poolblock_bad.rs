@@ -1,0 +1,22 @@
+// Fixture: blocking calls inside closures that run ON the shared pool.
+// The first spawn takes a mutex, the second parks on a channel, and the
+// mapper closure does a socket read — all three can eat the pool's own
+// worker budget (the PR 8 serve deadlock class).
+pub fn run(&self) {
+    self.pool.spawn(move || {
+        let g = self.state.lock().unwrap();
+        consume(&g);
+    });
+    self.pool.spawn(move || {
+        let v = rx.recv();
+        use_value(v);
+    });
+}
+
+pub fn build(&self, job: JobBuilder) {
+    job.mapper(move |shard| {
+        let mut buf = String::new();
+        reader.read_line(&mut buf);
+        emit(buf, shard)
+    });
+}

@@ -1,0 +1,12 @@
+// Fixture: the pool tasks only compute and send (send never blocks on
+// our unbounded channels); the blocking receive happens on the
+// submitting thread, outside any pool closure.
+pub fn run(&self) {
+    self.pool.spawn(move || {
+        let v = compute(shard);
+        tx.send(v).ok();
+    });
+    let merged = rx.recv();
+    let g = self.state.lock().unwrap();
+    finish(g, merged);
+}

@@ -1,0 +1,12 @@
+// Fixture: three suppressions. The first targets a line that triggers
+// nothing, the second names a rule that does not exist, and the third
+// genuinely suppresses a finding (and so is NOT stale).
+pub fn quiet() -> u64 {
+    // lint:allow(unspecified-hasher): nothing hashes here
+    let x = 1 + 1;
+    // lint:allow(no-such-rule): typo'd rule name
+    let y = x + 1;
+    // lint:allow(unwrap-in-library): fixture exercises a live suppression
+    let z = maybe(y).unwrap();
+    z
+}

@@ -3,14 +3,18 @@
 
 use std::collections::BTreeMap;
 
-use pallas_lint::{baseline, lexer, lint_source, rules, Finding};
+use pallas_lint::{baseline, lexer, lint_files, lint_source, lint_source_full, rules, Finding};
+
+/// Read a fixture file's source text.
+fn read_fixture(fixture: &str) -> String {
+    let path = format!("{}/tests/fixtures/{fixture}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
 
 /// Lint a fixture file under a fake repo-relative path (rule scoping is
 /// path-based, so the path is part of the test).
 fn lint_fixture(rel: &str, fixture: &str) -> Vec<Finding> {
-    let path = format!("{}/tests/fixtures/{fixture}", env!("CARGO_MANIFEST_DIR"));
-    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"));
-    lint_source(rel, &src)
+    lint_source(rel, &read_fixture(fixture))
 }
 
 /// The `(line, …)` pairs of every finding of `rule`.
@@ -143,6 +147,137 @@ fn allow_directives_inside_strings_are_inert() {
     assert_eq!(lines_of(&f, "wall-clock-in-sim"), vec![3]);
 }
 
+// ---- phase-2 cross-file rules --------------------------------------------
+
+#[test]
+fn lock_order_cycle_fires_on_inversion_within_one_file() {
+    let bad = lint_fixture("rust/src/serve/fake.rs", "lockorder_bad.rs");
+    assert_eq!(lines_of(&bad, "lock-order-cycle"), vec![13, 20]);
+    let f = bad.iter().find(|f| f.rule == "lock-order-cycle").expect("finding");
+    assert!(f.detail.contains("while holding"), "detail names the edge: {}", f.detail);
+
+    let good = lint_fixture("rust/src/serve/fake.rs", "lockorder_good.rs");
+    assert_eq!(lines_of(&good, "lock-order-cycle"), Vec::<usize>::new());
+
+    // Outside the library tree the facts (and so the rule) are silent.
+    let in_tests = lint_fixture("rust/tests/fake.rs", "lockorder_bad.rs");
+    assert_eq!(lines_of(&in_tests, "lock-order-cycle"), Vec::<usize>::new());
+}
+
+#[test]
+fn lock_order_cycle_requires_the_cross_file_join() {
+    // Each file alone is consistent: lockorder_a.rs takes reg→disp,
+    // lockorder_b.rs takes disp→reg, and only the phase-2 join — which
+    // resolves both field names to the single declaration site in
+    // lockorder_a.rs — sees the AB/BA cycle.
+    let a = read_fixture("lockorder_a.rs");
+    let b = read_fixture("lockorder_b.rs");
+    let alone_a = lint_source("rust/src/serve/lockorder_a.rs", &a);
+    assert_eq!(lines_of(&alone_a, "lock-order-cycle"), Vec::<usize>::new());
+    let alone_b = lint_source("rust/src/serve/lockorder_b.rs", &b);
+    assert_eq!(lines_of(&alone_b, "lock-order-cycle"), Vec::<usize>::new());
+
+    let joined = lint_files(&[
+        ("rust/src/serve/lockorder_a.rs".to_string(), a),
+        ("rust/src/serve/lockorder_b.rs".to_string(), b),
+    ]);
+    let cycle: Vec<(&str, usize)> = joined
+        .findings
+        .iter()
+        .filter(|f| f.rule == "lock-order-cycle")
+        .map(|f| (f.path.as_str(), f.line))
+        .collect();
+    assert_eq!(
+        cycle,
+        vec![("rust/src/serve/lockorder_a.rs", 14), ("rust/src/serve/lockorder_b.rs", 9)]
+    );
+}
+
+#[test]
+fn atomic_ordering_mix_fires_on_mixes_and_condvar_gated_relaxed() {
+    let bad = lint_fixture("rust/src/util/fake.rs", "atomicmix_bad.rs");
+    assert_eq!(lines_of(&bad, "atomic-ordering-mix"), vec![18, 22, 26]);
+    let gated = bad.iter().find(|f| f.line == 26).expect("condvar-gated finding");
+    assert!(gated.detail.contains("Condvar"), "detail explains the gate: {}", gated.detail);
+
+    // SeqCst-everywhere and an Acquire/Release pair are both coherent.
+    let good = lint_fixture("rust/src/util/fake.rs", "atomicmix_good.rs");
+    assert_eq!(lines_of(&good, "atomic-ordering-mix"), Vec::<usize>::new());
+}
+
+#[test]
+fn blocking_in_pool_task_fires_inside_pool_closures_only() {
+    let bad = lint_fixture("rust/src/mapreduce/fake.rs", "poolblock_bad.rs");
+    assert_eq!(lines_of(&bad, "blocking-in-pool-task"), vec![7, 11, 19]);
+
+    // The same calls outside the closure region are fine.
+    let good = lint_fixture("rust/src/mapreduce/fake.rs", "poolblock_good.rs");
+    assert_eq!(lines_of(&good, "blocking-in-pool-task"), Vec::<usize>::new());
+}
+
+#[test]
+fn counter_drift_fires_on_a_forgotten_counter() {
+    let bad = lint_fixture("rust/src/serve/fake.rs", "counterdrift_bad.rs");
+    assert_eq!(lines_of(&bad, "counter-drift"), vec![11]);
+    let f = bad.iter().find(|f| f.rule == "counter-drift").expect("finding");
+    assert!(f.detail.contains("retried"), "detail names the missing counter: {}", f.detail);
+
+    // Full folds and one-field accessors are both clean.
+    let good = lint_fixture("rust/src/serve/fake.rs", "counterdrift_good.rs");
+    assert_eq!(lines_of(&good, "counter-drift"), Vec::<usize>::new());
+}
+
+#[test]
+fn cross_file_rules_respect_allow_suppressions() {
+    let src = "pub struct FooStats {\n\
+               \x20   pub started: u64,\n\
+               \x20   pub finished: u64,\n\
+               \x20   pub failed: u64,\n\
+               }\n\
+               impl FooStats {\n\
+               \x20   // lint:allow(counter-drift): failed is folded by the caller\n\
+               \x20   pub fn absorb(&mut self, o: &FooStats) {\n\
+               \x20       self.started += o.started;\n\
+               \x20       self.finished += o.finished;\n\
+               \x20   }\n\
+               }\n";
+    let tree = lint_source_full("rust/src/fake.rs", src);
+    assert_eq!(lines_of(&tree.findings, "counter-drift"), Vec::<usize>::new());
+    assert!(tree.stale_allows.is_empty(), "the allow is live: {:?}", tree.stale_allows);
+
+    // Without the allow the same source fires on the fn declaration.
+    let bare = src.replace("// lint:allow(counter-drift): failed is folded by the caller\n", "");
+    let f = lint_source("rust/src/fake.rs", &bare);
+    assert_eq!(lines_of(&f, "counter-drift"), vec![7]);
+}
+
+#[test]
+fn stale_allows_are_reported_but_kept_out_of_findings() {
+    let tree = lint_source_full("rust/src/fake.rs", &read_fixture("staleallow_bad.rs"));
+    // The pointless and misspelled allows are stale; the live one (on the
+    // unwrap) is not, and its target stays suppressed.
+    let stale: Vec<usize> = tree.stale_allows.iter().map(|f| f.line).collect();
+    assert_eq!(stale, vec![5, 7]);
+    assert!(tree.stale_allows.iter().all(|f| f.rule == "stale-allow"));
+    assert_eq!(lines_of(&tree.findings, "unwrap-in-library"), Vec::<usize>::new());
+    // Stale reports never mix into findings (so they can never be
+    // baselined).
+    assert!(tree.findings.iter().all(|f| f.rule != "stale-allow"));
+}
+
+#[test]
+fn doc_prose_mentioning_allow_syntax_is_not_a_directive() {
+    // The linter's own sources document `lint:allow(<rule>)` in comments;
+    // placeholder "rule names" must neither suppress nor go stale.
+    let src = "// Suppressions use lint:allow(<rule>) syntax, e.g. lint:allow(...).\n\
+               fn f() {\n\
+               \x20   let t = std::time::Instant::now();\n\
+               }\n";
+    let tree = lint_source_full("rust/src/fake.rs", src);
+    assert_eq!(lines_of(&tree.findings, "wall-clock-in-sim"), vec![3]);
+    assert!(tree.stale_allows.is_empty(), "{:?}", tree.stale_allows);
+}
+
 // ---- lexer masking -------------------------------------------------------
 
 #[test]
@@ -185,7 +320,7 @@ fn lexer_handles_nested_block_comments() {
 // ---- baseline ------------------------------------------------------------
 
 fn finding(rule: &'static str, path: &str, line: usize) -> Finding {
-    Finding { rule, path: path.to_string(), line, excerpt: String::new() }
+    Finding { rule, path: path.to_string(), line, excerpt: String::new(), detail: String::new() }
 }
 
 #[test]
@@ -251,10 +386,10 @@ fn baseline_parse_rejects_garbage() {
 #[test]
 fn every_rule_is_documented_and_distinct() {
     let mut names: Vec<&str> = rules::RULES.iter().map(|r| r.name).collect();
-    assert_eq!(names.len(), 5);
+    assert_eq!(names.len(), 10);
     names.sort();
     names.dedup();
-    assert_eq!(names.len(), 5, "duplicate rule names");
+    assert_eq!(names.len(), 10, "duplicate rule names");
     for r in &rules::RULES {
         assert!(!r.summary.is_empty());
     }

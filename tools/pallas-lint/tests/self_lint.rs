@@ -5,7 +5,7 @@
 
 use std::path::Path;
 
-use pallas_lint::{baseline, default_baseline, lint_tree};
+use pallas_lint::{baseline, default_baseline, lint_tree, lint_tree_full};
 
 #[test]
 fn repo_is_clean_against_checked_in_baseline() {
@@ -39,9 +39,11 @@ fn repo_is_clean_against_checked_in_baseline() {
 #[test]
 fn grandfathered_rules_match_known_magnitudes() {
     // The baseline exists for exactly one rule today: unwrap-in-library.
-    // The determinism/concurrency rules must be CLEAN — a baseline entry
-    // appearing for one of them means a real invariant violation was
-    // grandfathered instead of fixed, which defeats the tool.
+    // The determinism/concurrency rules — the original four AND the
+    // cross-file four (lock-order-cycle, atomic-ordering-mix,
+    // blocking-in-pool-task, counter-drift) — must be CLEAN: a finding or
+    // baseline entry appearing for one of them means a real invariant
+    // violation was grandfathered instead of fixed, which defeats the tool.
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
     let findings = lint_tree(&root).expect("scanning the repo");
     for f in &findings {
@@ -51,4 +53,41 @@ fn grandfathered_rules_match_known_magnitudes() {
              cases inline with a reason): {f}"
         );
     }
+}
+
+#[test]
+fn baseline_grandfathers_unwrap_only() {
+    // Belt to the test above's suspenders: even editing baseline.txt by
+    // hand cannot grandfather a determinism or concurrency rule — the
+    // file itself must never carry a non-unwrap key.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let baseline_path = default_baseline(&root);
+    let text = std::fs::read_to_string(&baseline_path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", baseline_path.display()));
+    let base = baseline::parse(&text).expect("checked-in baseline parses");
+    for ((rule, path), _) in &base {
+        assert_eq!(
+            rule, "unwrap-in-library",
+            "baseline.txt may only grandfather unwrap-in-library (offending key: \
+             {rule} {path})"
+        );
+    }
+}
+
+#[test]
+fn repo_has_no_stale_allows() {
+    // Every lint:allow in the tree must suppress something. CI runs with
+    // --strict-allows, so a stale suppression fails there too; catching
+    // it under plain `cargo test` keeps the loop short.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let tree = lint_tree_full(&root).expect("scanning the repo");
+    assert!(
+        tree.stale_allows.is_empty(),
+        "stale lint:allow directives (delete them or fix the rule name):\n{}",
+        tree.stale_allows
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
 }
